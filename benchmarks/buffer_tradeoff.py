@@ -1,0 +1,55 @@
+"""Paper Fig. 2: output-buffer size x data-creation rate -> latency and
+throughput, on the discrete-event simulator (sender -> receiver over one
+TCP-like link, 128-byte items)."""
+from __future__ import annotations
+
+import sys
+
+sys.path.insert(0, "src")
+
+from repro.core import (  # noqa: E402
+    ALL_TO_ALL,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    SimSourceSpec,
+    StreamSimulator,
+)
+
+
+def run_one(buffer_bytes: int, rate: float, duration_ms: float = 60_000.0):
+    jg = JobGraph("fig2")
+    jg.add_vertex(JobVertex("Sender", 1, is_source=True, sim_cpu_ms=0.001,
+                            sim_item_bytes=128))
+    jg.add_vertex(JobVertex("Receiver", 1, is_sink=True, sim_cpu_ms=0.001))
+    jg.add_edge("Sender", "Receiver", ALL_TO_ALL)
+    seq = JobSequence.of(("Sender", "Receiver"))
+    jc = JobConstraint(seq, 1e9, 10_000.0, name="fig2")  # monitoring only
+    sim = StreamSimulator(
+        jg, [jc], num_workers=2,
+        sources={"Sender": SimSourceSpec(rate_items_per_s=rate,
+                                         item_bytes=128)},
+        initial_buffer_bytes=buffer_bytes,
+        enable_qos=False,
+    )
+    res = sim.run(duration_ms, max_events=3_000_000)
+    return res.mean_latency_ms(duration_ms * 0.2), res.throughput_items_per_s
+
+
+def run(quick: bool = True):
+    rows = []
+    buffers = [1024, 8192, 65536] if quick else [512, 1024, 4096, 8192,
+                                                 32768, 65536]
+    rates = [10, 1000, 20000] if quick else [1, 10, 100, 1000, 10000, 20000]
+    for b in buffers:
+        for r in rates:
+            lat, thru = run_one(b, r)
+            rows.append((f"fig2_buf{b}_rate{r}", lat * 1e3,
+                         f"lat_ms={lat:.1f};thru={thru:.0f}/s"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(quick=False):
+        print(f"{name},{us:.1f},{derived}")

@@ -1,0 +1,81 @@
+"""Kernel validation + timing: Pallas kernels (interpret mode on this CPU
+container) vs their pure-jnp oracles across a shape sweep.  On-TPU wall
+times come from the same harness with interpret=False."""
+from __future__ import annotations
+
+import sys
+import time
+
+sys.path.insert(0, "src")
+
+import jax  # noqa: E402
+import jax.numpy as jnp  # noqa: E402
+import numpy as np  # noqa: E402
+
+from repro.kernels.flash_attention.ops import flash_attention_op  # noqa: E402
+from repro.kernels.flash_attention.ref import attention_ref  # noqa: E402
+from repro.kernels.rmsnorm.ops import rmsnorm_op  # noqa: E402
+from repro.kernels.rmsnorm.ref import rmsnorm_ref  # noqa: E402
+from repro.kernels.ssd_scan.ops import ssd_scan_op  # noqa: E402
+from repro.kernels.ssd_scan.ref import ssd_ref  # noqa: E402
+
+
+def _time(fn, *args, reps=3):
+    fn(*args)  # compile
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps * 1e6
+
+
+def run(quick: bool = True):
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention
+    B, S, Hq, Hkv, D = (1, 256, 4, 2, 64) if quick else (2, 512, 8, 2, 128)
+    ks = jax.random.split(key, 3)
+    q = jax.random.normal(ks[0], (B, S, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, S, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, S, Hkv, D), jnp.float32)
+    pos = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    out = flash_attention_op(q, k, v, pos, pos, block_q=128, block_k=128)
+    ref = attention_ref(q, k, v, pos, pos)
+    err = float(np.abs(np.asarray(out) - np.asarray(ref)).max())
+    us = _time(lambda: flash_attention_op(q, k, v, pos, pos), reps=2)
+    rows.append(("kernel_flash_attention", us,
+                 f"max_err={err:.2e};shape=B{B}xS{S}xH{Hq}/{Hkv}xD{D}"))
+
+    # ssd scan
+    Bb, S2, H, P, G, N = (1, 128, 4, 32, 1, 32) if quick else (2, 256, 8, 64,
+                                                               2, 64)
+    ks = jax.random.split(key, 5)
+    x = jax.random.normal(ks[0], (Bb, S2, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S2, H)))
+    a = -dt * jnp.exp(jax.random.normal(ks[2], (H,)))
+    Bm = jax.random.normal(ks[3], (Bb, S2, G, N)) * 0.5
+    Cm = jax.random.normal(ks[4], (Bb, S2, G, N)) * 0.5
+    y, st = ssd_scan_op(x, dt, a, Bm, Cm, chunk=32)
+    yr, sr = ssd_ref(x, dt, a, Bm, Cm)
+    err = float(np.abs(np.asarray(y) - np.asarray(yr)).max()
+                / (np.abs(np.asarray(yr)).max() + 1e-9))
+    us = _time(lambda: ssd_scan_op(x, dt, a, Bm, Cm, chunk=32), reps=2)
+    rows.append(("kernel_ssd_scan", us,
+                 f"rel_err={err:.2e};shape=B{Bb}xS{S2}xH{H}xP{P}xN{N}"))
+
+    # rmsnorm
+    x = jax.random.normal(key, (8, 256, 512), jnp.bfloat16)
+    w = jax.random.normal(jax.random.PRNGKey(1), (512,), jnp.bfloat16)
+    o = rmsnorm_op(x, w)
+    r = rmsnorm_ref(x, w)
+    err = float(np.abs(np.asarray(o, np.float32)
+                       - np.asarray(r, np.float32)).max())
+    us = _time(lambda: rmsnorm_op(x, w), reps=3)
+    rows.append(("kernel_rmsnorm", us, f"max_err={err:.2e};shape=8x256x512"))
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run():
+        print(f"{name},{us:.0f},{derived}")

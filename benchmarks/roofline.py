@@ -1,0 +1,99 @@
+"""Roofline analysis over the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Per (arch x shape x mesh) cell, from the compiled dry-run:
+
+    compute term    = per_device_FLOPs / peak_FLOPs        (197 TF/s bf16)
+    memory term     = per_device_HBM_bytes / HBM_bw        (819 GB/s)
+    collective term = per_device_link_bytes / link_bw      (~50 GB/s/link)
+
+plus MODEL_FLOPS = 6*N(_active)*D, the MODEL/HLO flops ratio (remat and
+redundancy show up here), the dominant term, and the roofline fraction
+(= useful-compute time / dominant-term time).
+"""
+from __future__ import annotations
+
+import json
+import sys
+from glob import glob
+from pathlib import Path
+
+sys.path.insert(0, "src")
+
+PEAK_FLOPS = 197e12          # TPU v5e bf16 per chip
+HBM_BW = 819e9               # bytes/s
+LINK_BW = 50e9               # bytes/s per ICI link
+
+
+def analyze_record(r: dict) -> dict:
+    h = r["hlo_analysis"]
+    flops, mem_b, coll_b = h["flops"], h["memory_bytes"], h[
+        "collective_link_bytes_total"]
+    t_c = flops / PEAK_FLOPS
+    t_m = mem_b / HBM_BW
+    t_n = coll_b / LINK_BW
+    dominant = max((t_c, "compute"), (t_m, "memory"), (t_n, "collective"))
+    # model flops: 6*N*D for train (fwd+bwd), 2*N*D for one forward token
+    # pass (prefill), 2*N*D_tokens for decode (D = tokens processed)
+    n_par = r["active_param_count"]
+    dev = r["devices"]
+    shape = r["shape"]
+    tokens = {
+        "train_4k": 4096 * 256, "prefill_32k": 32768 * 32,
+        "decode_32k": 128, "long_500k": 1,
+    }[shape]
+    mult = 6 if r["mode"] == "train" else 2
+    model_flops = mult * n_par * tokens / dev
+    ratio = model_flops / flops if flops else float("nan")
+    frac = (model_flops / PEAK_FLOPS) / dominant[0] if dominant[0] else 0.0
+    return {
+        "arch": r["arch"], "shape": shape, "mesh": r["mesh"],
+        "t_compute_s": t_c, "t_memory_s": t_m, "t_collective_s": t_n,
+        "dominant": dominant[1],
+        "model_flops_per_dev": model_flops,
+        "useful_ratio": ratio,
+        "roofline_frac": frac,
+    }
+
+
+def table(art_dir: str = "artifacts/dryrun", mesh: str = "16x16"):
+    rows = []
+    for f in sorted(glob(f"{art_dir}/*__{mesh}.json")):
+        r = json.load(open(f))
+        rows.append(analyze_record(r))
+    return rows
+
+
+def run(quick: bool = True):
+    out = []
+    for row in table():
+        name = f"roofline_{row['arch']}_{row['shape']}"
+        dom_t = max(row["t_compute_s"], row["t_memory_s"],
+                    row["t_collective_s"])
+        out.append((
+            name,
+            dom_t * 1e6,
+            f"dom={row['dominant']};tc={row['t_compute_s']:.3f}s;"
+            f"tm={row['t_memory_s']:.3f}s;tn={row['t_collective_s']:.3f}s;"
+            f"useful={row['useful_ratio']:.2f};frac={row['roofline_frac']:.3f}",
+        ))
+    return out
+
+
+def markdown_table(art_dir: str = "artifacts/dryrun", mesh: str = "16x16"):
+    lines = [
+        "| arch | shape | compute s | memory s | collective s | dominant "
+        "| MODEL/HLO flops | roofline frac |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for row in table(art_dir, mesh):
+        lines.append(
+            f"| {row['arch']} | {row['shape']} | {row['t_compute_s']:.3f} "
+            f"| {row['t_memory_s']:.3f} | {row['t_collective_s']:.3f} "
+            f"| **{row['dominant']}** | {row['useful_ratio']:.2f} "
+            f"| {row['roofline_frac']:.3f} |"
+        )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(markdown_table())

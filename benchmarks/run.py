@@ -1,0 +1,47 @@
+"""Benchmark aggregator — one module per paper figure/table + the framework
+benches.  Prints ``name,us_per_call,derived`` CSV lines.
+
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+sys.path.insert(0, "src")
+
+MODULES = [
+    ("buffer_tradeoff", "Fig. 2: buffer size x rate -> latency/throughput"),
+    ("media_pipeline", "Figs. 7-10: media job scenario suite"),
+    ("qos_scaling", "§3.4: QoS setup algorithms at n=200, m=800"),
+    ("serving_qos", "serving-plane QoS: adaptive batching + chaining"),
+    ("kernels", "Pallas kernel validation vs oracles"),
+    ("roofline", "dry-run roofline terms per (arch x shape)"),
+]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--full", action="store_true")
+    ap.add_argument("--only", default=None)
+    args = ap.parse_args()
+
+    failures = []
+    print("name,us_per_call,derived")
+    for mod_name, desc in MODULES:
+        if args.only and args.only != mod_name:
+            continue
+        try:
+            mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
+            for name, us, derived in mod.run(quick=not args.full):
+                print(f"{name},{us:.1f},{derived}", flush=True)
+        except Exception as e:  # noqa: BLE001
+            failures.append((mod_name, repr(e)))
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"benchmark failures: {failures}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""Checkpointing."""
+
+from .checkpointer import Checkpointer  # noqa: F401

@@ -1,0 +1,140 @@
+"""Sharded, async, elastic checkpointing.
+
+The log-based rollback-recovery analogue for the training plane (paper
+§3.6): model/optimizer state is materialized periodically; the data
+pipeline stores its replay offset; a restart restores the latest complete
+step and replays.
+
+* layout: ``<dir>/step_<n>/<flat.leaf.path>.npy`` + ``manifest.json``
+  (tree structure, dtypes, step, data-pipeline state, mesh shape);
+* **async**: ``save()`` snapshots to host (device_get) and hands the disk
+  write to a background thread — the train loop continues;
+* **elastic**: arrays are stored unsharded (global view), so a restore may
+  target a *different* mesh: ``restore(..., shardings=...)`` device_puts
+  each leaf with the new sharding.  This is what lets a 512-chip job resume
+  on 448 chips after losing a pod slice.
+"""
+from __future__ import annotations
+
+import json
+import shutil
+import threading
+from pathlib import Path
+
+import jax
+import numpy as np
+
+
+def _flatten(tree):
+    flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
+    out = {}
+    for path, leaf in flat:
+        key = "/".join(
+            str(getattr(k, "key", getattr(k, "idx", getattr(k, "name", k))))
+            for k in path
+        )
+        out[key] = leaf
+    return out, treedef
+
+
+class Checkpointer:
+    def __init__(self, directory: str | Path, keep: int = 3) -> None:
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self._thread: threading.Thread | None = None
+
+    # -- save -----------------------------------------------------------------
+    def save(self, step: int, state: dict, extra: dict | None = None,
+             blocking: bool = False) -> None:
+        """state: pytree (params/opt_state/...); extra: JSON-serializable
+        (e.g. data-pipeline replay offset)."""
+        flat, _ = _flatten(state)
+
+        def to_host(v):
+            a = np.asarray(jax.device_get(v))
+            # np.save round-trips only native numeric kinds; extension
+            # dtypes (ml_dtypes bfloat16/f8, kind 'V') are widened to f32
+            # and cast back on restore from the leaf dtype
+            if a.dtype.kind not in "fiub?" or a.dtype.name == "bfloat16":
+                a = a.astype(np.float32)
+            return a
+
+        host = {k: to_host(v) for k, v in flat.items()}
+        self.wait()
+
+        def write() -> None:
+            tmp = self.dir / f"step_{step}.tmp"
+            final = self.dir / f"step_{step}"
+            if tmp.exists():
+                shutil.rmtree(tmp)
+            tmp.mkdir(parents=True)
+            for k, v in host.items():
+                np.save(tmp / (k.replace("/", ".") + ".npy"), v)
+            manifest = {
+                "step": step,
+                "keys": list(host.keys()),
+                "dtypes": {k: str(v.dtype) for k, v in host.items()},
+                "extra": extra or {},
+            }
+            (tmp / "manifest.json").write_text(json.dumps(manifest))
+            if final.exists():
+                shutil.rmtree(final)
+            tmp.rename(final)  # atomic completion marker
+            self._gc()
+
+        self._thread = threading.Thread(target=write, daemon=True)
+        self._thread.start()
+        if blocking:
+            self.wait()
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+
+    def _gc(self) -> None:
+        steps = sorted(self.steps())
+        for s in steps[: -self.keep]:
+            shutil.rmtree(self.dir / f"step_{s}", ignore_errors=True)
+
+    # -- restore ---------------------------------------------------------------
+    def steps(self) -> list[int]:
+        return sorted(
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if p.is_dir() and (p / "manifest.json").exists()
+        )
+
+    def latest_step(self) -> int | None:
+        steps = self.steps()
+        return steps[-1] if steps else None
+
+    def restore(self, state_like, step: int | None = None,
+                shardings=None) -> tuple[dict, int, dict]:
+        """Restore into the structure of ``state_like`` (a pytree of arrays
+        or ShapeDtypeStructs).  ``shardings``: matching pytree of
+        NamedShardings for elastic placement on the *current* mesh."""
+        step = step if step is not None else self.latest_step()
+        if step is None:
+            raise FileNotFoundError(f"no checkpoints under {self.dir}")
+        d = self.dir / f"step_{step}"
+        manifest = json.loads((d / "manifest.json").read_text())
+        flat, treedef = _flatten(state_like)
+        sflat = None
+        if shardings is not None:
+            sflat, _ = _flatten(shardings)
+        out = {}
+        for k, leaf in flat.items():
+            arr = np.load(d / (k.replace("/", ".") + ".npy"))
+            arr = jax.numpy.asarray(arr).astype(leaf.dtype)
+            if sflat is not None and k in sflat:
+                out[k] = jax.device_put(arr, sflat[k])
+            else:
+                out[k] = arr
+        leaves = [out[k] for k in flat.keys()]
+        return (
+            jax.tree_util.tree_unflatten(treedef, leaves),
+            manifest["step"],
+            manifest.get("extra", {}),
+        )

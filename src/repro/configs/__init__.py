@@ -1,0 +1,8 @@
+"""Architecture + job configs.
+
+* ``nephele_media``  — the paper's own evaluation job (§4.1, Fig. 5).
+* one ``<arch>.py`` per assigned architecture (``ARCHS`` registry below).
+* ``shapes``         — the assigned input-shape sets.
+"""
+
+from .registry import ARCHS, get_config, list_archs  # noqa: F401

@@ -1,0 +1,22 @@
+"""llama3-405b [dense]: 126L d_model=16384 128H (GQA kv=8) d_ff=53248
+vocab=128256.  [arXiv:2407.21783; unverified]  Adafactor keeps optimizer
+state within the 16 GB/chip HBM budget at 256 chips."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b", family="dense",
+        num_layers=126, d_model=16384, num_heads=128, num_kv_heads=8,
+        d_ff=53248, vocab_size=128256,
+        rope_theta=5e5, optimizer="adafactor", scan_remat_groups=14,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="llama3-405b-smoke", family="dense",
+        num_layers=3, d_model=64, num_heads=8, num_kv_heads=2,
+        d_ff=160, vocab_size=384,
+        attn_chunk=32, remat=False,
+    )

@@ -1,0 +1,24 @@
+"""mixtral-8x7b [moe]: 32L d_model=4096 32H (GQA kv=8) d_ff=14336
+vocab=32000, MoE 8 experts top-2, sliding-window attention (4096).
+[arXiv:2401.04088; hf]  SWA makes long_500k runnable (rolling KV cache)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-8x7b", family="moe",
+        num_layers=32, d_model=4096, num_heads=32, num_kv_heads=8,
+        d_ff=14336, vocab_size=32000,
+        num_experts=8, experts_per_token=2,
+        sliding_window=4096, rope_theta=1e6, optimizer="adafactor",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="mixtral-smoke", family="moe",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=2,
+        d_ff=128, vocab_size=384,
+        num_experts=4, experts_per_token=2,
+        sliding_window=16, attn_chunk=16, remat=False,
+    )

@@ -1,0 +1,94 @@
+"""The paper's evaluation job (§4.1, Fig. 5): live video aggregation.
+
+Partitioner -> Decoder -> Merger -> Overlay -> Encoder -> RTP Server
+
+Wiring (consistent with the paper's m^3 = 512e6 constrained-sequence count at
+m = 800): Partitioner->Decoder and Encoder->RTPServer are all-to-all (m^2 and
+m channel choices respectively), the middle edges are pointwise (a Decoder
+owns whole stream groups, so the grouped frames flow subtask-to-subtask).
+
+Per-item CPU costs and item sizes model the workload: H.264 packets are small
+(~1.4 KB), decoded frames are large (320x240 YUV ~= 115 KB), merged/overlaid
+frames likewise, encoded packets small again.  The simulator reproduces the
+Fig. 7/8/9 behaviour with these numbers; the threaded engine uses real user
+code (JAX image ops) from examples/media_pipeline_qos.py instead.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+from repro.core import ALL_TO_ALL, POINTWISE, JobConstraint, JobGraph, JobSequence, JobVertex
+
+# Paper evaluation parameters (§4.2).
+PAPER_NODES = 200
+PAPER_PARALLELISM = 800
+PAPER_STREAMS = 6400
+PAPER_GROUP_SIZE = 4
+PAPER_LATENCY_LIMIT_MS = 300.0
+PAPER_WINDOW_MS = 15_000.0
+PAPER_INITIAL_BUFFER = 32 * 1024
+
+# Simulator workload model (per item).
+H264_PACKET_BYTES = 350            # compressed video NAL packet
+FRAME_BYTES = 320 * 240 * 3 // 2   # decoded YUV frame ~= 115 KB
+ENCODED_BYTES = 1_400
+
+DECODE_CPU_MS = 0.9
+MERGE_CPU_MS = 0.25
+OVERLAY_CPU_MS = 0.35
+ENCODE_CPU_MS = 1.1
+PARTITION_CPU_MS = 0.02
+SINK_CPU_MS = 0.02
+
+
+@dataclass
+class MediaJobParams:
+    parallelism: int = 8
+    num_workers: int = 2
+    streams: int = 64
+    fps: float = 25.0
+    latency_limit_ms: float = PAPER_LATENCY_LIMIT_MS
+    window_ms: float = PAPER_WINDOW_MS
+    group_size: int = PAPER_GROUP_SIZE
+    #: §3.6 fault-tolerance veto demo: forbid chaining across the Encoder
+    unchainable_encoder: bool = False
+
+
+def build_media_job(p: MediaJobParams) -> tuple[JobGraph, list[JobConstraint]]:
+    jg = JobGraph("nephele-media")
+    jg.add_vertex(JobVertex(
+        "Partitioner", p.parallelism, sim_cpu_ms=PARTITION_CPU_MS,
+        sim_item_bytes=H264_PACKET_BYTES, is_source=True))
+    jg.add_vertex(JobVertex(
+        "Decoder", p.parallelism, sim_cpu_ms=DECODE_CPU_MS,
+        sim_item_bytes=FRAME_BYTES))
+    jg.add_vertex(JobVertex(
+        "Merger", p.parallelism, sim_cpu_ms=MERGE_CPU_MS,
+        sim_item_bytes=FRAME_BYTES, sim_fan_in=p.group_size))
+    jg.add_vertex(JobVertex(
+        "Overlay", p.parallelism, sim_cpu_ms=OVERLAY_CPU_MS,
+        sim_item_bytes=FRAME_BYTES))
+    jg.add_vertex(JobVertex(
+        "Encoder", p.parallelism, sim_cpu_ms=ENCODE_CPU_MS,
+        sim_item_bytes=ENCODED_BYTES, chainable=not p.unchainable_encoder))
+    jg.add_vertex(JobVertex(
+        "RTPServer", p.parallelism, sim_cpu_ms=SINK_CPU_MS,
+        sim_item_bytes=ENCODED_BYTES, is_sink=True))
+
+    jg.add_edge("Partitioner", "Decoder", ALL_TO_ALL)
+    jg.add_edge("Decoder", "Merger", POINTWISE)
+    jg.add_edge("Merger", "Overlay", POINTWISE)
+    jg.add_edge("Overlay", "Encoder", POINTWISE)
+    jg.add_edge("Encoder", "RTPServer", ALL_TO_ALL)
+
+    # §4.2: one constraint per runtime sequence of
+    # S = (e1, v_D, e2, v_M, e3, v_O, e4, v_E, e5), l = 300 ms, t = 15 s.
+    seq = JobSequence.of(
+        ("Partitioner", "Decoder"), "Decoder",
+        ("Decoder", "Merger"), "Merger",
+        ("Merger", "Overlay"), "Overlay",
+        ("Overlay", "Encoder"), "Encoder",
+        ("Encoder", "RTPServer"),
+    )
+    jc = JobConstraint(seq, p.latency_limit_ms, p.window_ms, name="e2e-300ms")
+    return jg, [jc]

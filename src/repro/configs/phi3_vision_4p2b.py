@@ -1,0 +1,26 @@
+"""phi-3-vision-4.2b [vlm]: 32L d_model=3072 32H (GQA kv=32) d_ff=8192
+vocab=32064; phi3-mini backbone + CLIP frontend.
+[hf:microsoft/Phi-3-vision-128k-instruct; hf]
+
+The CLIP image tower is a STUB per the assignment: input_specs() provides
+576 precomputed patch embeddings (336px / 14px CLIP grid) which the backbone
+projects and prepends to the token sequence."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="phi-3-vision-4.2b", family="vlm",
+        num_layers=32, d_model=3072, num_heads=32, num_kv_heads=32,
+        d_ff=8192, vocab_size=32064,
+        num_patches=576, rope_theta=1e4,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="phi3v-smoke", family="vlm",
+        num_layers=2, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=384, num_patches=16,
+        attn_chunk=32, remat=False,
+    )

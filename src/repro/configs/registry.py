@@ -1,0 +1,30 @@
+"""Registry of assigned architectures (populated by the per-arch modules)."""
+from __future__ import annotations
+
+import importlib
+
+ARCHS: dict[str, str] = {
+    # arch id -> module name under repro.configs
+    "dbrx-132b": "dbrx_132b",
+    "mixtral-8x7b": "mixtral_8x7b",
+    "qwen3-1.7b": "qwen3_1p7b",
+    "llama3.2-3b": "llama3p2_3b",
+    "llama3-405b": "llama3_405b",
+    "yi-6b": "yi_6b",
+    "phi-3-vision-4.2b": "phi3_vision_4p2b",
+    "mamba2-130m": "mamba2_130m",
+    "zamba2-7b": "zamba2_7b",
+    "whisper-tiny": "whisper_tiny",
+}
+
+
+def get_config(arch: str, smoke: bool = False):
+    """Return the ModelConfig for an assigned architecture id."""
+    if arch not in ARCHS:
+        raise KeyError(f"unknown arch {arch!r}; known: {sorted(ARCHS)}")
+    mod = importlib.import_module(f"repro.configs.{ARCHS[arch]}")
+    return mod.smoke_config() if smoke else mod.config()
+
+
+def list_archs() -> list[str]:
+    return sorted(ARCHS)

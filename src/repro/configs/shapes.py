@@ -1,0 +1,40 @@
+"""Assigned input shapes (LM-family: seq_len x global_batch).
+
+``decode_*`` / ``long_*`` lower ``serve_step`` (one new token against a KV
+cache of seq_len), not ``train_step``.  ``long_500k`` requires sub-quadratic
+attention — skipped for pure full-attention archs (see DESIGN.md
+§Arch-applicability)."""
+from __future__ import annotations
+
+from dataclasses import dataclass
+
+
+@dataclass(frozen=True)
+class InputShape:
+    name: str
+    seq_len: int
+    global_batch: int
+    mode: str  # "train" | "prefill" | "decode"
+
+
+SHAPES: dict[str, InputShape] = {
+    "train_4k": InputShape("train_4k", 4_096, 256, "train"),
+    "prefill_32k": InputShape("prefill_32k", 32_768, 32, "prefill"),
+    "decode_32k": InputShape("decode_32k", 32_768, 128, "decode"),
+    "long_500k": InputShape("long_500k", 524_288, 1, "decode"),
+}
+
+#: archs with sub-quadratic sequence handling run long_500k; pure
+#: full-attention archs skip it (noted in DESIGN.md).
+LONG_CONTEXT_ARCHS = {"mixtral-8x7b", "mamba2-130m", "zamba2-7b"}
+
+
+def cells(archs: list[str]) -> list[tuple[str, str]]:
+    """All (arch, shape) dry-run cells, with the documented skips applied."""
+    out = []
+    for a in archs:
+        for s in SHAPES:
+            if s == "long_500k" and a not in LONG_CONTEXT_ARCHS:
+                continue
+            out.append((a, s))
+    return out

@@ -1,0 +1,23 @@
+"""whisper-tiny [audio]: enc-dec, 4L d_model=384 6H d_ff=1536 vocab=51865;
+conv frontend is a STUB (input_specs provides precomputed frame embeddings).
+[arXiv:2212.04356; unverified]"""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-tiny", family="encdec",
+        num_layers=4, d_model=384, num_heads=6, num_kv_heads=6,
+        d_ff=1536, vocab_size=51865,
+        encoder_layers=4, max_source_positions=1500,
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="whisper-smoke", family="encdec",
+        num_layers=2, d_model=48, num_heads=3, num_kv_heads=3,
+        d_ff=96, vocab_size=384,
+        encoder_layers=2, max_source_positions=32,
+        attn_chunk=16, remat=False,
+    )

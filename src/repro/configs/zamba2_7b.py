@@ -1,0 +1,29 @@
+"""zamba2-7b [hybrid]: 81L d_model=3584 32H (GQA kv=32) d_ff=14336
+vocab=32000, ssm_state=64; Mamba-2 backbone + shared attention block.
+[arXiv:2411.15242; unverified]
+
+The shared attention+MLP block (one set of weights) is applied after every
+6 backbone layers (13 applications + 3 tail layers); see zamba.py for the
+recorded simplifications.  At 500k decode the shared attention uses a
+rolling 4096 window (the SSM carries long-range state)."""
+from repro.models.config import ModelConfig
+
+
+def config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-7b", family="hybrid",
+        num_layers=81, d_model=3584, num_heads=32, num_kv_heads=32,
+        d_ff=14336, vocab_size=32000,
+        ssm_state=64, ssm_expand=2, ssm_head_dim=64, ssm_chunk=64,
+        attn_every=6, sliding_window=4096, optimizer="adafactor",
+    )
+
+
+def smoke_config() -> ModelConfig:
+    return ModelConfig(
+        name="zamba2-smoke", family="hybrid",
+        num_layers=5, d_model=64, num_heads=4, num_kv_heads=4,
+        d_ff=128, vocab_size=384,
+        ssm_state=16, ssm_expand=2, ssm_head_dim=16, ssm_chunk=16,
+        attn_every=2, sliding_window=32, attn_chunk=16, remat=False,
+    )

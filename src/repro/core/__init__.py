@@ -1,0 +1,58 @@
+"""Nephele Streaming core: QoS-constrained stream processing (paper §2-§3).
+
+The paper's primary contribution as a composable library:
+
+* graphs        — job graph / runtime graph formalism (§3.1)
+* constraints   — task/channel/sequence latency + constraints, Eq. (1) (§3.2)
+* measurement   — tagged-item sampling, reporters, reports (§3.3)
+* setup         — distributed QoS manager placement, Algorithms 1-3 (§3.4)
+* buffers       — output buffers + adaptive sizing, Eq. (2)/(3) (§3.5.1)
+* chaining      — dynamic task chaining + §3.6 fault-tolerance veto (§3.5.2)
+* manager       — violation detection (max-plus DP) + countermeasures (§3.5)
+* engine        — threaded executor (real time, laptop scale)
+* simulator     — discrete-event executor (paper scale: n=200, m=800)
+"""
+
+from .buffers import BufferSizingPolicy, OutputBuffer
+from .chaining import ChainRequest, TaskRuntimeInfo, chainable_series, find_chain
+from .clock import Clock, RealClock, SimClock
+from .constraints import (
+    JobConstraint,
+    JobSequence,
+    RuntimeConstraint,
+    RuntimeSequence,
+    constraint_elements,
+    enumerate_runtime_sequences,
+    sequence_latency,
+)
+from .engine import EngineResult, SourceSpec, StreamEngine, StreamItem
+from .graphs import (
+    ALL_TO_ALL,
+    POINTWISE,
+    Channel,
+    JobEdge,
+    JobGraph,
+    JobVertex,
+    RuntimeGraph,
+    RuntimeSubgraph,
+    RuntimeVertex,
+)
+from .manager import BufferSizeUpdate, GiveUp, QoSManager
+from .measurement import QoSReport, QoSReporter, RunningAverage, Tag
+from .setup import (
+    ManagerAllocation,
+    check_side_conditions,
+    compute_qos_setup,
+    compute_reporter_setup,
+    get_anchor_vertex,
+)
+from .simulator import (
+    SimNetConfig,
+    SimResult,
+    SimSourceSpec,
+    StreamSimulator,
+)
+
+__all__ = [k for k in dir() if not k.startswith("_")]
+
+from .elastic import ElasticController, ScaleDecision, ThroughputConstraint  # noqa: F401,E402

@@ -1,0 +1,110 @@
+"""Output buffers and adaptive sizing (paper §2.2.1, §3.5.1).
+
+Data items produced by a task are collected in an output buffer; the buffer
+ships once its byte capacity ``obs(e)`` is reached (Fig. 1).  Buffer size is
+the primary latency<->throughput knob (Fig. 2).
+
+Adaptive sizing (§3.5.1), run by QoS managers on violated sequences:
+
+* estimated output-buffer latency ``obl(e,t) = oblt(e,t) / 2``
+* shrink when ``obl`` exceeds both a minimum threshold (default 5 ms) and the
+  task latency of the channel's source task:
+
+      obs*(e) = max(eps, obs(e) * r ** obl(e,t))        (Eq. 2)
+
+  with defaults r = 0.98 (per ms), eps = 200 bytes.
+* grow when ``obl ~ 0`` (buffers filling faster than the threshold):
+
+      obs*(e) = min(omega, s * obs(e))                  (Eq. 3)
+
+  with defaults s = 1.1 and omega an upper bound (32 KB in the evaluation).
+
+Update races (§3.5.1): several managers can share a channel; the worker
+applies the *first* update computed against the current version and discards
+updates computed against stale versions, then advertises the new
+(size, version) through the next reports.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+# Paper defaults.
+DEFAULT_R = 0.98
+DEFAULT_EPS_BYTES = 200
+DEFAULT_S = 1.1
+DEFAULT_OMEGA_BYTES = 64 * 1024
+DEFAULT_MIN_OBL_MS = 5.0
+#: below this, ``obl`` counts as ~0 and the buffer may grow (Eq. 3).
+DEFAULT_ZERO_OBL_MS = 1.0
+
+
+@dataclass
+class BufferSizingPolicy:
+    r: float = DEFAULT_R
+    eps_bytes: int = DEFAULT_EPS_BYTES
+    s: float = DEFAULT_S
+    omega_bytes: int = DEFAULT_OMEGA_BYTES
+    min_obl_ms: float = DEFAULT_MIN_OBL_MS
+    zero_obl_ms: float = DEFAULT_ZERO_OBL_MS
+
+    def propose(
+        self,
+        obs_bytes: int,
+        obl_ms: float,
+        src_task_latency_ms: float | None,
+    ) -> int | None:
+        """Return the new buffer size, or None if no change is warranted."""
+        if obl_ms > self.min_obl_ms and (
+            src_task_latency_ms is None or obl_ms > src_task_latency_ms
+        ):
+            new = max(self.eps_bytes, int(obs_bytes * (self.r ** obl_ms)))
+            return new if new != obs_bytes else None
+        if obl_ms < self.zero_obl_ms:
+            new = min(self.omega_bytes, int(self.s * obs_bytes) + 1)
+            return new if new != obs_bytes else None
+        return None
+
+
+@dataclass
+class OutputBuffer:
+    """A byte-capacity output buffer on one channel (sender side).
+
+    The execution layer appends serialized items; ``append`` returns True when
+    the buffer must be shipped.  Lifetime (fill time) feeds ``oblt(e,t)``.
+    ``version`` implements the §3.5.1 first-writer-wins update rule.
+    """
+
+    channel_id: str
+    capacity_bytes: int
+    version: int = 0
+    items: list[Any] = field(default_factory=list)
+    used_bytes: int = 0
+    opened_at_ms: float | None = None
+
+    def append(self, item: Any, size_bytes: int, now_ms: float) -> bool:
+        if self.opened_at_ms is None:
+            self.opened_at_ms = now_ms
+        self.items.append(item)
+        self.used_bytes += size_bytes
+        return self.used_bytes >= self.capacity_bytes
+
+    def take(self, now_ms: float) -> tuple[list[Any], int, float]:
+        """Ship the buffer: returns (items, bytes, lifetime_ms) and resets."""
+        lifetime = 0.0 if self.opened_at_ms is None else now_ms - self.opened_at_ms
+        out, nbytes = self.items, self.used_bytes
+        self.items, self.used_bytes, self.opened_at_ms = [], 0, None
+        return out, nbytes, lifetime
+
+    @property
+    def empty(self) -> bool:
+        return not self.items
+
+    def try_update_size(self, new_size: int, base_version: int) -> bool:
+        """First-writer-wins (§3.5.1): apply only if the requester computed the
+        update against the current version."""
+        if base_version != self.version:
+            return False
+        self.capacity_bytes = max(1, int(new_size))
+        self.version += 1
+        return True

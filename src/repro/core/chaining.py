@@ -1,0 +1,118 @@
+"""Dynamic task chaining (paper §3.5.2, Fig. 3) + §3.6 fault-tolerance veto.
+
+Chaining pulls a series of tasks into one execution thread, eliminating the
+queues and thread-safe hand-over between them.  A series v_1..v_n inside a
+constrained sequence is *chainable* iff:
+
+1. all tasks run as separate threads within the same process on the same
+   worker node (which excludes already-chained tasks),
+2. the sum of their CPU utilizations is below the capacity of one core (or a
+   fraction of it, default 90 %),
+3. they form a path through the manager's runtime subgraph,
+4. interior tasks have exactly one incoming and one outgoing channel; only
+   v_1 may have multiple incoming and only v_n multiple outgoing channels,
+5. (§3.6) no task is annotated ``chainable=False`` — the fault-tolerance veto
+   that keeps materialization points intact.
+
+The QoS manager chains the **longest** chainable series found in a violated
+sequence.  When establishing a chain the worker either *drops* the in-flight
+queues between the tasks or *drains* them first (§3.5.2); both are supported.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+from .graphs import RuntimeGraph, RuntimeSubgraph, RuntimeVertex
+
+DEFAULT_CPU_THRESHOLD = 0.90
+
+DROP_QUEUES = "drop"
+DRAIN_QUEUES = "drain"
+
+
+@dataclass
+class TaskRuntimeInfo:
+    """What the chaining decision needs to know about one task."""
+
+    worker: int
+    cpu_utilization: float
+    chained: bool
+
+
+@dataclass(frozen=True)
+class ChainRequest:
+    """Manager -> worker instruction to chain ``tasks`` (in dataflow order)."""
+
+    tasks: tuple[RuntimeVertex, ...]
+    worker: int
+    mode: str = DRAIN_QUEUES
+
+
+def chainable_series(
+    tasks: list[RuntimeVertex],
+    rg: RuntimeGraph,
+    subgraph: RuntimeSubgraph,
+    info: Callable[[RuntimeVertex], TaskRuntimeInfo | None],
+    cpu_threshold: float = DEFAULT_CPU_THRESHOLD,
+) -> list[RuntimeVertex]:
+    """Longest chainable contiguous series within ``tasks`` (the task elements
+    of a violated runtime sequence, in order).  Returns [] if none with >= 2
+    tasks exists."""
+    n = len(tasks)
+    best: list[RuntimeVertex] = []
+
+    def ok_pairwise(i: int, j: int) -> bool:
+        """Conditions for the contiguous run tasks[i..j] (inclusive)."""
+        run = tasks[i : j + 1]
+        infos = [info(v) for v in run]
+        if any(x is None for x in infos):
+            return False
+        # (1) same worker, none already chained
+        workers = {x.worker for x in infos}
+        if len(workers) != 1 or any(x.chained for x in infos):
+            return False
+        # (5) fault-tolerance veto
+        if any(not rg.job_graph.vertices[v.job_vertex].chainable for v in run):
+            return False
+        # (2) CPU budget
+        if sum(x.cpu_utilization for x in infos) >= cpu_threshold:
+            return False
+        # (3) path through the manager's subgraph
+        for a, b in zip(run, run[1:]):
+            if not any(c.dst == b for c in subgraph.out_channels(a)):
+                return False
+        # (4) in/out degree, measured on the *full* runtime graph
+        for k, v in enumerate(run):
+            if k > 0 and len(rg.in_channels(v)) != 1:
+                return False
+            if k < len(run) - 1 and len(rg.out_channels(v)) != 1:
+                return False
+        return True
+
+    # O(n^2) scan is fine: sequences are short (task count ~ pipeline depth).
+    for i in range(n):
+        for j in range(n - 1, i, -1):  # longest first
+            if j - i + 1 <= len(best):
+                break
+            if ok_pairwise(i, j):
+                cand = tasks[i : j + 1]
+                if len(cand) > len(best):
+                    best = cand
+                break
+    return best
+
+
+def find_chain(
+    sequence_tasks: list[RuntimeVertex],
+    rg: RuntimeGraph,
+    subgraph: RuntimeSubgraph,
+    info: Callable[[RuntimeVertex], TaskRuntimeInfo | None],
+    cpu_threshold: float = DEFAULT_CPU_THRESHOLD,
+    mode: str = DRAIN_QUEUES,
+) -> ChainRequest | None:
+    series = chainable_series(sequence_tasks, rg, subgraph, info, cpu_threshold)
+    if len(series) < 2:
+        return None
+    worker = info(series[0]).worker
+    return ChainRequest(tuple(series), worker, mode)

@@ -1,0 +1,40 @@
+"""Clock abstraction so the QoS control plane runs unmodified on real time
+(threaded engine) and simulated time (discrete-event simulator).
+
+All latencies in this codebase are in **milliseconds** (the paper quotes ms).
+"""
+from __future__ import annotations
+
+import time
+
+
+class Clock:
+    """Interface: ``now()`` returns current time in milliseconds."""
+
+    def now(self) -> float:  # pragma: no cover - interface
+        raise NotImplementedError
+
+
+class RealClock(Clock):
+    """Wall-clock time (monotonic), in milliseconds."""
+
+    def __init__(self) -> None:
+        self._t0 = time.monotonic()
+
+    def now(self) -> float:
+        return (time.monotonic() - self._t0) * 1e3
+
+
+class SimClock(Clock):
+    """Simulated time, advanced by the discrete-event loop."""
+
+    def __init__(self) -> None:
+        self._now = 0.0
+
+    def now(self) -> float:
+        return self._now
+
+    def advance_to(self, t: float) -> None:
+        if t < self._now:
+            raise ValueError(f"time went backwards: {t} < {self._now}")
+        self._now = t

@@ -1,0 +1,271 @@
+"""Latency model and constraints (paper §3.2).
+
+* task latency ``tl(d, v, in->out)``      — time inside user code (§3.2.1)
+* channel latency ``cl(d, e)``            — exit of src user code -> entry of
+                                            dst user code, incl. output-buffer
+                                            residency + transport (§3.2.2)
+* sequence latency ``sl(d, S)``           — recursive sum along a sequence of
+                                            connected tasks/channels (§3.2.3)
+* job constraint ``jc = (JS, l, t)``      — on the job graph (§3.2.4)
+* runtime constraint ``c = (S, l, t)``    — Eq. (1): the arithmetic mean of
+  ``sl`` over items entering S during any span of t time units must be <= l.
+
+Job sequences are expressed over the *job graph*; each induces a (possibly
+enormous: m^k) set of runtime sequences.  Runtime constraints are therefore
+**never** materialized globally; QoS managers evaluate them lazily on their
+subgraph (see manager.py).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Iterable, Iterator, Sequence
+
+from .graphs import Channel, JobGraph, RuntimeGraph, RuntimeSubgraph, RuntimeVertex
+
+# ---------------------------------------------------------------------------
+# Job-level sequences & constraints
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class JobSequenceElement:
+    """Either a job vertex (``kind='vertex'``) or a job edge (``kind='edge'``)."""
+
+    kind: str  # 'vertex' | 'edge'
+    vertex: str | None = None
+    edge: tuple[str, str] | None = None
+
+    @staticmethod
+    def v(name: str) -> "JobSequenceElement":
+        return JobSequenceElement("vertex", vertex=name)
+
+    @staticmethod
+    def e(src: str, dst: str) -> "JobSequenceElement":
+        return JobSequenceElement("edge", edge=(src, dst))
+
+    def __repr__(self) -> str:
+        return self.vertex if self.kind == "vertex" else f"{self.edge[0]}->{self.edge[1]}"
+
+
+@dataclass(frozen=True)
+class JobSequence:
+    """n-tuple of connected job vertices/edges; first/last may be either (§3.2.4)."""
+
+    elements: tuple[JobSequenceElement, ...]
+
+    def __post_init__(self) -> None:
+        if not self.elements:
+            raise ValueError("empty job sequence")
+        for a, b in zip(self.elements, self.elements[1:]):
+            if a.kind == b.kind:
+                raise ValueError("sequence must alternate vertices and edges")
+            if a.kind == "vertex" and b.edge[0] != a.vertex:
+                raise ValueError(f"disconnected: {a} then {b}")
+            if a.kind == "edge" and b.vertex != a.edge[1]:
+                raise ValueError(f"disconnected: {a} then {b}")
+
+    # -- helpers -------------------------------------------------------------
+    @staticmethod
+    def of(*names_or_edges) -> "JobSequence":
+        """Build from strings (vertices) and (src, dst) tuples (edges)."""
+        els = tuple(
+            JobSequenceElement.v(x) if isinstance(x, str) else JobSequenceElement.e(*x)
+            for x in names_or_edges
+        )
+        return JobSequence(els)
+
+    @staticmethod
+    def full_path(path: Sequence[str], include_endpoints: bool = False) -> "JobSequence":
+        """Sequence covering a job-graph path.  With ``include_endpoints=False``
+        the first/last elements are the edges (the paper's evaluation
+        constrains ``(e_1, v_D, e_2, v_M, e_3, v_O, e_4, v_E, e_5)`` — tasks
+        between the Partitioner and the RTP Server, with both boundary
+        *channels* included but not the boundary tasks themselves)."""
+        els: list[JobSequenceElement] = []
+        for i, name in enumerate(path):
+            if include_endpoints or 0 < i < len(path) - 1:
+                els.append(JobSequenceElement.v(name))
+            if i < len(path) - 1:
+                els.append(JobSequenceElement.e(name, path[i + 1]))
+        # Re-order: path walk gives v,e,v,e,...; when endpoints are excluded we
+        # start with the first edge.
+        seq = sorted(els, key=lambda el: _order_key(el, list(path)))
+        return JobSequence(tuple(seq))
+
+    def vertices(self) -> list[str]:
+        return [el.vertex for el in self.elements if el.kind == "vertex"]
+
+    def edges(self) -> list[tuple[str, str]]:
+        return [el.edge for el in self.elements if el.kind == "edge"]
+
+    def covered_path(self) -> tuple[str, ...]:
+        """The job-vertex path spanned by this sequence, including endpoint
+        vertices of boundary edges."""
+        path: list[str] = []
+        for el in self.elements:
+            if el.kind == "vertex":
+                if not path or path[-1] != el.vertex:
+                    path.append(el.vertex)
+            else:
+                s, d = el.edge
+                if not path or path[-1] != s:
+                    path.append(s)
+                path.append(d)
+        return tuple(path)
+
+    def __len__(self) -> int:
+        return len(self.elements)
+
+    def __repr__(self) -> str:
+        return "JS(" + ", ".join(map(repr, self.elements)) + ")"
+
+
+def _order_key(el: JobSequenceElement, path: list[str]) -> float:
+    if el.kind == "vertex":
+        return float(path.index(el.vertex))
+    return path.index(el.edge[0]) + 0.5
+
+
+@dataclass(frozen=True)
+class JobConstraint:
+    """``jc = (JS, l, t)``: upper latency limit ``l`` (ms) over any time span
+    of ``t`` ms, for all runtime sequences induced by ``sequence`` (§3.2.4)."""
+
+    sequence: JobSequence
+    latency_limit_ms: float
+    window_ms: float
+    name: str = "constraint"
+
+    def num_runtime_sequences(self, rg: RuntimeGraph) -> int:
+        """|induced runtime sequences| — the paper's m^3 = 512e6 count for the
+        media job at m=800.  Computed combinatorially, never materialized."""
+        count = 0
+        # product over job-edge multiplicities along each maximal run; a
+        # sequence is one concrete channel per job edge and the implied
+        # endpoint tasks.  For ALL_TO_ALL edges a path through k parallel
+        # vertex groups of size m has m^k concrete instances.
+        path = self.sequence.covered_path()
+        total = 1
+        for name in path:
+            total *= rg.job_graph.vertices[name].parallelism
+        # POINTWISE edges collapse the two adjacent factors into one.
+        for (s, d) in self.sequence.edges():
+            je = rg.job_graph.edge(s, d)
+            if je.pattern == "pointwise":
+                total //= rg.job_graph.vertices[d].parallelism
+        return total
+
+
+# ---------------------------------------------------------------------------
+# Runtime-level sequences & constraints
+# ---------------------------------------------------------------------------
+
+RuntimeSequenceElement = RuntimeVertex | Channel
+
+
+@dataclass(frozen=True)
+class RuntimeSequence:
+    """A concrete n-tuple of connected tasks and channels (§3.2.3)."""
+
+    elements: tuple[RuntimeSequenceElement, ...]
+
+    def vertices(self) -> list[RuntimeVertex]:
+        return [el for el in self.elements if isinstance(el, RuntimeVertex)]
+
+    def channels(self) -> list[Channel]:
+        return [el for el in self.elements if isinstance(el, Channel)]
+
+    def __len__(self) -> int:
+        return len(self.elements)
+
+    def __repr__(self) -> str:
+        return "S(" + " ".join(e.id for e in self.elements) + ")"
+
+
+@dataclass(frozen=True)
+class RuntimeConstraint:
+    """``c = (S, l, t)`` with Eq. (1) semantics."""
+
+    sequence: RuntimeSequence
+    latency_limit_ms: float
+    window_ms: float
+    job_constraint: JobConstraint | None = None
+
+
+def sequence_latency(latencies: Sequence[float]) -> float:
+    """``sl(d, S)`` for one item given per-element latencies — the recursive
+    definition in §3.2.3 telescopes to a sum of element latencies."""
+    return float(sum(latencies))
+
+
+# ---------------------------------------------------------------------------
+# Enumeration helpers (used by managers on their *small* subgraphs and by
+# tests; never on the full runtime graph)
+# ---------------------------------------------------------------------------
+
+
+def enumerate_runtime_sequences(
+    jc: JobConstraint,
+    rg: RuntimeGraph,
+    subgraph: RuntimeSubgraph | None = None,
+    limit: int | None = None,
+) -> Iterator[RuntimeSequence]:
+    """Enumerate the runtime sequences of ``jc`` (optionally restricted to a
+    manager subgraph).  DFS over concrete channels following the job sequence
+    pattern.  ``limit`` guards accidental blow-up."""
+    js = jc.sequence
+    path = js.covered_path()
+    starts_with_vertex = js.elements[0].kind == "vertex"
+    ends_with_vertex = js.elements[-1].kind == "vertex"
+
+    def vertex_ok(v: RuntimeVertex) -> bool:
+        return subgraph is None or v in subgraph
+
+    def chan_ok(c: Channel) -> bool:
+        return subgraph is None or c in subgraph
+
+    count = 0
+
+    def emit(chain: list[RuntimeSequenceElement]) -> RuntimeSequence:
+        els = list(chain)
+        if not starts_with_vertex:
+            els = els[1:]  # drop leading task (sequence starts at its out edge)
+        if not ends_with_vertex:
+            els = els[:-1]
+        return RuntimeSequence(tuple(els))
+
+    def dfs(pos: int, v: RuntimeVertex, chain: list[RuntimeSequenceElement]):
+        nonlocal count
+        if limit is not None and count >= limit:
+            return
+        if pos == len(path) - 1:
+            count += 1
+            yield emit(chain)
+            return
+        nxt = path[pos + 1]
+        for c in rg.out_channels(v):
+            if c.dst.job_vertex != nxt or not chan_ok(c) or not vertex_ok(c.dst):
+                continue
+            chain.append(c)
+            chain.append(c.dst)
+            yield from dfs(pos + 1, c.dst, chain)
+            chain.pop()
+            chain.pop()
+
+    for v0 in rg.tasks_of(path[0]):
+        if vertex_ok(v0):
+            yield from dfs(0, v0, [v0])
+
+
+def constraint_elements(
+    jc: JobConstraint, rg: RuntimeGraph
+) -> tuple[set[RuntimeVertex], set[Channel]]:
+    """All runtime vertices/channels that participate in any sequence of
+    ``jc`` — i.e. what must be *measured*.  Linear in graph size."""
+    vs: set[RuntimeVertex] = set()
+    cs: set[Channel] = set()
+    for name in jc.sequence.vertices():
+        vs.update(rg.tasks_of(name))
+    for (s, d) in jc.sequence.edges():
+        cs.update(rg.channels_of(s, d))
+    return vs, cs

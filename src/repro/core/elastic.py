@@ -1,0 +1,85 @@
+"""Elastic scale-out for throughput QoS goals — the paper's §6 future work
+("strategies for other QoS goals such as ... throughput that exploit the
+capability of a cloud to elastically scale on demand").
+
+A ``ThroughputConstraint`` demands a minimum delivered rate at a job
+vertex's tasks.  The ``ElasticController`` watches per-task throughput and
+utilization (from the same QoS reporter telemetry) and, when a stage is
+saturated (utilization near 1 and throughput below target), requests a
+scale-out: the stage's parallelism grows, new tasks are wired with the same
+job-edge patterns, and upstream key-routing spreads over the larger group.
+Scale-in happens when utilization stays below a low-water mark.
+
+The simulator executes the re-wiring live (StreamSimulator.apply_scale_out)
+— the scheme the paper sketches for cloud deployments.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class ThroughputConstraint:
+    """Minimum items/s that ``job_vertex``'s tasks must deliver in
+    aggregate, evaluated over a sliding window of ``window_ms``."""
+
+    job_vertex: str
+    min_items_per_s: float
+    window_ms: float = 5_000.0
+    name: str = "throughput"
+
+
+@dataclass
+class ScaleDecision:
+    job_vertex: str
+    from_parallelism: int
+    to_parallelism: int
+    reason: str
+    at_ms: float
+
+
+class ElasticController:
+    """Scale-out/in policy on reporter telemetry.
+
+    saturated: mean task utilization > hi_water AND delivered < target.
+    idle:      mean utilization < lo_water for ``cooldown_ms``.
+    """
+
+    def __init__(self, constraint: ThroughputConstraint, *,
+                 hi_water: float = 0.85, lo_water: float = 0.25,
+                 max_parallelism: int = 64, step: int = 2,
+                 cooldown_ms: float = 10_000.0) -> None:
+        self.c = constraint
+        self.hi_water = hi_water
+        self.lo_water = lo_water
+        self.max_parallelism = max_parallelism
+        self.step = step
+        self.cooldown_ms = cooldown_ms
+        self._last_action_ms = -float("inf")
+        self.decisions: list[ScaleDecision] = []
+
+    def check(self, now_ms: float, parallelism: int,
+              delivered_items_per_s: float,
+              mean_utilization: float) -> ScaleDecision | None:
+        if now_ms - self._last_action_ms < self.cooldown_ms:
+            return None
+        d = None
+        if (delivered_items_per_s < self.c.min_items_per_s
+                and mean_utilization > self.hi_water
+                and parallelism < self.max_parallelism):
+            d = ScaleDecision(
+                self.c.job_vertex, parallelism,
+                min(parallelism + self.step, self.max_parallelism),
+                f"saturated: {delivered_items_per_s:.1f}/s < "
+                f"{self.c.min_items_per_s:.1f}/s at util "
+                f"{mean_utilization:.2f}", now_ms)
+        elif (mean_utilization < self.lo_water
+              and delivered_items_per_s > 1.2 * self.c.min_items_per_s
+              and parallelism > self.step):
+            d = ScaleDecision(
+                self.c.job_vertex, parallelism, parallelism - self.step,
+                f"idle: util {mean_utilization:.2f}", now_ms)
+        if d is not None:
+            self._last_action_ms = now_ms
+            self.decisions.append(d)
+        return d

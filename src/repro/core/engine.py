@@ -1,0 +1,555 @@
+"""Threaded streaming executor (real time) — paper §2.1 processing pattern.
+
+Implements the common design principles the paper identifies (Fig. 1):
+tasks = threads, channels = producer/consumer queues, items collected in
+byte-capacity output buffers that ship when full.  Cross-worker channels
+pay real serialization (pickle) costs; same-worker channels hand over via
+shared memory.  On top sit the QoS roles: per-worker QoS Reporters and the
+QoS Managers computed by setup.py, applying adaptive output-buffer sizing
+and dynamic task chaining at runtime.
+
+This executor is used at laptop scale (tests, examples); the discrete-event
+simulator (simulator.py) runs the identical control plane at paper scale.
+"""
+from __future__ import annotations
+
+import pickle
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .buffers import BufferSizingPolicy, OutputBuffer
+from .chaining import ChainRequest, DRAIN_QUEUES
+from .clock import Clock, RealClock
+from .constraints import JobConstraint
+from .graphs import ALL_TO_ALL, Channel, JobGraph, RuntimeGraph, RuntimeVertex
+from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
+from .measurement import QoSReporter, Tag
+from .setup import compute_qos_setup, compute_reporter_setup
+
+
+@dataclass
+class StreamItem:
+    payload: Any
+    size_bytes: int
+    created_at_ms: float
+    key: int = 0
+    tag: Tag | None = None
+
+
+@dataclass
+class SourceSpec:
+    """Pacing + item factory for a source job vertex (per subtask)."""
+
+    rate_items_per_s: float
+    make_payload: Callable[[int], tuple[Any, int]]  # seq -> (payload, size_bytes)
+    key_of: Callable[[int], int] = lambda seq: seq
+
+
+@dataclass
+class EngineResult:
+    duration_ms: float
+    sink_latencies_ms: list[float]
+    items_at_sinks: int
+    bytes_shipped: int
+    buffers_shipped: int
+    final_buffer_sizes: dict[str, int]
+    manager_history: list
+    give_ups: list[GiveUp]
+    chained_groups: list[tuple[str, ...]]
+
+    @property
+    def mean_latency_ms(self) -> float:
+        if not self.sink_latencies_ms:
+            return float("nan")
+        return sum(self.sink_latencies_ms) / len(self.sink_latencies_ms)
+
+    def latency_percentile(self, q: float) -> float:
+        if not self.sink_latencies_ms:
+            return float("nan")
+        xs = sorted(self.sink_latencies_ms)
+        idx = min(len(xs) - 1, int(q * len(xs)))
+        return xs[idx]
+
+    @property
+    def throughput_items_per_s(self) -> float:
+        return self.items_at_sinks / max(self.duration_ms / 1e3, 1e-9)
+
+
+# ---------------------------------------------------------------------------
+# Channel sender (sender-side endpoint: output buffer or chained direct call)
+# ---------------------------------------------------------------------------
+
+
+class ChannelSender:
+    def __init__(
+        self,
+        channel: Channel,
+        engine: "StreamEngine",
+        initial_buffer_bytes: int,
+    ) -> None:
+        self.channel = channel
+        self.engine = engine
+        self.buffer = OutputBuffer(channel.id, initial_buffer_bytes)
+        self.cross_worker = engine.rg.worker(channel.src) != engine.rg.worker(
+            channel.dst
+        )
+        self.chained = False
+        self._lock = threading.Lock()
+
+    def send(self, item: StreamItem) -> None:
+        eng = self.engine
+        now = eng.clock.now()
+        # tag on exit of sender user code (§3.3), one per interval
+        reporter = eng.reporters[eng.rg.worker(self.channel.src)]
+        if self.channel.id in eng.measured_channels and reporter.should_tag(
+            self.channel.id
+        ):
+            item.tag = Tag(self.channel.id, now)
+        if self.chained:
+            # direct invocation in the caller's thread — no queue, no buffer
+            dst = eng.executors[self.channel.dst]
+            if dst.batch_mode:
+                dst.process_batch([item], self.channel.id)
+            else:
+                dst.process(item, self.channel.id)
+            return
+        with self._lock:
+            full = self.buffer.append(item, item.size_bytes, now)
+            if full:
+                self._flush_locked(now)
+
+    def flush(self) -> None:
+        with self._lock:
+            if not self.buffer.empty:
+                self._flush_locked(self.engine.clock.now())
+
+    def _flush_locked(self, now: float) -> None:
+        items, nbytes, lifetime = self.buffer.take(now)
+        eng = self.engine
+        src_worker = eng.rg.worker(self.channel.src)
+        reporter = eng.reporters[src_worker]
+        if self.channel.id in eng.measured_channels:
+            reporter.record_output_buffer_lifetime(
+                self.channel.id, lifetime, self.buffer.capacity_bytes,
+                self.buffer.version,
+            )
+        if self.cross_worker:
+            # realistic serialize/deserialize cost for crossing workers
+            blob = pickle.dumps([i.payload for i in items])
+            _ = pickle.loads(blob)
+        eng.stats_lock_inc(nbytes, len(items))
+        eng.deliver(self.channel, items)
+
+    def try_update_size(self, new_size: int, base_version: int) -> bool:
+        with self._lock:
+            return self.buffer.try_update_size(new_size, base_version)
+
+
+# ---------------------------------------------------------------------------
+# Task executor
+# ---------------------------------------------------------------------------
+
+
+class TaskExecutor:
+    def __init__(self, vertex: RuntimeVertex, engine: "StreamEngine") -> None:
+        self.vertex = vertex
+        self.engine = engine
+        jv = engine.jg.vertices[vertex.job_vertex]
+        self.fn = jv.fn
+        self.batch_mode = jv.batch_fn
+        self.is_sink = jv.is_sink or not engine.jg.out_edges(vertex.job_vertex)
+        self.inbox: queue.Queue[tuple[str, list[StreamItem]] | None] = queue.Queue()
+        self.senders: dict[str, list[ChannelSender]] = {}  # dst job vertex -> senders
+        self._rr: dict[str, int] = {}
+        self.chained = False          # this task was pulled into another thread
+        self.paused = threading.Event()
+        self.paused.set()             # set == running
+        self.idle = threading.Event()
+        self.idle.set()
+        self.stop_flag = False
+        self.drained = threading.Event()
+        self._pending_task_sample: float | None = None
+        self._busy_ms = 0.0
+        self._window_start = engine.clock.now()
+        self.thread: threading.Thread | None = None
+
+    # -- emit routing ------------------------------------------------------------
+    def emit(self, payload: Any, size_bytes: int | None = None,
+             key: int | None = None, created_at_ms: float | None = None) -> None:
+        eng = self.engine
+        now = eng.clock.now()
+        if self._pending_task_sample is not None:
+            vid = self.vertex.id
+            if vid in eng.measured_tasks:
+                eng.reporters[eng.rg.worker(self.vertex)].record_task_latency(
+                    vid, now - self._pending_task_sample
+                )
+            self._pending_task_sample = None
+        cur = self._current_item
+        item = StreamItem(
+            payload=payload,
+            size_bytes=size_bytes if size_bytes is not None else (
+                cur.size_bytes if cur else 128),
+            created_at_ms=created_at_ms if created_at_ms is not None else (
+                cur.created_at_ms if cur else now),
+            key=key if key is not None else (cur.key if cur else 0),
+        )
+        for dst_jv, senders in self.senders.items():
+            if len(senders) == 1:
+                senders[0].send(item)
+            else:
+                idx = item.key % len(senders)
+                senders[idx].send(item)
+
+    _current_item: StreamItem | None = None
+
+    # -- item processing -----------------------------------------------------------
+    def process(self, item: StreamItem, in_channel_id: str) -> None:
+        eng = self.engine
+        now = eng.clock.now()
+        # evaluate tag just before entering user code (§3.3)
+        if item.tag is not None:
+            worker = eng.rg.worker(self.vertex)
+            eng.reporters[worker].record_channel_latency(
+                item.tag.channel_id, now - item.tag.created_at_ms
+            )
+            item.tag = None
+        vid = self.vertex.id
+        if (
+            self._pending_task_sample is None
+            and vid in eng.measured_tasks
+            and eng.reporters[eng.rg.worker(self.vertex)].should_sample_task(vid)
+        ):
+            self._pending_task_sample = now
+        if self.is_sink:
+            eng.record_sink_latency(now - item.created_at_ms)
+        t0 = time.perf_counter()
+        self._current_item = item
+        try:
+            if self.fn is not None:
+                self.fn(item.payload, self.emit, self)
+            elif not self.is_sink:
+                self.emit(item.payload)  # identity
+        finally:
+            self._current_item = None
+            self._busy_ms += (time.perf_counter() - t0) * 1e3
+
+    def process_batch(self, items: list[StreamItem], in_channel_id: str) -> None:
+        """Batch mode: one fn call per delivered output buffer — the buffer
+        size IS the batch size (the serving-plane reading of §2.2.1)."""
+        eng = self.engine
+        now = eng.clock.now()
+        for item in items:
+            if item.tag is not None:
+                worker = eng.rg.worker(self.vertex)
+                eng.reporters[worker].record_channel_latency(
+                    item.tag.channel_id, now - item.tag.created_at_ms
+                )
+                item.tag = None
+            if self.is_sink:
+                eng.record_sink_latency(now - item.created_at_ms)
+        vid = self.vertex.id
+        if (
+            self._pending_task_sample is None
+            and vid in eng.measured_tasks
+            and eng.reporters[eng.rg.worker(self.vertex)].should_sample_task(vid)
+        ):
+            self._pending_task_sample = now
+        t0 = time.perf_counter()
+        self._current_item = items[0] if items else None
+        try:
+            if self.fn is not None:
+                self.fn([it.payload for it in items], self.emit, self)
+        finally:
+            self._current_item = None
+            self._busy_ms += (time.perf_counter() - t0) * 1e3
+
+    # -- thread body ------------------------------------------------------------------
+    def run(self) -> None:
+        eng = self.engine
+        while not self.stop_flag:
+            self.paused.wait()
+            try:
+                got = self.inbox.get(timeout=0.02)
+            except queue.Empty:
+                if self.chained:
+                    break
+                continue
+            if got is None:
+                break
+            self.idle.clear()
+            ch_id, items = got
+            if self.batch_mode:
+                self.process_batch(items, ch_id)
+            else:
+                for it in items:
+                    self.process(it, ch_id)
+            self.idle.set()
+        # drain remaining work before exiting (chaining handshake)
+        while True:
+            try:
+                got = self.inbox.get_nowait()
+            except queue.Empty:
+                break
+            if got is None:
+                continue
+            ch_id, items = got
+            if self.batch_mode:
+                self.process_batch(items, ch_id)
+            else:
+                for it in items:
+                    self.process(it, ch_id)
+        self.drained.set()
+
+    def cpu_utilization(self) -> float:
+        now = self.engine.clock.now()
+        span = max(now - self._window_start, 1.0)
+        util = self._busy_ms / span
+        self._busy_ms = 0.0
+        self._window_start = now
+        return min(util, 1.0)
+
+
+# ---------------------------------------------------------------------------
+# The engine
+# ---------------------------------------------------------------------------
+
+
+class StreamEngine:
+    def __init__(
+        self,
+        jg: JobGraph,
+        constraints: list[JobConstraint],
+        num_workers: int,
+        sources: dict[str, SourceSpec],
+        initial_buffer_bytes: int = 32 * 1024,
+        measurement_interval_ms: float = 1_000.0,
+        enable_qos: bool = True,
+        enable_chaining: bool = True,
+        policy: BufferSizingPolicy | None = None,
+        clock: Clock | None = None,
+    ) -> None:
+        self.jg = jg
+        self.constraints = constraints
+        self.rg = RuntimeGraph(jg, num_workers)
+        self.sources = sources
+        self.clock = clock or RealClock()
+        self.enable_qos = enable_qos
+        self.enable_chaining = enable_chaining
+        self.interval_ms = measurement_interval_ms
+
+        # QoS setup (master, §3.4.2)
+        self.allocations = compute_qos_setup(jg, constraints, self.rg)
+        self.reporter_setup = compute_reporter_setup(self.allocations, self.rg)
+        self.reporters: dict[int, QoSReporter] = {
+            w: QoSReporter(w, self.clock, measurement_interval_ms)
+            for w in range(num_workers)
+        }
+        for w, routes in self.reporter_setup.task_routes.items():
+            for mgr, tasks in routes.items():
+                self.reporters[w].assign_manager(mgr, (), tasks)
+        for w, routes in self.reporter_setup.channel_routes.items():
+            for mgr, chans in routes.items():
+                self.reporters[w].assign_manager(mgr, chans, ())
+        self.managers: dict[int, QoSManager] = {
+            w: QoSManager(alloc, self.rg, self.clock, policy=policy)
+            for w, alloc in self.allocations.items()
+        }
+        self.measured_channels: set[str] = set()
+        self.measured_tasks: set[str] = set()
+        for r in self.reporters.values():
+            self.measured_channels |= r.interested_channels()
+            self.measured_tasks |= r.interested_tasks()
+
+        # runtime structures
+        self.executors: dict[RuntimeVertex, TaskExecutor] = {
+            v: TaskExecutor(v, self) for v in self.rg.vertices
+        }
+        self.senders: dict[str, ChannelSender] = {}
+        for c in self.rg.channels:
+            s = ChannelSender(c, self, initial_buffer_bytes)
+            self.senders[c.id] = s
+            self.executors[c.src].senders.setdefault(c.dst.job_vertex, []).append(s)
+
+        self._sink_lat: list[float] = []
+        self._sink_lock = threading.Lock()
+        self._bytes = 0
+        self._buffers = 0
+        self._stats_lock = threading.Lock()
+        self._stop = threading.Event()
+        self._chained_groups: list[tuple[str, ...]] = []
+        self._give_ups: list[GiveUp] = []
+
+    # -- stats ---------------------------------------------------------------------
+    def record_sink_latency(self, lat_ms: float) -> None:
+        with self._sink_lock:
+            self._sink_lat.append(lat_ms)
+
+    def stats_lock_inc(self, nbytes: int, nitems: int) -> None:
+        with self._stats_lock:
+            self._bytes += nbytes
+            self._buffers += 1
+
+    # -- delivery ---------------------------------------------------------------------
+    def deliver(self, channel: Channel, items: list[StreamItem]) -> None:
+        dst = self.executors[channel.dst]
+        if dst.chained:
+            # the task was pulled into a chain: its thread is gone, items are
+            # handed over synchronously in the caller's thread
+            if dst.batch_mode:
+                dst.process_batch(items, channel.id)
+            else:
+                for it in items:
+                    dst.process(it, channel.id)
+            return
+        dst.inbox.put((channel.id, items))
+
+    # -- source pacing ------------------------------------------------------------------
+    def _source_body(self, v: RuntimeVertex, spec: SourceSpec) -> None:
+        ex = self.executors[v]
+        period_s = 1.0 / max(spec.rate_items_per_s, 1e-9)
+        seq = 0
+        next_t = time.monotonic()
+        while not self._stop.is_set():
+            ex.paused.wait()
+            now = time.monotonic()
+            if now < next_t:
+                time.sleep(min(next_t - now, 0.05))
+                continue
+            next_t += period_s
+            payload, size = spec.make_payload(seq)
+            item = StreamItem(payload, size, self.clock.now(), key=spec.key_of(seq))
+            t0 = time.perf_counter()
+            ex._current_item = item
+            try:
+                if ex.fn is not None:
+                    ex.fn(payload, ex.emit, ex)
+                else:
+                    ex.emit(payload)
+            finally:
+                ex._current_item = None
+                ex._busy_ms += (time.perf_counter() - t0) * 1e3
+            seq += 1
+
+    # -- QoS control loop ------------------------------------------------------------------
+    def _control_body(self) -> None:
+        while not self._stop.is_set():
+            time.sleep(self.interval_ms / 1e3 / 4)
+            # cpu utilization sampling feeds the chaining precondition
+            for v, ex in self.executors.items():
+                if v.id in self.measured_tasks:
+                    self.reporters[self.rg.worker(v)].record_task_cpu(
+                        v.id, ex.cpu_utilization(), ex.chained
+                    )
+            # reporters -> managers
+            for rep in self.reporters.values():
+                for mgr_id, report in rep.maybe_flush():
+                    self.managers[mgr_id].receive_report(report)
+            if not self.enable_qos:
+                continue
+            # managers act
+            for mgr in self.managers.values():
+                for action in mgr.check():
+                    self._route_action(action)
+
+    def _route_action(self, action: Action) -> None:
+        if isinstance(action, BufferSizeUpdate):
+            self.senders[action.channel_id].try_update_size(
+                action.new_size_bytes, action.base_version
+            )
+        elif isinstance(action, ChainRequest):
+            if self.enable_chaining:
+                self.apply_chain(action)
+        elif isinstance(action, GiveUp):
+            self._give_ups.append(action)
+
+    # -- dynamic task chaining (§3.5.2) --------------------------------------------------
+    def apply_chain(self, req: ChainRequest) -> None:
+        tasks = [self.executors[v] for v in req.tasks]
+        if any(t.chained for t in tasks):
+            return
+        head = tasks[0]
+        # 1. halt the first task in the series
+        head.paused.clear()
+        try:
+            # 2. flush in-flight buffers between the chained tasks
+            chain_channel_ids = set()
+            for a, b in zip(req.tasks, req.tasks[1:]):
+                for c in self.rg.out_channels(a):
+                    if c.dst == b:
+                        self.senders[c.id].flush()
+                        chain_channel_ids.add(c.id)
+            # 3. drain + stop the downstream tasks' threads
+            if req.mode == DRAIN_QUEUES:
+                for t in tasks[1:]:
+                    t.chained = True  # thread exits after draining its inbox
+                for t in tasks[1:]:
+                    t.drained.wait(timeout=5.0)
+            else:  # drop
+                for t in tasks[1:]:
+                    t.chained = True
+                    while True:
+                        try:
+                            t.inbox.get_nowait()
+                        except queue.Empty:
+                            break
+                    t.drained.wait(timeout=5.0)
+            # 4. flip the senders to direct invocation; flush any stragglers
+            #    that raced in while draining (delivered synchronously via the
+            #    chained-destination path in deliver()).
+            for cid in chain_channel_ids:
+                self.senders[cid].chained = True
+            for cid in chain_channel_ids:
+                self.senders[cid].flush()
+            self._chained_groups.append(tuple(v.id for v in req.tasks))
+        finally:
+            head.paused.set()
+
+    # -- run --------------------------------------------------------------------------------
+    def run(self, duration_ms: float) -> EngineResult:
+        threads: list[threading.Thread] = []
+        for v, ex in self.executors.items():
+            if v.job_vertex in self.sources:
+                th = threading.Thread(
+                    target=self._source_body,
+                    args=(v, self.sources[v.job_vertex]),
+                    daemon=True,
+                    name=f"src-{v.id}",
+                )
+            else:
+                th = threading.Thread(target=ex.run, daemon=True, name=f"task-{v.id}")
+                ex.thread = th
+            threads.append(th)
+        ctrl = threading.Thread(target=self._control_body, daemon=True, name="qos-ctrl")
+        t0 = self.clock.now()
+        for th in threads:
+            th.start()
+        ctrl.start()
+        time.sleep(duration_ms / 1e3)
+        self._stop.set()
+        for ex in self.executors.values():
+            ex.stop_flag = True
+            ex.inbox.put(None)
+        for th in threads:
+            th.join(timeout=2.0)
+        ctrl.join(timeout=2.0)
+        dur = self.clock.now() - t0
+        history = []
+        for mgr in self.managers.values():
+            history.extend(mgr.history)
+        return EngineResult(
+            duration_ms=dur,
+            sink_latencies_ms=list(self._sink_lat),
+            items_at_sinks=len(self._sink_lat),
+            bytes_shipped=self._bytes,
+            buffers_shipped=self._buffers,
+            final_buffer_sizes={
+                cid: s.buffer.capacity_bytes for cid, s in self.senders.items()
+            },
+            manager_history=history,
+            give_ups=self._give_ups,
+            chained_groups=self._chained_groups,
+        )

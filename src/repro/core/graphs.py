@@ -1,0 +1,346 @@
+"""Job graph / runtime graph formalism (paper §3.1).
+
+A *job graph* ``JG = (JV, JE)`` is the compact, user-provided description of a
+streaming job: vertices carry user code and a degree of parallelism, edges
+declare who talks to whom and with which wiring pattern.
+
+The *runtime graph* ``G = (V, E)`` is the parallelized expansion used by the
+execution framework: each job vertex becomes ``parallelism`` runtime vertices
+(tasks), each job edge becomes a set of channels.  Every runtime vertex is
+allocated to a *worker node*; ``worker(v)`` denotes that mapping.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+from typing import Any, Callable, Iterable, Sequence
+
+# ---------------------------------------------------------------------------
+# Job graph
+# ---------------------------------------------------------------------------
+
+#: Wiring patterns for job edges.  ``ALL_TO_ALL`` connects every subtask of the
+#: producer to every subtask of the consumer (the paper's Partitioner->Decoder
+#: edges); ``POINTWISE`` connects subtask i to subtask i (requires equal
+#: parallelism on both sides).
+ALL_TO_ALL = "all_to_all"
+POINTWISE = "pointwise"
+
+
+@dataclass(frozen=True)
+class JobVertex:
+    """A vertex of the job graph: user code + degree of parallelism.
+
+    ``chainable=False`` is the §3.6 fault-tolerance annotation: it vetoes
+    dynamic task chaining *into or out of* this vertex so that materialization
+    points for log-based rollback-recovery stay intact.
+    """
+
+    name: str
+    parallelism: int = 1
+    #: user code: fn(item, emit, ctx) -> None.  ``emit(out_item)`` forwards.
+    fn: Callable[..., Any] | None = None
+    #: per-item CPU cost in ms (used by the simulator; ignored by the
+    #: threaded engine, which measures real CPU time).
+    sim_cpu_ms: float = 0.0
+    #: average emitted item size in bytes (simulator only).
+    sim_item_bytes: int = 128
+    #: how many input items produce one output item (simulator only);
+    #: e.g. the Merger consumes 4 frames -> 1 merged frame.
+    sim_fan_in: int = 1
+    chainable: bool = True
+    is_source: bool = False
+    is_sink: bool = False
+    #: batch mode: the task consumes a whole delivered output buffer at once
+    #: (fn receives the list of payloads) — serving stages batch this way,
+    #: which is exactly what makes the output-buffer size the batch-size
+    #: knob (DESIGN.md §2.2)
+    batch_fn: bool = False
+
+    def __repr__(self) -> str:  # compact
+        return f"JobVertex({self.name} x{self.parallelism})"
+
+
+@dataclass(frozen=True)
+class JobEdge:
+    src: str
+    dst: str
+    pattern: str = ALL_TO_ALL
+
+    def __repr__(self) -> str:
+        return f"JobEdge({self.src}->{self.dst}, {self.pattern})"
+
+
+class JobGraph:
+    """DAG of job vertices and job edges (paper §3.1.1)."""
+
+    def __init__(self, name: str = "job") -> None:
+        self.name = name
+        self.vertices: dict[str, JobVertex] = {}
+        self.edges: list[JobEdge] = []
+
+    # -- construction -------------------------------------------------------
+    def add_vertex(self, v: JobVertex) -> JobVertex:
+        if v.name in self.vertices:
+            raise ValueError(f"duplicate job vertex {v.name!r}")
+        self.vertices[v.name] = v
+        return v
+
+    def add_edge(self, src: str, dst: str, pattern: str = ALL_TO_ALL) -> JobEdge:
+        for name in (src, dst):
+            if name not in self.vertices:
+                raise ValueError(f"unknown job vertex {name!r}")
+        if pattern == POINTWISE and (
+            self.vertices[src].parallelism != self.vertices[dst].parallelism
+        ):
+            raise ValueError("POINTWISE edge requires equal parallelism")
+        e = JobEdge(src, dst, pattern)
+        self.edges.append(e)
+        self._check_acyclic()
+        return e
+
+    # -- queries -------------------------------------------------------------
+    def out_edges(self, name: str) -> list[JobEdge]:
+        return [e for e in self.edges if e.src == name]
+
+    def in_edges(self, name: str) -> list[JobEdge]:
+        return [e for e in self.edges if e.dst == name]
+
+    def edge(self, src: str, dst: str) -> JobEdge:
+        for e in self.edges:
+            if e.src == src and e.dst == dst:
+                return e
+        raise KeyError(f"no job edge {src}->{dst}")
+
+    def topological_order(self) -> list[str]:
+        indeg = {n: 0 for n in self.vertices}
+        for e in self.edges:
+            indeg[e.dst] += 1
+        stack = sorted(n for n, d in indeg.items() if d == 0)
+        order: list[str] = []
+        while stack:
+            n = stack.pop()
+            order.append(n)
+            for e in self.out_edges(n):
+                indeg[e.dst] -= 1
+                if indeg[e.dst] == 0:
+                    stack.append(e.dst)
+        if len(order) != len(self.vertices):
+            raise ValueError("job graph contains a cycle")
+        return order
+
+    def _check_acyclic(self) -> None:
+        self.topological_order()
+
+    def sources(self) -> list[str]:
+        return [n for n in self.vertices if not self.in_edges(n)]
+
+    def sinks(self) -> list[str]:
+        return [n for n in self.vertices if not self.out_edges(n)]
+
+
+# ---------------------------------------------------------------------------
+# Runtime graph
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class RuntimeVertex:
+    """A task: one parallel instance of a job vertex (paper §3.1.2)."""
+
+    job_vertex: str
+    index: int
+
+    @property
+    def id(self) -> str:
+        return f"{self.job_vertex}[{self.index}]"
+
+    def __repr__(self) -> str:
+        return self.id
+
+
+@dataclass(frozen=True)
+class Channel:
+    """A runtime edge: a channel along which ``src`` sends items to ``dst``."""
+
+    src: RuntimeVertex
+    dst: RuntimeVertex
+
+    @property
+    def id(self) -> str:
+        return f"{self.src.id}->{self.dst.id}"
+
+    @property
+    def job_edge(self) -> tuple[str, str]:
+        return (self.src.job_vertex, self.dst.job_vertex)
+
+    def __repr__(self) -> str:
+        return self.id
+
+
+class RuntimeGraph:
+    """Parallelized job graph + worker allocation (paper §3.1.2).
+
+    ``worker(v)`` maps every runtime vertex to a worker node.  The default
+    allocator spreads each job vertex's subtasks evenly across workers the way
+    the paper's evaluation does ("eight tasks of each type per node").
+    """
+
+    def __init__(self, job_graph: JobGraph, num_workers: int,
+                 allocator: Callable[[RuntimeVertex, int], int] | None = None):
+        self.job_graph = job_graph
+        self.num_workers = num_workers
+        self.vertices: list[RuntimeVertex] = []
+        self.channels: list[Channel] = []
+        self._by_job_vertex: dict[str, list[RuntimeVertex]] = {}
+        self._worker: dict[RuntimeVertex, int] = {}
+        self._out: dict[RuntimeVertex, list[Channel]] = {}
+        self._in: dict[RuntimeVertex, list[Channel]] = {}
+        self._by_job_edge: dict[tuple[str, str], list[Channel]] = {}
+        self._expand(allocator or self._default_allocator)
+
+    # -- expansion -----------------------------------------------------------
+    @staticmethod
+    def _default_allocator(v: RuntimeVertex, num_workers: int) -> int:
+        # Block allocation: subtask i of a job vertex with parallelism m gets
+        # worker floor(i / (m / n)); equivalently spread evenly, keeping
+        # consecutive subtasks co-located (matches the paper's testbed layout).
+        return v.index % num_workers
+
+    def _expand(self, allocator: Callable[[RuntimeVertex, int], int]) -> None:
+        jg = self.job_graph
+        for name, jv in jg.vertices.items():
+            group = []
+            for i in range(jv.parallelism):
+                rv = RuntimeVertex(name, i)
+                self.vertices.append(rv)
+                self._worker[rv] = allocator(rv, self.num_workers)
+                self._out[rv] = []
+                self._in[rv] = []
+                group.append(rv)
+            self._by_job_vertex[name] = group
+        for je in jg.edges:
+            chans: list[Channel] = []
+            src_group = self._by_job_vertex[je.src]
+            dst_group = self._by_job_vertex[je.dst]
+            if je.pattern == POINTWISE:
+                pairs = zip(src_group, dst_group)
+            else:
+                pairs = ((s, d) for s in src_group for d in dst_group)
+            for s, d in pairs:
+                ch = Channel(s, d)
+                chans.append(ch)
+                self.channels.append(ch)
+                self._out[s].append(ch)
+                self._in[d].append(ch)
+            self._by_job_edge[(je.src, je.dst)] = chans
+
+    # -- queries -------------------------------------------------------------
+    def worker(self, v: RuntimeVertex) -> int:
+        return self._worker[v]
+
+    def tasks_of(self, job_vertex: str) -> list[RuntimeVertex]:
+        return self._by_job_vertex[job_vertex]
+
+    def channels_of(self, src_jv: str, dst_jv: str) -> list[Channel]:
+        return self._by_job_edge[(src_jv, dst_jv)]
+
+    def out_channels(self, v: RuntimeVertex) -> list[Channel]:
+        return self._out[v]
+
+    def in_channels(self, v: RuntimeVertex) -> list[Channel]:
+        return self._in[v]
+
+    def vertices_on_worker(self, w: int) -> list[RuntimeVertex]:
+        return [v for v in self.vertices if self._worker[v] == w]
+
+    def num_runtime_edges(self, je_src: str, je_dst: str) -> int:
+        return len(self._by_job_edge[(je_src, je_dst)])
+
+    def stats(self) -> dict[str, int]:
+        return {
+            "vertices": len(self.vertices),
+            "channels": len(self.channels),
+            "workers": self.num_workers,
+        }
+
+    # -- elastic scale-out (paper §6 future work; core/elastic.py) ----------
+    def grow_vertex(self, job_vertex: str, new_parallelism: int
+                    ) -> tuple[list[RuntimeVertex], list[Channel]]:
+        """Add subtasks to ``job_vertex`` and wire them with the existing
+        job-edge patterns.  Only ALL_TO_ALL neighbourhoods are growable
+        (POINTWISE wiring pins parallelism to the peer's)."""
+        jg = self.job_graph
+        for e in jg.in_edges(job_vertex) + jg.out_edges(job_vertex):
+            if e.pattern != ALL_TO_ALL:
+                raise ValueError(
+                    f"cannot grow {job_vertex}: edge {e} is {e.pattern}")
+        group = self._by_job_vertex[job_vertex]
+        old_n = len(group)
+        if new_parallelism <= old_n:
+            return [], []
+        new_vs: list[RuntimeVertex] = []
+        new_cs: list[Channel] = []
+        for i in range(old_n, new_parallelism):
+            rv = RuntimeVertex(job_vertex, i)
+            self.vertices.append(rv)
+            self._worker[rv] = i % self.num_workers
+            self._out[rv] = []
+            self._in[rv] = []
+            group.append(rv)
+            new_vs.append(rv)
+            for e in jg.in_edges(job_vertex):
+                for src in self._by_job_vertex[e.src]:
+                    ch = Channel(src, rv)
+                    self.channels.append(ch)
+                    self._out[src].append(ch)
+                    self._in[rv].append(ch)
+                    self._by_job_edge[(e.src, job_vertex)].append(ch)
+                    new_cs.append(ch)
+            for e in jg.out_edges(job_vertex):
+                for dst in self._by_job_vertex[e.dst]:
+                    ch = Channel(rv, dst)
+                    self.channels.append(ch)
+                    self._out[rv].append(ch)
+                    self._in[dst].append(ch)
+                    self._by_job_edge[(job_vertex, e.dst)].append(ch)
+                    new_cs.append(ch)
+        return new_vs, new_cs
+
+
+# ---------------------------------------------------------------------------
+# Subgraphs (QoS manager scope)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class RuntimeSubgraph:
+    """A subgraph ``G_i = (V_i, E_i)`` assigned to one QoS manager (§3.4).
+
+    ``job_path`` records the constrained job-graph path this subgraph was
+    expanded for, which lets the manager enumerate the sequences it owns.
+    """
+
+    vertices: set[RuntimeVertex] = field(default_factory=set)
+    channels: set[Channel] = field(default_factory=set)
+    job_paths: list[tuple[str, ...]] = field(default_factory=list)
+
+    def merge(self, other: "RuntimeSubgraph") -> None:
+        self.vertices |= other.vertices
+        self.channels |= other.channels
+        for p in other.job_paths:
+            if p not in self.job_paths:
+                self.job_paths.append(p)
+
+    def out_channels(self, v: RuntimeVertex) -> list[Channel]:
+        return [c for c in self.channels if c.src == v]
+
+    def in_channels(self, v: RuntimeVertex) -> list[Channel]:
+        return [c for c in self.channels if c.dst == v]
+
+    def __contains__(self, item: RuntimeVertex | Channel) -> bool:
+        if isinstance(item, RuntimeVertex):
+            return item in self.vertices
+        return item in self.channels
+
+    def size(self) -> tuple[int, int]:
+        return len(self.vertices), len(self.channels)

@@ -1,0 +1,521 @@
+"""QoS Manager role (paper §3.4.1, §3.5).
+
+A manager runs on a worker node, owns a runtime subgraph ``G_i`` plus the
+constraint scopes assigned by the master (setup.py), ingests reports from its
+QoS Reporters, and reacts to latency-constraint violations:
+
+1. detect violations: per constraint, the estimate of Eq. (1)'s left side is
+   the sum of per-element windowed running averages along a sequence (§3.3).
+   Sequences are **never enumerated**; the worst owned sequence is found with
+   a max-plus dynamic program over the layered subgraph (linear in |G_i|),
+   anchored at the manager's owned anchor tasks,
+2. countermeasures (§3.5): first adaptive output-buffer sizing on the worst
+   sequence's channels (Eq. 2/3, first-writer-wins versioning), then dynamic
+   task chaining (longest chainable series); after each adjustment the
+   manager waits one constraint window so that stale measurements flush out,
+3. when preconditions for further countermeasures are exhausted and the
+   constraint still stands violated, the failure is reported to the master
+   (who notifies the user).
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+from .buffers import BufferSizingPolicy
+from .chaining import ChainRequest, TaskRuntimeInfo, find_chain
+from .clock import Clock
+from .constraints import JobConstraint
+from .graphs import Channel, RuntimeGraph, RuntimeVertex
+from .measurement import QoSReport
+from .setup import ConstraintScope, ManagerAllocation
+
+NEG_INF = float("-inf")
+
+
+# ---------------------------------------------------------------------------
+# Actions emitted by the manager (routed by the execution layer)
+# ---------------------------------------------------------------------------
+
+
+@dataclass(frozen=True)
+class BufferSizeUpdate:
+    channel_id: str
+    src_worker: int
+    new_size_bytes: int
+    base_version: int
+
+
+@dataclass(frozen=True)
+class GiveUp:
+    """Report a failed optimization attempt to the master (§3.5)."""
+
+    constraint_name: str
+    manager_worker: int
+    estimate_ms: float
+
+
+Action = BufferSizeUpdate | ChainRequest | GiveUp
+
+
+# ---------------------------------------------------------------------------
+# Windowed element store
+# ---------------------------------------------------------------------------
+
+
+class _Window:
+    """(ts, value) ring with eviction at ``max_window_ms``; means over any
+    window <= max."""
+
+    __slots__ = ("max_window_ms", "items")
+
+    def __init__(self, max_window_ms: float) -> None:
+        self.max_window_ms = max_window_ms
+        self.items: deque[tuple[float, float]] = deque()
+
+    def add(self, ts: float, v: float) -> None:
+        self.items.append((ts, v))
+
+    def mean(self, now: float, window_ms: float) -> float | None:
+        while self.items and self.items[0][0] < now - self.max_window_ms:
+            self.items.popleft()
+        lo = now - window_ms
+        vals = [v for ts, v in self.items if ts >= lo]
+        if not vals:
+            return None
+        return sum(vals) / len(vals)
+
+
+# ---------------------------------------------------------------------------
+# The manager
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ViolationRecord:
+    constraint_name: str
+    estimate_ms: float
+    at_ms: float
+    actions: tuple[Action, ...]
+
+
+@dataclass
+class ScopeAnalysis:
+    """Result of one violation-detection DP pass over a manager subgraph."""
+
+    worst_estimate_ms: float
+    worst_elements: list  # RuntimeVertex | Channel along the worst sequence
+    violated_channels: list  # Channel on >= 1 violated owned sequence
+    #: per owned anchor task: (estimate, elements) of its worst sequence,
+    #: sorted by estimate descending — chaining candidates beyond the worst.
+    per_anchor: list[tuple[float, list]] = field(default_factory=list)
+
+
+class QoSManager:
+    def __init__(
+        self,
+        allocation: ManagerAllocation,
+        rg: RuntimeGraph,
+        clock: Clock,
+        policy: BufferSizingPolicy | None = None,
+        cpu_threshold: float = 0.90,
+        chain_mode: str = "drain",
+    ) -> None:
+        self.worker = allocation.worker
+        self.allocation = allocation
+        self.rg = rg
+        self.clock = clock
+        self.policy = policy or BufferSizingPolicy()
+        self.cpu_threshold = cpu_threshold
+        self.chain_mode = chain_mode
+
+        max_window = max(
+            (s.constraint.window_ms for s in allocation.scopes), default=15_000.0
+        )
+        self._max_window = max_window
+        # element stores
+        self._chan_lat: dict[str, _Window] = {}
+        self._chan_oblt: dict[str, _Window] = {}
+        self._chan_buf: dict[str, tuple[int, int]] = {}  # id -> (bytes, version)
+        self._task_lat: dict[str, _Window] = {}
+        self._task_cpu: dict[str, tuple[float, bool]] = {}  # id -> (util, chained)
+        # control state
+        self._scope_cooldown_until: dict[int, float] = {}
+        self._gave_up: set[int] = set()
+        # oscillation damping: once a channel's proposed update reverses
+        # direction (shrink<->grow) it is considered settled for a while —
+        # the iterative buffer adjustment (§3.5.1) has converged for it and
+        # chaining may proceed (§3.5.2 "reduce latencies further").
+        self._last_update_dir: dict[str, int] = {}
+        self._settled_until: dict[str, float] = {}
+        self.settle_windows: float = 4.0
+        # subgraph adjacency indexed once
+        self._out_idx: dict[RuntimeVertex, list[Channel]] = {}
+        self._in_idx: dict[RuntimeVertex, list[Channel]] = {}
+        for c in allocation.subgraph.channels:
+            self._out_idx.setdefault(c.src, []).append(c)
+            self._in_idx.setdefault(c.dst, []).append(c)
+        self.history: list[ViolationRecord] = []
+
+    # -- report ingestion -----------------------------------------------------
+    def receive_report(self, report: QoSReport) -> None:
+        now = report.sent_at_ms
+        for cs in report.channel_stats:
+            if cs.mean_latency_ms is not None:
+                self._chan_lat.setdefault(cs.channel_id, _Window(self._max_window)).add(
+                    now, cs.mean_latency_ms
+                )
+            if cs.mean_oblt_ms is not None:
+                self._chan_oblt.setdefault(cs.channel_id, _Window(self._max_window)).add(
+                    now, cs.mean_oblt_ms
+                )
+            if cs.buffer_size_bytes is not None:
+                old = self._chan_buf.get(cs.channel_id)
+                if old is None or cs.buffer_size_version >= old[1]:
+                    self._chan_buf[cs.channel_id] = (
+                        cs.buffer_size_bytes,
+                        cs.buffer_size_version,
+                    )
+        for ts in report.task_stats:
+            if ts.mean_latency_ms is not None:
+                self._task_lat.setdefault(ts.vertex_id, _Window(self._max_window)).add(
+                    now, ts.mean_latency_ms
+                )
+            self._task_cpu[ts.vertex_id] = (ts.cpu_utilization, ts.chained)
+
+    # -- element estimates ------------------------------------------------------
+    def channel_latency(self, c: Channel, window: float) -> float | None:
+        w = self._chan_lat.get(c.id)
+        return None if w is None else w.mean(self.clock.now(), window)
+
+    def task_latency(self, v: RuntimeVertex, window: float) -> float | None:
+        w = self._task_lat.get(v.id)
+        return None if w is None else w.mean(self.clock.now(), window)
+
+    def oblt(self, c: Channel, window: float) -> float | None:
+        w = self._chan_oblt.get(c.id)
+        return None if w is None else w.mean(self.clock.now(), window)
+
+    # -- violation detection ------------------------------------------------------
+    def analyze(self, scope: ConstraintScope) -> "ScopeAnalysis | None":
+        """Max-plus DP over the layered subgraph (linear in |G_i|; runtime
+        sequences are never enumerated).  Computes
+
+        * the worst *owned* evaluable sequence (estimate + element list),
+        * the set of channels lying on **any** violated owned sequence —
+          buffer adjustment targets (§3.5: countermeasures are initiated for
+          all violating sequences; a channel is adjusted at most once per
+          cycle no matter how many violated sequences cross it).
+
+        Owned = passing through ``scope.anchor_tasks`` (ownership rule from
+        setup.py).  Returns None when nothing is evaluable yet (§4.3.2: the
+        manager waits for measurement data).
+        """
+        jc = scope.constraint
+        path = scope.path
+        window = jc.window_ms
+        limit = jc.latency_limit_ms
+        measured_vertices = set(jc.sequence.vertices())
+        layer_of = {name: i for i, name in enumerate(path)}
+        anchor_layer = layer_of[scope.anchor_vertex]
+        owned = set(scope.anchor_tasks)
+
+        def vlat(v: RuntimeVertex) -> float | None:
+            if v.job_vertex not in measured_vertices:
+                return 0.0
+            return self.task_latency(v, window)
+
+        # F(v): max latency of a valid suffix starting *after* v (excludes
+        # vlat(v)); B(v): max latency of a valid prefix ending *before* v.
+        # F'(v)/B'(v): same, restricted to passing through an owned anchor.
+        fwd_memo: dict[RuntimeVertex, tuple[float, Channel | None]] = {}
+        bwd_memo: dict[RuntimeVertex, tuple[float, Channel | None]] = {}
+        fwd_own_memo: dict[RuntimeVertex, float] = {}
+        bwd_own_memo: dict[RuntimeVertex, float] = {}
+
+        def fwd(v: RuntimeVertex) -> tuple[float, Channel | None]:
+            if layer_of[v.job_vertex] == len(path) - 1:
+                return 0.0, None
+            if v in fwd_memo:
+                return fwd_memo[v]
+            best, arg = NEG_INF, None
+            for c in self._out_idx.get(v, ()):  # restricted to subgraph
+                cl = self.channel_latency(c, window)
+                if cl is None:
+                    continue
+                wl = vlat(c.dst)
+                if wl is None:
+                    continue
+                rest, _ = fwd(c.dst)
+                if rest == NEG_INF:
+                    continue
+                tot = cl + wl + rest
+                if tot > best:
+                    best, arg = tot, c
+            fwd_memo[v] = (best, arg)
+            return best, arg
+
+        def bwd(v: RuntimeVertex) -> tuple[float, Channel | None]:
+            if layer_of[v.job_vertex] == 0:
+                return 0.0, None
+            if v in bwd_memo:
+                return bwd_memo[v]
+            best, arg = NEG_INF, None
+            for c in self._in_idx.get(v, ()):
+                cl = self.channel_latency(c, window)
+                if cl is None:
+                    continue
+                ul = vlat(c.src)
+                if ul is None:
+                    continue
+                rest, _ = bwd(c.src)
+                if rest == NEG_INF:
+                    continue
+                tot = cl + ul + rest
+                if tot > best:
+                    best, arg = tot, c
+            bwd_memo[v] = (best, arg)
+            return best, arg
+
+        def fwd_owned(v: RuntimeVertex) -> float:
+            """Max suffix after v that passes through an owned anchor
+            (only meaningful for layers <= anchor_layer)."""
+            lay = layer_of[v.job_vertex]
+            if lay == anchor_layer:
+                return fwd(v)[0] if v in owned else NEG_INF
+            if v in fwd_own_memo:
+                return fwd_own_memo[v]
+            best = NEG_INF
+            for c in self._out_idx.get(v, ()):
+                cl = self.channel_latency(c, window)
+                if cl is None:
+                    continue
+                wl = vlat(c.dst)
+                if wl is None:
+                    continue
+                rest = fwd_owned(c.dst)
+                if rest == NEG_INF:
+                    continue
+                best = max(best, cl + wl + rest)
+            fwd_own_memo[v] = best
+            return best
+
+        def bwd_owned(v: RuntimeVertex) -> float:
+            lay = layer_of[v.job_vertex]
+            if lay == anchor_layer:
+                return bwd(v)[0] if v in owned else NEG_INF
+            if v in bwd_own_memo:
+                return bwd_own_memo[v]
+            best = NEG_INF
+            for c in self._in_idx.get(v, ()):
+                cl = self.channel_latency(c, window)
+                if cl is None:
+                    continue
+                ul = vlat(c.src)
+                if ul is None:
+                    continue
+                rest = bwd_owned(c.src)
+                if rest == NEG_INF:
+                    continue
+                best = max(best, cl + ul + rest)
+            bwd_own_memo[v] = best
+            return best
+
+        # worst owned sequence, overall and per anchor task
+        anchor_totals: list[tuple[float, RuntimeVertex]] = []
+        best_total, best_anchor = NEG_INF, None
+        for a in scope.anchor_tasks:
+            al = vlat(a)
+            if al is None:
+                continue
+            f, _ = fwd(a)
+            b, _ = bwd(a)
+            if f == NEG_INF or b == NEG_INF:
+                continue
+            tot = b + al + f
+            anchor_totals.append((tot, a))
+            if tot > best_total:
+                best_total, best_anchor = tot, a
+        if best_anchor is None:
+            return None
+        anchor_totals.sort(key=lambda x: -x[0])
+
+        # channels on any violated owned sequence
+        violated_channels: list[Channel] = []
+        for c in self.allocation.subgraph.channels:
+            cl = self.channel_latency(c, window)
+            if cl is None:
+                continue
+            ul, wl = vlat(c.src), vlat(c.dst)
+            if ul is None or wl is None:
+                continue
+            lay = layer_of.get(c.src.job_vertex)
+            if lay is None or layer_of.get(c.dst.job_vertex) != lay + 1:
+                continue
+            if lay + 1 <= anchor_layer:
+                b, f = bwd(c.src)[0], fwd_owned(c.dst)
+            else:
+                b, f = bwd_owned(c.src), fwd(c.dst)[0]
+            if b == NEG_INF or f == NEG_INF:
+                continue
+            if b + ul + cl + wl + f > limit:
+                violated_channels.append(c)
+
+        # reconstruct worst path elements per anchor (channels + vertices)
+        def reconstruct(anchor: RuntimeVertex) -> list[RuntimeVertex | Channel]:
+            elements: list[RuntimeVertex | Channel] = []
+            back: list[RuntimeVertex | Channel] = []
+            v = anchor
+            while True:
+                _, c = bwd(v)
+                if c is None:
+                    break
+                back.append(c)
+                if c.src.job_vertex in measured_vertices:
+                    back.append(c.src)
+                v = c.src
+            elements.extend(reversed(back))
+            if anchor.job_vertex in measured_vertices:
+                elements.append(anchor)
+            v = anchor
+            while True:
+                _, c = fwd(v)
+                if c is None:
+                    break
+                elements.append(c)
+                if c.dst.job_vertex in measured_vertices:
+                    elements.append(c.dst)
+                v = c.dst
+            return elements
+
+        per_anchor = [(tot, reconstruct(a)) for tot, a in anchor_totals]
+        return ScopeAnalysis(
+            best_total, per_anchor[0][1], violated_channels, per_anchor
+        )
+
+    # kept for tests/back-compat: (estimate, elements) of the worst sequence
+    def worst_sequence(
+        self, scope: ConstraintScope
+    ) -> tuple[float, list[RuntimeVertex | Channel]] | None:
+        res = self.analyze(scope)
+        if res is None:
+            return None
+        return res.worst_estimate_ms, res.worst_elements
+
+    # -- main control step -------------------------------------------------------
+    def check(self) -> list[Action]:
+        """Run one violation-detection + countermeasure cycle; returns actions
+        for the execution layer to route."""
+        now = self.clock.now()
+        actions: list[Action] = []
+        for idx, scope in enumerate(self.allocation.scopes):
+            if idx in self._gave_up:
+                continue
+            if now < self._scope_cooldown_until.get(idx, 0.0):
+                continue
+            res = self.analyze(scope)
+            if res is None:
+                continue  # not enough measurement data yet
+            estimate = res.worst_estimate_ms
+            limit = scope.constraint.latency_limit_ms
+            if estimate <= limit:
+                continue
+            scope_actions = self._countermeasures(scope, res)
+            if scope_actions:
+                actions.extend(scope_actions)
+                self._scope_cooldown_until[idx] = now + scope.constraint.window_ms
+                self.history.append(
+                    ViolationRecord(
+                        scope.constraint.name, estimate, now, tuple(scope_actions)
+                    )
+                )
+            else:
+                # Preconditions for countermeasures exhausted (§3.5): report
+                # to the master (once) so the user can revise the job or the
+                # constraint; keep monitoring with a long cooldown — load may
+                # shift and make countermeasures applicable again.
+                if idx not in self._gave_up:
+                    self._gave_up.add(idx)
+                    give = GiveUp(scope.constraint.name, self.worker, estimate)
+                    actions.append(give)
+                    self.history.append(
+                        ViolationRecord(scope.constraint.name, estimate, now, (give,))
+                    )
+                self._scope_cooldown_until[idx] = (
+                    now + 4.0 * scope.constraint.window_ms
+                )
+        return actions
+
+    # -- countermeasures ----------------------------------------------------------
+    def _countermeasures(
+        self,
+        scope: ConstraintScope,
+        analysis: ScopeAnalysis,
+    ) -> list[Action]:
+        window = scope.constraint.window_ms
+        now = self.clock.now()
+        actions: list[Action] = []
+        # 1. adaptive output buffer sizing, per channel individually (§3.5.1),
+        #    applied to every channel lying on a violated owned sequence.
+        for el in analysis.violated_channels:
+            if now < self._settled_until.get(el.id, 0.0):
+                continue  # oscillation damping: this channel has converged
+            ob = self.oblt(el, window)
+            if ob is None:
+                continue
+            obl = ob / 2.0
+            buf = self._chan_buf.get(el.id)
+            if buf is None:
+                continue
+            size, version = buf
+            src_lat = self.task_latency(el.src, window)
+            new = self.policy.propose(size, obl, src_lat)
+            if new is not None and new != size:
+                direction = 1 if new > size else -1
+                last = self._last_update_dir.get(el.id)
+                if last is not None and last != direction:
+                    # grow<->shrink flip: the iterative adjustment has hit its
+                    # fixed point for this channel; stop touching it so that
+                    # chaining can take over (§3.5.2).
+                    self._settled_until[el.id] = now + self.settle_windows * window
+                    self._last_update_dir.pop(el.id, None)
+                    continue
+                self._last_update_dir[el.id] = direction
+                actions.append(
+                    BufferSizeUpdate(
+                        channel_id=el.id,
+                        src_worker=self.rg.worker(el.src),
+                        new_size_bytes=new,
+                        base_version=version,
+                    )
+                )
+        if actions:
+            return actions
+        # 2. dynamic task chaining (§3.5.2) once buffers are settled: try the
+        #    owned anchor paths worst-first until one yields a chain.
+        limit = scope.constraint.latency_limit_ms
+
+        def info(v: RuntimeVertex) -> TaskRuntimeInfo | None:
+            cpu = self._task_cpu.get(v.id)
+            if cpu is None:
+                return None
+            return TaskRuntimeInfo(
+                worker=self.rg.worker(v), cpu_utilization=cpu[0], chained=cpu[1]
+            )
+
+        for estimate, elements in analysis.per_anchor:
+            if estimate <= limit:
+                break  # sorted desc: the rest are not violated
+            seq_tasks = [el for el in elements if isinstance(el, RuntimeVertex)]
+            req = find_chain(
+                seq_tasks,
+                self.rg,
+                self.allocation.subgraph,
+                info,
+                self.cpu_threshold,
+                self.chain_mode,
+            )
+            if req is not None:
+                return [req]
+        return []

@@ -1,0 +1,269 @@
+"""Workflow latency measurement (paper §3.3).
+
+Per worker node a *QoS Reporter* collects, once per *measurement interval*:
+
+1. channel latencies, estimated via **tagged data items** — a tag is a small
+   record (creation timestamp + channel id) attached when an item exits the
+   sender's user code and evaluated just before it enters the receiver's user
+   code; one tagged item per channel per interval,
+2. the **output buffer lifetime** ``oblt(e)`` per locally outgoing channel —
+   the average time output buffers took to fill,
+3. task latencies, sampled (no tags needed): once per interval, the time
+   between an item entering the user code and the next item leaving it.
+
+Reports are pre-aggregated locally and flushed to each interested QoS Manager
+once per interval, at a per-manager random offset to avoid report bursts.
+"""
+from __future__ import annotations
+
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Iterable
+
+from .clock import Clock
+from .graphs import Channel, RuntimeVertex
+
+# ---------------------------------------------------------------------------
+# Tags & running averages
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Tag:
+    """Timestamp tag piggy-backed on a data item (one per channel/interval)."""
+
+    channel_id: str
+    created_at_ms: float
+
+
+class RunningAverage:
+    """Windowed running average: values fresher than ``window_ms`` (Eq. 1's
+    time span t); older measurements are discarded (§3.3)."""
+
+    __slots__ = ("window_ms", "_items",)
+
+    def __init__(self, window_ms: float) -> None:
+        self.window_ms = window_ms
+        self._items: deque[tuple[float, float]] = deque()  # (ts, value)
+
+    def add(self, ts_ms: float, value: float) -> None:
+        self._items.append((ts_ms, value))
+
+    def _evict(self, now_ms: float) -> None:
+        fresh_after = now_ms - self.window_ms
+        items = self._items
+        while items and items[0][0] < fresh_after:
+            items.popleft()
+
+    def value(self, now_ms: float) -> float | None:
+        self._evict(now_ms)
+        if not self._items:
+            return None
+        return sum(v for _, v in self._items) / len(self._items)
+
+    def count(self, now_ms: float) -> int:
+        self._evict(now_ms)
+        return len(self._items)
+
+
+# ---------------------------------------------------------------------------
+# Reports
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ChannelStats:
+    channel_id: str
+    mean_latency_ms: float | None = None     # from tag round-trips (receiver side)
+    mean_oblt_ms: float | None = None        # output buffer lifetime (sender side)
+    buffer_size_bytes: int | None = None     # current obs(e) (sender side)
+    buffer_size_version: int = 0             # §3.5.1 update-race bookkeeping
+    n_samples: int = 0
+
+
+@dataclass
+class TaskStats:
+    vertex_id: str
+    mean_latency_ms: float | None = None
+    cpu_utilization: float = 0.0             # busy fraction of one core (§3.5.2)
+    chained: bool = False
+    n_samples: int = 0
+
+
+@dataclass
+class QoSReport:
+    """One reporter -> one manager, once per measurement interval, as-needed
+    (empty reports are not sent)."""
+
+    worker: int
+    sent_at_ms: float
+    channel_stats: list[ChannelStats] = field(default_factory=list)
+    task_stats: list[TaskStats] = field(default_factory=list)
+
+    def empty(self) -> bool:
+        return not self.channel_stats and not self.task_stats
+
+
+# ---------------------------------------------------------------------------
+# QoS Reporter (worker-node role)
+# ---------------------------------------------------------------------------
+
+
+class QoSReporter:
+    """Worker-node background role (§3.4.1): pre-aggregates local measurement
+    data and prepares one report per interested QoS Manager.
+
+    The execution layer (engine or simulator) feeds raw measurements in via
+    ``record_*``; ``maybe_flush`` returns the due (manager, report) pairs.
+    """
+
+    def __init__(
+        self,
+        worker: int,
+        clock: Clock,
+        interval_ms: float,
+        rng: random.Random | None = None,
+    ) -> None:
+        self.worker = worker
+        self.clock = clock
+        self.interval_ms = interval_ms
+        self.rng = rng or random.Random(worker)
+        # manager id -> elements it is interested in
+        self._mgr_channels: dict[int, set[str]] = {}
+        self._mgr_tasks: dict[int, set[str]] = {}
+        # per-manager random report offset (§3.3 "random offset")
+        self._mgr_offset: dict[int, float] = {}
+        self._last_flush: dict[int, float] = {}
+        # interval aggregation buffers: id -> (sum, count)
+        self._chan_lat: dict[str, tuple[float, int]] = {}
+        self._chan_oblt: dict[str, tuple[float, int]] = {}
+        self._chan_buf: dict[str, tuple[int, int]] = {}  # id -> (bytes, version)
+        self._task_lat: dict[str, tuple[float, int]] = {}
+        self._task_cpu: dict[str, float] = {}
+        self._task_chained: dict[str, bool] = {}
+        # tagging bookkeeping: channel id -> timestamp of last tag sent
+        self._last_tagged: dict[str, float] = {}
+        self._last_task_sample: dict[str, float] = {}
+
+    # -- setup (master-driven, §3.4.2) ---------------------------------------
+    def assign_manager(
+        self, manager_id: int, channels: Iterable[str], tasks: Iterable[str]
+    ) -> None:
+        self._mgr_channels.setdefault(manager_id, set()).update(channels)
+        self._mgr_tasks.setdefault(manager_id, set()).update(tasks)
+        if manager_id not in self._mgr_offset:
+            self._mgr_offset[manager_id] = self.rng.uniform(0, self.interval_ms)
+            self._last_flush[manager_id] = -float("inf")
+
+    def interested_channels(self) -> set[str]:
+        out: set[str] = set()
+        for s in self._mgr_channels.values():
+            out |= s
+        return out
+
+    def interested_tasks(self) -> set[str]:
+        out: set[str] = set()
+        for s in self._mgr_tasks.values():
+            out |= s
+        return out
+
+    # -- sampling decisions ----------------------------------------------------
+    def should_tag(self, channel_id: str) -> bool:
+        """One tagged item per channel per measurement interval (§3.3)."""
+        now = self.clock.now()
+        last = self._last_tagged.get(channel_id, -float("inf"))
+        if now - last >= self.interval_ms:
+            self._last_tagged[channel_id] = now
+            return True
+        return False
+
+    def should_sample_task(self, vertex_id: str) -> bool:
+        now = self.clock.now()
+        last = self._last_task_sample.get(vertex_id, -float("inf"))
+        if now - last >= self.interval_ms:
+            self._last_task_sample[vertex_id] = now
+            return True
+        return False
+
+    # -- raw measurement ingestion ---------------------------------------------
+    def record_channel_latency(self, channel_id: str, latency_ms: float) -> None:
+        s, c = self._chan_lat.get(channel_id, (0.0, 0))
+        self._chan_lat[channel_id] = (s + latency_ms, c + 1)
+
+    def record_output_buffer_lifetime(self, channel_id: str, lifetime_ms: float,
+                                      buffer_size: int, version: int) -> None:
+        s, c = self._chan_oblt.get(channel_id, (0.0, 0))
+        self._chan_oblt[channel_id] = (s + lifetime_ms, c + 1)
+        self._chan_buf[channel_id] = (buffer_size, version)
+
+    def record_task_latency(self, vertex_id: str, latency_ms: float) -> None:
+        s, c = self._task_lat.get(vertex_id, (0.0, 0))
+        self._task_lat[vertex_id] = (s + latency_ms, c + 1)
+
+    def record_task_cpu(self, vertex_id: str, utilization: float,
+                        chained: bool = False) -> None:
+        self._task_cpu[vertex_id] = utilization
+        self._task_chained[vertex_id] = chained
+
+    # -- flushing ---------------------------------------------------------------
+    def maybe_flush(self) -> list[tuple[int, QoSReport]]:
+        """Return (manager_id, report) pairs that are due now."""
+        now = self.clock.now()
+        out: list[tuple[int, QoSReport]] = []
+        for mgr in self._mgr_channels.keys() | self._mgr_tasks.keys():
+            due = self._last_flush[mgr] + self.interval_ms
+            if self._last_flush[mgr] == -float("inf"):
+                due = self._mgr_offset[mgr]
+            if now < due:
+                continue
+            report = self._build_report(mgr, now)
+            self._last_flush[mgr] = now
+            if not report.empty():  # as-needed: no empty reports (§3.4.1)
+                out.append((mgr, report))
+        if out:
+            self._clear_flushed(out)
+        return out
+
+    def _build_report(self, mgr: int, now: float) -> QoSReport:
+        rep = QoSReport(worker=self.worker, sent_at_ms=now)
+        for ch in self._mgr_channels.get(mgr, ()):
+            lat = self._chan_lat.get(ch)
+            ob = self._chan_oblt.get(ch)
+            buf = self._chan_buf.get(ch)
+            if lat is None and ob is None:
+                continue
+            rep.channel_stats.append(
+                ChannelStats(
+                    channel_id=ch,
+                    mean_latency_ms=None if lat is None else lat[0] / lat[1],
+                    mean_oblt_ms=None if ob is None else ob[0] / ob[1],
+                    buffer_size_bytes=None if buf is None else buf[0],
+                    buffer_size_version=0 if buf is None else buf[1],
+                    n_samples=(lat[1] if lat else 0) + (ob[1] if ob else 0),
+                )
+            )
+        for tk in self._mgr_tasks.get(mgr, ()):
+            lat = self._task_lat.get(tk)
+            if lat is None and tk not in self._task_cpu:
+                continue
+            rep.task_stats.append(
+                TaskStats(
+                    vertex_id=tk,
+                    mean_latency_ms=None if lat is None else lat[0] / lat[1],
+                    cpu_utilization=self._task_cpu.get(tk, 0.0),
+                    chained=self._task_chained.get(tk, False),
+                    n_samples=0 if lat is None else lat[1],
+                )
+            )
+        return rep
+
+    def _clear_flushed(self, flushed: list[tuple[int, QoSReport]]) -> None:
+        # Aggregation buffers are per-interval; once any report went out we
+        # reset the buffers for the elements included in it.
+        for _, rep in flushed:
+            for cs in rep.channel_stats:
+                self._chan_lat.pop(cs.channel_id, None)
+                self._chan_oblt.pop(cs.channel_id, None)
+            for ts in rep.task_stats:
+                self._task_lat.pop(ts.vertex_id, None)

@@ -1,0 +1,260 @@
+"""Distributed QoS management setup (paper §3.4.2, Algorithms 1-3).
+
+The master splits the runtime graph into m subgraphs ``G_i``, one per QoS
+Manager, maximizing m (objective 1) while keeping subgraph overlap small
+(objective 2), subject to the side conditions:
+
+* every runtime constraint is attended by exactly one manager
+  (``union constr(G_i) = C``, pairwise disjoint),
+* subgraphs are minimal (no vertices irrelevant to their constraints).
+
+Algorithm 1  ComputeQoSSetup(JG, JC)  — enumerate constrained job-graph paths,
+             compute managers per path, merge allocations per worker.
+Algorithm 2  GetQoSManagers(path)     — pick the anchor job vertex, partition
+             its runtime vertices by worker, GraphExpand each partition
+             forwards+backwards into a manager subgraph.
+Algorithm 3  GetAnchorVertex(path)    — among vertices with the highest worker
+             count, pick the one whose in/out job edge (within the path) has
+             the fewest runtime edges.
+
+Ownership rule (disjointness guarantee): a runtime sequence S of a constraint
+on ``path`` is owned by the manager on ``worker(anchor instance of S)`` —
+every S crosses the anchor job vertex exactly once, so ownership is unique.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+from .constraints import JobConstraint
+from .graphs import JobGraph, RuntimeGraph, RuntimeSubgraph, RuntimeVertex
+
+
+@dataclass
+class ConstraintScope:
+    """One constrained path as seen by one manager: the manager owns the
+    sequences passing through ``anchor_tasks`` (all on this manager's worker)."""
+
+    constraint: JobConstraint
+    path: tuple[str, ...]
+    anchor_vertex: str
+    anchor_tasks: tuple[RuntimeVertex, ...]
+
+
+@dataclass
+class ManagerAllocation:
+    """``(w_i, G_i)`` plus constraint-ownership metadata."""
+
+    worker: int
+    subgraph: RuntimeSubgraph
+    scopes: list[ConstraintScope] = field(default_factory=list)
+
+    def merge(self, other: "ManagerAllocation") -> None:
+        assert self.worker == other.worker
+        self.subgraph.merge(other.subgraph)
+        self.scopes.extend(other.scopes)
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 3 — GetAnchorVertex
+# ---------------------------------------------------------------------------
+
+
+def cnt_workers(jv: str, rg: RuntimeGraph) -> int:
+    return len({rg.worker(v) for v in rg.tasks_of(jv)})
+
+
+def cnt_chan(jv: str, path: tuple[str, ...], rg: RuntimeGraph) -> int:
+    """Fewest runtime edges among jv's in/out job edges *within the path*."""
+    i = path.index(jv)
+    counts = []
+    if i > 0:
+        counts.append(rg.num_runtime_edges(path[i - 1], jv))
+    if i < len(path) - 1:
+        counts.append(rg.num_runtime_edges(jv, path[i + 1]))
+    return min(counts) if counts else 0
+
+
+def get_anchor_vertex(path: tuple[str, ...], rg: RuntimeGraph) -> str:
+    ret = list(path)
+    max_work = max(cnt_workers(jv, rg) for jv in ret)
+    ret = [jv for jv in ret if cnt_workers(jv, rg) == max_work]
+    min_edge = min(cnt_chan(jv, path, rg) for jv in ret)
+    ret = [jv for jv in ret if cnt_chan(jv, path, rg) == min_edge]
+    return ret[0]
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 2 — GetQoSManagers
+# ---------------------------------------------------------------------------
+
+
+def partition_by_worker(
+    tasks: list[RuntimeVertex], rg: RuntimeGraph
+) -> dict[int, list[RuntimeVertex]]:
+    parts: dict[int, list[RuntimeVertex]] = {}
+    for v in tasks:
+        parts.setdefault(rg.worker(v), []).append(v)
+    return parts
+
+
+def graph_expand(
+    seeds: list[RuntimeVertex], rg: RuntimeGraph, path: tuple[str, ...]
+) -> RuntimeSubgraph:
+    """Expand a set of runtime vertices to a runtime subgraph by traversing
+    the runtime graph forwards and backwards, restricted to the job vertices
+    of ``path`` (keeps subgraphs minimal — side condition 2)."""
+    on_path = set(path)
+    succ = {path[i]: path[i + 1] for i in range(len(path) - 1)}
+    pred = {path[i + 1]: path[i] for i in range(len(path) - 1)}
+    sub = RuntimeSubgraph()
+    sub.job_paths.append(path)
+    sub.vertices.update(seeds)
+    # forward
+    frontier = list(seeds)
+    while frontier:
+        nxt: list[RuntimeVertex] = []
+        for v in frontier:
+            jv_next = succ.get(v.job_vertex)
+            if jv_next is None:
+                continue
+            for c in rg.out_channels(v):
+                if c.dst.job_vertex != jv_next or c.dst.job_vertex not in on_path:
+                    continue
+                sub.channels.add(c)
+                if c.dst not in sub.vertices:
+                    sub.vertices.add(c.dst)
+                    nxt.append(c.dst)
+        frontier = nxt
+    # backward
+    frontier = list(seeds)
+    while frontier:
+        nxt = []
+        for v in frontier:
+            jv_prev = pred.get(v.job_vertex)
+            if jv_prev is None:
+                continue
+            for c in rg.in_channels(v):
+                if c.src.job_vertex != jv_prev or c.src.job_vertex not in on_path:
+                    continue
+                sub.channels.add(c)
+                if c.src not in sub.vertices:
+                    sub.vertices.add(c.src)
+                    nxt.append(c.src)
+        frontier = nxt
+    return sub
+
+
+def get_qos_managers(
+    path: tuple[str, ...], rg: RuntimeGraph, constraint: JobConstraint
+) -> list[ManagerAllocation]:
+    anchor = get_anchor_vertex(path, rg)
+    ret: list[ManagerAllocation] = []
+    for worker, tasks in sorted(partition_by_worker(rg.tasks_of(anchor), rg).items()):
+        sub = graph_expand(tasks, rg, path)
+        scope = ConstraintScope(constraint, path, anchor, tuple(tasks))
+        ret.append(ManagerAllocation(worker, sub, [scope]))
+    return ret
+
+
+# ---------------------------------------------------------------------------
+# Algorithm 1 — ComputeQoSSetup
+# ---------------------------------------------------------------------------
+
+
+def get_constrained_paths(
+    jg: JobGraph, constraints: list[JobConstraint]
+) -> list[tuple[tuple[str, ...], JobConstraint]]:
+    """Paths (tuples of job vertices) covered by a job constraint.  Each
+    constraint's sequence spans exactly one path (depth-first traversal of the
+    job graph is only needed when a constraint is given as endpoints; our
+    JobSequence already encodes the path)."""
+    return [(jc.sequence.covered_path(), jc) for jc in constraints]
+
+
+def compute_qos_setup(
+    jg: JobGraph, constraints: list[JobConstraint], rg: RuntimeGraph
+) -> dict[int, ManagerAllocation]:
+    """Algorithm 1: returns worker -> merged ManagerAllocation."""
+    managers: dict[int, ManagerAllocation] = {}
+    for path, jc in get_constrained_paths(jg, constraints):
+        for alloc in get_qos_managers(path, rg, jc):
+            if alloc.worker in managers:
+                managers[alloc.worker].merge(alloc)
+            else:
+                managers[alloc.worker] = alloc
+    return managers
+
+
+# ---------------------------------------------------------------------------
+# QoS Reporter setup (§3.4.2): which reporter sends what to which manager
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class ReporterAssignment:
+    """Per worker: element ids whose measurements go to each manager.
+
+    Channel latency is measured on the *receiving* worker (the tag is
+    evaluated there); output-buffer lifetime on the *sending* worker; task
+    latency on the task's own worker.
+    """
+
+    # worker -> manager -> element ids
+    task_routes: dict[int, dict[int, set[str]]] = field(default_factory=dict)
+    channel_routes: dict[int, dict[int, set[str]]] = field(default_factory=dict)
+
+    def _add(self, table: dict, worker: int, mgr: int, elem: str) -> None:
+        table.setdefault(worker, {}).setdefault(mgr, set()).add(elem)
+
+    def managers_for_channel(self, worker: int, channel_id: str) -> list[int]:
+        return [m for m, els in self.channel_routes.get(worker, {}).items()
+                if channel_id in els]
+
+
+def compute_reporter_setup(
+    managers: dict[int, ManagerAllocation], rg: RuntimeGraph
+) -> ReporterAssignment:
+    ra = ReporterAssignment()
+    for mgr_worker, alloc in managers.items():
+        for v in alloc.subgraph.vertices:
+            ra._add(ra.task_routes, rg.worker(v), mgr_worker, v.id)
+        for c in alloc.subgraph.channels:
+            # receiver-side: tag evaluation -> channel latency
+            ra._add(ra.channel_routes, rg.worker(c.dst), mgr_worker, c.id)
+            # sender-side: output buffer lifetime + current buffer size
+            ra._add(ra.channel_routes, rg.worker(c.src), mgr_worker, c.id)
+    return ra
+
+
+# ---------------------------------------------------------------------------
+# Side-condition checks (used by tests; paper §3.4.2 objectives)
+# ---------------------------------------------------------------------------
+
+
+def check_side_conditions(
+    managers: dict[int, ManagerAllocation],
+    constraints: list[JobConstraint],
+    rg: RuntimeGraph,
+) -> None:
+    """Raise AssertionError if the setup violates the paper's side conditions."""
+    # 1. every constraint attended: each anchor task of each constraint is
+    #    owned by exactly one manager, and the anchor tasks across managers
+    #    cover the anchor job vertex's full task set.
+    for jc in constraints:
+        path = jc.sequence.covered_path()
+        owned: list[RuntimeVertex] = []
+        for alloc in managers.values():
+            for scope in alloc.scopes:
+                if scope.constraint is jc:
+                    owned.extend(scope.anchor_tasks)
+        anchor = get_anchor_vertex(path, rg)
+        assert sorted(v.id for v in owned) == sorted(
+            v.id for v in rg.tasks_of(anchor)
+        ), f"constraint {jc.name} not fully covered / double covered"
+    # 2. minimality: every vertex in a subgraph lies on a constrained path.
+    for alloc in managers.values():
+        on_paths = set()
+        for p in alloc.subgraph.job_paths:
+            on_paths |= set(p)
+        for v in alloc.subgraph.vertices:
+            assert v.job_vertex in on_paths, f"irrelevant vertex {v} in subgraph"

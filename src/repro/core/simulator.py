@@ -1,0 +1,573 @@
+"""Discrete-event simulator: the paper's control plane at paper scale.
+
+Runs the *identical* QoS code (setup.py, measurement.py, manager.py,
+buffers.py, chaining.py) on a simulated 200-node cluster — tasks are
+single-server queues with configured per-item CPU cost, channels have
+output buffers, serialization/transport overhead and bandwidth, exactly the
+Fig. 1 processing pattern.  Used by benchmarks to reproduce Fig. 2 and the
+Fig. 7/8/9 scenario suite at n=200, and by tests for deterministic QoS
+behaviour checks.
+
+Simplifications vs. the threaded engine (recorded here on purpose):
+* CPython thread-scheduling noise is absent — latencies are deterministic,
+* per-worker CPU contention is modeled per task only (a worker is assumed to
+  have enough cores for its unchained tasks, like the paper's 8-core nodes).
+"""
+from __future__ import annotations
+
+import heapq
+import itertools
+import random
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Any, Callable
+
+from .buffers import BufferSizingPolicy, OutputBuffer
+from .chaining import ChainRequest
+from .clock import SimClock
+from .constraints import JobConstraint
+from .graphs import JobGraph, RuntimeGraph, RuntimeVertex
+from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
+from .measurement import QoSReporter, Tag
+from .setup import compute_qos_setup, compute_reporter_setup
+
+
+@dataclass
+class SimNetConfig:
+    """1 GBit/s links, small fixed ship overhead per buffer (meta data, memory
+    management, thread sync — §2.2.1), cheap same-worker hand-over."""
+
+    bandwidth_bytes_per_ms: float = 125_000.0  # 1 Gbit/s
+    per_buffer_overhead_ms: float = 0.10
+    #: queue hand-over between threads on the same worker (wakeup, sync,
+    #: scheduling under load) — what dynamic task chaining eliminates.
+    same_worker_overhead_ms: float = 2.0
+    propagation_ms: float = 0.15
+
+
+@dataclass
+class SimItem:
+    created_at_ms: float
+    size_bytes: int
+    key: int
+    tag: Tag | None = None
+    emitted_at_ms: float = 0.0
+
+
+@dataclass
+class SimSourceSpec:
+    rate_items_per_s: float
+    item_bytes: int = 128
+    #: global round-robin key space (stream-group ids); with
+    #: ``keys_per_task`` set, source subtask p cycles only over its own keys
+    #: [p*keys_per_task, (p+1)*keys_per_task) — the paper's Partitioner
+    #: forwards each stream group to the one Decoder responsible for it.
+    keys: int | None = None
+    keys_per_task: int | None = None
+
+
+class _WorkerCPU:
+    """Multi-server CPU model: one per worker node (the paper's testbed ran
+    eight tasks of four types per 8-core node — §4.2).  Unchained tasks each
+    occupy a core for their service time; a chained series occupies ONE core
+    for the summed service time (one thread, §3.5.2).  Ready work queues
+    FIFO when all cores are busy, which models the scheduling delay that
+    task chaining removes."""
+
+    __slots__ = ("sim", "cores", "busy", "ready")
+
+    def __init__(self, sim: "StreamSimulator", cores: int) -> None:
+        self.sim = sim
+        self.cores = cores
+        self.busy = 0
+        self.ready: deque[tuple[float, Callable[[], None]]] = deque()
+
+    def submit(self, svc_ms: float, done: Callable[[], None]) -> None:
+        if self.busy < self.cores:
+            self._start(svc_ms, done)
+        else:
+            self.ready.append((svc_ms, done))
+
+    def _start(self, svc_ms: float, done: Callable[[], None]) -> None:
+        self.busy += 1
+
+        def fin() -> None:
+            self.busy -= 1
+            done()
+            while self.ready and self.busy < self.cores:
+                s, d = self.ready.popleft()
+                self._start(s, d)
+
+        self.sim.schedule(self.sim.clock.now() + svc_ms, fin)
+
+
+class _SimChannel:
+    """Sender-side output buffer + transport for one channel."""
+
+    __slots__ = ("channel", "buffer", "sim", "cross_worker")
+
+    def __init__(self, channel, sim: "StreamSimulator", capacity: int) -> None:
+        self.channel = channel
+        self.buffer = OutputBuffer(channel.id, capacity)
+        self.sim = sim
+        self.cross_worker = sim.rg.worker(channel.src) != sim.rg.worker(channel.dst)
+
+    def send(self, item: SimItem) -> None:
+        sim = self.sim
+        now = sim.clock.now()
+        item.emitted_at_ms = now
+        rep = sim.reporters[sim.rg.worker(self.channel.src)]
+        if self.channel.id in sim.measured_channels and rep.should_tag(self.channel.id):
+            item.tag = Tag(self.channel.id, now)
+        if self.buffer.append(item, item.size_bytes, now):
+            self.flush()
+
+    def flush(self) -> None:
+        if self.buffer.empty:
+            return
+        sim = self.sim
+        now = sim.clock.now()
+        items, nbytes, lifetime = self.buffer.take(now)
+        rep = sim.reporters[sim.rg.worker(self.channel.src)]
+        if self.channel.id in sim.measured_channels:
+            rep.record_output_buffer_lifetime(
+                self.channel.id, lifetime, self.buffer.capacity_bytes,
+                self.buffer.version,
+            )
+        net = sim.net
+        if self.cross_worker:
+            delay = (
+                net.per_buffer_overhead_ms
+                + nbytes / net.bandwidth_bytes_per_ms
+                + net.propagation_ms
+            )
+        else:
+            delay = net.same_worker_overhead_ms
+        sim.total_bytes += nbytes
+        sim.total_buffers += 1
+        dst = self.channel.dst
+        cid = self.channel.id
+        sim.schedule(now + delay, lambda: sim.tasks[dst].enqueue(items, cid))
+
+
+class _SimTask:
+    """Single-server queue; when head of a chain, service covers the whole
+    chain (§3.5.2 — one thread runs all chained tasks)."""
+
+    def __init__(self, vertex: RuntimeVertex, sim: "StreamSimulator") -> None:
+        self.vertex = vertex
+        self.sim = sim
+        jv = sim.jg.vertices[vertex.job_vertex]
+        self.svc_ms = jv.sim_cpu_ms
+        self.fan_in = max(jv.sim_fan_in, 1)
+        self.out_bytes = jv.sim_item_bytes
+        self.is_sink = not sim.jg.out_edges(vertex.job_vertex)
+        self.queue: deque[SimItem] = deque()
+        self.busy = False
+        self.halted = False
+        self.chained_into: RuntimeVertex | None = None  # member of a chain
+        self.chain_next: RuntimeVertex | None = None    # next stage if chained
+        self._fan_count = 0
+        self._pending_task_sample: float | None = None
+        self.busy_ms_window = 0.0
+        self.emitted = 0          # lifetime emissions (elastic telemetry)
+        self.busy_ms_total = 0.0
+        # emission routing: dst job vertex -> channels sorted by dst index
+        self.out_by_jv: dict[str, list] = {}
+        self._inflight_since: float | None = None
+
+    def enqueue(self, items: list[SimItem], channel_id: str) -> None:
+        self.queue.extend(items)
+        self._try_start()
+
+    def halt(self, halted: bool) -> None:
+        self.halted = halted
+        if not halted:
+            self._try_start()
+
+    def _try_start(self) -> None:
+        if self.busy or self.halted or not self.queue:
+            return
+        sim = self.sim
+        item = self.queue.popleft()
+        now = sim.clock.now()
+        # tag evaluated just before user code (§3.3) — includes queue wait
+        if item.tag is not None:
+            sim.reporters[sim.rg.worker(self.vertex)].record_channel_latency(
+                item.tag.channel_id, now - item.tag.created_at_ms
+            )
+            item.tag = None
+        vid = self.vertex.id
+        rep = sim.reporters[sim.rg.worker(self.vertex)]
+        if (
+            self._pending_task_sample is None
+            and vid in sim.measured_tasks
+            and rep.should_sample_task(vid)
+        ):
+            self._pending_task_sample = now
+        # total service time across the chain this item will traverse; the
+        # whole chain runs on one core of this task's worker (§3.5.2)
+        svc, stages = self._chain_service(item)
+        self.busy = True
+        self.busy_ms_window += svc
+        self.busy_ms_total += svc
+        sim.cpus[sim.rg.worker(self.vertex)].submit(
+            svc, lambda: self._complete(item, stages)
+        )
+
+    def _chain_service(self, item: SimItem) -> tuple[float, list["_SimTask"]]:
+        """Walk the chain from this task; figure out which stages run for this
+        item (fan-in gates) and the summed service time."""
+        stages: list[_SimTask] = []
+        svc = 0.0
+        t: _SimTask | None = self
+        while t is not None:
+            svc += t.svc_ms
+            stages.append(t)
+            t._fan_count += 1
+            if t._fan_count % t.fan_in != 0:
+                break  # item absorbed here (waiting for group completion)
+            t = None if stages[-1].chain_next is None else self.sim.tasks[
+                stages[-1].chain_next
+            ]
+        return svc, stages
+
+    def _complete(self, item: SimItem, stages: list["_SimTask"]) -> None:
+        sim = self.sim
+        now = sim.clock.now()
+        self.busy = False
+        last = stages[-1]
+        emitted = last._fan_count % last.fan_in == 0
+        if emitted:
+            if self._pending_task_sample is not None:
+                vid = self.vertex.id
+                if vid in sim.measured_tasks:
+                    sim.reporters[sim.rg.worker(self.vertex)].record_task_latency(
+                        vid, now - self._pending_task_sample
+                    )
+                self._pending_task_sample = None
+            # task-latency samples for interior chained stages: service only
+            for t in stages[1:]:
+                vid = t.vertex.id
+                if vid in sim.measured_tasks and sim.reporters[
+                    sim.rg.worker(t.vertex)
+                ].should_sample_task(vid):
+                    sim.reporters[sim.rg.worker(t.vertex)].record_task_latency(
+                        vid, t.svc_ms
+                    )
+            last.emitted += 1
+            if last.is_sink:
+                sim.record_sink_latency(now - item.created_at_ms, now)
+            else:
+                out = SimItem(item.created_at_ms, last.out_bytes, item.key)
+                last.route(out)
+        self._try_start()
+
+    def route(self, item: SimItem) -> None:
+        for jv_name, chans in self.out_by_jv.items():
+            if len(chans) == 1:
+                ch = chans[0]
+            else:
+                ch = chans[item.key % len(chans)]
+            if self.sim.chained_channels.get(ch.channel.id, False):
+                # direct hand-over: zero-cost, record ~0 channel latency sample
+                sim = self.sim
+                rep = sim.reporters[sim.rg.worker(ch.channel.src)]
+                if ch.channel.id in sim.measured_channels and rep.should_tag(
+                    ch.channel.id
+                ):
+                    rep2 = sim.reporters[sim.rg.worker(ch.channel.dst)]
+                    rep2.record_channel_latency(ch.channel.id, 0.0)
+                sim.tasks[ch.channel.dst].enqueue([item], ch.channel.id)
+            else:
+                ch.send(item)
+
+
+class StreamSimulator:
+    def __init__(
+        self,
+        jg: JobGraph,
+        constraints: list[JobConstraint],
+        num_workers: int,
+        sources: dict[str, SimSourceSpec],
+        initial_buffer_bytes: int = 32 * 1024,
+        measurement_interval_ms: float = 1_000.0,
+        enable_qos: bool = True,
+        enable_chaining: bool = True,
+        policy: BufferSizingPolicy | None = None,
+        net: SimNetConfig | None = None,
+        seed: int = 0,
+        latency_bucket_ms: float = 1_000.0,
+        cores_per_worker: int = 8,
+    ) -> None:
+        self.jg = jg
+        self.constraints = constraints
+        self.rg = RuntimeGraph(jg, num_workers)
+        self.clock = SimClock()
+        self.net = net or SimNetConfig()
+        self.enable_qos = enable_qos
+        self.enable_chaining = enable_chaining
+        self.interval_ms = measurement_interval_ms
+        self.rng = random.Random(seed)
+        self.sources = sources
+        self.latency_bucket_ms = latency_bucket_ms
+
+        self.allocations = compute_qos_setup(jg, constraints, self.rg)
+        self.reporter_setup = compute_reporter_setup(self.allocations, self.rg)
+        self.reporters = {
+            w: QoSReporter(w, self.clock, measurement_interval_ms,
+                           rng=random.Random(seed * 7919 + w))
+            for w in range(num_workers)
+        }
+        for w, routes in self.reporter_setup.task_routes.items():
+            for mgr, tasks in routes.items():
+                self.reporters[w].assign_manager(mgr, (), tasks)
+        for w, routes in self.reporter_setup.channel_routes.items():
+            for mgr, chans in routes.items():
+                self.reporters[w].assign_manager(mgr, chans, ())
+        self.managers = {
+            w: QoSManager(alloc, self.rg, self.clock, policy=policy)
+            for w, alloc in self.allocations.items()
+        }
+        self.measured_channels: set[str] = set()
+        self.measured_tasks: set[str] = set()
+        for r in self.reporters.values():
+            self.measured_channels |= r.interested_channels()
+            self.measured_tasks |= r.interested_tasks()
+
+        self.cpus: list[_WorkerCPU] = [
+            _WorkerCPU(self, cores_per_worker) for _ in range(num_workers)
+        ]
+        self.tasks: dict[RuntimeVertex, _SimTask] = {
+            v: _SimTask(v, self) for v in self.rg.vertices
+        }
+        self.channels: dict[str, _SimChannel] = {}
+        for c in self.rg.channels:
+            sc = _SimChannel(c, self, initial_buffer_bytes)
+            self.channels[c.id] = sc
+            self.tasks[c.src].out_by_jv.setdefault(c.dst.job_vertex, []).append(sc)
+        for t in self.tasks.values():  # deterministic routing order
+            for jv_name in t.out_by_jv:
+                t.out_by_jv[jv_name].sort(key=lambda sc: sc.channel.dst.index)
+
+        self.chained_channels: dict[str, bool] = {}
+        self.chained_groups: list[tuple[str, ...]] = []
+        self._elastic: list = []  # (controller,) attached via attach_elastic
+        self.give_ups: list[GiveUp] = []
+        self.sink_latencies: list[float] = []
+        self.latency_timeline: dict[int, tuple[float, int]] = {}
+        self.total_bytes = 0
+        self.total_buffers = 0
+
+        self._heap: list[tuple[float, int, Callable[[], None]]] = []
+        self._seq = itertools.count()
+
+    # -- event machinery ---------------------------------------------------------
+    def schedule(self, at_ms: float, fn: Callable[[], None]) -> None:
+        heapq.heappush(self._heap, (at_ms, next(self._seq), fn))
+
+    def record_sink_latency(self, lat_ms: float, now: float) -> None:
+        self.sink_latencies.append(lat_ms)
+        b = int(now // self.latency_bucket_ms)
+        s, c = self.latency_timeline.get(b, (0.0, 0))
+        self.latency_timeline[b] = (s + lat_ms, c + 1)
+
+    # -- QoS control events ---------------------------------------------------------
+    def _cpu_utilization(self, v: RuntimeVertex, window_ms: float) -> float:
+        t = self.tasks[v]
+        util = t.busy_ms_window / max(window_ms, 1e-9)
+        t.busy_ms_window = 0.0
+        return min(util, 1.0)
+
+    def _control_tick(self) -> None:
+        tick = self.interval_ms / 4.0
+        for v in self.rg.vertices:
+            if v.id in self.measured_tasks:
+                t = self.tasks[v]
+                self.reporters[self.rg.worker(v)].record_task_cpu(
+                    v.id, self._cpu_utilization(v, tick),
+                    t.chained_into is not None or t.chain_next is not None,
+                )
+        for rep in self.reporters.values():
+            for mgr_id, report in rep.maybe_flush():
+                self.managers[mgr_id].receive_report(report)
+        if self.enable_qos:
+            for mgr in self.managers.values():
+                for action in mgr.check():
+                    self._route_action(action)
+        self.schedule(self.clock.now() + tick, self._control_tick)
+
+    def _route_action(self, action: Action) -> None:
+        if isinstance(action, BufferSizeUpdate):
+            self.channels[action.channel_id].buffer.try_update_size(
+                action.new_size_bytes, action.base_version
+            )
+        elif isinstance(action, ChainRequest):
+            if self.enable_chaining:
+                self._apply_chain(action)
+        elif isinstance(action, GiveUp):
+            self.give_ups.append(action)
+
+    def _apply_chain(self, req: ChainRequest) -> None:
+        tasks = [self.tasks[v] for v in req.tasks]
+        if any(t.chained_into is not None or t.chain_next is not None for t in tasks):
+            return
+        # §3.5.2 drain: in the event model queued items of downstream tasks are
+        # simply processed before any new item reaches them via the chain (new
+        # items enter at the head); re-wiring is atomic at this event time.
+        for a, b in zip(req.tasks, req.tasks[1:]):
+            for c in self.rg.out_channels(a):
+                if c.dst == b:
+                    self.channels[c.id].flush()
+                    self.chained_channels[c.id] = True
+            self.tasks[a].chain_next = b
+            self.tasks[b].chained_into = req.tasks[0]
+        self.chained_groups.append(tuple(v.id for v in req.tasks))
+
+    # -- elastic throughput scaling (core/elastic.py; paper §6) -------------------
+    def attach_elastic(self, controller) -> None:
+        """Attach an ElasticController; its constraint's vertex is watched
+        and scaled live."""
+        self._elastic.append({
+            "ctl": controller, "last_t": 0.0, "last_emitted": 0,
+            "last_busy": 0.0,
+        })
+        period = controller.c.window_ms / 2.0
+        self.schedule(period, self._make_elastic_tick(self._elastic[-1],
+                                                      period))
+
+    def _make_elastic_tick(self, st, period):
+        def tick() -> None:
+            ctl = st["ctl"]
+            now = self.clock.now()
+            tasks = [self.tasks[v]
+                     for v in self.rg.tasks_of(ctl.c.job_vertex)]
+            emitted = sum(t.emitted for t in tasks)
+            busy = sum(t.busy_ms_total for t in tasks)
+            dt = max(now - st["last_t"], 1e-9)
+            rate = (emitted - st["last_emitted"]) / (dt / 1e3)
+            util = (busy - st["last_busy"]) / dt / max(len(tasks), 1)
+            st["last_t"], st["last_emitted"], st["last_busy"] = (
+                now, emitted, busy)
+            d = ctl.check(now, len(tasks), rate, util)
+            if d is not None and d.to_parallelism > d.from_parallelism:
+                self.apply_scale_out(d.job_vertex, d.to_parallelism)
+            self.schedule(now + period, tick)
+
+        return tick
+
+    def apply_scale_out(self, job_vertex: str, new_parallelism: int) -> None:
+        """Live re-wiring: new tasks + channels join the running job; the
+        upstream key-routing rebalances over the larger group."""
+        new_vs, new_cs = self.rg.grow_vertex(job_vertex, new_parallelism)
+        for v in new_vs:
+            self.tasks[v] = _SimTask(v, self)
+        for c in new_cs:
+            sc = _SimChannel(c, self, 32 * 1024)
+            self.channels[c.id] = sc
+            src_task = self.tasks[c.src]
+            src_task.out_by_jv.setdefault(c.dst.job_vertex, []).append(sc)
+            src_task.out_by_jv[c.dst.job_vertex].sort(
+                key=lambda s2: s2.channel.dst.index)
+
+    # -- sources ---------------------------------------------------------------------
+    def _start_sources(self) -> None:
+        for jv_name, spec in self.sources.items():
+            for v in self.rg.tasks_of(jv_name):
+                period = 1e3 / spec.rate_items_per_s
+                offset = self.rng.uniform(0, period)
+                self.schedule(offset, self._make_source_event(v, spec, 0))
+
+    def _make_source_event(self, v: RuntimeVertex, spec: SimSourceSpec, seq: int):
+        def fire() -> None:
+            now = self.clock.now()
+            if spec.keys_per_task is not None:
+                key = v.index * spec.keys_per_task + seq % spec.keys_per_task
+            elif spec.keys:
+                key = seq % spec.keys
+            else:
+                key = seq
+            item = SimItem(now, spec.item_bytes, key)
+            task = self.tasks[v]
+            # a source "processes" the item (its cpu cost) then routes it
+            svc, stages = task._chain_service(item)
+            task.busy_ms_window += svc
+            last = stages[-1]
+
+            def done() -> None:
+                if last._fan_count % last.fan_in == 0:
+                    out = SimItem(item.created_at_ms, last.out_bytes, item.key)
+                    last.route(out)
+
+            self.schedule(now + svc, done)
+            period = 1e3 / spec.rate_items_per_s
+            self.schedule(now + period, self._make_source_event(v, spec, seq + 1))
+
+        return fire
+
+    # -- run ---------------------------------------------------------------------------
+    def run(self, duration_ms: float, max_events: int | None = None) -> "SimResult":
+        self._start_sources()
+        self.schedule(self.interval_ms / 4.0, self._control_tick)
+        n_events = 0
+        while self._heap:
+            t, _, fn = heapq.heappop(self._heap)
+            if t > duration_ms:
+                break
+            self.clock.advance_to(t)
+            fn()
+            n_events += 1
+            if max_events is not None and n_events >= max_events:
+                break
+        history = []
+        for mgr in self.managers.values():
+            history.extend(mgr.history)
+        timeline = {
+            b: s / c for b, (s, c) in sorted(self.latency_timeline.items())
+        }
+        return SimResult(
+            duration_ms=duration_ms,
+            events=n_events,
+            sink_latencies_ms=self.sink_latencies,
+            latency_timeline=timeline,
+            final_buffer_sizes={
+                cid: ch.buffer.capacity_bytes for cid, ch in self.channels.items()
+            },
+            chained_groups=self.chained_groups,
+            give_ups=self.give_ups,
+            manager_history=history,
+            total_bytes=self.total_bytes,
+            total_buffers=self.total_buffers,
+        )
+
+
+@dataclass
+class SimResult:
+    duration_ms: float
+    events: int
+    sink_latencies_ms: list[float]
+    latency_timeline: dict[int, float]  # bucket -> mean latency
+    final_buffer_sizes: dict[str, int]
+    chained_groups: list[tuple[str, ...]]
+    give_ups: list[GiveUp]
+    manager_history: list
+    total_bytes: int
+    total_buffers: int
+
+    def mean_latency_ms(self, after_ms: float = 0.0) -> float:
+        if not self.latency_timeline:
+            return float("nan")
+        b0 = int(after_ms // 1_000)
+        vals = [v for b, v in self.latency_timeline.items() if b >= b0]
+        if not vals:
+            return float("nan")
+        return sum(vals) / len(vals)
+
+    def max_latency_ms(self, after_ms: float = 0.0) -> float:
+        b0 = int(after_ms // 1_000)
+        vals = [v for b, v in self.latency_timeline.items() if b >= b0]
+        return max(vals) if vals else float("nan")
+
+    @property
+    def throughput_items_per_s(self) -> float:
+        return len(self.sink_latencies_ms) / max(self.duration_ms / 1e3, 1e-9)

@@ -1,0 +1,8 @@
+"""Streaming data pipeline."""
+
+from .pipeline import (  # noqa: F401
+    ByteTokenizer,
+    PackedBatchIterator,
+    SyntheticCorpus,
+    build_streaming_pipeline_job,
+)

@@ -1,0 +1,173 @@
+"""Streaming token data pipeline.
+
+Two front-ends over the same stages (read -> tokenize -> pack -> batch):
+
+* ``PackedBatchIterator`` — the fast in-process iterator used by the train
+  driver; deterministic, replayable from an offset (the checkpointing story
+  for data: a restore replays from the recorded document offset, the
+  log-based rollback-recovery analogue from paper §3.6),
+* ``build_streaming_pipeline_job`` — the same stages as a Nephele JobGraph
+  running on the core streaming engine with QoS constraints attached, which
+  is how the paper's technique manages the *input* side of training at
+  scale (benchmarks/serving_qos.py exercises it).
+"""
+from __future__ import annotations
+
+import hashlib
+from dataclasses import dataclass
+
+import numpy as np
+
+from ..core import ALL_TO_ALL, POINTWISE, JobConstraint, JobGraph, JobSequence, JobVertex
+
+
+class ByteTokenizer:
+    """UTF-8 byte tokenizer with a small reserved-id header (pad/bos/eos)."""
+
+    PAD, BOS, EOS = 0, 1, 2
+    OFFSET = 3
+
+    @property
+    def vocab_size(self) -> int:
+        return 256 + self.OFFSET
+
+    def encode(self, text: str) -> list[int]:
+        return [self.BOS] + [b + self.OFFSET for b in text.encode("utf-8")] + [
+            self.EOS]
+
+    def decode(self, ids) -> str:
+        bs = bytes(max(0, int(i) - self.OFFSET) for i in ids
+                   if int(i) >= self.OFFSET)
+        return bs.decode("utf-8", errors="replace")
+
+
+@dataclass
+class SyntheticCorpus:
+    """Deterministic synthetic corpus: structured pseudo-text documents (so
+    a ~100M model has something learnable: repeated n-gram structure)."""
+
+    num_documents: int = 100_000
+    seed: int = 0
+
+    _WORDS = (
+        "stream process latency throughput buffer chain task channel qos "
+        "constraint vertex edge worker manager report tag window adaptive "
+        "dynamic graph sequence violation measure interval cluster node"
+    ).split()
+
+    def document(self, idx: int) -> str:
+        h = int.from_bytes(
+            hashlib.blake2b(
+                f"{self.seed}:{idx}".encode(), digest_size=8
+            ).digest(),
+            "little",
+        )
+        rng = np.random.default_rng(h)
+        n = int(rng.integers(20, 200))
+        words = rng.choice(self._WORDS, size=n)
+        # inject learnable bigram structure
+        out = []
+        for i, w in enumerate(words):
+            out.append(str(w))
+            if w == "qos" and rng.random() < 0.9:
+                out.append("constraint")
+        return " ".join(out)
+
+    def __iter__(self):
+        for i in range(self.num_documents):
+            yield i, self.document(i)
+
+
+class PackedBatchIterator:
+    """Documents -> token stream -> packed [batch, seq_len] next-token pairs.
+
+    ``state()``/``restore()`` expose the replay offset for checkpointing.
+    """
+
+    def __init__(self, corpus: SyntheticCorpus, tokenizer: ByteTokenizer,
+                 batch: int, seq_len: int, start_doc: int = 0) -> None:
+        self.corpus = corpus
+        self.tok = tokenizer
+        self.batch = batch
+        self.seq_len = seq_len
+        self.doc_idx = start_doc
+        self._buf: list[int] = []
+
+    def state(self) -> dict:
+        # the partial token buffer is part of the replay state: doc_idx alone
+        # would skip the already-consumed tail of the current document
+        return {"doc_idx": self.doc_idx, "buf": list(self._buf)}
+
+    def restore(self, state: dict) -> None:
+        self.doc_idx = int(state["doc_idx"])
+        self._buf = [int(t) for t in state.get("buf", [])]
+
+    def _fill(self, need: int) -> None:
+        while len(self._buf) < need:
+            self._buf.extend(
+                self.tok.encode(self.corpus.document(self.doc_idx)))
+            self.doc_idx = (self.doc_idx + 1) % self.corpus.num_documents
+
+    def __iter__(self):
+        return self
+
+    def __next__(self):
+        n = self.batch * (self.seq_len + 1)
+        self._fill(n)
+        flat = np.asarray(self._buf[:n], dtype=np.int32)
+        self._buf = self._buf[n:]
+        arr = flat.reshape(self.batch, self.seq_len + 1)
+        return {"tokens": arr[:, :-1], "labels": arr[:, 1:]}
+
+
+# ---------------------------------------------------------------------------
+# The same pipeline as a QoS-managed streaming job (paper-style)
+# ---------------------------------------------------------------------------
+
+
+def build_streaming_pipeline_job(
+    parallelism: int = 4,
+    latency_limit_ms: float = 100.0,
+    window_ms: float = 5_000.0,
+) -> tuple[JobGraph, list[JobConstraint]]:
+    """Reader -> Tokenizer -> Packer -> BatchSink as a job graph with a
+    latency constraint on the tokenize->pack path; run it on
+    core.StreamEngine / StreamSimulator."""
+    tok = ByteTokenizer()
+    corpus = SyntheticCorpus()
+
+    def tokenize(payload, emit, ctx):
+        idx, text = payload
+        emit((idx, tok.encode(text)), size_bytes=len(text) + 16)
+
+    def pack(payload, emit, ctx):
+        # stateful packing per task instance
+        st = getattr(ctx, "_pack_buf", None)
+        if st is None:
+            st = ctx._pack_buf = []
+        idx, ids = payload
+        st.extend(ids)
+        seq = 257
+        while len(st) >= seq:
+            emit((idx, st[:seq]), size_bytes=seq * 4)
+            del st[:seq]
+
+    jg = JobGraph("data-pipeline")
+    jg.add_vertex(JobVertex("Reader", parallelism, is_source=True,
+                            sim_cpu_ms=0.01, sim_item_bytes=512))
+    jg.add_vertex(JobVertex("Tokenizer", parallelism, fn=tokenize,
+                            sim_cpu_ms=0.05, sim_item_bytes=1024))
+    jg.add_vertex(JobVertex("Packer", parallelism, fn=pack,
+                            sim_cpu_ms=0.02, sim_item_bytes=1028))
+    jg.add_vertex(JobVertex("BatchSink", parallelism, is_sink=True,
+                            sim_cpu_ms=0.01, sim_item_bytes=1028))
+    jg.add_edge("Reader", "Tokenizer", ALL_TO_ALL)
+    jg.add_edge("Tokenizer", "Packer", POINTWISE)
+    jg.add_edge("Packer", "BatchSink", ALL_TO_ALL)
+
+    seq = JobSequence.of(
+        ("Reader", "Tokenizer"), "Tokenizer", ("Tokenizer", "Packer"),
+        "Packer", ("Packer", "BatchSink"),
+    )
+    jc = JobConstraint(seq, latency_limit_ms, window_ms, name="pipeline-lat")
+    return jg, [jc]

@@ -1,0 +1,115 @@
+"""Flash-decoding (split-KV) as a Pallas TPU kernel.
+
+Single-token decode against a long (possibly rolling) KV cache.  The GPU
+flash-decoding trick is splitting the KV axis across SMs and combining
+partials; the TPU adaptation tiles the KV axis across the sequential grid
+dimension with the online-softmax state in VMEM scratch, and — unlike the
+prefill kernel — puts **heads** (not query rows) on the MXU rows: with one
+query token, the score matmul per block is [Hq, D] x [D, bk] -> [Hq, bk],
+which keeps the systolic array full for Hq >= 8.
+
+Grid: (B, W/bk).  GQA is handled in-kernel by reshaping q to
+[Hkv, G, D] against the block's [bk, Hkv, D] keys.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+INVALID_POS = 2**30
+NEG_INF = float(-1e30)
+DEFAULT_BLOCK_K = 512
+
+
+def _decode_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                   m_scr, l_scr, acc_scr, *, scale, window, n_kv):
+    ki = pl.program_id(1)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0]                                   # [Hq, D]
+    k = k_ref[0]                                   # [bk, Hkv, D]
+    v = v_ref[0]                                   # [bk, Hkv, D]
+    qp = qpos_ref[0]                               # scalar in (1,)
+    kp = kpos_ref[0, :]                            # [bk]
+    Hq, D = q.shape
+    bk, Hkv, _ = k.shape
+    G = Hq // Hkv
+
+    qg = q.reshape(Hkv, G, D).astype(jnp.float32)
+    kf = k.astype(jnp.float32)
+    # scores per kv-head group: [Hkv, G, bk]
+    s = jax.lax.dot_general(
+        qg, kf, (((2,), (2,)), ((0,), (1,))),
+        preferred_element_type=jnp.float32,
+    ) * scale
+    mask = kp[None, None, :] >= INVALID_POS
+    mask |= kp[None, None, :] > qp
+    if window is not None:
+        mask |= kp[None, None, :] <= qp - window
+    s = jnp.where(mask, NEG_INF, s)
+
+    m_prev = m_scr[...].reshape(Hkv, G)
+    l_prev = l_scr[...].reshape(Hkv, G)
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    p = jnp.where(mask, 0.0, jnp.exp(s - m_new[..., None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(                       # [Hkv, G, D]
+        p, v.astype(jnp.float32), (((2,), (0,)), ((0,), (1,))),
+    )
+    acc = acc_scr[...].reshape(Hkv, G, D)
+    acc_scr[...] = (acc * corr[..., None] + pv).reshape(Hq, D)
+    m_scr[...] = m_new.reshape(Hq)
+    l_scr[...] = l_new.reshape(Hq)
+
+    @pl.when(ki == n_kv - 1)
+    def _out():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)
+        o_ref[0] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_decode(q, k, v, q_positions, kv_positions, *,
+                 window: int | None = None,
+                 softmax_scale: float | None = None,
+                 block_k: int = DEFAULT_BLOCK_K,
+                 interpret: bool = False):
+    """q: [B, Hq, D]; k, v: [B, W, Hkv, D]; q_positions: [B];
+    kv_positions: [B, W].  Returns [B, Hq, D]."""
+    B, Hq, D = q.shape
+    _, W, Hkv, _ = k.shape
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    bk = min(block_k, W)
+    assert W % bk == 0, (W, bk)
+    n_kv = W // bk
+    kernel = functools.partial(_decode_kernel, scale=scale, window=window,
+                               n_kv=n_kv)
+    return pl.pallas_call(
+        kernel,
+        grid=(B, n_kv),
+        in_specs=[
+            pl.BlockSpec((1,), lambda b, ki: (b,)),            # q pos
+            pl.BlockSpec((1, bk), lambda b, ki: (b, ki)),      # kv pos
+            pl.BlockSpec((1, Hq, D), lambda b, ki: (b, 0, 0)),
+            pl.BlockSpec((1, bk, Hkv, D), lambda b, ki: (b, ki, 0, 0)),
+            pl.BlockSpec((1, bk, Hkv, D), lambda b, ki: (b, ki, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, Hq, D), lambda b, ki: (b, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Hq, D), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq,), jnp.float32),
+            pltpu.VMEM((Hq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, kv_positions, q, k, v)

@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for flash_decode (single-token attention over a cache)."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from ..flash_attention.ref import attention_ref
+
+
+def decode_ref(q, k, v, q_positions, kv_positions, *, window=None,
+               softmax_scale=None):
+    """q: [B, Hq, D] -> [B, Hq, D] via the prefill oracle at Sq=1."""
+    out = attention_ref(
+        q[:, None], k, v, q_positions[:, None], kv_positions,
+        causal=True, window=window, softmax_scale=softmax_scale,
+    )
+    return out[:, 0]

@@ -1,0 +1,132 @@
+"""Flash attention as a Pallas TPU kernel (pl.pallas_call + BlockSpec).
+
+TPU-native adaptation of the FlashAttention tiling (arXiv:2205.14135):
+
+* grid (B, Hq, Sq/bq, Skv/bk) — the KV dimension is innermost, executed
+  sequentially on TPU, so the online-softmax running state (m, l, acc) lives
+  in VMEM scratch across KV steps;
+* q/k/v blocks are staged HBM->VMEM by BlockSpec; block sizes default to
+  (bq, bk) = (128, 128) with d_head 64/128 — MXU-aligned (128x128 systolic
+  tiles);
+* GQA without materializing repeated KV: the k/v BlockSpec index_map sends
+  query-head h to kv-head h // (Hq/Hkv);
+* causal + sliding-window + hole masking via absolute position tensors
+  (positions >= INVALID_POS mark unwritten cache slots).
+
+Validated in interpret mode against ref.py (pure jnp); on-TPU this is the
+`attn_impl="pallas"` lowering of models/layers.attention.
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+DEFAULT_BLOCK_Q = 128
+DEFAULT_BLOCK_K = 128
+INVALID_POS = 2**30
+NEG_INF = float(-1e30)
+
+
+def _flash_kernel(qpos_ref, kpos_ref, q_ref, k_ref, v_ref, o_ref,
+                  m_scr, l_scr, acc_scr, *, scale, causal, window, n_kv):
+    kv_idx = pl.program_id(3)
+
+    @pl.when(kv_idx == 0)
+    def _init():
+        m_scr[...] = jnp.full_like(m_scr, -jnp.inf)
+        l_scr[...] = jnp.zeros_like(l_scr)
+        acc_scr[...] = jnp.zeros_like(acc_scr)
+
+    q = q_ref[0, :, 0, :]                       # [bq, d]
+    k = k_ref[0, :, 0, :]                       # [bk, d]
+    v = v_ref[0, :, 0, :]                       # [bk, d]
+    qp = qpos_ref[0, :]                         # [bq]
+    kp = kpos_ref[0, :]                         # [bk]
+
+    s = jax.lax.dot_general(
+        q, k, (((1,), (1,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    ) * scale                                   # [bq, bk]
+
+    mask = kp[None, :] >= INVALID_POS
+    if causal:
+        mask |= kp[None, :] > qp[:, None]
+    if window is not None:
+        mask |= kp[None, :] <= qp[:, None] - window
+    s = jnp.where(mask, NEG_INF, s)
+
+    m_prev = m_scr[...]
+    l_prev = l_scr[...]
+    m_new = jnp.maximum(m_prev, s.max(axis=-1))
+    # fully-masked rows: s == m_new == NEG_INF would give exp(0) = 1 for
+    # every masked entry; zero them explicitly
+    p = jnp.where(mask, 0.0, jnp.exp(s - m_new[:, None]))
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + p.sum(axis=-1)
+    pv = jax.lax.dot_general(
+        p.astype(v.dtype), v, (((1,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32,
+    )
+    acc_scr[...] = acc_scr[...] * corr[:, None] + pv
+    m_scr[...] = m_new
+    l_scr[...] = l_new
+
+    @pl.when(kv_idx == n_kv - 1)
+    def _out():
+        l = l_scr[...]
+        l = jnp.where(l == 0.0, 1.0, l)         # fully-masked rows -> 0
+        o_ref[0, :, 0, :] = (acc_scr[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def flash_attention(
+    q, k, v, q_positions, kv_positions, *,
+    causal: bool = True,
+    window: int | None = None,
+    softmax_scale: float | None = None,
+    block_q: int = DEFAULT_BLOCK_Q,
+    block_k: int = DEFAULT_BLOCK_K,
+    interpret: bool = False,
+):
+    """q: [B, Sq, Hq, D]; k, v: [B, Skv, Hkv, D]; positions int32.
+
+    Sq/Skv must be multiples of block_q/block_k (ops.py pads)."""
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    bq, bk = min(block_q, Sq), min(block_k, Skv)
+    assert Sq % bq == 0 and Skv % bk == 0, (Sq, bq, Skv, bk)
+    n_kv = Skv // bk
+    grid = (B, Hq, Sq // bq, n_kv)
+
+    kernel = functools.partial(
+        _flash_kernel, scale=scale, causal=causal, window=window, n_kv=n_kv
+    )
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, bq), lambda b, h, qi, ki: (b, qi)),          # qpos
+            pl.BlockSpec((1, bk), lambda b, h, qi, ki: (b, ki)),          # kpos
+            pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),        # GQA
+            pl.BlockSpec((1, bk, 1, D),
+                         lambda b, h, qi, ki: (b, ki, h // G, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, bq, 1, D), lambda b, h, qi, ki: (b, qi, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((B, Sq, Hq, D), q.dtype),
+        # VMEM scratch for the online-softmax running state; persists across
+        # the sequentially-executed KV grid dimension
+        scratch_shapes=[
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq,), jnp.float32),
+            pltpu.VMEM((bq, D), jnp.float32),
+        ],
+        interpret=interpret,
+    )(q_positions, kv_positions, q, k, v)

@@ -1,0 +1,38 @@
+"""Pure-jnp oracle for the flash-attention kernel: materializes the full
+score matrix (O(Sq*Skv) memory) with identical masking semantics."""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+INVALID_POS = 2**30
+
+
+def attention_ref(q, k, v, q_positions, kv_positions, *, causal=True,
+                  window=None, softmax_scale=None):
+    B, Sq, Hq, D = q.shape
+    _, Skv, Hkv, _ = k.shape
+    G = Hq // Hkv
+    scale = softmax_scale if softmax_scale is not None else 1.0 / math.sqrt(D)
+    if G > 1:
+        k = jnp.repeat(k, G, axis=2)
+        v = jnp.repeat(v, G, axis=2)
+    s = jnp.einsum("bqhd,bkhd->bhqk", q.astype(jnp.float32),
+                   k.astype(jnp.float32)) * scale
+    kvp = kv_positions[:, None, None, :]
+    qp = q_positions[:, None, :, None]
+    mask = kvp >= INVALID_POS
+    if causal:
+        mask = mask | (kvp > qp)
+    if window is not None:
+        mask = mask | (kvp <= qp - window)
+    s = jnp.where(mask, -jnp.inf, s)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    m = jnp.where(jnp.isfinite(m), m, 0.0)  # fully-masked rows
+    p = jnp.exp(s - m)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    l = jnp.where(l == 0.0, 1.0, l)
+    o = jnp.einsum("bhqk,bkhd->bqhd", p / l, v.astype(jnp.float32))
+    return o.astype(q.dtype)

@@ -1,0 +1,12 @@
+"""jit'd wrapper for the RMSNorm Pallas kernel."""
+from functools import partial
+
+import jax
+
+from .rmsnorm import rmsnorm
+
+
+@partial(jax.jit, static_argnames=("eps", "block_rows", "interpret"))
+def rmsnorm_op(x, w, *, eps: float = 1e-6, block_rows: int = 256,
+               interpret: bool = True):
+    return rmsnorm(x, w, eps=eps, block_rows=block_rows, interpret=interpret)

@@ -1,0 +1,13 @@
+"""jit'd wrapper for the SSD Pallas kernel (interpret mode on CPU)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from .ssd_scan import ssd_scan
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def ssd_scan_op(x, dt, a, B, C, *, chunk: int = 128, interpret: bool = True):
+    return ssd_scan(x, dt, a, B, C, chunk=chunk, interpret=interpret)

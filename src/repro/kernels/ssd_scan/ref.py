@@ -1,0 +1,41 @@
+"""Pure-jnp oracle for the SSD kernel: the naive O(S) recurrence."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def ssd_ref(x, dt, a, B, C):
+    """Sequential state-space recurrence, one token at a time.
+
+    x: [Bb, S, H, P]; dt, a: [Bb, S, H]; B, C: [Bb, S, G, N].
+    h_t = exp(a_t) h_{t-1} + dt_t * B_t x_t^T;  y_t = C_t . h_t
+    """
+    Bb, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Bh = jnp.repeat(B, rep, axis=2).astype(jnp.float32)
+    Ch = jnp.repeat(C, rep, axis=2).astype(jnp.float32)
+    xdt = (x.astype(jnp.float32) * dt[..., None])
+
+    def step(h, xs):
+        x_t, a_t, B_t, C_t = xs   # [Bb,H,P], [Bb,H], [Bb,H,N] x2
+        h = h * jnp.exp(a_t)[..., None, None] + jnp.einsum(
+            "bhn,bhp->bhnp", B_t, x_t
+        )
+        y = jnp.einsum("bhn,bhnp->bhp", C_t, h)
+        return h, y
+
+    h0 = jnp.zeros((Bb, H, N, P), jnp.float32)
+    h, ys = lax.scan(
+        step,
+        h0,
+        (
+            jnp.moveaxis(xdt, 1, 0),
+            jnp.moveaxis(a.astype(jnp.float32), 1, 0),
+            jnp.moveaxis(Bh, 1, 0),
+            jnp.moveaxis(Ch, 1, 0),
+        ),
+    )
+    return jnp.moveaxis(ys, 0, 1).astype(x.dtype), h

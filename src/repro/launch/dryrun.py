@@ -1,0 +1,252 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+# ^ MUST be the first two lines: jax locks the device count on first init.
+#   512 placeholder host devices back both the 16x16 single-pod mesh and the
+#   2x16x16 multi-pod mesh.  Never set this globally (tests/benches must see
+#   one device).
+"""Multi-pod dry-run: .lower().compile() every (arch x input-shape x mesh)
+cell on the production mesh, prove it fits, and extract the roofline terms.
+
+Usage:
+    PYTHONPATH=src python -m repro.launch.dryrun --arch mixtral-8x7b \
+        --shape train_4k [--multi-pod] [--out artifacts/dryrun]
+    PYTHONPATH=src python -m repro.launch.dryrun --all [--multi-pod]
+
+Per cell this prints/records:
+  * compiled.memory_analysis()  — per-device bytes: proves the cell fits,
+  * compiled.cost_analysis()    — HLO FLOPs / bytes for the roofline,
+  * collective link-bytes parsed from the partitioned HLO (hlo_analysis),
+  * the sharding rules used (the baseline policy; hillclimbs override).
+"""
+import argparse
+import json
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs import get_config, list_archs
+from repro.configs.shapes import LONG_CONTEXT_ARCHS, SHAPES, cells
+from repro.launch.hlo_analysis import analyze_hlo
+from repro.launch.mesh import make_production_mesh
+from repro.launch.partition import (
+    batch_shardings,
+    cache_shardings,
+    make_rules,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.launch.steps import (
+    make_decode_step,
+    make_prefill_step,
+    make_train_step,
+    pick_grad_accum,
+)
+from repro.models import build_model
+from repro.optim import build_optimizer, cosine_schedule
+from repro.sharding import use_sharding_rules
+
+# Baseline microbatch gradient-accumulation factors (memory-driven; the
+# per-cell EXPERIMENTS.md entries record the final values).
+GRAD_ACCUM = {
+    # llama3-405b / dbrx-132b use nested-remat scans (scan_remat_groups)
+    # instead of microbatching: FSDP params are gathered O(1) times per step
+    # rather than once per microbatch (see EXPERIMENTS.md §Perf).
+    "llama3-405b": 1,
+    "dbrx-132b": 4,
+    "mixtral-8x7b": 4,
+    "zamba2-7b": 8,
+    "yi-6b": 2,
+    "phi-3-vision-4.2b": 2,
+    "llama3.2-3b": 2,
+    "qwen3-1.7b": 1,
+    "mamba2-130m": 1,
+    "whisper-tiny": 1,
+}
+
+
+def run_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+             overrides: dict | None = None, grad_accum: int | None = None,
+             save_hlo: bool = False, out_dir: Path | None = None,
+             cfg_overrides: dict | None = None, tag: str = "") -> dict:
+    cfg = get_config(arch)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    shape = SHAPES[shape_name]
+    mesh = make_production_mesh(multi_pod=multi_pod)
+    n_dev = mesh.devices.size
+    dp = n_dev // 16  # model axis is 16 in both meshes
+    model = build_model(cfg)
+    rules = make_rules(cfg, mesh, seq_len=shape.seq_len,
+                       global_batch=shape.global_batch, overrides=overrides)
+
+    t0 = time.time()
+    with mesh, use_sharding_rules(rules, mesh):
+        aparams = model.abstract_params()
+        p_sh = param_shardings(model.logical_axes(), mesh, rules)
+        if shape.mode == "train":
+            opt = build_optimizer(
+                cfg.optimizer, cosine_schedule(3e-4, 100, 10_000)
+            )
+            aopt = jax.eval_shape(opt.init, aparams)
+            o_sh = opt_state_shardings(aopt, aparams, p_sh)
+            abatch = model.input_specs(
+                seq_len=shape.seq_len, batch=shape.global_batch, mode="train"
+            )
+            b_sh = batch_shardings(abatch, mesh, rules)
+            ga = grad_accum if grad_accum is not None else pick_grad_accum(
+                shape.global_batch, dp, GRAD_ACCUM.get(arch, 1)
+            )
+            step = make_train_step(model, opt, grad_accum=ga)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, o_sh, b_sh),
+                out_shardings=(p_sh, o_sh, None),
+                donate_argnums=(0, 1),
+            )
+            lowered = jitted.lower(aparams, aopt, abatch)
+        elif shape.mode == "prefill":
+            abatch = model.input_specs(
+                seq_len=shape.seq_len, batch=shape.global_batch,
+                mode="prefill",
+            )
+            b_sh = batch_shardings(abatch, mesh, rules)
+            acache = model.init_cache_schema(shape.global_batch,
+                                             shape.seq_len)
+            c_sh = cache_shardings(cfg, acache, mesh, rules)
+            step = make_prefill_step(model, shape.seq_len)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, b_sh),
+                out_shardings=(None, c_sh),
+            )
+            lowered = jitted.lower(aparams, abatch)
+            ga = 0
+        else:  # decode
+            specs = model.input_specs(
+                seq_len=shape.seq_len, batch=shape.global_batch, mode="decode"
+            )
+            acache = specs["cache"]
+            c_sh = cache_shardings(cfg, acache, mesh, rules)
+            tok_sh = batch_shardings(
+                {"t": specs["token"], "p": specs["pos"]}, mesh, rules
+            )
+            step = make_decode_step(model)
+            jitted = jax.jit(
+                step,
+                in_shardings=(p_sh, c_sh, tok_sh["t"], tok_sh["p"]),
+                out_shardings=(None, c_sh),
+                donate_argnums=(1,),
+            )
+            lowered = jitted.lower(aparams, acache, specs["token"],
+                                   specs["pos"])
+            ga = 0
+        t_lower = time.time() - t0
+        compiled = lowered.compile()
+        t_compile = time.time() - t0 - t_lower
+
+    mem = compiled.memory_analysis()
+    mem_d = {}
+    if mem is not None:
+        for k in ("argument_size_in_bytes", "output_size_in_bytes",
+                  "temp_size_in_bytes", "alias_size_in_bytes",
+                  "generated_code_size_in_bytes"):
+            v = getattr(mem, k, None)
+            if v is not None:
+                mem_d[k] = int(v)
+    cost = compiled.cost_analysis() or {}
+    cost_d = {k: float(v) for k, v in cost.items()
+              if isinstance(v, (int, float))}
+
+    hlo = compiled.as_text()
+    hla = analyze_hlo(hlo)
+
+    record = {
+        "arch": arch,
+        "shape": shape_name,
+        "mesh": "2x16x16" if multi_pod else "16x16",
+        "devices": int(n_dev),
+        "mode": shape.mode,
+        "grad_accum": int(ga),
+        "rules": {k: (list(v) if isinstance(v, tuple) else v)
+                  for k, v in rules.items()},
+        "lower_s": round(t_lower, 2),
+        "compile_s": round(t_compile, 2),
+        "memory_analysis": mem_d,
+        "cost_analysis": cost_d,  # per-computation-execution (no loop trips)
+        "hlo_analysis": hla.as_dict(),  # loop-aware per-device totals
+        "param_count": int(cfg.param_count()),
+        "active_param_count": int(cfg.active_param_count()),
+        "hlo_bytes": len(hlo),
+    }
+    print(f"== {arch} x {shape_name} [{record['mesh']}] ==")
+    print(f"  lower {t_lower:.1f}s  compile {t_compile:.1f}s  "
+          f"grad_accum={ga}")
+    print(f"  memory_analysis: { {k: f'{v/2**30:.2f} GiB' for k, v in mem_d.items()} }")
+    print(f"  per-device: flops={hla.flops:.3e}  "
+          f"mem_bytes={hla.memory_bytes:.3e}  "
+          f"coll_bytes={hla.total_collective_bytes:.3e}")
+    print(f"  collectives: {dict(hla.collective_counts)}  "
+          f"loops={hla.loop_trips[:8]}")
+    if out_dir is not None:
+        out_dir.mkdir(parents=True, exist_ok=True)
+        suffix = f"__{tag}" if tag else ""
+        name = f"{arch}__{shape_name}__{record['mesh']}{suffix}.json"
+        (out_dir / name).write_text(json.dumps(record, indent=1))
+        if save_hlo:
+            (out_dir / name.replace(".json", ".hlo.txt")).write_text(hlo)
+    return record
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default=None)
+    ap.add_argument("--shape", default=None)
+    ap.add_argument("--all", action="store_true")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--grad-accum", type=int, default=None)
+    ap.add_argument("--save-hlo", action="store_true")
+    ap.add_argument("--out", default="artifacts/dryrun")
+    ap.add_argument("--tag", default="")
+    ap.add_argument("--cfg", action="append", default=[],
+                    help="ModelConfig override, e.g. --cfg scan_remat_groups=14")
+    args = ap.parse_args()
+    out = Path(args.out)
+    cfg_overrides = {}
+    for kv in args.cfg:
+        k, _, v = kv.partition("=")
+        try:
+            v = int(v)
+        except ValueError:
+            try:
+                v = float(v)
+            except ValueError:
+                v = {"true": True, "false": False, "none": None}.get(
+                    v.lower(), v)
+        cfg_overrides[k] = v
+
+    todo = (
+        cells(list_archs())
+        if args.all
+        else [(args.arch, args.shape)]
+    )
+    failures = []
+    for arch, shape in todo:
+        try:
+            run_cell(arch, shape, multi_pod=args.multi_pod,
+                     grad_accum=args.grad_accum, save_hlo=args.save_hlo,
+                     out_dir=out, cfg_overrides=cfg_overrides or None,
+                     tag=args.tag)
+        except Exception as e:  # noqa: BLE001 — report all cell failures
+            failures.append((arch, shape, repr(e)))
+            print(f"FAILED {arch} x {shape}: {e}")
+            traceback.print_exc()
+    if failures:
+        raise SystemExit(f"{len(failures)} cells failed: "
+                         f"{[(a, s) for a, s, _ in failures]}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,27 @@
+"""Production mesh definition.
+
+A FUNCTION (not a module-level constant) so importing this module never
+touches jax device state.  Single pod: 16x16 = 256 chips ("data", "model");
+multi-pod: 2x16x16 = 512 chips ("pod", "data", "model") — the "pod" axis
+composes with "data" for DP/FSDP so the same partition rules scale to N
+pods (set pods=N)."""
+from __future__ import annotations
+
+import jax
+
+
+def make_production_mesh(*, multi_pod: bool = False, pods: int = 2):
+    if multi_pod:
+        shape = (pods, 16, 16)
+        axes = ("pod", "data", "model")
+    else:
+        shape = (16, 16)
+        axes = ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def make_host_mesh(model: int = 1):
+    """Small mesh over whatever devices exist (tests / smoke runs)."""
+    n = len(jax.devices())
+    data = n // model
+    return jax.make_mesh((data, model), ("data", "model"))

@@ -1,0 +1,210 @@
+"""Sharding rules: logical axes -> mesh axes, per (arch x shape x mesh).
+
+The baseline policy (recorded per cell in EXPERIMENTS.md):
+
+* params: FSDP over ("pod","data") on the "fsdp" logical axis + TP over
+  "model" on heads / mlp / vocab (ZeRO-3 via GSPMD: params all-gather
+  per layer, grads reduce-scatter),
+* activations: batch over ("pod","data"), residual-stream sequence over
+  "model" (sequence parallelism), heads/mlp over "model" inside blocks,
+* MoE: "tp" = every expert's FFN dim sharded over "model" (no all-to-all);
+  "ep" = experts over "model" (all-to-all dispatch) — a hillclimb option,
+* divisibility-aware: any logical axis whose dim does not divide its mesh
+  axis falls back to replication (e.g. 24 heads on a 16-way model axis for
+  llama3.2-3b, kv_heads=8 < 16 everywhere).
+
+All decisions are *rules*, so a hillclimb iteration is a rule change, not a
+model change.
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import numpy as np
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+from ..models.config import ModelConfig
+from ..sharding import resolve_spec
+
+DP_AXES = ("pod", "data")
+
+
+def _axis_size(mesh: Mesh, name) -> int:
+    if name is None:
+        return 1
+    if isinstance(name, tuple):
+        return math.prod(_axis_size(mesh, a) for a in name)
+    return dict(zip(mesh.axis_names, mesh.devices.shape)).get(name, 1)
+
+
+def make_rules(cfg: ModelConfig, mesh: Mesh, *, seq_len: int,
+               global_batch: int, overrides: dict | None = None) -> dict:
+    """Divisibility-aware logical->mesh rules for one dry-run cell."""
+    model = _axis_size(mesh, "model")
+    dp = _axis_size(mesh, DP_AXES)
+
+    def fits(dim: int, axis_size: int) -> bool:
+        return dim > 0 and dim % axis_size == 0
+
+    rules: dict = {
+        "batch": DP_AXES if fits(global_batch, dp) else None,
+        "fsdp": DP_AXES,  # all param fsdp dims are d_model/d_ff-sized: even
+        "embed": None,
+        "heads": "model" if fits(cfg.num_heads, model) else None,
+        "kv_heads": "model" if fits(cfg.num_kv_heads, model) else None,
+        "mlp": "model",
+        "vocab": "model" if fits(cfg.padded_vocab, model) else None,
+        "expert": "model"
+        if (cfg.is_moe and cfg.expert_sharding == "ep"
+            and fits(cfg.num_experts, model))
+        else None,
+        "seq": "model" if fits(seq_len, model) else None,
+        "layers": None,
+    }
+    # row-parallel attention: when the head count does not divide the model
+    # axis (llama3.2's 24 heads, whisper's 6), shard the attention q rows
+    # (sequence) over "model" instead of replicating the whole attention
+    # computation on every model shard (16x wasted FLOPs at prefill_32k)
+    rules["attn_seq"] = (
+        "model"
+        if rules["heads"] is None and cfg.num_heads and fits(seq_len, model)
+        else None
+    )
+    # "mlp" guards: every mlp-tagged dim must divide the model axis
+    mlp_dims = [cfg.d_ff]
+    if cfg.family in ("ssm", "hybrid"):
+        mlp_dims = [d for d in (cfg.d_ff, cfg.d_inner) if d]
+        # the SSD head reshape [di] -> [H, P] must align with the shard
+        # boundaries (whole heads per shard), else every chunk slice
+        # reshards (mamba2-130m: 24 heads on a 16-way axis -> replicate)
+        if (cfg.ssm_heads % model or
+                (cfg.d_inner // model) % cfg.ssm_head_dim):
+            rules["mlp"] = None
+    if not all(fits(d, model) for d in mlp_dims):
+        rules["mlp"] = None
+    # fsdp guard: smallest fsdp-tagged dim is d_model (heads*dh etc. >= it)
+    if not fits(cfg.d_model, dp):
+        rules["fsdp"] = None
+    if overrides:
+        rules.update(overrides)
+    return rules
+
+
+# ---------------------------------------------------------------------------
+# shardings for params / optimizer state / batches / caches
+# ---------------------------------------------------------------------------
+
+
+def param_shardings(model_axes, mesh: Mesh, rules: dict):
+    """model_axes: pytree of logical-axes tuples (Model.logical_axes())."""
+    return jax.tree.map(
+        lambda axes: NamedSharding(mesh, resolve_spec(axes, rules, mesh)),
+        model_axes,
+        is_leaf=lambda x: isinstance(x, tuple),
+    )
+
+
+def opt_state_shardings(opt_state_shape, params_shape, param_shard):
+    """Derive optimizer-state shardings from parameter shardings.
+
+    m/v (same shape as the param) inherit its sharding; Adafactor's factored
+    vr (shape[:-1]) / vc (shape[:-2] + shape[-1:]) drop the corresponding
+    spec entries; anything else is replicated.
+    """
+    flat_p = {
+        tuple(k): (v, s)
+        for (k, v), (_, s) in zip(
+            _flat_with_path(params_shape), _flat_with_path(param_shard)
+        )
+    }
+    mesh = next(iter(flat_p.values()))[1].mesh if flat_p else None
+
+    def assign(path, leaf):
+        # match the enclosing param by path prefix inside state trees like
+        # {"mu": {<param path>: {"m": ..}}, "v": {<param path>: {"vr": ..}}}
+        for pp, (pshape, pshard) in flat_p.items():
+            if _is_subpath(pp, path):
+                spec = pshard.spec
+                if leaf.shape == pshape.shape:
+                    return pshard
+                if leaf.shape == pshape.shape[:-1]:
+                    return NamedSharding(mesh, P(*spec[:-1]))
+                if leaf.shape == pshape.shape[:-2] + pshape.shape[-1:]:
+                    return NamedSharding(mesh, P(*spec[:-2], *spec[-1:]))
+                break
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(opt_state_shape)
+    out = [assign(tuple(_key_str(k) for k in path), leaf)
+           for path, leaf in flat]
+    return jax.tree_util.tree_unflatten(treedef, out)
+
+
+def _key_str(k):
+    return getattr(k, "key", getattr(k, "idx", getattr(k, "name", str(k))))
+
+
+def _flat_with_path(tree):
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [
+        (tuple(_key_str(k) for k in path), leaf) for path, leaf in flat
+    ]
+
+
+def _is_subpath(param_path: tuple, state_path: tuple) -> bool:
+    """param path appears as a contiguous subsequence of the state path."""
+    n, m = len(param_path), len(state_path)
+    for i in range(m - n + 1):
+        if state_path[i : i + n] == param_path:
+            return True
+    return False
+
+
+def batch_shardings(batch_specs, mesh: Mesh, rules: dict):
+    """Input batches: leading dim is batch; everything else replicated."""
+    def spec_for(leaf):
+        axes = ("batch",) + (None,) * (len(leaf.shape) - 1)
+        return NamedSharding(mesh, resolve_spec(axes, rules, mesh))
+
+    return jax.tree.map(spec_for, batch_specs)
+
+
+def cache_shardings(cfg: ModelConfig, cache_specs, mesh: Mesh, rules: dict):
+    """KV/SSM cache shardings.  Heuristic by array rank+name:
+
+    * attention k/v  [L, B, W, Hkv, Dh]: batch over DP, W (seq) over model
+      (flash-decoding split-K), kv_heads replicated,
+    * pos tables [B, W]: batch over DP,
+    * ssm conv [L(,k), B, W-1, conv]: batch over DP, conv over model,
+    * ssm state [L(,k), B, H, N, P]: batch over DP, N over model if even.
+    """
+    model = _axis_size(mesh, "model")
+
+    def spec_for(path, leaf):
+        name = path[-1]
+        shape = leaf.shape
+        b = resolve_spec(("batch",), rules, mesh)[0]
+        if name in ("k", "v", "attn_k", "attn_v", "cross_k", "cross_v"):
+            lead = (None,) * (len(shape) - 4)
+            seq = "model" if shape[-3] % model == 0 else None
+            return NamedSharding(mesh, P(*lead, b, seq, None, None))
+        if name in ("pos", "attn_pos"):
+            return NamedSharding(mesh, P(b, None))
+        if name in ("conv_x", "conv_bc", "tail_conv_x", "tail_conv_bc"):
+            lead = (None,) * (len(shape) - 3)
+            cd = "model" if shape[-1] % model == 0 else None
+            return NamedSharding(mesh, P(*lead, b, None, cd))
+        if name in ("state", "tail_state"):
+            lead = (None,) * (len(shape) - 4)
+            n_ax = "model" if shape[-2] % model == 0 else None
+            return NamedSharding(mesh, P(*lead, b, None, n_ax, None))
+        return NamedSharding(mesh, P())
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(cache_specs)
+    out = [
+        spec_for(tuple(_key_str(k) for k in path), leaf)
+        for path, leaf in flat
+    ]
+    return jax.tree_util.tree_unflatten(treedef, out)

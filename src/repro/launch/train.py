@@ -1,0 +1,158 @@
+"""End-to-end training driver.
+
+    PYTHONPATH=src python -m repro.launch.train --arch qwen3-1.7b --smoke \
+        --steps 200 --batch 8 --seq 256
+
+Wires together: streaming data pipeline (replayable), model, optimizer,
+sharded train step (on whatever mesh the host offers), checkpointing with
+async saves, the TrainingSupervisor restart loop, and straggler/heartbeat
+monitoring.  On this CPU container it trains the reduced configs
+(examples/train_end_to_end.py drives a ~100M model); on TPU the same driver
+takes the full configs + production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.checkpoint import Checkpointer
+from repro.configs import get_config
+from repro.data import ByteTokenizer, PackedBatchIterator, SyntheticCorpus
+from repro.launch.mesh import make_host_mesh
+from repro.launch.partition import (
+    batch_shardings,
+    make_rules,
+    opt_state_shardings,
+    param_shardings,
+)
+from repro.launch.steps import make_train_step
+from repro.models import build_model
+from repro.optim import build_optimizer, cosine_schedule
+from repro.runtime import HeartbeatMonitor, StragglerDetector, TrainingSupervisor
+from repro.sharding import use_sharding_rules
+
+
+def train(
+    arch: str = "qwen3-1.7b",
+    smoke: bool = True,
+    steps: int = 100,
+    batch: int = 8,
+    seq: int = 256,
+    lr: float = 3e-4,
+    grad_accum: int = 1,
+    ckpt_dir: str | None = None,
+    save_every: int = 50,
+    log_every: int = 10,
+    fail_at: dict | None = None,
+    cfg_overrides: dict | None = None,
+    params=None,
+):
+    cfg = get_config(arch, smoke=smoke)
+    if cfg_overrides:
+        cfg = cfg.with_(**cfg_overrides)
+    model = build_model(cfg)
+    mesh = make_host_mesh()
+    rules = make_rules(cfg, mesh, seq_len=seq, global_batch=batch)
+
+    tok = ByteTokenizer()
+    if cfg.vocab_size < tok.vocab_size:
+        raise ValueError("smoke config vocab too small for byte tokenizer")
+    data = PackedBatchIterator(SyntheticCorpus(), tok, batch, seq)
+
+    opt = build_optimizer(
+        cfg.optimizer, cosine_schedule(lr, min(20, steps // 10 + 1), steps)
+    )
+    with mesh, use_sharding_rules(rules, mesh):
+        if params is None:
+            params = model.init_params(jax.random.PRNGKey(0))
+        p_sh = param_shardings(model.logical_axes(), mesh, rules)
+        params = jax.device_put(params, p_sh)
+        opt_state = opt.init(params)
+        o_sh = opt_state_shardings(
+            jax.eval_shape(lambda: opt_state), jax.eval_shape(lambda: params),
+            p_sh,
+        )
+        step_fn = jax.jit(
+            make_train_step(model, opt, grad_accum=grad_accum),
+            in_shardings=(p_sh, o_sh, None),
+            out_shardings=(p_sh, o_sh, None),
+            donate_argnums=(0, 1),
+        )
+
+        hb = HeartbeatMonitor(list(range(mesh.devices.size)))
+        stragglers = StragglerDetector()
+        losses: list[float] = []
+        t_start = time.time()
+
+        def one_step(state, step):
+            params, opt_state = state["params"], state["opt"]
+            b = next(data)
+            t0 = time.time()
+            params, opt_state, metrics = step_fn(
+                params, opt_state,
+                {k: jnp.asarray(v) for k, v in b.items()},
+            )
+            dt = (time.time() - t0) * 1e3
+            for w in range(mesh.devices.size):
+                hb.beat(w)
+                stragglers.record(w, dt)
+            loss = float(metrics["loss"])
+            losses.append(loss)
+            if log_every and (step + 1) % log_every == 0:
+                print(f"step {step+1:5d}  loss {loss:.4f}  "
+                      f"gnorm {float(metrics['grad_norm']):.3f}  "
+                      f"{dt:.0f} ms/step")
+            return {"params": params, "opt": opt_state}
+
+        state = {"params": params, "opt": opt_state}
+        if ckpt_dir:
+            sup = TrainingSupervisor(Checkpointer(ckpt_dir),
+                                     save_every=save_every)
+            state, done = sup.run(
+                state, one_step, steps,
+                data_state_fn=data.state,
+                fail_at=fail_at,
+                on_restore=lambda extra: data.restore(
+                    extra.get("data", data.state())),
+            )
+        else:
+            for s in range(steps):
+                state = one_step(state, s)
+        wall = time.time() - t_start
+        return {
+            "losses": losses,
+            "params": state["params"],
+            "wall_s": wall,
+            "steps_per_s": steps / wall,
+            "dead_workers": hb.dead_workers(),
+            "stragglers": stragglers.stragglers(),
+        }
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="qwen3-1.7b")
+    ap.add_argument("--full", action="store_true",
+                    help="full (non-smoke) config — TPU scale")
+    ap.add_argument("--steps", type=int, default=100)
+    ap.add_argument("--batch", type=int, default=8)
+    ap.add_argument("--seq", type=int, default=256)
+    ap.add_argument("--lr", type=float, default=3e-4)
+    ap.add_argument("--grad-accum", type=int, default=1)
+    ap.add_argument("--ckpt-dir", default=None)
+    args = ap.parse_args()
+    out = train(
+        arch=args.arch, smoke=not args.full, steps=args.steps,
+        batch=args.batch, seq=args.seq, lr=args.lr,
+        grad_accum=args.grad_accum, ckpt_dir=args.ckpt_dir,
+    )
+    print(f"final loss {out['losses'][-1]:.4f}  "
+          f"({out['steps_per_s']:.2f} steps/s)")
+
+
+if __name__ == "__main__":
+    main()

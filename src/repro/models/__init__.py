@@ -1,0 +1,12 @@
+"""Pure-JAX model zoo for the assigned architecture pool."""
+
+from .config import (  # noqa: F401
+    DENSE,
+    ENCDEC,
+    HYBRID,
+    MOE,
+    SSM,
+    VLM,
+    ModelConfig,
+)
+from .model import Model, build_model, chunked_softmax_xent  # noqa: F401

@@ -1,0 +1,166 @@
+"""Model configuration for the assigned architecture pool."""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+
+import jax.numpy as jnp
+
+DENSE = "dense"
+MOE = "moe"
+SSM = "ssm"
+HYBRID = "hybrid"
+ENCDEC = "encdec"
+VLM = "vlm"
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    name: str
+    family: str                      # dense | moe | ssm | hybrid | encdec | vlm
+    num_layers: int
+    d_model: int
+    num_heads: int
+    num_kv_heads: int
+    d_ff: int
+    vocab_size: int
+    d_head: int = 0                  # 0 -> d_model // num_heads
+
+    # attention
+    qk_norm: bool = False
+    sliding_window: int | None = None
+    rope_theta: float = 1e4
+    attn_chunk: int = 1024           # online-softmax KV chunk (XLA path)
+    attn_impl: str = "xla"           # "xla" | "pallas"
+
+    # MoE
+    num_experts: int = 0
+    experts_per_token: int = 0
+    expert_sharding: str = "tp"      # "tp" (shard d_ff) | "ep" (shard experts)
+    moe_capacity_factor: float = 1.25
+
+    # SSM (Mamba-2 / SSD)
+    ssm_state: int = 0
+    ssm_expand: int = 2
+    ssm_head_dim: int = 64
+    ssm_conv_width: int = 4
+    ssm_chunk: int = 256             # SSD chunk length
+    ssm_groups: int = 1
+
+    # hybrid (zamba2-style): a shared full-attention block applied every
+    # ``attn_every`` backbone layers (weights shared across applications)
+    attn_every: int = 0
+
+    # encoder-decoder (whisper-style); frontend is a stub that accepts
+    # precomputed frame embeddings
+    encoder_layers: int = 0
+    max_source_positions: int = 1500
+
+    # VLM stub: precomputed patch embeddings prepended to the token sequence
+    num_patches: int = 0
+
+    #: embedding/lm_head tables padded up to a multiple of this so the vocab
+    #: dim shards across the model axis (whisper's 51865 etc.); pad logits
+    #: are masked to -inf in unembed/xent.
+    vocab_pad_multiple: int = 256
+
+    # numerics / scale
+    dtype: str = "bfloat16"
+    param_dtype: str = "bfloat16"
+    tie_embeddings: bool = False
+    remat: bool = True
+    scan_layers: bool = True
+    #: >0: two-level scan-over-layers ([groups, layers/group]) with an extra
+    #: checkpoint around each group — activation liveness drops from
+    #: O(L) layer carries to O(groups + L/groups), which lets the very deep
+    #: models train WITHOUT microbatch gradient accumulation (and therefore
+    #: without re-gathering FSDP params once per microbatch).
+    scan_remat_groups: int = 0
+
+    # optimizer selection (configs pick adafactor for the very large models
+    # so optimizer state fits the per-chip HBM budget at 256 chips)
+    optimizer: str = "adamw"         # "adamw" | "adafactor"
+
+    @property
+    def head_dim(self) -> int:
+        if self.d_head:
+            return self.d_head
+        return self.d_model // self.num_heads if self.num_heads else 0
+
+    @property
+    def padded_vocab(self) -> int:
+        m = self.vocab_pad_multiple
+        return -(-self.vocab_size // m) * m
+
+    @property
+    def d_inner(self) -> int:
+        return self.ssm_expand * self.d_model
+
+    @property
+    def ssm_heads(self) -> int:
+        return self.d_inner // self.ssm_head_dim
+
+    @property
+    def is_moe(self) -> bool:
+        return self.num_experts > 0
+
+    @property
+    def activation_dtype(self):
+        return jnp.dtype(self.dtype)
+
+    @property
+    def params_dtype(self):
+        return jnp.dtype(self.param_dtype)
+
+    def with_(self, **kw) -> "ModelConfig":
+        return replace(self, **kw)
+
+    # parameter count (embedding included once) — used for roofline 6*N*D
+    def param_count(self) -> int:
+        d, f, V, L = self.d_model, self.d_ff, self.vocab_size, self.num_layers
+        Hq, Hkv = self.num_heads, self.num_kv_heads
+        Dh = self.head_dim if Hq else 0
+        attn = d * Hq * Dh + 2 * d * Hkv * Dh + Hq * Dh * d
+        if self.qk_norm:
+            attn += 2 * Dh
+        mlp = 3 * d * f
+        norms = 2 * d
+        if self.family in (SSM, HYBRID):
+            di, ds, nh = self.d_inner, self.ssm_state, self.ssm_heads
+            g = self.ssm_groups
+            conv_dim = di + 2 * g * ds
+            ssm = (
+                d * (2 * di + 2 * g * ds + nh)   # in_proj
+                + conv_dim * self.ssm_conv_width  # conv1d
+                + 3 * nh                          # A_log, D, dt_bias
+                + di                              # gated norm
+                + di * d                          # out_proj
+                + d                               # pre-norm
+            )
+            if self.family == SSM:
+                core = L * ssm
+            else:
+                n_apps = max(1, L // max(self.attn_every, 1))
+                core = L * ssm + (attn + mlp + norms)  # one shared attn block
+                _ = n_apps  # applications reuse the same weights
+        elif self.is_moe:
+            moe = d * self.num_experts + self.num_experts * 3 * d * f
+            core = L * (attn + moe + norms)
+        else:
+            core = L * (attn + mlp + norms)
+        emb = V * d
+        head = 0 if self.tie_embeddings else V * d
+        if self.family == ENCDEC:
+            enc = self.encoder_layers * (attn + mlp + norms)
+            cross = L * (attn + d)  # cross-attention + its norm
+            core = L * (attn + mlp + norms) + enc + cross
+        return core + emb + head + d  # final norm
+
+    def active_param_count(self) -> int:
+        """Active params per token (MoE: top-k of E experts)."""
+        if not self.is_moe:
+            return self.param_count()
+        d, f = self.d_model, self.d_ff
+        full = self.param_count()
+        all_experts = self.num_layers * self.num_experts * 3 * d * f
+        active = self.num_layers * self.experts_per_token * 3 * d * f
+        return full - all_experts + active

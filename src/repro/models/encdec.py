@@ -1,0 +1,215 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) transformer backbone.
+
+The conv audio frontend is a STUB per the assignment: ``input_specs()``
+provides precomputed frame embeddings [B, T_frames, d_model] (what the
+stride-2 conv stem would produce).  Recorded simplifications (DESIGN.md):
+RoPE replaces Whisper's learned absolute positions; the MLPs are SwiGLU
+(shared layer code) instead of GELU."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import (
+    INVALID_POS,
+    attention,
+    attn_out,
+    attn_qkv,
+    decode_attention_block,
+    glu_mlp,
+    rms_norm,
+    rope,
+    self_attention_block,
+)
+from .params import ParamSpec
+from .transformer import attn_schema, embed, mlp_schema, stack_schema, unembed
+from ..sharding import shard as _shard
+
+
+def schema(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    enc_layer = {
+        "attn_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+        "attn": attn_schema(cfg, dt),
+        "mlp_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+        "mlp": mlp_schema(cfg, dt),
+    }
+    dec_layer = {
+        "attn_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+        "attn": attn_schema(cfg, dt),
+        "cross_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+        "cross": attn_schema(cfg, dt),
+        "mlp_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+        "mlp": mlp_schema(cfg, dt),
+    }
+    return {
+        "embedding": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                               ("vocab", "fsdp"), "normal", dt),
+        "frame_proj": ParamSpec((cfg.d_model, cfg.d_model),
+                                ("fsdp", None), "scaled", dt),
+        "encoder": stack_schema(enc_layer, cfg.encoder_layers),
+        "enc_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+        "decoder": stack_schema(dec_layer, cfg.num_layers),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+        "lm_head": ParamSpec((cfg.d_model, cfg.padded_vocab),
+                             ("fsdp", "vocab"), "scaled", dt),
+    }
+
+
+def _cross_attention(cfg, p, x, enc_k, enc_v, enc_positions):
+    """q from decoder stream; k/v precomputed from the encoder output."""
+    B, S, _ = x.shape
+    q = jnp.einsum("bsd,dhk->bshk", x, p["wq"])
+    q_pos = jnp.zeros((B, S), jnp.int32)  # no rope across modalities
+    o = attention(q, enc_k, enc_v, q_pos, enc_positions,
+                  causal=False, chunk=cfg.attn_chunk)
+    return attn_out(cfg, p, o)
+
+
+def _cross_kv(cfg, p, enc_out):
+    k = jnp.einsum("bsd,dhk->bshk", enc_out, p["wk"])
+    v = jnp.einsum("bsd,dhk->bshk", enc_out, p["wv"])
+    return k, v
+
+
+def encode(cfg: ModelConfig, params, frames):
+    """frames: [B, T, d] stub embeddings -> encoder output [B, T, d]."""
+    x = jnp.einsum("btd,de->bte", frames.astype(cfg.activation_dtype),
+                   params["frame_proj"])
+    x = _shard(x, ("batch", None, None))
+    B, T = x.shape[:2]
+    positions = jnp.broadcast_to(jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def body(p, x):
+        h, _ = self_attention_block(
+            cfg, p["attn"], rms_norm(x, p["attn_norm"]), positions,
+            causal=False,
+        )
+        x = x + h
+        return x + glu_mlp(p["mlp"], rms_norm(x, p["mlp_norm"]))
+
+    if cfg.remat:
+        body = jax.checkpoint(body)
+    x, _ = lax.scan(lambda c, p: (body(p, c), None), x, params["encoder"])
+    return rms_norm(x, params["enc_norm"])
+
+
+def _decoder_layer(cfg, p, x, positions, enc_k, enc_v, enc_positions):
+    h, kv = self_attention_block(
+        cfg, p["attn"], rms_norm(x, p["attn_norm"]), positions
+    )
+    x = x + h
+    x = x + _cross_attention(
+        cfg, p["cross"], rms_norm(x, p["cross_norm"]), enc_k, enc_v,
+        enc_positions,
+    )
+    return x + glu_mlp(p["mlp"], rms_norm(x, p["mlp_norm"])), kv
+
+
+def forward(cfg: ModelConfig, params, tokens, frames, *,
+            collect_kv: bool = False):
+    enc_out = encode(cfg, params, frames)
+    B, T = enc_out.shape[:2]
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+    x = embed(cfg, params, tokens)
+    S = tokens.shape[1]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+
+    body = partial(_decoder_layer, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, lp):
+        # cross k/v are recomputed per layer from enc_out (cheap at tiny d)
+        ck, cv = _cross_kv(cfg, lp["cross"], enc_out)
+        x, kv = body(lp, x, positions, ck, cv, enc_positions)
+        return x, kv if collect_kv else None
+
+    x, kvs = lax.scan(scan_fn, x, params["decoder"])
+    x = rms_norm(x, params["final_norm"])
+    return x, kvs, enc_out
+
+
+def init_cache_schema(cfg: ModelConfig, batch: int, max_len: int,
+                      enc_len: int | None = None) -> dict:
+    T = enc_len or cfg.max_source_positions
+    L, Hkv, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.activation_dtype
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, max_len, Hkv, Dh), dt),
+        "v": jax.ShapeDtypeStruct((L, batch, max_len, Hkv, Dh), dt),
+        "pos": jax.ShapeDtypeStruct((batch, max_len), jnp.int32),
+        "cross_k": jax.ShapeDtypeStruct((L, batch, T, Hkv, Dh), dt),
+        "cross_v": jax.ShapeDtypeStruct((L, batch, T, Hkv, Dh), dt),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int,
+               enc_len: int | None = None) -> dict:
+    sh = init_cache_schema(cfg, batch, max_len, enc_len)
+    out = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sh)
+    out["pos"] = jnp.full(sh["pos"].shape, INVALID_POS, jnp.int32)
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    x = embed(cfg, params, token[:, None])
+    B = token.shape[0]
+    T = cache["cross_k"].shape[2]
+    enc_positions = jnp.broadcast_to(
+        jnp.arange(T, dtype=jnp.int32)[None], (B, T))
+
+    def scan_fn(carry, xs):
+        x, cpos = carry
+        lp, ck, cv, xk, xv = xs
+        h, nk, nv, npos = decode_attention_block(
+            cfg, lp["attn"], rms_norm(x, lp["attn_norm"]), pos, ck, cv, cpos
+        )
+        x = x + h
+        x = x + _cross_attention(
+            cfg, lp["cross"], rms_norm(x, lp["cross_norm"]), xk, xv,
+            enc_positions,
+        )
+        x = x + glu_mlp(lp["mlp"], rms_norm(x, lp["mlp_norm"]))
+        return (x, npos), (nk, nv)
+
+    (x, npos), (nk, nv) = lax.scan(
+        scan_fn, (x, cache["pos"]),
+        (params["decoder"], cache["k"], cache["v"], cache["cross_k"],
+         cache["cross_v"]),
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(cfg, params, x)[:, 0]
+    new_cache = dict(cache)
+    new_cache.update(k=nk, v=nv, pos=npos)
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, frames, max_len: int):
+    x, kvs, enc_out = forward(cfg, params, tokens, frames, collect_kv=True)
+    k, v = kvs
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    pad = max_len - S
+    cache = {
+        "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+        "pos": jnp.pad(positions, ((0, 0), (0, pad)),
+                       constant_values=INVALID_POS),
+    }
+    # per-layer cross k/v from the encoder output
+    cks, cvs = [], []
+    L = cfg.num_layers
+    cross = params["decoder"]["cross"]
+    ck = jax.vmap(lambda w: jnp.einsum("bsd,dhk->bshk", enc_out, w))(
+        cross["wk"])
+    cv = jax.vmap(lambda w: jnp.einsum("bsd,dhk->bshk", enc_out, w))(
+        cross["wv"])
+    cache["cross_k"], cache["cross_v"] = ck, cv
+    logits = unembed(cfg, params, x[:, -1:])[:, 0]
+    return logits, cache

@@ -1,0 +1,109 @@
+"""Pure-SSM language model (mamba2-130m family): embedding + L Mamba-2
+blocks (scan-over-layers) + norm + LM head.  Attention-free: decode state is
+O(1) in sequence length, so the long_500k cell runs at constant memory."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import rms_norm
+from .params import ParamSpec
+from .ssm import mamba_block, mamba_decode_block, ssm_layer_schema
+from .transformer import embed, stack_schema, unembed
+
+
+def schema(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    s = {
+        "embedding": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                               ("vocab", "fsdp"), "normal", dt),
+        "layers": stack_schema(ssm_layer_schema(cfg), cfg.num_layers),
+        "final_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                 ("fsdp", "vocab"), "scaled", dt)
+    return s
+
+
+def _layer_fwd(cfg: ModelConfig, p, x, initial_state=None):
+    h, (conv_tail, state) = mamba_block(
+        cfg, p, rms_norm(x, p["norm"]), initial_state=initial_state
+    )
+    return x + h, conv_tail, state
+
+
+def forward(cfg: ModelConfig, params, tokens, *, collect_state: bool = False):
+    x = embed(cfg, params, tokens)
+    body = partial(_layer_fwd, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(x, lp):
+        x, conv_tail, state = body(lp, x)
+        return x, (conv_tail, state) if collect_state else None
+
+    x, tails = lax.scan(scan_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    return x, tails
+
+
+def init_cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    del max_len  # state size is constant in sequence length
+    L = cfg.num_layers
+    w = cfg.ssm_conv_width - 1
+    bc_dim = 2 * cfg.ssm_groups * cfg.ssm_state
+    dt = cfg.activation_dtype
+    return {
+        "conv_x": jax.ShapeDtypeStruct((L, batch, w, cfg.d_inner), dt),
+        "conv_bc": jax.ShapeDtypeStruct((L, batch, w, bc_dim), dt),
+        "state": jax.ShapeDtypeStruct(
+            (L, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        ),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    sh = init_cache_schema(cfg, batch, max_len)
+    return jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sh)
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    del pos  # recurrent state is position-free
+    x = embed(cfg, params, token[:, None])[:, 0]
+
+    def scan_fn(x, xs):
+        lp, cx, cbc, state = xs
+        h, (ncx, ncbc), new_state = mamba_decode_block(
+            cfg, lp, rms_norm(x, lp["norm"]), (cx, cbc), state
+        )
+        return x + h, (ncx, ncbc, new_state)
+
+    x, (ncx, ncbc, nstate) = lax.scan(
+        scan_fn, x,
+        (params["layers"], cache["conv_x"], cache["conv_bc"], cache["state"]),
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(cfg, params, x[:, None])[:, 0]
+    return logits, {"conv_x": ncx.astype(cache["conv_x"].dtype),
+                    "conv_bc": ncbc.astype(cache["conv_bc"].dtype),
+                    "state": nstate}
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int):
+    x, ((cx, cbc), states) = forward(cfg, params, tokens, collect_state=True)
+    W = cfg.ssm_conv_width - 1
+    pad = W - cx.shape[2]
+    if pad > 0:
+        cx = jnp.pad(cx, ((0, 0), (0, 0), (pad, 0), (0, 0)))
+        cbc = jnp.pad(cbc, ((0, 0), (0, 0), (pad, 0), (0, 0)))
+    logits = unembed(cfg, params, x[:, -1:])[:, 0]
+    cache = {"conv_x": cx.astype(cfg.activation_dtype),
+             "conv_bc": cbc.astype(cfg.activation_dtype),
+             "state": states}
+    return logits, cache

@@ -1,0 +1,205 @@
+"""Model facade: one API over all assigned architecture families.
+
+* ``Model.abstract_params()``     — ShapeDtypeStruct tree (dry-run, no alloc)
+* ``Model.init_params(key)``      — random init (smoke tests / training)
+* ``Model.logical_axes()``        — logical sharding axes per parameter
+* ``Model.loss(params, batch)``   — next-token xent (+ MoE aux)
+* ``Model.prefill / decode_step`` — serving entry points with KV/SSM caches
+* ``Model.input_specs(shape)``    — abstract batch for a named input shape
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from . import encdec, mamba_lm, transformer, zamba
+from .config import DENSE, ENCDEC, HYBRID, MOE, SSM, VLM, ModelConfig
+from .params import abstract, initialize, logical_axes
+from ..sharding import shard as _shard
+
+_FAMILY_MODULES = {
+    DENSE: transformer,
+    MOE: transformer,
+    VLM: transformer,
+    SSM: mamba_lm,
+    HYBRID: zamba,
+    ENCDEC: encdec,
+}
+
+
+def chunked_softmax_xent(h, w, labels, *, chunk: int = 512,
+                         label_mask=None, valid_vocab: int | None = None):
+    """Cross entropy over huge vocabularies without materializing the full
+    [B, S, V] fp32 logits: scan over sequence chunks, rematerializing the
+    chunk logits in the backward pass.  ``valid_vocab`` masks vocab-padding
+    logits out of the logsumexp."""
+    B, S, d = h.shape
+    V = w.shape[-1]
+    vocab_pad = (
+        (jnp.arange(V) >= valid_vocab)
+        if valid_vocab is not None and valid_vocab < V
+        else None
+    )
+    chunk = min(chunk, S)
+    while S % chunk:  # largest divisor of S <= requested chunk
+        chunk -= 1
+    nc = S // chunk
+    hc = h.reshape(B, nc, chunk, d)
+    lc = labels.reshape(B, nc, chunk)
+    mc = (
+        jnp.ones((B, nc, chunk), jnp.float32)
+        if label_mask is None
+        else label_mask.reshape(B, nc, chunk).astype(jnp.float32)
+    )
+
+    @jax.checkpoint
+    def step(carry, xs):
+        h_i, l_i, m_i = xs
+        # astype (not preferred_element_type): keeps the h cotangent bf16
+        logits = jnp.einsum("bsd,dv->bsv", h_i.astype(jnp.float32), w)
+        logits = _shard(logits, ("batch", None, "vocab"))
+        if vocab_pad is not None:
+            logits = jnp.where(vocab_pad, -1e30, logits)
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        gold = jnp.take_along_axis(
+            logits, l_i[..., None].astype(jnp.int32), axis=-1
+        )[..., 0]
+        nll = (lse - gold) * m_i
+        return (carry[0] + nll.sum(), carry[1] + m_i.sum()), None
+
+    (tot, cnt), _ = lax.scan(
+        step,
+        (jnp.float32(0.0), jnp.float32(0.0)),
+        (jnp.moveaxis(hc, 1, 0), jnp.moveaxis(lc, 1, 0), jnp.moveaxis(mc, 1, 0)),
+    )
+    return tot / jnp.maximum(cnt, 1.0)
+
+
+@dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+
+    # -- params ---------------------------------------------------------------
+    def schema(self):
+        return _FAMILY_MODULES[self.cfg.family].schema(self.cfg)
+
+    def abstract_params(self):
+        return abstract(self.schema())
+
+    def init_params(self, key):
+        return initialize(self.schema(), key)
+
+    def logical_axes(self):
+        return logical_axes(self.schema())
+
+    # -- training -------------------------------------------------------------
+    def hidden(self, params, batch):
+        cfg = self.cfg
+        if cfg.family == ENCDEC:
+            h, _, _ = encdec.forward(cfg, params, batch["tokens"],
+                                     batch["frames"])
+            return h, 0.0
+        if cfg.family == VLM:
+            h, _, aux = transformer.forward(
+                cfg, params, batch["tokens"], patches=batch["patches"]
+            )
+            return h, aux
+        mod = _FAMILY_MODULES[cfg.family]
+        out = mod.forward(cfg, params, batch["tokens"])
+        if cfg.family in (SSM, HYBRID):
+            return out[0], 0.0
+        return out[0], out[2]
+
+    def loss(self, params, batch):
+        cfg = self.cfg
+        h, aux = self.hidden(params, batch)
+        labels = batch["labels"]
+        mask = (labels >= 0).astype(jnp.float32)
+        labels = jnp.maximum(labels, 0)
+        if cfg.family == VLM:
+            # hidden includes patch positions at the front; loss on text only
+            h = h[:, cfg.num_patches:]
+        w = (
+            params["embedding"].T
+            if cfg.tie_embeddings
+            else params["lm_head"]
+        )
+        xent = chunked_softmax_xent(
+            h, w, labels, label_mask=mask, valid_vocab=cfg.vocab_size
+        )
+        return xent + 0.01 * aux
+
+    def logits(self, params, batch):
+        h, _ = self.hidden(params, batch)
+        return transformer.unembed(self.cfg, params, h)
+
+    # -- serving ----------------------------------------------------------------
+    def init_cache_schema(self, batch: int, max_len: int, **kw):
+        return _FAMILY_MODULES[self.cfg.family].init_cache_schema(
+            self.cfg, batch, max_len, **kw
+        )
+
+    def init_cache(self, batch: int, max_len: int, **kw):
+        return _FAMILY_MODULES[self.cfg.family].init_cache(
+            self.cfg, batch, max_len, **kw
+        )
+
+    def prefill(self, params, batch, max_len: int):
+        cfg = self.cfg
+        if cfg.family == ENCDEC:
+            return encdec.prefill(cfg, params, batch["tokens"],
+                                  batch["frames"], max_len)
+        if cfg.family == VLM:
+            return transformer.prefill(cfg, params, batch["tokens"], max_len,
+                                       patches=batch["patches"])
+        return _FAMILY_MODULES[cfg.family].prefill(
+            cfg, params, batch["tokens"], max_len
+        )
+
+    def decode_step(self, params, cache, token, pos):
+        return _FAMILY_MODULES[self.cfg.family].decode_step(
+            self.cfg, params, cache, token, pos
+        )
+
+    # -- abstract inputs (dry-run) -------------------------------------------------
+    def input_specs(self, *, seq_len: int, batch: int, mode: str):
+        """Abstract batch (ShapeDtypeStruct) for train / prefill / decode.
+
+        [vlm]/[audio] frontends are stubs: specs carry precomputed patch /
+        frame embeddings, per the assignment."""
+        cfg = self.cfg
+        i32 = jnp.int32
+        tok = lambda s: jax.ShapeDtypeStruct((batch, s), i32)
+        if mode == "train":
+            specs = {"tokens": tok(seq_len), "labels": tok(seq_len)}
+            if cfg.family == VLM:
+                text = seq_len - cfg.num_patches
+                specs = {
+                    "tokens": tok(text), "labels": tok(text),
+                    "patches": jax.ShapeDtypeStruct(
+                        (batch, cfg.num_patches, cfg.d_model),
+                        cfg.activation_dtype),
+                }
+            if cfg.family == ENCDEC:
+                specs["frames"] = jax.ShapeDtypeStruct(
+                    (batch, min(seq_len, cfg.max_source_positions),
+                     cfg.d_model), cfg.activation_dtype)
+            return specs
+        if mode == "prefill":
+            return self.input_specs(seq_len=seq_len, batch=batch, mode="train")
+        if mode == "decode":
+            specs = {
+                "cache": self.init_cache_schema(batch, seq_len),
+                "token": jax.ShapeDtypeStruct((batch,), i32),
+                "pos": jax.ShapeDtypeStruct((batch,), i32),
+            }
+            return specs
+        raise ValueError(f"unknown mode {mode!r}")
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    return Model(cfg)

@@ -1,0 +1,65 @@
+"""Parameter schema: one definition drives abstract shapes (dry-run),
+random initialization (smoke tests / training) and logical sharding axes
+(launch/partition.py maps logical axes -> mesh axes)."""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+
+import jax
+import jax.numpy as jnp
+
+# Logical axis names (mapped to mesh axes by launch/partition.py):
+#   "embed"   — d_model dimension
+#   "heads"   — attention head dimension (TP)
+#   "kv_heads"— kv head dimension
+#   "mlp"     — FFN hidden dimension (TP)
+#   "vocab"   — vocabulary dimension
+#   "expert"  — MoE expert dimension (EP)
+#   "layers"  — stacked-layer leading axis (never sharded)
+#   None      — replicated
+
+
+@dataclass(frozen=True)
+class ParamSpec:
+    shape: tuple[int, ...]
+    axes: tuple[str | None, ...]
+    init: str = "normal"       # normal | zeros | ones | scaled(fan-in)
+    dtype: str = "bfloat16"
+
+    def __post_init__(self):
+        assert len(self.shape) == len(self.axes), (self.shape, self.axes)
+
+
+def abstract(tree):
+    return jax.tree.map(
+        lambda ps: jax.ShapeDtypeStruct(ps.shape, jnp.dtype(ps.dtype)), tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def logical_axes(tree):
+    return jax.tree.map(
+        lambda ps: ps.axes, tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+
+
+def initialize(tree, key):
+    leaves, treedef = jax.tree.flatten(
+        tree, is_leaf=lambda x: isinstance(x, ParamSpec)
+    )
+    keys = jax.random.split(key, len(leaves))
+    out = []
+    for ps, k in zip(leaves, keys):
+        dt = jnp.dtype(ps.dtype)
+        if ps.init == "zeros":
+            out.append(jnp.zeros(ps.shape, dt))
+        elif ps.init == "ones":
+            out.append(jnp.ones(ps.shape, dt))
+        elif ps.init == "scaled":
+            fan_in = ps.shape[-2] if len(ps.shape) >= 2 else ps.shape[-1]
+            std = 1.0 / math.sqrt(max(fan_in, 1))
+            out.append((jax.random.normal(k, ps.shape, jnp.float32) * std).astype(dt))
+        else:
+            out.append((jax.random.normal(k, ps.shape, jnp.float32) * 0.02).astype(dt))
+    return jax.tree.unflatten(treedef, out)

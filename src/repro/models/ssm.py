@@ -1,0 +1,246 @@
+"""Mamba-2 (SSD — state-space duality, arXiv:2405.21060) in pure JAX.
+
+The chunked SSD algorithm: within a chunk of length Q the recurrence is
+evaluated as a masked quadratic form (duality with attention); across chunks
+a short ``lax.scan`` carries the [H, N, P] state.  Decode is the O(1)
+recurrent update.  The Pallas kernel (kernels/ssd_scan) implements the same
+chunk math with explicit VMEM tiling and is validated against this module.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import rms_norm
+from .params import ParamSpec
+from ..sharding import shard as _shard
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+def ssm_layer_schema(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    d, di, ds = cfg.d_model, cfg.d_inner, cfg.ssm_state
+    nh, g, w = cfg.ssm_heads, cfg.ssm_groups, cfg.ssm_conv_width
+    bc_dim = 2 * g * ds
+    # separate z / x / BC / dt projections: the fused [d, 2*di+2*g*ds+nh]
+    # projection would make every split a slice across a model-sharded dim
+    # (shard-boundary crossing -> collective-permute storms); split along
+    # the natural boundaries instead: z/x shard on "mlp", the small BC and
+    # dt replicate.
+    return {
+        "norm": ParamSpec((d,), (None,), "ones", dt),
+        "in_proj_z": ParamSpec((d, di), ("fsdp", "mlp"), "scaled", dt),
+        "in_proj_x": ParamSpec((d, di), ("fsdp", "mlp"), "scaled", dt),
+        "in_proj_bc": ParamSpec((d, bc_dim), ("fsdp", None), "scaled", dt),
+        "in_proj_dt": ParamSpec((d, nh), ("fsdp", None), "scaled", dt),
+        "conv_w_x": ParamSpec((w, di), (None, "mlp"), "scaled", dt),
+        "conv_b_x": ParamSpec((di,), ("mlp",), "zeros", dt),
+        "conv_w_bc": ParamSpec((w, bc_dim), (None, None), "scaled", dt),
+        "conv_b_bc": ParamSpec((bc_dim,), (None,), "zeros", dt),
+        "A_log": ParamSpec((nh,), ("heads",), "zeros", "float32"),
+        "D": ParamSpec((nh,), ("heads",), "ones", "float32"),
+        "dt_bias": ParamSpec((nh,), ("heads",), "zeros", "float32"),
+        "gate_norm": ParamSpec((di,), ("mlp",), "ones", dt),
+        "out_proj": ParamSpec((di, d), ("mlp", "fsdp"), "scaled", dt),
+    }
+
+
+# ---------------------------------------------------------------------------
+# SSD core
+# ---------------------------------------------------------------------------
+
+
+def _segsum(a):
+    """a: [..., Q, H] within-chunk log-decays -> [..., Q, Q, H] lower-
+    triangular cumulative sums L[i, j] = sum_{j < t <= i} a_t (i >= j).
+
+    Note L[i, i] = 0 (the diagonal contributes x_i itself) and entries above
+    the diagonal are -inf (causal)."""
+    Q = a.shape[-2]
+    cum = jnp.cumsum(a, axis=-2)
+    seg = cum[..., :, None, :] - cum[..., None, :, :]
+    i = jnp.arange(Q)[:, None]
+    j = jnp.arange(Q)[None, :]
+    mask = (i >= j)[..., None]
+    return jnp.where(mask, seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, initial_state=None):
+    """Chunked SSD scan.
+
+    x: [B, S, H, P] head inputs; dt: [B, S, H] (softplus-ed step sizes);
+    A: [H] (negative); B, C: [B, S, G, N] (G groups broadcast over heads).
+    Returns (y [B, S, H, P], final_state [B, H, N, P]).
+    """
+    Bb, S, H, P = x.shape
+    G, N = B.shape[2], B.shape[3]
+    rep = H // G
+    Q = min(chunk, S)
+    assert S % Q == 0, f"seq {S} not divisible by chunk {Q}"
+    nc = S // Q
+
+    f32 = jnp.float32
+    hg = H // G  # heads per group
+    a = (dt * A[None, None, :]).astype(f32)                  # [B,S,H] (<= 0)
+
+    # one chunk at a time (sequential scan carrying the [B,G,hg,N,P] state):
+    # the vectorized-over-chunks form materializes [B,nc,Q,Q,H] decay/score
+    # tensors — gigabytes at prefill_32k — whereas per-chunk the working set
+    # is [B,Q,Q,H].  B/C stay in their [.., G, N] group form (no head-repeat
+    # materialization); the chunk step is checkpointed so the backward
+    # recomputes its intermediates (same trade as flash attention).
+    xs = (
+        jnp.moveaxis(x.reshape(Bb, nc, Q, G, hg, P), 1, 0),
+        jnp.moveaxis(dt.astype(f32).reshape(Bb, nc, Q, G, hg), 1, 0),
+        jnp.moveaxis(a.reshape(Bb, nc, Q, G, hg), 1, 0),
+        jnp.moveaxis(B.astype(f32).reshape(Bb, nc, Q, G, N), 1, 0),
+        jnp.moveaxis(C.astype(f32).reshape(Bb, nc, Q, G, N), 1, 0),
+    )
+    s0 = (
+        jnp.zeros((Bb, G, hg, N, P), f32)
+        if initial_state is None
+        else initial_state.reshape(Bb, G, hg, N, P).astype(f32)
+    )
+
+    def step(h, xs_i):
+        xc, dtc, ac, Bc, Cc = xs_i
+        # xc [B,Q,G,hg,P]; dtc/ac [B,Q,G,hg]; Bc/Cc [B,Q,G,N]
+        xdt = xc.astype(f32) * dtc[..., None]
+        cum = jnp.cumsum(ac, axis=1)                         # [B,Q,G,hg]
+        total = cum[:, -1]                                   # [B,G,hg]
+        seg = cum[:, :, None] - cum[:, None]                 # [B,Q,Q,G,hg]
+        qi = jnp.arange(seg.shape[1])
+        causal = (qi[:, None] >= qi[None, :])[None, :, :, None, None]
+        L = jnp.exp(jnp.where(causal, seg, -jnp.inf))
+        CB = jnp.einsum("bqgn,bkgn->bqkg", Cc, Bc)           # [B,Q,Q,G]
+        y_intra = jnp.einsum(
+            "bqkg,bqkgh,bkghp->bqghp", CB, L, xdt
+        )
+        y_inter = jnp.einsum(
+            "bqgn,bghnp,bqgh->bqghp", Cc, h, jnp.exp(cum)
+        )
+        decay_to_end = jnp.exp(total[:, None] - cum)         # [B,Q,G,hg]
+        st = jnp.einsum("bqgh,bqgn,bqghp->bghnp", decay_to_end, Bc, xdt)
+        h_new = h * jnp.exp(total)[..., None, None] + st
+        return h_new, (y_intra + y_inter).astype(x.dtype)
+
+    final, ys = lax.scan(jax.checkpoint(step), s0, xs)
+    y = jnp.moveaxis(ys, 0, 1).reshape(Bb, S, H, P)
+    return y, final.reshape(Bb, H, N, P)
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """O(1) decode update.  state: [B,H,N,P]; x_t: [B,H,P]; dt_t: [B,H];
+    B_t, C_t: [B,G,N].  Returns (y [B,H,P], new_state)."""
+    H = x_t.shape[1]
+    G = B_t.shape[1]
+    rep = H // G
+    f32 = jnp.float32
+    Bh = jnp.repeat(B_t, rep, axis=1).astype(f32)            # [B,H,N]
+    Ch = jnp.repeat(C_t, rep, axis=1).astype(f32)
+    da = jnp.exp((dt_t * A[None, :]).astype(f32))            # [B,H]
+    upd = jnp.einsum("bhn,bhp->bhnp", Bh, (x_t * dt_t[..., None]).astype(f32))
+    new_state = state * da[..., None, None] + upd
+    y = jnp.einsum("bhn,bhnp->bhp", Ch, new_state)
+    return y.astype(x_t.dtype), new_state
+
+
+# ---------------------------------------------------------------------------
+# conv1d (causal depthwise)
+# ---------------------------------------------------------------------------
+
+
+def causal_conv1d(x, w, b):
+    """x: [B, S, C]; w: [W, C] depthwise; left-padded causal conv."""
+    W = w.shape[0]
+    xp = jnp.pad(x, ((0, 0), (W - 1, 0), (0, 0)))
+    out = lax.conv_general_dilated(
+        xp.astype(jnp.float32),
+        w[:, None, :].astype(jnp.float32),     # [W, 1, C] HIO
+        window_strides=(1,),
+        padding="VALID",
+        dimension_numbers=("NHC", "HIO", "NHC"),
+        feature_group_count=w.shape[1],
+    )
+    return (out + b).astype(x.dtype)
+
+
+def conv1d_step(conv_cache, x_t, w, b):
+    """conv_cache: [B, W-1, C]; x_t: [B, C].  Returns (y [B, C], new_cache)."""
+    W = w.shape[0]
+    full = jnp.concatenate([conv_cache, x_t[:, None]], axis=1)  # [B, W, C]
+    y = jnp.einsum("bwc,wc->bc", full.astype(jnp.float32),
+                   w.astype(jnp.float32)) + b
+    return y.astype(x_t.dtype), full[:, 1:]
+
+
+# ---------------------------------------------------------------------------
+# the Mamba-2 block
+# ---------------------------------------------------------------------------
+
+
+def mamba_block(cfg: ModelConfig, p, x, *, initial_state=None):
+    """Full-sequence Mamba-2 block.  x: [B, S, d] (pre-normed by caller).
+    Returns (y, ((conv_tail_x, conv_tail_bc) [B, W-1, .], final_state))."""
+    Bb, S, _ = x.shape
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    z = _shard(jnp.einsum("bsd,dp->bsp", x, p["in_proj_z"]),
+               ("batch", None, "mlp"))
+    xi = _shard(jnp.einsum("bsd,dp->bsp", x, p["in_proj_x"]),
+                ("batch", None, "mlp"))
+    bc = jnp.einsum("bsd,dp->bsp", x, p["in_proj_bc"])
+    dt = jnp.einsum("bsd,dp->bsp", x, p["in_proj_dt"])
+    t0 = max(S - (cfg.ssm_conv_width - 1), 0)
+    conv_tail = (xi[:, t0:], bc[:, t0:])
+    xi = jax.nn.silu(causal_conv1d(xi, p["conv_w_x"], p["conv_b_x"]))
+    bc = jax.nn.silu(causal_conv1d(bc, p["conv_w_bc"], p["conv_b_bc"]))
+    x_ssm = xi.reshape(Bb, S, nh, hd)
+    Bmat = bc[..., : g * ds].reshape(Bb, S, g, ds)
+    Cmat = bc[..., g * ds :].reshape(Bb, S, g, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, final_state = ssd_chunked(
+        x_ssm, dt, A, Bmat, Cmat, chunk=cfg.ssm_chunk,
+        initial_state=initial_state,
+    )
+    y = y + p["D"][None, None, :, None].astype(y.dtype) * x_ssm
+    y = y.reshape(Bb, S, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    out = jnp.einsum("bsd,dp->bsp", y, p["out_proj"])
+    return _shard(out, ("batch", None, None)), (conv_tail, final_state)
+
+
+def mamba_decode_block(cfg: ModelConfig, p, x_t, conv_cache, state):
+    """Single-token decode.  x_t: [B, d]; conv_cache: (x [B,W-1,di],
+    bc [B,W-1,2*g*ds]); state: [B, H, N, P]."""
+    di, ds, g, nh = cfg.d_inner, cfg.ssm_state, cfg.ssm_groups, cfg.ssm_heads
+    hd = cfg.ssm_head_dim
+    conv_x, conv_bc = conv_cache
+    z = jnp.einsum("bd,dp->bp", x_t, p["in_proj_z"])
+    xi = jnp.einsum("bd,dp->bp", x_t, p["in_proj_x"])
+    bc = jnp.einsum("bd,dp->bp", x_t, p["in_proj_bc"])
+    dt = jnp.einsum("bd,dp->bp", x_t, p["in_proj_dt"])
+    xi, new_conv_x = conv1d_step(conv_x, xi, p["conv_w_x"], p["conv_b_x"])
+    bc, new_conv_bc = conv1d_step(conv_bc, bc, p["conv_w_bc"], p["conv_b_bc"])
+    xi = jax.nn.silu(xi)
+    bc = jax.nn.silu(bc)
+    x_ssm = xi.reshape(-1, nh, hd)
+    Bmat = bc[..., : g * ds].reshape(-1, g, ds)
+    Cmat = bc[..., g * ds :].reshape(-1, g, ds)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])
+    A = -jnp.exp(p["A_log"])
+    y, new_state = ssd_step(state, x_ssm, dt, A, Bmat, Cmat)
+    y = y + p["D"][None, :, None].astype(y.dtype) * x_ssm
+    y = y.reshape(-1, di)
+    y = rms_norm(y * jax.nn.silu(z), p["gate_norm"])
+    return (jnp.einsum("bd,dp->bp", y, p["out_proj"]),
+            (new_conv_x, new_conv_bc), new_state)

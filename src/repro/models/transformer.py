@@ -1,0 +1,321 @@
+"""Decoder-only transformer stack (dense / MoE / VLM-stub), scan-over-layers.
+
+Layers are stacked along a leading "layers" axis and executed with
+``lax.scan`` so the HLO stays one while-loop regardless of depth (126-layer
+llama3-405b compiles as fast as the 4-layer whisper).  Remat wraps the layer
+body; the KV cache is carried through scan xs/ys as stacked arrays.
+"""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import (
+    INVALID_POS,
+    attention,
+    attn_out,
+    attn_qkv,
+    decode_attention_block,
+    glu_mlp,
+    moe_block,
+    rms_norm,
+    self_attention_block,
+)
+from .params import ParamSpec
+from ..sharding import shard as _shard
+
+
+# ---------------------------------------------------------------------------
+# schema
+# ---------------------------------------------------------------------------
+
+
+def attn_schema(cfg: ModelConfig, dt: str) -> dict:
+    d, Hq, Hkv, Dh = cfg.d_model, cfg.num_heads, cfg.num_kv_heads, cfg.head_dim
+    p = {
+        "wq": ParamSpec((d, Hq, Dh), ("fsdp", "heads", None), "scaled", dt),
+        "wk": ParamSpec((d, Hkv, Dh), ("fsdp", "kv_heads", None), "scaled", dt),
+        "wv": ParamSpec((d, Hkv, Dh), ("fsdp", "kv_heads", None), "scaled", dt),
+        "wo": ParamSpec((Hq, Dh, d), ("heads", None, "fsdp"), "scaled", dt),
+    }
+    if cfg.qk_norm:
+        p["q_norm"] = ParamSpec((Dh,), (None,), "ones", dt)
+        p["k_norm"] = ParamSpec((Dh,), (None,), "ones", dt)
+    return p
+
+
+def mlp_schema(cfg: ModelConfig, dt: str) -> dict:
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "w_gate": ParamSpec((d, f), ("fsdp", "mlp"), "scaled", dt),
+        "w_up": ParamSpec((d, f), ("fsdp", "mlp"), "scaled", dt),
+        "w_down": ParamSpec((f, d), ("mlp", "fsdp"), "scaled", dt),
+    }
+
+
+def moe_schema(cfg: ModelConfig, dt: str) -> dict:
+    d, f, E = cfg.d_model, cfg.d_ff, cfg.num_experts
+    if cfg.expert_sharding == "ep":
+        ax3 = ("expert", "fsdp", None)
+        ax3d = ("expert", None, "fsdp")
+    else:
+        ax3 = (None, "fsdp", "mlp")
+        ax3d = (None, "mlp", "fsdp")
+    return {
+        "router": ParamSpec((d, E), ("fsdp", None), "scaled", dt),
+        "w_gate": ParamSpec((E, d, f), ax3, "scaled", dt),
+        "w_up": ParamSpec((E, d, f), ax3, "scaled", dt),
+        "w_down": ParamSpec((E, f, d), ax3d, "scaled", dt),
+    }
+
+
+def layer_schema(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    p = {
+        "attn_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+        "attn": attn_schema(cfg, dt),
+        "mlp_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+    }
+    p["moe" if cfg.is_moe else "mlp"] = (
+        moe_schema(cfg, dt) if cfg.is_moe else mlp_schema(cfg, dt)
+    )
+    return p
+
+
+def stack_schema(tree, n: int):
+    """Prepend a stacked 'layers' axis to every ParamSpec in the tree."""
+    return jax.tree.map(
+        lambda ps: ParamSpec((n, *ps.shape), ("layers", *ps.axes), ps.init,
+                             ps.dtype),
+        tree,
+        is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def schema(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    d, V = cfg.d_model, cfg.padded_vocab
+    s = {
+        "embedding": ParamSpec((V, d), ("vocab", "fsdp"), "normal", dt),
+        "layers": stack_schema(layer_schema(cfg), cfg.num_layers),
+        "final_norm": ParamSpec((d,), (None,), "ones", dt),
+    }
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((d, V), ("fsdp", "vocab"), "scaled", dt)
+    if cfg.family == "vlm":
+        # stub projection for precomputed patch embeddings
+        s["patch_proj"] = ParamSpec((d, d), ("fsdp", None), "scaled", dt)
+    return s
+
+
+# ---------------------------------------------------------------------------
+# forward (training / prefill)
+# ---------------------------------------------------------------------------
+
+
+def _layer_fwd(cfg: ModelConfig, p, x, positions):
+    # residual stream: batch over DP/FSDP axes, sequence over the model axis
+    # (sequence parallelism; attention/MLP re-shard to heads/mlp internally).
+    # The constraint is applied to the layer OUTPUT as well: that tensor is
+    # the scan carry saved for remat/backward — leaving it unconstrained
+    # lets XLA keep it replicated over "model" (16x the activation memory).
+    x = _shard(x, ("batch", "seq", None))
+    h, kv = self_attention_block(
+        cfg, p["attn"], rms_norm(x, p["attn_norm"]), positions
+    )
+    x = x + h
+    if cfg.is_moe:
+        h, aux = moe_block(cfg, p["moe"], rms_norm(x, p["mlp_norm"]))
+    else:
+        h, aux = glu_mlp(p["mlp"], rms_norm(x, p["mlp_norm"])), 0.0
+    return _shard(x + h, ("batch", "seq", None)), kv, aux
+
+
+def embed(cfg: ModelConfig, params, tokens):
+    e = jnp.take(params["embedding"], tokens, axis=0)
+    return _shard(e.astype(cfg.activation_dtype), ("batch", None, None))
+
+
+def unembed(cfg: ModelConfig, params, x):
+    w = params["embedding"].T if cfg.tie_embeddings else params["lm_head"]
+    logits = jnp.einsum("bsd,dv->bsv", x, w)
+    if cfg.padded_vocab != cfg.vocab_size:  # mask vocab-padding logits
+        pad = jnp.arange(cfg.padded_vocab) >= cfg.vocab_size
+        logits = jnp.where(pad, jnp.asarray(-1e30, logits.dtype), logits)
+    return _shard(logits, ("batch", None, "vocab"))
+
+
+def forward(cfg: ModelConfig, params, tokens, *, patches=None,
+            collect_kv: bool = False):
+    """Returns (hidden [B,S,d], stacked (k,v) or None, aux_loss)."""
+    x = embed(cfg, params, tokens)
+    B, S = tokens.shape
+    if cfg.family == "vlm" and patches is not None:
+        pe = jnp.einsum("bpd,de->bpe", patches.astype(x.dtype),
+                        params["patch_proj"])
+        x = jnp.concatenate([pe, x], axis=1)
+        S = x.shape[1]
+    positions = _shard(
+        jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S)),
+        ("batch", None),
+    )  # replicated over "model": avoids per-chunk position re-shards
+
+    body = partial(_layer_fwd, cfg)
+    if cfg.remat:
+        body = jax.checkpoint(body)
+
+    def scan_fn(carry, lp):
+        x = carry
+        x, kv, aux = body(lp, x, positions)
+        if collect_kv:
+            # stacked-cache layout: batch over DP, seq over model (matches
+            # cache_shardings); without this the scan ys replicate over
+            # "model" — 16x the cache footprint at prefill_32k
+            ys = (_shard(kv[0], ("batch", "seq", None, None)),
+                  _shard(kv[1], ("batch", "seq", None, None)))
+        else:
+            ys = None
+        return x, (ys, aux)
+
+    G = cfg.scan_remat_groups
+    if G and cfg.num_layers % G == 0 and not collect_kv:
+        # two-level scan: outer over G groups (checkpointed), inner over
+        # L/G layers (each layer checkpointed) -> O(G + L/G) live carries
+        grouped = jax.tree.map(
+            lambda a: a.reshape(G, cfg.num_layers // G, *a.shape[1:]),
+            params["layers"],
+        )
+
+        @jax.checkpoint
+        def group_fn(x, gp):
+            x, (_, auxs) = lax.scan(scan_fn, x, gp)
+            return x, auxs
+
+        x, auxs = lax.scan(group_fn, x, grouped)
+        kvs = None
+    else:
+        x, (kvs, auxs) = lax.scan(scan_fn, x, params["layers"])
+    x = rms_norm(x, params["final_norm"])
+    return x, kvs, jnp.sum(jnp.asarray(auxs)) if cfg.is_moe else 0.0
+
+
+# ---------------------------------------------------------------------------
+# decode (single new token against a stacked KV cache)
+# ---------------------------------------------------------------------------
+
+
+def init_cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    """Abstract KV-cache layout (ShapeDtypeStruct) for dry-runs/allocation."""
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    L, Hkv, Dh = cfg.num_layers, cfg.num_kv_heads, cfg.head_dim
+    dt = cfg.activation_dtype
+    return {
+        "k": jax.ShapeDtypeStruct((L, batch, W, Hkv, Dh), dt),
+        "v": jax.ShapeDtypeStruct((L, batch, W, Hkv, Dh), dt),
+        "pos": jax.ShapeDtypeStruct((batch, W), jnp.int32),
+    }
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    sh = init_cache_schema(cfg, batch, max_len)
+    return {
+        "k": jnp.zeros(sh["k"].shape, sh["k"].dtype),
+        "v": jnp.zeros(sh["v"].shape, sh["v"].dtype),
+        "pos": jnp.full(sh["pos"].shape, INVALID_POS, jnp.int32),
+    }
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    """token: [B] int32, pos: [B] absolute position.  Returns
+    (logits [B,V], new_cache).
+
+    Layers run in a ``fori_loop`` carrying the whole stacked cache and
+    writing only the new token's slot (``at[i, b, slot].set``) — with buffer
+    donation the cache updates in place; a scan with per-layer cache xs/ys
+    would materialize a second (and on some backends third) copy of the
+    multi-GB cache."""
+    x = embed(cfg, params, token[:, None])
+    B = token.shape[0]
+    W = cache["k"].shape[2]
+    slot = (pos % W) if cfg.sliding_window is not None else jnp.minimum(
+        pos, W - 1)
+    bidx = jnp.arange(B)
+    # every layer writes the same slot: update the shared pos table once
+    cpos = cache["pos"].at[bidx, slot].set(pos)
+
+    def body(i, carry):
+        x, ck, cv = carry
+        lp = jax.tree.map(
+            lambda a: lax.dynamic_index_in_dim(a, i, 0, keepdims=False),
+            params["layers"],
+        )
+        h = rms_norm(x, lp["attn_norm"])
+        q, k_t, v_t = attn_qkv(cfg, lp["attn"], h, pos[:, None])
+        ck = ck.at[i, bidx, slot].set(k_t[:, 0])
+        cv = cv.at[i, bidx, slot].set(v_t[:, 0])
+        o = attention(
+            q, ck[i], cv[i], pos[:, None], cpos,
+            causal=True, window=cfg.sliding_window,
+            chunk=min(cfg.attn_chunk, W),
+        )
+        x = x + attn_out(cfg, lp["attn"], o)
+        if cfg.is_moe:
+            h, _ = moe_block(cfg, lp["moe"], rms_norm(x, lp["mlp_norm"]))
+        else:
+            h = glu_mlp(lp["mlp"], rms_norm(x, lp["mlp_norm"]))
+        return x + h, ck, cv
+
+    x, nk, nv = lax.fori_loop(
+        0, cfg.num_layers, body, (x, cache["k"], cache["v"])
+    )
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(cfg, params, x)[:, 0]
+    return logits, {"k": nk, "v": nv, "pos": cpos}
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int, *, patches=None):
+    """Full-sequence prefill; returns (last-position logits [B,V], cache)."""
+    x, kvs, _ = forward(cfg, params, tokens, patches=patches, collect_kv=True)
+    k, v = kvs  # [L, B, S, Hkv, Dh]
+    B, S = x.shape[0], x.shape[1]
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache_spec = ("layers", "batch", "seq", None, None)
+    if S >= W:
+        # keep the last W positions; for a rolling (SWA) cache place them at
+        # slot = pos % W; without a window the slots are the identity, so no
+        # scatter at all (a scatter would materialize an unsharded
+        # [L, B, W, Hkv, Dh] zeros tensor — 540 GB at llama3-405b/32k)
+        k_t, v_t, p_t = k[:, :, S - W:], v[:, :, S - W:], positions[:, S - W:]
+        if cfg.sliding_window:
+            # rolling cache: slots (pos % W) form a rotation of arange(W)
+            # (positions are uniform across the batch), so the cache build is
+            # a circular roll — identity when W divides S — instead of a
+            # batch-indexed scatter (which would gather/replicate the
+            # sharded operands)
+            shift = S % W
+            if shift:
+                ck = jnp.roll(k_t, shift, axis=2)
+                cv = jnp.roll(v_t, shift, axis=2)
+                cpos = jnp.roll(p_t, shift, axis=1)
+            else:
+                ck, cv, cpos = k_t, v_t, p_t
+            ck = _shard(ck, cache_spec)
+            cv = _shard(cv, cache_spec)
+        else:
+            ck, cv, cpos = _shard(k_t, cache_spec), _shard(v_t, cache_spec), p_t
+        cache = {"k": ck, "v": cv, "pos": cpos}
+    else:
+        pad = W - S
+        cache = {
+            "k": jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "v": jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0))),
+            "pos": jnp.pad(positions, ((0, 0), (0, pad)),
+                           constant_values=INVALID_POS),
+        }
+    logits = unembed(cfg, params, x[:, -1:])[:, 0]
+    return logits, cache

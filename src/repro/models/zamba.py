@@ -1,0 +1,283 @@
+"""Zamba2-style hybrid (arXiv:2411.15242): a Mamba-2 backbone with a single
+*shared* full-attention transformer block applied after every
+``cfg.attn_every`` backbone layers (same weights at every application; each
+application keeps its own KV cache).
+
+Simplifications vs. the released model (recorded in DESIGN.md): the shared
+block consumes the running residual stream directly (the paper concatenates
+the block input with the original embedding and down-projects), and LoRA
+adapters on the shared block are omitted.  At 500k decode the shared
+attention uses a rolling window so memory stays bounded (the SSM carries the
+long-range state)."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .config import ModelConfig
+from .layers import (
+    INVALID_POS,
+    decode_attention_block,
+    glu_mlp,
+    rms_norm,
+    self_attention_block,
+)
+from .params import ParamSpec
+from .ssm import mamba_block, mamba_decode_block, ssm_layer_schema
+from .transformer import attn_schema, embed, mlp_schema, stack_schema, unembed
+from ..sharding import shard as _shard
+
+
+def _blocks(cfg: ModelConfig) -> tuple[int, int, int]:
+    """(n_blocks, layers_per_block, tail_layers)."""
+    k = max(cfg.attn_every, 1)
+    return cfg.num_layers // k, k, cfg.num_layers % k
+
+
+def n_attn_apps(cfg: ModelConfig) -> int:
+    return _blocks(cfg)[0]
+
+
+def schema(cfg: ModelConfig) -> dict:
+    dt = cfg.param_dtype
+    n_blocks, per_block, tail = _blocks(cfg)
+    s = {
+        "embedding": ParamSpec((cfg.padded_vocab, cfg.d_model),
+                               ("vocab", "fsdp"), "normal", dt),
+        # stacked [n_blocks, per_block, ...] mamba layers + tail [tail, ...]
+        "blocks": stack_schema(
+            stack_schema(ssm_layer_schema(cfg), per_block), n_blocks
+        ),
+        # ONE shared attention+MLP block (weights reused at every application)
+        "shared": {
+            "attn_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+            "attn": attn_schema(cfg, dt),
+            "mlp_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+            "mlp": mlp_schema(cfg, dt),
+        },
+        "final_norm": ParamSpec((cfg.d_model,), (None,), "ones", dt),
+    }
+    if tail:
+        s["tail"] = stack_schema(ssm_layer_schema(cfg), tail)
+    if not cfg.tie_embeddings:
+        s["lm_head"] = ParamSpec((cfg.d_model, cfg.padded_vocab),
+                                 ("fsdp", "vocab"), "scaled", dt)
+    return s
+
+
+def _mamba_layer(cfg, p, x):
+    h, (conv_tail, state) = mamba_block(cfg, p, rms_norm(x, p["norm"]))
+    return x + h, (conv_tail, state)
+
+
+def _shared_attn(cfg, p, x, positions):
+    h, kv = self_attention_block(
+        cfg, p["attn"], rms_norm(x, p["attn_norm"]), positions
+    )
+    x = x + h
+    x = x + glu_mlp(p["mlp"], rms_norm(x, p["mlp_norm"]))
+    return x, kv
+
+
+def forward(cfg: ModelConfig, params, tokens, *, collect_state: bool = False):
+    x = embed(cfg, params, tokens)
+    B, S = tokens.shape
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    mamba = partial(_mamba_layer, cfg)
+    shared = partial(_shared_attn, cfg, params["shared"])
+    if cfg.remat:
+        mamba = jax.checkpoint(mamba)
+        shared = jax.checkpoint(shared)
+
+    def block_fn(x, blk_params):
+        def inner(x, lp):
+            x, tails = mamba(lp, x)
+            return x, tails if collect_state else None
+
+        x, tails = lax.scan(inner, x, blk_params)
+        x, kv = shared(x, positions)
+        if collect_state:
+            kv = (_shard(kv[0], ("batch", "seq", None, None)),
+                  _shard(kv[1], ("batch", "seq", None, None)))
+        return x, (tails, kv if collect_state else None)
+
+    if cfg.remat and not collect_state:
+        # block-level checkpoint on top of the per-layer one: liveness is
+        # O(n_blocks + layers_per_block) carries instead of O(num_layers)
+        block_fn = jax.checkpoint(block_fn)
+    x, (ssm_tails, attn_kvs) = lax.scan(block_fn, x, params["blocks"])
+    tail_tails = None
+    if "tail" in params:
+        def inner(x, lp):
+            x, tails = mamba(lp, x)
+            return x, tails if collect_state else None
+
+        x, tail_tails = lax.scan(inner, x, params["tail"])
+    x = rms_norm(x, params["final_norm"])
+    return x, (ssm_tails, attn_kvs, tail_tails)
+
+
+def init_cache_schema(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    n_blocks, per_block, tail = _blocks(cfg)
+    w = cfg.ssm_conv_width - 1
+    bc_dim = 2 * cfg.ssm_groups * cfg.ssm_state
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    dt = cfg.activation_dtype
+    sh = {
+        "conv_x": jax.ShapeDtypeStruct(
+            (n_blocks, per_block, batch, w, cfg.d_inner), dt),
+        "conv_bc": jax.ShapeDtypeStruct(
+            (n_blocks, per_block, batch, w, bc_dim), dt),
+        "state": jax.ShapeDtypeStruct(
+            (n_blocks, per_block, batch, cfg.ssm_heads, cfg.ssm_state,
+             cfg.ssm_head_dim), jnp.float32,
+        ),
+        "attn_k": jax.ShapeDtypeStruct(
+            (n_blocks, batch, W, cfg.num_kv_heads, cfg.head_dim), dt
+        ),
+        "attn_v": jax.ShapeDtypeStruct(
+            (n_blocks, batch, W, cfg.num_kv_heads, cfg.head_dim), dt
+        ),
+        "attn_pos": jax.ShapeDtypeStruct((batch, W), jnp.int32),
+    }
+    if tail:
+        sh["tail_conv_x"] = jax.ShapeDtypeStruct(
+            (tail, batch, w, cfg.d_inner), dt)
+        sh["tail_conv_bc"] = jax.ShapeDtypeStruct(
+            (tail, batch, w, bc_dim), dt)
+        sh["tail_state"] = jax.ShapeDtypeStruct(
+            (tail, batch, cfg.ssm_heads, cfg.ssm_state, cfg.ssm_head_dim),
+            jnp.float32,
+        )
+    return sh
+
+
+def init_cache(cfg: ModelConfig, batch: int, max_len: int) -> dict:
+    sh = init_cache_schema(cfg, batch, max_len)
+    out = jax.tree.map(lambda s: jnp.zeros(s.shape, s.dtype), sh)
+    out["attn_pos"] = jnp.full(sh["attn_pos"].shape, INVALID_POS, jnp.int32)
+    return out
+
+
+def decode_step(cfg: ModelConfig, params, cache, token, pos):
+    x = embed(cfg, params, token[:, None])[:, 0]
+
+    def block_fn(carry, xs):
+        x, cpos = carry
+        blk_p, cx, cbc, state, ck, cv = xs
+
+        def inner(x, ys):
+            lp, cx_, cbc_, st_ = ys
+            h, (ncx, ncbc), nstate = mamba_decode_block(
+                cfg, lp, rms_norm(x, lp["norm"]), (cx_, cbc_), st_
+            )
+            return x + h, (ncx, ncbc, nstate)
+
+        x, (ncx, ncbc, nstate) = lax.scan(inner, x, (blk_p, cx, cbc, state))
+        sp = params["shared"]
+        h, nk, nv, npos = decode_attention_block(
+            cfg, sp["attn"], rms_norm(x, sp["attn_norm"])[:, None], pos,
+            ck, cv, cpos,
+        )
+        x = x + h[:, 0]
+        x = x + glu_mlp(sp["mlp"], rms_norm(x, sp["mlp_norm"])[:, None])[:, 0]
+        return (x, npos), (ncx, ncbc, nstate, nk, nv)
+
+    # all shared-attn applications write the same slots -> one pos table
+    (x, npos), (ncx, ncbc, nstate, nk, nv) = lax.scan(
+        block_fn,
+        (x, cache["attn_pos"]),
+        (params["blocks"], cache["conv_x"], cache["conv_bc"], cache["state"],
+         cache["attn_k"], cache["attn_v"]),
+    )
+    new_cache = dict(cache)
+    new_cache.update(
+        conv_x=ncx.astype(cache["conv_x"].dtype),
+        conv_bc=ncbc.astype(cache["conv_bc"].dtype), state=nstate,
+        attn_k=nk, attn_v=nv, attn_pos=npos,
+    )
+    if "tail" in params:
+        def inner(x, ys):
+            lp, cx_, cbc_, st_ = ys
+            h, (ncx_, ncbc_), nstate_ = mamba_decode_block(
+                cfg, lp, rms_norm(x, lp["norm"]), (cx_, cbc_), st_
+            )
+            return x + h, (ncx_, ncbc_, nstate_)
+
+        x, (tcx, tcbc, tstate) = lax.scan(
+            inner, x,
+            (params["tail"], cache["tail_conv_x"], cache["tail_conv_bc"],
+             cache["tail_state"]),
+        )
+        new_cache.update(
+            tail_conv_x=tcx.astype(cache["tail_conv_x"].dtype),
+            tail_conv_bc=tcbc.astype(cache["tail_conv_bc"].dtype),
+            tail_state=tstate,
+        )
+    x = rms_norm(x, params["final_norm"])
+    logits = unembed(cfg, params, x[:, None])[:, 0]
+    return logits, new_cache
+
+
+def prefill(cfg: ModelConfig, params, tokens, max_len: int):
+    x, (ssm_tails, attn_kvs, tail_tails) = forward(
+        cfg, params, tokens, collect_state=True
+    )
+    B, S = tokens.shape
+    W = min(max_len, cfg.sliding_window) if cfg.sliding_window else max_len
+    (conv_x_t, conv_bc_t), states = ssm_tails
+    k, v = attn_kvs  # [n_blocks, B, S, Hkv, Dh]
+    positions = jnp.broadcast_to(jnp.arange(S, dtype=jnp.int32)[None], (B, S))
+    cache_spec = ("layers", "batch", "seq", None, None)
+    if S >= W:
+        k_t, v_t, p_t = k[:, :, S - W:], v[:, :, S - W:], positions[:, S - W:]
+        if cfg.sliding_window:
+            # rolling cache: slots (pos % W) form a rotation of arange(W)
+            # (positions are uniform across the batch), so the cache build is
+            # a circular roll — identity when W divides S — instead of a
+            # batch-indexed scatter (which would gather/replicate the
+            # sharded operands)
+            shift = S % W
+            if shift:
+                ck = jnp.roll(k_t, shift, axis=2)
+                cv = jnp.roll(v_t, shift, axis=2)
+                cpos = jnp.roll(p_t, shift, axis=1)
+            else:
+                ck, cv, cpos = k_t, v_t, p_t
+            ck = _shard(ck, cache_spec)
+            cv = _shard(cv, cache_spec)
+        else:
+            ck, cv, cpos = (_shard(k_t, cache_spec), _shard(v_t, cache_spec),
+                            p_t)
+    else:
+        pad = W - S
+        ck = jnp.pad(k, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cv = jnp.pad(v, ((0, 0), (0, 0), (0, pad), (0, 0), (0, 0)))
+        cpos = jnp.pad(positions, ((0, 0), (0, pad)),
+                       constant_values=INVALID_POS)
+    Wc = cfg.ssm_conv_width - 1
+    pad_c = Wc - conv_x_t.shape[3]
+    if pad_c > 0:
+        pads = ((0, 0), (0, 0), (0, 0), (pad_c, 0), (0, 0))
+        conv_x_t = jnp.pad(conv_x_t, pads)
+        conv_bc_t = jnp.pad(conv_bc_t, pads)
+    cache = {
+        "conv_x": conv_x_t.astype(cfg.activation_dtype),
+        "conv_bc": conv_bc_t.astype(cfg.activation_dtype),
+        "state": states,
+        "attn_k": ck, "attn_v": cv, "attn_pos": cpos,
+    }
+    if tail_tails is not None:
+        (tcx, tcbc), tstate = tail_tails
+        if pad_c > 0:
+            pads3 = ((0, 0), (0, 0), (pad_c, 0), (0, 0))
+            tcx = jnp.pad(tcx, pads3)
+            tcbc = jnp.pad(tcbc, pads3)
+        cache["tail_conv_x"] = tcx.astype(cfg.activation_dtype)
+        cache["tail_conv_bc"] = tcbc.astype(cfg.activation_dtype)
+        cache["tail_state"] = tstate
+    logits = unembed(cfg, params, x[:, -1:])[:, 0]
+    return logits, cache

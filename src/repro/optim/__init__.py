@@ -1,0 +1,15 @@
+"""Optimizers (raw JAX — no optax in this environment)."""
+
+from .adamw import adamw  # noqa: F401
+from .adafactor import adafactor  # noqa: F401
+from .base import Optimizer, apply_updates, global_norm, clip_by_global_norm  # noqa: F401
+from .schedules import cosine_schedule, linear_warmup  # noqa: F401
+from .compression import compress_int8, decompress_int8, topk_sparsify  # noqa: F401
+
+
+def build_optimizer(name: str, lr, **kw) -> Optimizer:
+    if name == "adamw":
+        return adamw(lr, **kw)
+    if name == "adafactor":
+        return adafactor(lr, **kw)
+    raise ValueError(f"unknown optimizer {name!r}")

@@ -1,0 +1,83 @@
+"""Adafactor (Shazeer & Stern, arXiv:1804.04235): factored second moments.
+
+For an [n, m] matrix the second-moment estimate is stored as a row vector
+[n] + column vector [m] instead of [n, m] — optimizer state is O(n+m).
+This is what lets llama3-405b / dbrx-132b fit the 16 GB/chip HBM budget on
+256 chips (see configs).  First moment is optional (disabled by default,
+like the paper's recommended setting)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+
+def adafactor(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+    decay: float = 0.8,
+    eps: float = 1e-30,
+    clip_threshold: float = 1.0,
+    weight_decay: float = 0.0,
+    min_dim_size_to_factor: int = 128,
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+
+    def factored(shape) -> bool:
+        return (
+            len(shape) >= 2
+            and shape[-1] >= min_dim_size_to_factor
+            and shape[-2] >= min_dim_size_to_factor
+        )
+
+    def init(params):
+        def z(p):
+            if factored(p.shape):
+                return {
+                    "vr": jnp.zeros(p.shape[:-1], jnp.float32),
+                    "vc": jnp.zeros(p.shape[:-2] + p.shape[-1:], jnp.float32),
+                }
+            return {"v": jnp.zeros(p.shape, jnp.float32)}
+
+        return {"v": jax.tree.map(z, params), "step": jnp.zeros((), jnp.int32)}
+
+    def update(grads, state, params, step=None):
+        step = state["step"] + 1 if step is None else step
+        t = step.astype(jnp.float32)
+        beta = 1.0 - t ** (-decay)
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            g2 = jnp.square(g) + eps
+            if "vr" in s:
+                vr = beta * s["vr"] + (1 - beta) * g2.mean(axis=-1)
+                vc = beta * s["vc"] + (1 - beta) * g2.mean(axis=-2)
+                denom = (
+                    vr[..., :, None]
+                    / vr.mean(axis=-1, keepdims=True)[..., :, None]
+                ) * vc[..., None, :]
+                u = g * jax.lax.rsqrt(denom + eps)
+                ns = {"vr": vr, "vc": vc}
+            else:
+                v = beta * s["v"] + (1 - beta) * g2
+                u = g * jax.lax.rsqrt(v + eps)
+                ns = {"v": v}
+            # update clipping (RMS-based, per the paper)
+            rms = jnp.sqrt(jnp.mean(jnp.square(u)) + 1e-30)
+            u = u / jnp.maximum(1.0, rms / clip_threshold)
+            u = -lr_fn(step) * (u + weight_decay * p.astype(jnp.float32))
+            return u, ns
+
+        gl, treedef = jax.tree.flatten(grads)
+        sl = treedef.flatten_up_to(state["v"])
+        pl = treedef.flatten_up_to(params)
+        outs = [upd(g, s, p) for g, s, p in zip(gl, sl, pl)]
+        return (
+            jax.tree.unflatten(treedef, [u for u, _ in outs]),
+            {"v": jax.tree.unflatten(treedef, [s for _, s in outs]),
+             "step": step},
+        )
+
+    return Optimizer(init, update)

@@ -1,0 +1,62 @@
+"""AdamW with configurable state dtype (bf16 moments shrink the FSDP
+optimizer-state footprint by 3x vs fp32 — relevant at 100B+ scale)."""
+from __future__ import annotations
+
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .base import Optimizer
+
+
+def adamw(
+    lr: float | Callable[[jnp.ndarray], jnp.ndarray],
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    state_dtype: str | None = "float32",
+) -> Optimizer:
+    lr_fn = lr if callable(lr) else (lambda step: jnp.float32(lr))
+    sd = jnp.dtype(state_dtype) if state_dtype else None
+
+    def init(params):
+        def z(p):
+            dt = sd or p.dtype
+            return {"m": jnp.zeros(p.shape, dt), "v": jnp.zeros(p.shape, dt)}
+
+        return {
+            "mu": jax.tree.map(z, params),
+            "step": jnp.zeros((), jnp.int32),
+        }
+
+    def update(grads, state, params, step=None):
+        step = state["step"] + 1 if step is None else step
+
+        def upd(g, s, p):
+            g = g.astype(jnp.float32)
+            m = s["m"].astype(jnp.float32) * b1 + g * (1 - b1)
+            v = s["v"].astype(jnp.float32) * b2 + jnp.square(g) * (1 - b2)
+            mh = m / (1 - b1 ** step.astype(jnp.float32))
+            vh = v / (1 - b2 ** step.astype(jnp.float32))
+            u = -lr_fn(step) * (
+                mh / (jnp.sqrt(vh) + eps)
+                + weight_decay * p.astype(jnp.float32)
+            )
+            return u, {"m": m.astype(s["m"].dtype), "v": v.astype(s["v"].dtype)}
+
+        flat_u, flat_s = [], []
+        gl, treedef = jax.tree.flatten(grads)
+        sl = treedef.flatten_up_to(state["mu"])
+        pl = treedef.flatten_up_to(params)
+        for g, s, p in zip(gl, sl, pl):
+            u, ns = upd(g, s, p)
+            flat_u.append(u)
+            flat_s.append(ns)
+        return (
+            jax.tree.unflatten(treedef, flat_u),
+            {"mu": jax.tree.unflatten(treedef, flat_s), "step": step},
+        )
+
+    return Optimizer(init, update)

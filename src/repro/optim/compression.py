@@ -1,0 +1,43 @@
+"""Gradient compression for the DP/FSDP all-reduce traffic.
+
+Two standard schemes, usable as drop-ins around the gradient collective
+(launch/train.py wires them behind ``--grad-compression``):
+
+* int8 quantization with per-tensor scale (4x traffic reduction vs fp32,
+  2x vs bf16) — unbiased stochastic rounding omitted for determinism;
+* top-k sparsification with error feedback (Deep Gradient Compression,
+  arXiv:1712.01887 style): only the k largest-magnitude entries are
+  exchanged, the residual is carried into the next step.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def compress_int8(x):
+    """x -> (int8 values, fp32 scale)."""
+    x32 = x.astype(jnp.float32)
+    scale = jnp.maximum(jnp.max(jnp.abs(x32)), 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x32 / scale), -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def decompress_int8(q, scale, dtype=jnp.float32):
+    return (q.astype(jnp.float32) * scale).astype(dtype)
+
+
+def topk_sparsify(x, frac: float, error: jnp.ndarray | None = None):
+    """Keep the top ``frac`` fraction of entries (by magnitude); returns
+    (sparse_dense_tensor, new_error).  Error feedback accumulates what was
+    dropped so the compression is unbiased over time."""
+    x32 = x.astype(jnp.float32)
+    if error is not None:
+        x32 = x32 + error
+    flat = x32.reshape(-1)
+    k = max(1, int(flat.size * frac))
+    thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+    mask = jnp.abs(x32) >= thresh
+    kept = jnp.where(mask, x32, 0.0)
+    new_error = x32 - kept
+    return kept.astype(x.dtype), new_error

@@ -1,0 +1,8 @@
+"""Distributed runtime: failure detection, stragglers, elastic restarts."""
+
+from .fault_tolerance import (  # noqa: F401
+    ElasticPolicy,
+    HeartbeatMonitor,
+    StragglerDetector,
+    TrainingSupervisor,
+)

@@ -1,0 +1,145 @@
+"""Fault tolerance, straggler mitigation, elastic scaling.
+
+Paper §3.6 establishes how the QoS optimizations coexist with log-based
+rollback-recovery; this module is the training-plane counterpart:
+
+* ``HeartbeatMonitor``  — per-worker liveness with timeout-based failure
+  detection (the master-side machinery that decides a restart is needed),
+* ``StragglerDetector`` — reuses the paper's latency-measurement machinery:
+  a worker whose recent step/stage latency is a large multiple of the fleet
+  median is flagged; mitigation hook = evict + re-dispatch,
+* ``ElasticPolicy``     — picks the next mesh after losing devices (shrink
+  the DP axis, never the model axis, so parameter layouts survive),
+* ``TrainingSupervisor``— restart loop: on failure, restore the latest
+  checkpoint (elastic re-shard via Checkpointer) and resume; the data
+  pipeline replays from the recorded offset.
+"""
+from __future__ import annotations
+
+import statistics
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Callable
+
+
+class HeartbeatMonitor:
+    def __init__(self, workers: list[int], timeout_ms: float = 10_000.0,
+                 clock: Callable[[], float] | None = None) -> None:
+        self.timeout_ms = timeout_ms
+        self._clock = clock or (lambda: time.monotonic() * 1e3)
+        now = self._clock()
+        self._last: dict[int, float] = {w: now for w in workers}
+        self._lock = threading.Lock()
+
+    def beat(self, worker: int) -> None:
+        with self._lock:
+            self._last[worker] = self._clock()
+
+    def dead_workers(self) -> list[int]:
+        now = self._clock()
+        with self._lock:
+            return [w for w, t in self._last.items()
+                    if now - t > self.timeout_ms]
+
+    def remove(self, worker: int) -> None:
+        with self._lock:
+            self._last.pop(worker, None)
+
+
+class StragglerDetector:
+    """Flag workers whose recent latency is > factor x fleet median.
+
+    The measurement feed is the same per-element latency data the QoS
+    reporters collect (§3.3) — stragglers are just a different consumer of
+    the same telemetry."""
+
+    def __init__(self, factor: float = 3.0, min_samples: int = 5) -> None:
+        self.factor = factor
+        self.min_samples = min_samples
+        self._lat: dict[int, list[float]] = {}
+
+    def record(self, worker: int, latency_ms: float) -> None:
+        self._lat.setdefault(worker, []).append(latency_ms)
+        if len(self._lat[worker]) > 50:
+            self._lat[worker] = self._lat[worker][-50:]
+
+    def stragglers(self) -> list[int]:
+        recent = {
+            w: statistics.median(xs[-self.min_samples:])
+            for w, xs in self._lat.items()
+            if len(xs) >= self.min_samples
+        }
+        if len(recent) < 2:
+            return []
+        med = statistics.median(recent.values())
+        return [w for w, v in recent.items() if v > self.factor * med]
+
+
+@dataclass
+class ElasticPolicy:
+    """Next mesh shape after device loss: shrink the data axis (batch
+    re-balances; parameter TP layout on "model" is preserved)."""
+
+    model_axis: int = 16
+
+    def next_shape(self, devices_left: int) -> tuple[int, int] | None:
+        data = devices_left // self.model_axis
+        if data < 1:
+            return None
+        return (data, self.model_axis)
+
+
+@dataclass
+class RestartEvent:
+    at_step: int
+    reason: str
+    devices_left: int | None = None
+
+
+class TrainingSupervisor:
+    """Wraps a step function with checkpoint/restart + failure injection
+    hooks (tests inject failures; real deployments wire the heartbeat
+    monitor)."""
+
+    def __init__(self, checkpointer, save_every: int = 50,
+                 max_restarts: int = 10) -> None:
+        self.ckpt = checkpointer
+        self.save_every = save_every
+        self.max_restarts = max_restarts
+        self.events: list[RestartEvent] = []
+
+    def run(self, state: dict, step_fn, num_steps: int,
+            data_state_fn=None,
+            fail_at: dict[int, str] | None = None,
+            on_restore=None) -> tuple[dict, int]:
+        """state: pytree; step_fn(state, step) -> state; returns final
+        (state, completed_steps).  ``fail_at``: step -> reason (test
+        injection)."""
+        fail_at = dict(fail_at or {})
+        step = 0
+        restarts = 0
+        while step < num_steps:
+            try:
+                if step in fail_at:
+                    reason = fail_at.pop(step)
+                    raise RuntimeError(f"injected failure: {reason}")
+                state = step_fn(state, step)
+                step += 1
+                if step % self.save_every == 0 or step == num_steps:
+                    extra = {"data": data_state_fn()} if data_state_fn else {}
+                    self.ckpt.save(step, state, extra=extra)
+            except RuntimeError as e:
+                restarts += 1
+                self.events.append(RestartEvent(step, str(e)))
+                if restarts > self.max_restarts:
+                    raise
+                latest = self.ckpt.latest_step()
+                if latest is None:
+                    step = 0  # restart from scratch
+                    continue
+                state, step, extra = self.ckpt.restore(state)
+                if on_restore is not None:
+                    on_restore(extra)
+        self.ckpt.wait()
+        return state, step

@@ -1,0 +1,3 @@
+"""QoS-constrained streaming serving (the paper's technique, serving-plane)."""
+
+from .qos_server import QoSServer, RequestSpec, ServingResult  # noqa: F401

@@ -1,0 +1,239 @@
+"""QoS-constrained model serving on the Nephele streaming core.
+
+The paper's two degrees of freedom, re-read for TPU serving (DESIGN.md §2.2):
+
+* **output buffer size -> dynamic batch size.**  Requests accumulate in the
+  Ingress->Prefill channel's output buffer; the buffer ships when full, and
+  the shipped buffer IS the model batch (JobVertex.batch_fn).  The QoS
+  manager's adaptive buffer sizing (Eq. 2/3) therefore tunes the serving
+  batch size against the latency SLO: big buffers = high MXU occupancy /
+  throughput, small buffers = low queueing latency — Fig. 2, serving
+  edition.
+* **dynamic task chaining -> stage fusion.**  When per-stage utilization is
+  low, the manager chains Prefill->Decode into one thread: one dispatch
+  chain without queue hand-over (on TPU: no host round-trip between the two
+  jitted calls).  The §3.6 veto applies to stages whose boundary is a
+  materialization point.
+
+Pipeline:  Ingress (source) -> Prefill (batch) -> Decode -> Egress (sink).
+Batch shapes are bucketed to powers of two so the jit cache stays bounded.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from ..core import (
+    ALL_TO_ALL,
+    POINTWISE,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    SourceSpec,
+    StreamEngine,
+)
+from ..core.buffers import BufferSizingPolicy
+from ..models import Model
+
+
+@dataclass
+class RequestSpec:
+    """Synthetic open-loop request generator (benchmark driver)."""
+
+    rate_per_s: float = 20.0
+    prompt_len: int = 32
+    gen_len: int = 8
+    vocab: int = 256
+
+
+@dataclass
+class ServingResult:
+    latencies_ms: list[float]
+    batch_sizes: list[int]
+    completed: int
+    duration_ms: float
+    chained_groups: list
+    final_buffer_sizes: dict
+
+    @property
+    def mean_latency_ms(self) -> float:
+        xs = self.latencies_ms
+        return sum(xs) / len(xs) if xs else float("nan")
+
+    @property
+    def settled_mean_ms(self) -> float:
+        """Mean over the last half of completions (post-convergence)."""
+        xs = self.latencies_ms
+        if not xs:
+            return float("nan")
+        tail = xs[len(xs) // 2:]
+        return sum(tail) / len(tail)
+
+    def p(self, q: float) -> float:
+        xs = sorted(self.latencies_ms)
+        return xs[min(len(xs) - 1, int(q * len(xs)))] if xs else float("nan")
+
+    @property
+    def throughput_rps(self) -> float:
+        return self.completed / max(self.duration_ms / 1e3, 1e-9)
+
+    @property
+    def mean_batch(self) -> float:
+        bs = self.batch_sizes
+        return sum(bs) / len(bs) if bs else float("nan")
+
+
+def _bucket(n: int) -> int:
+    b = 1
+    while b < n:
+        b *= 2
+    return b
+
+
+class QoSServer:
+    def __init__(
+        self,
+        model: Model,
+        params,
+        spec: RequestSpec,
+        *,
+        latency_limit_ms: float = 250.0,
+        window_ms: float = 3_000.0,
+        measurement_interval_ms: float = 500.0,
+        initial_buffer_bytes: int = 4096,
+        enable_qos: bool = True,
+        enable_chaining: bool = True,
+        num_workers: int = 1,
+        unchainable_decode: bool = False,
+    ) -> None:
+        self.model = model
+        self.params = params
+        self.spec = spec
+        self.max_len = spec.prompt_len + spec.gen_len + 8
+        self._jit_prefill = {}
+        self._jit_decode = {}
+        self.batch_sizes: list[int] = []
+        self._lock = threading.Lock()
+
+        cfg = model.cfg
+        req_bytes = spec.prompt_len * 4 + 16
+
+        def prefill_fn(payloads, emit, ctx):
+            reqs = payloads
+            n = len(reqs)
+            with self._lock:
+                self.batch_sizes.append(n)
+            bsz = _bucket(n)
+            toks = np.zeros((bsz, spec.prompt_len), np.int32)
+            for i, r in enumerate(reqs):
+                toks[i] = r["tokens"]
+            fn = self._prefill_for(bsz)
+            batch = {"tokens": jnp.asarray(toks)}
+            logits, cache = fn(self.params, batch)
+            emit(
+                {"cache": cache, "logits": logits, "reqs": reqs, "bsz": bsz},
+                size_bytes=n * 64,
+            )
+
+        def decode_fn(payload, emit, ctx):
+            st = payload
+            bsz, reqs = st["bsz"], st["reqs"]
+            fn = self._decode_for(bsz)
+            cache = st["cache"]
+            tok = jnp.argmax(st["logits"], -1).astype(jnp.int32)
+            out_tokens = [tok]
+            for i in range(spec.gen_len - 1):
+                pos = jnp.full((bsz,), spec.prompt_len + i, jnp.int32)
+                logits, cache = fn(self.params, cache, tok, pos)
+                tok = jnp.argmax(logits, -1).astype(jnp.int32)
+                out_tokens.append(tok)
+            outs = np.stack([np.asarray(t) for t in out_tokens], 1)
+            for i, r in enumerate(reqs):
+                emit(
+                    {"request_id": r["id"], "tokens": outs[i].tolist()},
+                    size_bytes=64,
+                    created_at_ms=r["t_arrival"],
+                )
+
+        self.jg = JobGraph("qos-serving")
+        self.jg.add_vertex(JobVertex("Ingress", 1, is_source=True))
+        self.jg.add_vertex(JobVertex("Prefill", 1, fn=prefill_fn,
+                                     batch_fn=True))
+        self.jg.add_vertex(JobVertex("Decode", 1, fn=decode_fn,
+                                     chainable=not unchainable_decode))
+        self.jg.add_vertex(JobVertex("Egress", 1, is_sink=True))
+        self.jg.add_edge("Ingress", "Prefill", POINTWISE)
+        self.jg.add_edge("Prefill", "Decode", POINTWISE)
+        self.jg.add_edge("Decode", "Egress", ALL_TO_ALL)
+
+        seq = JobSequence.of(
+            ("Ingress", "Prefill"), "Prefill", ("Prefill", "Decode"),
+            "Decode", ("Decode", "Egress"),
+        )
+        self.constraints = [
+            JobConstraint(seq, latency_limit_ms, window_ms, name="slo")
+        ]
+
+        rng = np.random.default_rng(0)
+        counter = [0]
+
+        def make_payload(seq_no: int):
+            counter[0] += 1
+            return (
+                {
+                    "id": seq_no,
+                    "tokens": rng.integers(
+                        3, spec.vocab, size=spec.prompt_len
+                    ).astype(np.int32),
+                    "t_arrival": self.engine.clock.now(),
+                },
+                req_bytes,
+            )
+
+        self.engine = StreamEngine(
+            self.jg,
+            self.constraints,
+            num_workers=num_workers,
+            sources={
+                "Ingress": SourceSpec(
+                    rate_items_per_s=spec.rate_per_s,
+                    make_payload=make_payload,
+                )
+            },
+            initial_buffer_bytes=initial_buffer_bytes,
+            measurement_interval_ms=measurement_interval_ms,
+            enable_qos=enable_qos,
+            enable_chaining=enable_chaining,
+            policy=BufferSizingPolicy(omega_bytes=initial_buffer_bytes * 8),
+        )
+
+    # -- jit caches (bucketed batch shapes) ------------------------------------
+    def _prefill_for(self, bsz: int):
+        if bsz not in self._jit_prefill:
+            self._jit_prefill[bsz] = jax.jit(
+                lambda p, b: self.model.prefill(p, b, self.max_len)
+            )
+        return self._jit_prefill[bsz]
+
+    def _decode_for(self, bsz: int):
+        if bsz not in self._jit_decode:
+            self._jit_decode[bsz] = jax.jit(self.model.decode_step)
+        return self._jit_decode[bsz]
+
+    # -- run ----------------------------------------------------------------------
+    def run(self, duration_ms: float) -> ServingResult:
+        res = self.engine.run(duration_ms)
+        return ServingResult(
+            latencies_ms=res.sink_latencies_ms,
+            batch_sizes=self.batch_sizes,
+            completed=res.items_at_sinks,
+            duration_ms=res.duration_ms,
+            chained_groups=res.chained_groups,
+            final_buffer_sizes=res.final_buffer_sizes,
+        )

@@ -1,0 +1,69 @@
+"""Adaptive output-buffer sizing, Eq. (2)/(3) (paper §3.5.1) — property
+tests on the policy invariants."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import BufferSizingPolicy, OutputBuffer
+
+
+@settings(max_examples=200, deadline=None)
+@given(
+    obs=st.integers(min_value=1, max_value=10_000_000),
+    obl=st.floats(min_value=0.0, max_value=5_000.0, allow_nan=False),
+    src_lat=st.one_of(st.none(),
+                      st.floats(min_value=0.0, max_value=1_000.0)),
+)
+def test_policy_bounds_and_direction(obs, obl, src_lat):
+    pol = BufferSizingPolicy()
+    new = pol.propose(obs, obl, src_lat)
+    if new is None:
+        return
+    # always within [eps, max(omega, current)]
+    assert new >= pol.eps_bytes or new >= obs  # grow path respects omega cap
+    if obl > pol.min_obl_ms and (src_lat is None or obl > src_lat):
+        # Eq. 2: shrink, multiplicative in obl, clamped at eps from below
+        assert new <= max(obs, pol.eps_bytes)
+        assert new >= pol.eps_bytes
+    elif obl < pol.zero_obl_ms:
+        # Eq. 3: grow, never above omega
+        assert new >= obs or new == pol.omega_bytes
+        assert new <= max(pol.omega_bytes, obs)
+
+
+@settings(max_examples=100, deadline=None)
+@given(obl=st.floats(min_value=5.001, max_value=500.0))
+def test_shrink_monotone_in_obl(obl):
+    """Larger buffer latency -> at least as aggressive shrink (Eq. 2)."""
+    pol = BufferSizingPolicy()
+    a = pol.propose(32_768, obl, 0.0)
+    b = pol.propose(32_768, obl * 1.5, 0.0)
+    assert a is not None and b is not None
+    assert b <= a
+
+
+def test_eq2_formula_exact():
+    pol = BufferSizingPolicy()
+    new = pol.propose(32_768, 100.0, 0.0)
+    assert new == max(pol.eps_bytes, int(32_768 * pol.r**100.0))
+
+
+def test_buffer_fill_flush_cycle():
+    buf = OutputBuffer("c", capacity_bytes=100)
+    assert not buf.append("a", 40, now_ms=0.0)
+    assert buf.append("b", 70, now_ms=10.0)  # 110 >= 100 -> full
+    items, nbytes, lifetime = buf.take(now_ms=25.0)
+    assert items == ["a", "b"] and nbytes == 110 and lifetime == 25.0
+    assert buf.empty
+
+
+def test_first_writer_wins_versioning():
+    """§3.5.1: concurrent managers race on one channel; only the update
+    computed against the current version applies."""
+    buf = OutputBuffer("c", capacity_bytes=1000)
+    v0 = buf.version
+    assert buf.try_update_size(500, base_version=v0)
+    # second manager computed against the stale version -> discarded
+    assert not buf.try_update_size(800, base_version=v0)
+    assert buf.capacity_bytes == 500
+    assert buf.try_update_size(800, base_version=buf.version)
+    assert buf.capacity_bytes == 800

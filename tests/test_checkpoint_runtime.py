@@ -1,0 +1,88 @@
+"""Checkpointing + fault-tolerant supervision (paper §3.6 training plane)."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.checkpoint import Checkpointer
+from repro.runtime import (
+    ElasticPolicy,
+    HeartbeatMonitor,
+    StragglerDetector,
+    TrainingSupervisor,
+)
+
+
+def test_save_restore_roundtrip(tmp_path):
+    ck = Checkpointer(tmp_path)
+    state = {"params": {"w": jnp.arange(6.0).reshape(2, 3)},
+             "step": jnp.asarray(7)}
+    ck.save(7, state, extra={"data": {"doc_idx": 42}}, blocking=True)
+    got, step, extra = ck.restore(state)
+    assert step == 7
+    assert extra["data"]["doc_idx"] == 42
+    np.testing.assert_array_equal(np.asarray(got["params"]["w"]),
+                                  np.asarray(state["params"]["w"]))
+
+
+def test_gc_keeps_latest(tmp_path):
+    ck = Checkpointer(tmp_path, keep=2)
+    state = {"x": jnp.zeros(3)}
+    for s in (10, 20, 30, 40):
+        ck.save(s, state, blocking=True)
+    assert ck.steps() == [30, 40]
+
+
+def test_supervisor_restarts_from_checkpoint(tmp_path):
+    ck = Checkpointer(tmp_path)
+    sup = TrainingSupervisor(ck, save_every=5)
+    calls = []
+
+    def step_fn(state, step):
+        calls.append(step)
+        return {"x": state["x"] + 1.0}
+
+    state, done = sup.run({"x": jnp.asarray(0.0)}, step_fn, num_steps=20,
+                          fail_at={12: "node lost"})
+    assert done == 20
+    assert float(state["x"]) == 20.0  # restored at 10, replayed 10..20
+    assert len(sup.events) == 1
+    assert 10 in calls and calls.count(11) == 2  # 11 replayed after restore
+
+
+def test_heartbeat_failure_detection():
+    t = [0.0]
+    hb = HeartbeatMonitor([0, 1, 2], timeout_ms=100.0, clock=lambda: t[0])
+    t[0] = 50.0
+    hb.beat(0)
+    hb.beat(1)
+    t[0] = 120.0
+    assert hb.dead_workers() == [2]
+
+
+def test_straggler_detection():
+    sd = StragglerDetector(factor=3.0, min_samples=3)
+    for w in range(4):
+        for _ in range(5):
+            sd.record(w, 10.0 if w != 3 else 100.0)
+    assert sd.stragglers() == [3]
+
+
+def test_elastic_policy_preserves_model_axis():
+    pol = ElasticPolicy(model_axis=16)
+    assert pol.next_shape(512) == (32, 16)
+    assert pol.next_shape(496) == (31, 16)
+    assert pol.next_shape(8) is None
+
+
+def test_elastic_restore_onto_new_sharding(tmp_path):
+    """Checkpoints are global arrays: a restore may re-shard (elastic)."""
+    import jax
+    from jax.sharding import NamedSharding, PartitionSpec as P
+
+    ck = Checkpointer(tmp_path)
+    state = {"w": jnp.arange(8.0)}
+    ck.save(1, state, blocking=True)
+    mesh = jax.make_mesh((1,), ("data",))
+    sh = {"w": NamedSharding(mesh, P(None))}
+    got, _, _ = ck.restore(state, shardings=sh)
+    assert got["w"].sharding == sh["w"]

@@ -1,0 +1,51 @@
+"""Latency model + constraints (paper §3.2)."""
+import pytest
+
+from repro.configs.nephele_media import MediaJobParams, build_media_job
+from repro.core import (
+    JobConstraint,
+    JobSequence,
+    RuntimeGraph,
+    enumerate_runtime_sequences,
+    sequence_latency,
+)
+
+
+def test_sequence_alternation_enforced():
+    with pytest.raises(ValueError):
+        JobSequence.of("A", "B")  # two vertices in a row
+    with pytest.raises(ValueError):
+        JobSequence.of(("A", "B"), ("B", "C"))  # two edges in a row
+    with pytest.raises(ValueError):
+        JobSequence.of(("A", "B"), "C")  # disconnected
+
+
+def test_sequence_latency_telescopes():
+    # §3.2.3: the recursive definition telescopes to a sum
+    assert sequence_latency([1.0, 2.0, 3.5]) == 6.5
+
+
+def test_media_job_sequence_count_matches_paper():
+    """The paper: m^3 = 512e6 constrained runtime sequences at m=800."""
+    for m, workers in ((4, 2), (8, 2)):
+        p = MediaJobParams(parallelism=m, num_workers=workers)
+        jg, jcs = build_media_job(p)
+        rg = RuntimeGraph(jg, workers)
+        assert jcs[0].num_runtime_sequences(rg) == m**3
+
+
+def test_enumeration_matches_combinatorial_count():
+    p = MediaJobParams(parallelism=3, num_workers=3)
+    jg, jcs = build_media_job(p)
+    rg = RuntimeGraph(jg, 3)
+    seqs = list(enumerate_runtime_sequences(jcs[0], rg))
+    assert len(seqs) == jcs[0].num_runtime_sequences(rg) == 27
+    # every sequence alternates channel/vertex and has the right span
+    for s in seqs:
+        assert len(s.vertices()) == 4  # D, M, O, E
+        assert len(s.channels()) == 5  # e1..e5
+
+
+def test_covered_path():
+    seq = JobSequence.of(("A", "B"), "B", ("B", "C"))
+    assert seq.covered_path() == ("A", "B", "C")

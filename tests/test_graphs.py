@@ -1,0 +1,57 @@
+"""Job graph / runtime graph formalism (paper §3.1)."""
+import pytest
+
+from repro.core import (
+    ALL_TO_ALL,
+    POINTWISE,
+    JobGraph,
+    JobVertex,
+    RuntimeGraph,
+)
+
+
+def make_jg(m=4):
+    jg = JobGraph("t")
+    jg.add_vertex(JobVertex("A", m, is_source=True))
+    jg.add_vertex(JobVertex("B", m))
+    jg.add_vertex(JobVertex("C", m, is_sink=True))
+    jg.add_edge("A", "B", ALL_TO_ALL)
+    jg.add_edge("B", "C", POINTWISE)
+    return jg
+
+
+def test_expansion_counts():
+    rg = RuntimeGraph(make_jg(4), num_workers=2)
+    assert len(rg.vertices) == 12
+    # A->B all-to-all: 16 channels; B->C pointwise: 4
+    assert len(rg.channels) == 20
+    assert rg.num_runtime_edges("A", "B") == 16
+    assert rg.num_runtime_edges("B", "C") == 4
+
+
+def test_worker_allocation_spread():
+    rg = RuntimeGraph(make_jg(4), num_workers=2)
+    for jv in ("A", "B", "C"):
+        workers = [rg.worker(v) for v in rg.tasks_of(jv)]
+        assert sorted(set(workers)) == [0, 1]
+
+
+def test_pointwise_requires_equal_parallelism():
+    jg = JobGraph("t")
+    jg.add_vertex(JobVertex("A", 2))
+    jg.add_vertex(JobVertex("B", 3))
+    with pytest.raises(ValueError):
+        jg.add_edge("A", "B", POINTWISE)
+
+
+def test_cycle_rejected():
+    jg = make_jg(2)
+    with pytest.raises(ValueError):
+        jg.add_edge("C", "A")
+
+
+def test_in_out_channels_consistent():
+    rg = RuntimeGraph(make_jg(3), num_workers=3)
+    for v in rg.tasks_of("B"):
+        assert len(rg.in_channels(v)) == 3   # from every A
+        assert len(rg.out_channels(v)) == 1  # pointwise to C

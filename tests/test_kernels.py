@@ -1,0 +1,129 @@
+"""Pallas kernels vs pure-jnp oracles: shape/dtype sweeps in interpret mode
+(assignment requirement: per-kernel allclose against ref.py)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.flash_attention.ops import flash_attention_op
+from repro.kernels.flash_attention.ref import INVALID_POS, attention_ref
+from repro.kernels.rmsnorm.ops import rmsnorm_op
+from repro.kernels.rmsnorm.ref import rmsnorm_ref
+from repro.kernels.ssd_scan.ops import ssd_scan_op
+from repro.kernels.ssd_scan.ref import ssd_ref
+
+KEY = jax.random.PRNGKey(0)
+
+
+@pytest.mark.parametrize(
+    "B,Sq,Skv,Hq,Hkv,D,causal,window",
+    [
+        (2, 128, 128, 4, 2, 64, True, None),
+        (1, 256, 256, 4, 4, 128, True, 64),     # sliding window
+        (2, 96, 160, 2, 1, 64, True, None),     # padding path, MQA
+        (1, 1, 256, 8, 2, 64, True, None),      # decode-shaped
+        (2, 64, 64, 4, 4, 32, False, None),     # bidirectional (encoder)
+        (1, 192, 64, 6, 3, 64, True, None),     # Sq > Skv
+    ],
+)
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_sweep(B, Sq, Skv, Hq, Hkv, D, causal, window,
+                               dtype):
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Sq, Hq, D)).astype(dtype)
+    k = jax.random.normal(ks[1], (B, Skv, Hkv, D)).astype(dtype)
+    v = jax.random.normal(ks[2], (B, Skv, Hkv, D)).astype(dtype)
+    qp = jnp.broadcast_to(
+        jnp.arange(Skv - Sq, Skv, dtype=jnp.int32)[None], (B, Sq))
+    kp = jnp.broadcast_to(jnp.arange(Skv, dtype=jnp.int32)[None], (B, Skv))
+    kp = kp.at[:, Skv // 2].set(INVALID_POS)  # hole masking
+    out = flash_attention_op(q, k, v, qp, kp, causal=causal, window=window,
+                             block_q=64, block_k=64, interpret=True)
+    ref = attention_ref(q, k, v, qp, kp, causal=causal, window=window)
+    tol = 2e-5 if dtype == jnp.float32 else 2e-2
+    np.testing.assert_allclose(
+        np.asarray(out, np.float32), np.asarray(ref, np.float32),
+        atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize(
+    "Bb,S,H,P,G,N,Q",
+    [
+        (2, 64, 4, 16, 1, 32, 16),
+        (1, 128, 8, 64, 2, 64, 32),
+        (2, 96, 2, 32, 2, 16, 32),
+        (1, 64, 4, 64, 4, 16, 64),   # single chunk
+    ],
+)
+def test_ssd_scan_sweep(Bb, S, H, P, G, N, Q):
+    ks = jax.random.split(KEY, 5)
+    x = jax.random.normal(ks[0], (Bb, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H)))
+    a = -dt * jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bb, S, G, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bb, S, G, N)) * 0.5
+    y, st = ssd_scan_op(x, dt, a, B, C, chunk=Q, interpret=True)
+    yr, sr = ssd_ref(x, dt, a, B, C)
+    scale = float(np.abs(np.asarray(yr)).max()) + 1e-9
+    assert np.abs(np.asarray(y) - np.asarray(yr)).max() / scale < 2e-5
+    sscale = float(np.abs(np.asarray(sr)).max()) + 1e-9
+    assert np.abs(np.asarray(st) - np.asarray(sr)).max() / sscale < 2e-5
+
+
+def test_ssd_matches_model_reference():
+    """The kernel must also agree with the chunked model implementation."""
+    from repro.models.ssm import ssd_chunked
+    ks = jax.random.split(KEY, 5)
+    Bb, S, H, P, G, N = 1, 64, 4, 16, 1, 16
+    x = jax.random.normal(ks[0], (Bb, S, H, P), jnp.float32)
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (Bb, S, H)))
+    A = -jnp.exp(jax.random.normal(ks[2], (H,)))
+    B = jax.random.normal(ks[3], (Bb, S, G, N)) * 0.5
+    C = jax.random.normal(ks[4], (Bb, S, G, N)) * 0.5
+    y_model, st_model = ssd_chunked(x, dt, A, B, C, chunk=16)
+    y_k, st_k = ssd_scan_op(x, dt, dt * A[None, None], B, C, chunk=16,
+                            interpret=True)
+    np.testing.assert_allclose(np.asarray(y_model), np.asarray(y_k),
+                               rtol=2e-4, atol=2e-4)
+    np.testing.assert_allclose(np.asarray(st_model), np.asarray(st_k),
+                               rtol=2e-4, atol=2e-4)
+
+
+@pytest.mark.parametrize("shape", [(4, 128, 512), (2, 64, 384), (3, 100, 256),
+                                   (1, 7, 64)])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_rmsnorm_sweep(shape, dtype):
+    x = jax.random.normal(KEY, shape).astype(dtype)
+    w = jax.random.normal(jax.random.PRNGKey(1), shape[-1:]).astype(dtype)
+    o = rmsnorm_op(x, w, interpret=True)
+    r = rmsnorm_ref(x, w)
+    tol = 1e-5 if dtype == jnp.float32 else 5e-2
+    np.testing.assert_allclose(np.asarray(o, np.float32),
+                               np.asarray(r, np.float32), atol=tol, rtol=tol)
+
+
+@pytest.mark.parametrize(
+    "B,W,Hq,Hkv,D,window",
+    [
+        (2, 256, 8, 2, 64, None),
+        (1, 512, 4, 4, 128, None),
+        (2, 384, 8, 4, 64, 128),     # sliding window + padding path
+        (1, 64, 16, 2, 64, None),    # W < block
+    ],
+)
+def test_flash_decode_sweep(B, W, Hq, Hkv, D, window):
+    from repro.kernels.decode_attention.ops import flash_decode_op
+    from repro.kernels.decode_attention.ref import decode_ref
+
+    ks = jax.random.split(KEY, 3)
+    q = jax.random.normal(ks[0], (B, Hq, D), jnp.float32)
+    k = jax.random.normal(ks[1], (B, W, Hkv, D), jnp.float32)
+    v = jax.random.normal(ks[2], (B, W, Hkv, D), jnp.float32)
+    qpos = jnp.full((B,), W - 1, jnp.int32)
+    kpos = jnp.broadcast_to(jnp.arange(W, dtype=jnp.int32)[None], (B, W))
+    kpos = kpos.at[:, W // 3].set(INVALID_POS)  # unwritten slot
+    out = flash_decode_op(q, k, v, qpos, kpos, window=window, block_k=128,
+                          interpret=True)
+    ref = decode_ref(q, k, v, qpos, kpos, window=window)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               rtol=2e-5, atol=2e-5)

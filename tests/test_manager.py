@@ -1,0 +1,97 @@
+"""QoS manager: the max-plus DP must agree with brute-force sequence
+enumeration (§3.4.1 'efficiently enumerate violated runtime constraints')."""
+import itertools
+
+from repro.configs.nephele_media import MediaJobParams, build_media_job
+from repro.core import (
+    QoSManager,
+    RuntimeGraph,
+    SimClock,
+    enumerate_runtime_sequences,
+)
+from repro.core.measurement import ChannelStats, QoSReport, TaskStats
+from repro.core.setup import compute_qos_setup
+
+
+def build(m=3, workers=1, limit=100.0):
+    p = MediaJobParams(parallelism=m, num_workers=workers,
+                       latency_limit_ms=limit)
+    jg, jcs = build_media_job(p)
+    rg = RuntimeGraph(jg, workers)
+    allocs = compute_qos_setup(jg, jcs, rg)
+    clock = SimClock()
+    mgr = QoSManager(allocs[0], rg, clock)
+    return jg, jcs, rg, mgr, clock
+
+
+def feed(mgr, rg, clock, chan_lat, task_lat):
+    rep = QoSReport(worker=0, sent_at_ms=clock.now())
+    for c in rg.channels:
+        rep.channel_stats.append(ChannelStats(
+            channel_id=c.id, mean_latency_ms=chan_lat(c),
+            mean_oblt_ms=80.0, buffer_size_bytes=1024,
+        ))
+    for v in rg.vertices:
+        rep.task_stats.append(TaskStats(vertex_id=v.id,
+                                        mean_latency_ms=task_lat(v)))
+    mgr.receive_report(rep)
+
+
+def brute_force_worst(jc, rg, scope, chan_lat, task_lat):
+    measured = set(jc.sequence.vertices())
+    best = -1.0
+    owned = set(scope.anchor_tasks)
+    for s in enumerate_runtime_sequences(jc, rg):
+        if not owned & set(s.vertices()):
+            continue
+        tot = sum(chan_lat(c) for c in s.channels())
+        tot += sum(task_lat(v) for v in s.vertices()
+                   if v.job_vertex in measured)
+        best = max(best, tot)
+    return best
+
+
+def test_dp_matches_bruteforce():
+    jg, jcs, rg, mgr, clock = build(m=3)
+    # deterministic but irregular latencies
+    chan_lat = lambda c: 1.0 + (hash(c.id) % 97) / 10.0
+    task_lat = lambda v: 0.5 + (hash(v.id) % 13) / 10.0
+    clock.advance_to(1_000.0)
+    feed(mgr, rg, clock, chan_lat, task_lat)
+    scope = mgr.allocation.scopes[0]
+    res = mgr.analyze(scope)
+    expected = brute_force_worst(jcs[0], rg, scope, chan_lat, task_lat)
+    assert abs(res.worst_estimate_ms - expected) < 1e-6
+
+
+def test_violated_channels_found():
+    jg, jcs, rg, mgr, clock = build(m=3, limit=50.0)
+    # one Partitioner->Decoder channel is pathological
+    bad = rg.channels_of("Partitioner", "Decoder")[0].id
+    chan_lat = lambda c: 200.0 if c.id == bad else 1.0
+    clock.advance_to(1_000.0)
+    feed(mgr, rg, clock, chan_lat, lambda v: 1.0)
+    res = mgr.analyze(mgr.allocation.scopes[0])
+    assert res.worst_estimate_ms > 200.0
+    assert bad in {c.id for c in res.violated_channels}
+    # healthy parallel channels on non-violated paths are not targeted
+    assert len(res.violated_channels) < len(rg.channels)
+
+
+def test_no_data_means_no_action():
+    jg, jcs, rg, mgr, clock = build()
+    clock.advance_to(1_000.0)
+    assert mgr.analyze(mgr.allocation.scopes[0]) is None
+    assert mgr.check() == []
+
+
+def test_check_emits_buffer_updates_then_cooldown():
+    jg, jcs, rg, mgr, clock = build(m=3, limit=10.0)
+    clock.advance_to(1_000.0)
+    feed(mgr, rg, clock, lambda c: 50.0, lambda v: 1.0)
+    actions = mgr.check()
+    assert actions, "violation must trigger countermeasures"
+    from repro.core import BufferSizeUpdate
+    assert all(isinstance(a, BufferSizeUpdate) for a in actions)
+    # §3.5: after a run it waits for the measurement window to flush
+    assert mgr.check() == []

@@ -1,0 +1,67 @@
+"""Tagged-item measurement + reporters (paper §3.3)."""
+from repro.core import QoSReporter, RunningAverage, SimClock
+
+
+def test_one_tag_per_interval():
+    clock = SimClock()
+    rep = QoSReporter(0, clock, interval_ms=1000.0)
+    rep.assign_manager(1, channels=["c1"], tasks=[])
+    assert rep.should_tag("c1")
+    clock.advance_to(500.0)
+    assert not rep.should_tag("c1")      # same interval
+    clock.advance_to(1_001.0)
+    assert rep.should_tag("c1")          # next interval
+
+
+def test_reports_as_needed_only():
+    """§3.4.1: no empty reports."""
+    clock = SimClock()
+    rep = QoSReporter(0, clock, interval_ms=100.0)
+    rep.assign_manager(1, channels=["c1"], tasks=["t1"])
+    clock.advance_to(500.0)
+    assert rep.maybe_flush() == []       # nothing measured -> nothing sent
+    rep.record_channel_latency("c1", 12.0)
+    clock.advance_to(700.0)
+    out = rep.maybe_flush()
+    assert len(out) == 1
+    mgr, report = out[0]
+    assert mgr == 1
+    assert report.channel_stats[0].mean_latency_ms == 12.0
+    # aggregation buffer cleared after flush
+    clock.advance_to(900.0)
+    assert rep.maybe_flush() == []
+
+
+def test_report_routing_respects_interest():
+    clock = SimClock()
+    rep = QoSReporter(0, clock, interval_ms=100.0)
+    rep.assign_manager(1, channels=["c1"], tasks=[])
+    rep.assign_manager(2, channels=["c2"], tasks=[])
+    rep.record_channel_latency("c1", 5.0)
+    rep.record_channel_latency("c2", 7.0)
+    clock.advance_to(500.0)
+    out = dict(rep.maybe_flush())
+    assert out[1].channel_stats[0].channel_id == "c1"
+    assert out[2].channel_stats[0].channel_id == "c2"
+
+
+def test_running_average_window_eviction():
+    ra = RunningAverage(window_ms=1000.0)
+    ra.add(0.0, 10.0)
+    ra.add(500.0, 20.0)
+    assert ra.value(now_ms=600.0) == 15.0
+    # first sample falls out of the window
+    assert ra.value(now_ms=1_200.0) == 20.0
+    assert ra.value(now_ms=3_000.0) is None
+
+
+def test_mean_aggregation_per_interval():
+    clock = SimClock()
+    rep = QoSReporter(0, clock, interval_ms=100.0)
+    rep.assign_manager(1, channels=["c"], tasks=[])
+    for v in (10.0, 20.0, 30.0):
+        rep.record_channel_latency("c", v)
+    clock.advance_to(200.0)
+    (_, report), = rep.maybe_flush()
+    assert report.channel_stats[0].mean_latency_ms == 20.0
+    assert report.channel_stats[0].n_samples == 3

@@ -1,0 +1,88 @@
+"""Per-arch smoke: reduced config of the same family, one forward/train
+step on CPU, asserting output shapes + no NaNs (assignment requirement)."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import get_config, list_archs
+from repro.models import build_model
+
+ARCHS = list_archs()
+
+
+def make_batch(cfg, B=2, S=32):
+    key = jax.random.PRNGKey(7)
+    toks = jax.random.randint(key, (B, S), 0, cfg.vocab_size)
+    batch = {"tokens": toks, "labels": jnp.roll(toks, -1, axis=1)}
+    if cfg.family == "vlm":
+        batch["patches"] = jnp.zeros((B, cfg.num_patches, cfg.d_model),
+                                     jnp.bfloat16)
+    if cfg.family == "encdec":
+        batch["frames"] = jnp.zeros((B, 16, cfg.d_model), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_forward_and_train_step(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    batch = make_batch(cfg)
+    loss, grads = jax.value_and_grad(lambda p: model.loss(p, batch))(params)
+    assert np.isfinite(float(loss)), "loss must be finite"
+    gleaves = jax.tree.leaves(grads)
+    assert gleaves and all(
+        np.isfinite(np.asarray(g, np.float32)).all() for g in gleaves
+    ), "grads must be finite"
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_smoke_serve_shapes(arch):
+    cfg = get_config(arch, smoke=True)
+    model = build_model(cfg)
+    params = model.init_params(jax.random.PRNGKey(0))
+    B, S = 2, 32
+    batch = make_batch(cfg, B, S)
+    logits, cache = model.prefill(params, batch, max_len=S + 8)
+    assert logits.shape == (B, cfg.padded_vocab)
+    tok = jnp.argmax(logits, -1).astype(jnp.int32)
+    # padded-vocab logits must be masked out of argmax
+    assert int(tok.max()) < cfg.vocab_size
+    logits2, cache = model.decode_step(
+        params, cache, tok, jnp.full((B,), S, jnp.int32))
+    assert logits2.shape == (B, cfg.padded_vocab)
+    assert np.isfinite(np.asarray(logits2, np.float32)).all()
+
+
+@pytest.mark.parametrize("arch", ARCHS)
+def test_full_config_matches_assignment(arch):
+    """The FULL configs carry the exact assigned hyperparameters."""
+    cfg = get_config(arch)
+    expected = {
+        "dbrx-132b": (40, 6144, 48, 8, 10752, 100352),
+        "mixtral-8x7b": (32, 4096, 32, 8, 14336, 32000),
+        "qwen3-1.7b": (28, 2048, 16, 8, 6144, 151936),
+        "llama3.2-3b": (28, 3072, 24, 8, 8192, 128256),
+        "llama3-405b": (126, 16384, 128, 8, 53248, 128256),
+        "yi-6b": (32, 4096, 32, 4, 11008, 64000),
+        "phi-3-vision-4.2b": (32, 3072, 32, 32, 8192, 32064),
+        "mamba2-130m": (24, 768, 0, 0, 0, 50280),
+        "zamba2-7b": (81, 3584, 32, 32, 14336, 32000),
+        "whisper-tiny": (4, 384, 6, 6, 1536, 51865),
+    }[arch]
+    got = (cfg.num_layers, cfg.d_model, cfg.num_heads, cfg.num_kv_heads,
+           cfg.d_ff, cfg.vocab_size)
+    assert got == expected
+    if arch == "mamba2-130m":
+        assert cfg.ssm_state == 128
+    if arch == "zamba2-7b":
+        assert cfg.ssm_state == 64
+    if arch == "mixtral-8x7b":
+        assert cfg.sliding_window == 4096
+    if arch == "qwen3-1.7b":
+        assert cfg.qk_norm
+    if arch == "dbrx-132b":
+        assert (cfg.num_experts, cfg.experts_per_token) == (16, 4)
+    if arch == "mixtral-8x7b":
+        assert (cfg.num_experts, cfg.experts_per_token) == (8, 2)

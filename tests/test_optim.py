@@ -1,0 +1,97 @@
+"""Optimizers + gradient compression."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.optim import (
+    adafactor,
+    adamw,
+    apply_updates,
+    clip_by_global_norm,
+    compress_int8,
+    cosine_schedule,
+    decompress_int8,
+    topk_sparsify,
+)
+
+
+def _optimize(opt, steps=60):
+    params = {"w": jnp.asarray([3.0, -2.0, 1.5]), "b": jnp.asarray([0.5])}
+    state = opt.init(params)
+
+    def loss_fn(p):
+        return jnp.sum(p["w"] ** 2) + jnp.sum(p["b"] ** 2)
+
+    losses = []
+    for _ in range(steps):
+        loss, g = jax.value_and_grad(loss_fn)(params)
+        updates, state = opt.update(g, state, params)
+        params = apply_updates(params, updates)
+        losses.append(float(loss))
+    return losses
+
+
+def test_adamw_decreases_quadratic():
+    losses = _optimize(adamw(1e-1, weight_decay=0.0))
+    assert losses[-1] < 0.05 * losses[0]
+
+
+def test_adafactor_decreases_quadratic():
+    losses = _optimize(adafactor(5e-1))
+    assert losses[-1] < 0.2 * losses[0]
+
+
+def test_adafactor_factored_state_is_small():
+    opt = adafactor(1e-2)
+    params = {"big": jnp.zeros((256, 512)), "small": jnp.zeros((8, 8))}
+    state = opt.init(params)
+    assert set(state["v"]["big"]) == {"vr", "vc"}
+    assert state["v"]["big"]["vr"].shape == (256,)
+    assert state["v"]["big"]["vc"].shape == (512,)
+    assert set(state["v"]["small"]) == {"v"}  # below factoring threshold
+
+
+def test_clip_by_global_norm():
+    g = {"a": jnp.full((4,), 10.0)}
+    clipped, norm = clip_by_global_norm(g, 1.0)
+    assert float(norm) == 20.0
+    np.testing.assert_allclose(
+        np.linalg.norm(np.asarray(clipped["a"])), 1.0, rtol=1e-4)
+
+
+def test_cosine_schedule_shape():
+    fn = cosine_schedule(1e-3, warmup_steps=10, total_steps=100)
+    assert float(fn(jnp.asarray(0))) == 0.0
+    assert abs(float(fn(jnp.asarray(10))) - 1e-3) < 1e-9
+    assert float(fn(jnp.asarray(100))) < 2e-4  # decayed to final_frac
+
+
+@settings(max_examples=50, deadline=None)
+@given(st.lists(st.floats(min_value=-100, max_value=100,
+                          allow_nan=False), min_size=1, max_size=64))
+def test_int8_compression_error_bound(xs):
+    """Quantization error is bounded by scale/2 per element."""
+    x = jnp.asarray(xs, jnp.float32)
+    q, scale = compress_int8(x)
+    back = decompress_int8(q, scale)
+    assert np.abs(np.asarray(back) - np.asarray(x)).max() <= float(
+        scale) * 0.5 + 1e-6
+
+
+@settings(max_examples=20, deadline=None)
+@given(st.integers(min_value=1, max_value=5))
+def test_topk_error_feedback_conserves_mass(seed):
+    """Invariant: kept + new_error == x + old_error (nothing is lost), and
+    repeated rounds drain the residual (DGC-style error feedback)."""
+    x = jax.random.normal(jax.random.PRNGKey(seed), (64,))
+    err = jnp.zeros_like(x)
+    for _ in range(4):
+        old_err = err
+        kept, err = topk_sparsify(x, frac=0.25, error=old_err)
+        np.testing.assert_allclose(
+            np.asarray(kept + err), np.asarray(x + old_err),
+            rtol=1e-5, atol=1e-5)
+        # sparsity: at most ceil(0.25*64)+ties entries sent
+        assert int(jnp.sum(kept != 0.0)) <= 32

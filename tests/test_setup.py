@@ -1,0 +1,63 @@
+"""Algorithms 1-3 (paper §3.4.2) incl. hypothesis property tests on the
+side conditions."""
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.configs.nephele_media import MediaJobParams, build_media_job
+from repro.core import RuntimeGraph, check_side_conditions
+from repro.core.setup import (
+    compute_qos_setup,
+    compute_reporter_setup,
+    get_anchor_vertex,
+)
+
+
+def test_anchor_is_decoder_for_media_job():
+    """All vertices tie on worker count; Decoder wins the min-runtime-edge
+    tiebreak (Algorithm 3)."""
+    p = MediaJobParams(parallelism=8, num_workers=4)
+    jg, jcs = build_media_job(p)
+    rg = RuntimeGraph(jg, 4)
+    path = jcs[0].sequence.covered_path()
+    assert get_anchor_vertex(path, rg) == "Decoder"
+
+
+def test_one_manager_per_worker_hosting_anchors():
+    p = MediaJobParams(parallelism=8, num_workers=4)
+    jg, jcs = build_media_job(p)
+    rg = RuntimeGraph(jg, 4)
+    allocs = compute_qos_setup(jg, jcs, rg)
+    assert len(allocs) == 4  # anchors spread over all 4 workers
+    check_side_conditions(allocs, jcs, rg)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    m=st.integers(min_value=2, max_value=12),
+    workers=st.integers(min_value=1, max_value=6),
+)
+def test_side_conditions_hold_for_any_scale(m, workers):
+    """Property (§3.4.2): every constraint owned exactly once; subgraphs
+    minimal — for any parallelism/worker combination."""
+    p = MediaJobParams(parallelism=m, num_workers=workers)
+    jg, jcs = build_media_job(p)
+    rg = RuntimeGraph(jg, workers)
+    allocs = compute_qos_setup(jg, jcs, rg)
+    check_side_conditions(allocs, jcs, rg)
+    assert len(allocs) == min(workers, m)
+
+
+def test_reporter_routes_cover_all_subgraph_elements():
+    p = MediaJobParams(parallelism=4, num_workers=2)
+    jg, jcs = build_media_job(p)
+    rg = RuntimeGraph(jg, 2)
+    allocs = compute_qos_setup(jg, jcs, rg)
+    ra = compute_reporter_setup(allocs, rg)
+    for mgr_worker, alloc in allocs.items():
+        for c in alloc.subgraph.channels:
+            # receiver-side latency route exists
+            assert c.id in ra.channel_routes[rg.worker(c.dst)][mgr_worker]
+            # sender-side oblt route exists
+            assert c.id in ra.channel_routes[rg.worker(c.src)][mgr_worker]
+        for v in alloc.subgraph.vertices:
+            assert v.id in ra.task_routes[rg.worker(v)][mgr_worker]

@@ -1,0 +1,99 @@
+"""Discrete-event simulator scenarios: the paper's qualitative results."""
+import pytest
+
+from repro.configs.nephele_media import (
+    H264_PACKET_BYTES,
+    MediaJobParams,
+    build_media_job,
+)
+from repro.core import SimSourceSpec, StreamSimulator
+
+
+def run_media(qos, chaining=False, limit=300.0, duration=120_000.0, m=8,
+              window=15_000.0):
+    p = MediaJobParams(parallelism=m, num_workers=2, streams=8 * m,
+                       fps=25.0, latency_limit_ms=limit, window_ms=window)
+    jg, jcs = build_media_job(p)
+    sim = StreamSimulator(
+        jg, jcs, p.num_workers,
+        sources={"Partitioner": SimSourceSpec(
+            rate_items_per_s=p.fps * p.streams / p.parallelism,
+            item_bytes=H264_PACKET_BYTES,
+            keys_per_task=(p.streams // p.group_size) // p.parallelism)},
+        initial_buffer_bytes=32 * 1024,
+        enable_qos=qos, enable_chaining=chaining,
+    )
+    return sim.run(duration)
+
+
+@pytest.fixture(scope="module")
+def unopt():
+    return run_media(qos=False)
+
+
+@pytest.fixture(scope="module")
+def adaptive():
+    return run_media(qos=True)
+
+
+def test_buffer_sizing_improves_latency_order_of_magnitude(unopt, adaptive):
+    """Fig. 7 vs Fig. 8: adaptive buffers must improve mean latency by >10x
+    (the paper got ~10x from buffers alone)."""
+    lat_un = unopt.mean_latency_ms(after_ms=60_000)
+    lat_ad = adaptive.mean_latency_ms(after_ms=60_000)
+    assert lat_un > 10 * lat_ad
+
+
+def test_throughput_preserved(unopt, adaptive):
+    """§1: latency optimization must preserve high data throughput."""
+    assert adaptive.throughput_items_per_s > 0.95 * unopt.throughput_items_per_s
+
+
+def test_constraint_met_stops_actions(adaptive):
+    """Once the 300ms constraint holds, managers stop acting (§3.5)."""
+    assert adaptive.mean_latency_ms(after_ms=60_000) < 300.0
+    late = [r for r in adaptive.manager_history if r.at_ms > 90_000]
+    assert len(late) == 0
+
+
+def test_chaining_triggers_under_tight_constraint():
+    """When buffers alone cannot meet the SLO, the managers chain the
+    Decoder..Encoder series (Fig. 9's mechanism)."""
+    res = run_media(qos=True, chaining=True, limit=22.0,
+                    duration=300_000.0)
+    assert len(res.chained_groups) >= 1
+    for group in res.chained_groups:
+        assert [g.split("[")[0] for g in group] == [
+            "Decoder", "Merger", "Overlay", "Encoder"]
+
+
+def test_give_up_reports_on_infeasible_constraint():
+    """§3.5: when countermeasures are exhausted the master is notified.
+    Construct the exhausted state deterministically: buffers already at
+    omega with obl ~ 0 (no Eq. 2/3 move possible) and a single-task
+    sequence (nothing to chain)."""
+    from repro.core import (ALL_TO_ALL, JobConstraint, JobGraph, JobSequence,
+                            JobVertex, SimSourceSpec, StreamSimulator)
+    from repro.core.buffers import BufferSizingPolicy
+
+    jg = JobGraph("giveup")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01,
+                            sim_item_bytes=128))
+    jg.add_vertex(JobVertex("Work", 2, sim_cpu_ms=0.05, sim_item_bytes=128))
+    jg.add_vertex(JobVertex("Sink", 2, is_sink=True, sim_cpu_ms=0.01))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+    jc = JobConstraint(seq, latency_limit_ms=1e-4, window_ms=2_000.0,
+                       name="infeasible")
+    omega = 64 * 1024
+    sim = StreamSimulator(
+        jg, [jc], num_workers=2,
+        sources={"Src": SimSourceSpec(rate_items_per_s=2_000.0,
+                                      item_bytes=128, keys=8)},
+        initial_buffer_bytes=omega,
+        policy=BufferSizingPolicy(omega_bytes=omega),
+        enable_qos=True, enable_chaining=True,
+    )
+    res = sim.run(60_000.0)
+    assert len(res.give_ups) >= 1

@@ -1,0 +1,63 @@
+"""End-to-end behaviour tests for the paper's system: the Fig. 7->8->9
+narrative — unoptimized, +adaptive buffers (order-of-magnitude), +chaining
+(further reduction under a tight SLO) — on the simulated cluster, plus the
+training-plane integration (train a model for real and meet FT semantics)."""
+import pytest
+
+from repro.configs.nephele_media import (
+    H264_PACKET_BYTES,
+    MediaJobParams,
+    build_media_job,
+)
+from repro.core import SimSourceSpec, StreamSimulator
+
+
+def _run(limit, qos, chaining, duration=240_000.0):
+    p = MediaJobParams(parallelism=8, num_workers=2, streams=64, fps=25.0,
+                       latency_limit_ms=limit)
+    jg, jcs = build_media_job(p)
+    sim = StreamSimulator(
+        jg, jcs, p.num_workers,
+        sources={"Partitioner": SimSourceSpec(
+            rate_items_per_s=p.fps * p.streams / p.parallelism,
+            item_bytes=H264_PACKET_BYTES, keys_per_task=2)},
+        initial_buffer_bytes=32 * 1024,
+        enable_qos=qos, enable_chaining=chaining,
+    )
+    return sim.run(duration)
+
+
+@pytest.mark.slow
+def test_paper_narrative_fig7_fig8_fig9():
+    unopt = _run(300.0, qos=False, chaining=False, duration=120_000.0)
+    buffers = _run(300.0, qos=True, chaining=False, duration=120_000.0)
+    # Fig. 8: order-of-magnitude from buffers alone; constraint met
+    lat_u = unopt.mean_latency_ms(60_000)
+    lat_b = buffers.mean_latency_ms(60_000)
+    assert lat_u / lat_b > 10.0
+    assert lat_b < 300.0
+    # Fig. 9 mechanism: under a tighter SLO buffers alone are not enough and
+    # chaining engages, improving further
+    tight_nochain = _run(22.0, qos=True, chaining=False)
+    tight_chain = _run(22.0, qos=True, chaining=True)
+    assert len(tight_chain.chained_groups) >= 1
+    assert (tight_chain.mean_latency_ms(180_000)
+            < tight_nochain.mean_latency_ms(180_000))
+    # throughput preserved throughout (the paper's standing requirement)
+    assert (tight_chain.throughput_items_per_s
+            > 0.95 * unopt.throughput_items_per_s)
+
+
+@pytest.mark.slow
+def test_training_plane_end_to_end(tmp_path):
+    """Train a small model for 60 steps with an injected failure; loss must
+    decrease across the restart (checkpoint + data replay intact)."""
+    from repro.launch.train import train
+
+    out = train(
+        arch="qwen3-1.7b", smoke=True, steps=60, batch=4, seq=128,
+        ckpt_dir=str(tmp_path), save_every=20, log_every=0,
+        fail_at={30: "injected"},
+    )
+    assert out["losses"][-1] < out["losses"][0]
+    assert not out["dead_workers"]
