@@ -1,11 +1,16 @@
 """Benchmark aggregator — one module per paper figure/table + the framework
 benches.  Prints ``name,us_per_call,derived`` CSV lines.
 
-    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME]
+    PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
+
+``--smoke``: CI mode — tiny shapes, seconds not minutes, to catch executor
+regressions.  Only modules whose ``run`` accepts a ``smoke`` keyword take
+part (the rest are skipped); failures still exit non-zero.
 """
 from __future__ import annotations
 
 import argparse
+import inspect
 import sys
 import traceback
 
@@ -25,6 +30,8 @@ def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--full", action="store_true")
     ap.add_argument("--only", default=None)
+    ap.add_argument("--smoke", action="store_true",
+                    help="CI smoke mode: tiny shapes, seconds not minutes")
     args = ap.parse_args()
 
     failures = []
@@ -34,7 +41,12 @@ def main() -> None:
             continue
         try:
             mod = __import__(f"benchmarks.{mod_name}", fromlist=["run"])
-            for name, us, derived in mod.run(quick=not args.full):
+            kwargs = {"quick": not args.full}
+            if args.smoke:
+                if "smoke" not in inspect.signature(mod.run).parameters:
+                    continue  # module has no smoke-sized variant yet
+                kwargs["smoke"] = True
+            for name, us, derived in mod.run(**kwargs):
                 print(f"{name},{us:.1f},{derived}", flush=True)
         except Exception as e:  # noqa: BLE001
             failures.append((mod_name, repr(e)))

@@ -43,6 +43,11 @@ class Checkpointer:
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
         self._thread: threading.Thread | None = None
+        # a crash mid-save leaves a step_<n>.tmp staging dir behind; it holds
+        # no complete checkpoint, so it is safe (and required) to discard
+        for p in self.dir.glob("step_*.tmp"):
+            if p.is_dir():
+                shutil.rmtree(p, ignore_errors=True)
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, state: dict, extra: dict | None = None,
@@ -100,11 +105,16 @@ class Checkpointer:
 
     # -- restore ---------------------------------------------------------------
     def steps(self) -> list[int]:
-        return sorted(
-            int(p.name.split("_")[1])
-            for p in self.dir.glob("step_*")
-            if p.is_dir() and (p / "manifest.json").exists()
-        )
+        out = []
+        for p in self.dir.glob("step_*"):
+            suffix = p.name.split("_", 1)[1]
+            # skip in-flight/stale staging dirs ("10.tmp") and any other
+            # non-numeric suffix — only committed step dirs count
+            if not suffix.isdigit():
+                continue
+            if p.is_dir() and (p / "manifest.json").exists():
+                out.append(int(suffix))
+        return sorted(out)
 
     def latest_step(self) -> int | None:
         steps = self.steps()
@@ -115,6 +125,7 @@ class Checkpointer:
         """Restore into the structure of ``state_like`` (a pytree of arrays
         or ShapeDtypeStructs).  ``shardings``: matching pytree of
         NamedShardings for elastic placement on the *current* mesh."""
+        self.wait()  # an async save may still be staging the latest step
         step = step if step is not None else self.latest_step()
         if step is None:
             raise FileNotFoundError(f"no checkpoints under {self.dir}")

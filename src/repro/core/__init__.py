@@ -55,4 +55,11 @@ from .simulator import (
 
 __all__ = [k for k in dir() if not k.startswith("_")]
 
-from .elastic import ElasticController, ScaleDecision, ThroughputConstraint  # noqa: F401,E402
+from .elastic import (  # noqa: F401,E402
+    ElasticController,
+    RuntimeRewirer,
+    ScaleDecision,
+    ScaleRequest,
+    ThroughputConstraint,
+    split_constraints,
+)

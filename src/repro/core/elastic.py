@@ -1,6 +1,6 @@
-"""Elastic scale-out for throughput QoS goals — the paper's §6 future work
-("strategies for other QoS goals such as ... throughput that exploit the
-capability of a cloud to elastically scale on demand").
+"""Elastic scale-out/in for throughput QoS goals — the paper's §6 future
+work ("strategies for other QoS goals such as ... throughput that exploit
+the capability of a cloud to elastically scale on demand").
 
 A ``ThroughputConstraint`` demands a minimum delivered rate at a job
 vertex's tasks.  The ``ElasticController`` watches per-task throughput and
@@ -10,8 +10,28 @@ scale-out: the stage's parallelism grows, new tasks are wired with the same
 job-edge patterns, and upstream key-routing spreads over the larger group.
 Scale-in happens when utilization stays below a low-water mark.
 
-The simulator executes the re-wiring live (StreamSimulator.apply_scale_out)
-— the scheme the paper sketches for cloud deployments.
+Both execution backends apply decisions through the SAME runtime re-wiring
+layer, ``RuntimeRewirer`` — a mixin the threaded ``StreamEngine`` and the
+discrete-event ``StreamSimulator`` inherit.  It owns the backend-neutral
+mutation protocol:
+
+1. ``scale_out``: grow the runtime graph (``RuntimeGraph.grow_vertex``),
+   spawn tasks, open + wire channels (upstream key-routing re-spreads over
+   the larger group), refresh QoS manager/reporter scopes,
+2. ``scale_in``: shrink the runtime graph, un-route channels into retiring
+   tasks, *drain* them (no in-flight item is lost), retire them, flush
+   their outgoing buffers, refresh QoS scopes,
+3. ``attach_elastic`` + ``elastic_check``: shared telemetry sampling
+   (delivered rate + mean utilization per stage) driving an
+   ``ElasticController``.
+
+Backends supply only small hooks (``_spawn_task``, ``_open_channel``,
+``_unroute_channel``, ``_drain_tasks``, ``_retire_task``,
+``_flush_task_outputs``, ``_task_emitted``, ``_task_busy_ms``,
+``_schedule_elastic``); the policy, graph surgery, and QoS-scope refresh
+live here once.  The QoS manager can also emit a ``ScaleRequest`` as its
+third countermeasure (after buffer sizing and chaining, before GiveUp)
+when a throughput-constrained stage on a violated path is saturated.
 """
 from __future__ import annotations
 
@@ -21,12 +41,18 @@ from dataclasses import dataclass, field
 @dataclass(frozen=True)
 class ThroughputConstraint:
     """Minimum items/s that ``job_vertex``'s tasks must deliver in
-    aggregate, evaluated over a sliding window of ``window_ms``."""
+    aggregate, evaluated over a sliding window of ``window_ms``.
+
+    ``max_parallelism`` caps how far ANY scaling authority (attached
+    ElasticController or the QoS manager's ScaleRequest countermeasure)
+    may grow the stage — the resource budget travels with the constraint.
+    """
 
     job_vertex: str
     min_items_per_s: float
     window_ms: float = 5_000.0
     name: str = "throughput"
+    max_parallelism: int = 64
 
 
 @dataclass
@@ -63,19 +89,23 @@ class ElasticController:
               mean_utilization: float) -> ScaleDecision | None:
         if now_ms - self._last_action_ms < self.cooldown_ms:
             return None
+        cap = min(self.max_parallelism, self.c.max_parallelism)
         d = None
         if (delivered_items_per_s < self.c.min_items_per_s
                 and mean_utilization > self.hi_water
-                and parallelism < self.max_parallelism):
+                and parallelism < cap):
             d = ScaleDecision(
                 self.c.job_vertex, parallelism,
-                min(parallelism + self.step, self.max_parallelism),
+                min(parallelism + self.step, cap),
                 f"saturated: {delivered_items_per_s:.1f}/s < "
                 f"{self.c.min_items_per_s:.1f}/s at util "
                 f"{mean_utilization:.2f}", now_ms)
         elif (mean_utilization < self.lo_water
-              and delivered_items_per_s > 1.2 * self.c.min_items_per_s
-              and parallelism > self.step):
+              and parallelism > self.step
+              # only shrink if the survivors can absorb the current load
+              # without saturating (projected post-shrink utilization)
+              and (mean_utilization * parallelism)
+              / max(parallelism - self.step, 1) < self.hi_water):
             d = ScaleDecision(
                 self.c.job_vertex, parallelism, parallelism - self.step,
                 f"idle: util {mean_utilization:.2f}", now_ms)
@@ -83,3 +113,221 @@ class ElasticController:
             self._last_action_ms = now_ms
             self.decisions.append(d)
         return d
+
+
+@dataclass(frozen=True)
+class ScaleRequest:
+    """Manager-initiated scale-out (third countermeasure, §3.5 extended):
+    emitted when a latency constraint stays violated after buffer sizing and
+    chaining are exhausted AND a throughput-constrained stage on the path is
+    saturated — routed by the execution layer to ``RuntimeRewirer``."""
+
+    job_vertex: str
+    from_parallelism: int
+    to_parallelism: int
+    reason: str
+
+
+# ---------------------------------------------------------------------------
+# Runtime re-wiring layer shared by both execution backends
+# ---------------------------------------------------------------------------
+
+
+class RuntimeRewirer:
+    """Backend-neutral live re-parallelization (mixin).
+
+    Host requirements (provided by StreamEngine / StreamSimulator):
+    attributes ``jg``, ``rg``, ``clock``, ``sources``, ``reporters``,
+    ``managers``, ``policy``, ``constraints`` (latency),
+    ``throughput_constraints``, plus the ``_spawn_task``-family hooks listed
+    in the module docstring.
+    """
+
+    def _init_rewirer(self) -> None:
+        self.scale_log: list[ScaleDecision] = []
+        self._elastic: list[dict] = []
+        self._manager_history_archive: list = []
+
+    # -- public mutation API -------------------------------------------------
+    def apply_scale_decision(self, d: ScaleDecision) -> bool:
+        if d.to_parallelism > d.from_parallelism:
+            return self.scale_out(d.job_vertex, d.to_parallelism,
+                                  reason=d.reason)
+        return self.scale_in(d.job_vertex, d.to_parallelism, reason=d.reason)
+
+    def scale_out(self, job_vertex: str, new_parallelism: int,
+                  reason: str = "manual") -> bool:
+        """Grow ``job_vertex`` to ``new_parallelism`` live.  Source vertices
+        are not scalable (their pacing is external input, not capacity)."""
+        if job_vertex in self.sources:
+            raise ValueError(f"cannot scale source vertex {job_vertex!r}")
+        old_n = len(self.rg.tasks_of(job_vertex))
+        new_vs, new_cs = self.rg.grow_vertex(job_vertex, new_parallelism)
+        if not new_vs:
+            return False
+        for v in new_vs:
+            self._spawn_task(v)
+        # wire channels only after every new task exists, so no channel ever
+        # points at a missing endpoint
+        for c in new_cs:
+            self._open_channel(c)
+        self._refresh_qos_scopes()
+        self.scale_log.append(ScaleDecision(
+            job_vertex, old_n, len(self.rg.tasks_of(job_vertex)),
+            reason, self.clock.now()))
+        return True
+
+    def scale_in(self, job_vertex: str, new_parallelism: int,
+                 reason: str = "manual") -> bool:
+        """Shrink ``job_vertex`` live: stop routing into the retiring tasks,
+        drain them (in-flight items are preserved), retire, flush their
+        outgoing buffers downstream, and refresh QoS scopes.  Chained tasks
+        are never retired (their thread is fused into another's)."""
+        if job_vertex in self.sources:
+            raise ValueError(f"cannot scale source vertex {job_vertex!r}")
+        old_n = len(self.rg.tasks_of(job_vertex))
+        candidates = self.rg.tasks_of(job_vertex)[new_parallelism:]
+        if any(self._task_is_chained(v) for v in candidates):
+            return False
+        retired_vs, removed_cs = self.rg.shrink_vertex(
+            job_vertex, new_parallelism)
+        if not retired_vs:
+            return False
+        retired = set(retired_vs)
+        # 1. stop routing new items into the retiring tasks; flush what the
+        #    closed channels still buffer so it reaches them before the drain
+        for c in removed_cs:
+            if c.dst in retired:
+                self._unroute_channel(c)
+        # 2. drain: every already-delivered item gets processed
+        self._drain_tasks(retired_vs)
+        # 3. retire the tasks, then push their last outputs downstream
+        for v in retired_vs:
+            self._retire_task(v)
+        for v in retired_vs:
+            self._flush_task_outputs(v)
+        self._refresh_qos_scopes()
+        self.scale_log.append(ScaleDecision(
+            job_vertex, old_n, len(self.rg.tasks_of(job_vertex)),
+            reason, self.clock.now()))
+        return True
+
+    # -- QoS scope refresh ---------------------------------------------------
+    def _refresh_qos_scopes(self) -> None:
+        """Re-run the master's QoS setup (Algorithms 1-3) against the mutated
+        runtime graph and swap in fresh manager/reporter scopes.  Managers
+        restart their measurement windows (§4.3.2-style warmup) — their past
+        history is archived for the final result."""
+        from .manager import QoSManager
+        from .setup import compute_qos_setup, compute_reporter_setup
+
+        for mgr in self.managers.values():
+            self._manager_history_archive.extend(mgr.history)
+        self.allocations = compute_qos_setup(
+            self.jg, self.constraints, self.rg)
+        self.reporter_setup = compute_reporter_setup(self.allocations, self.rg)
+        for rep in self.reporters.values():
+            rep.reset_assignments()
+        for w, routes in self.reporter_setup.task_routes.items():
+            for mgr, tasks in routes.items():
+                self.reporters[w].assign_manager(mgr, (), tasks)
+        for w, routes in self.reporter_setup.channel_routes.items():
+            for mgr, chans in routes.items():
+                self.reporters[w].assign_manager(mgr, chans, ())
+        self.managers = {
+            w: QoSManager(alloc, self.rg, self.clock, policy=self.policy,
+                          throughput_constraints=self.throughput_constraints)
+            for w, alloc in self.allocations.items()
+        }
+        # §3.5 discipline carries across the rebuild: after a re-wiring the
+        # fresh managers wait one constraint window before acting, so stale
+        # pre-scale measurements (and queue backlog) flush out first —
+        # without this, a ScaleRequest-triggered refresh would let the new
+        # manager fire another ScaleRequest every check cycle.
+        now = self.clock.now()
+        for mgr in self.managers.values():
+            horizon = max((s.constraint.window_ms
+                           for s in mgr.allocation.scopes), default=0.0)
+            mgr.defer_until(now + horizon)
+        measured_channels: set[str] = set()
+        measured_tasks: set[str] = set()
+        for r in self.reporters.values():
+            measured_channels |= r.interested_channels()
+            measured_tasks |= r.interested_tasks()
+        self.measured_channels = measured_channels
+        self.measured_tasks = measured_tasks
+
+    # -- controller attachment + shared telemetry ---------------------------
+    def attach_elastic(self, controller: ElasticController) -> None:
+        """Attach an ElasticController; its constraint's vertex is watched
+        (delivered rate + mean utilization) and scaled live, both out and
+        in."""
+        st = {"ctl": controller, "last_t": self.clock.now(),
+              "last_emitted": 0, "last_busy": 0.0}
+        self._elastic.append(st)
+        self._schedule_elastic(st, controller.c.window_ms / 2.0)
+
+    def elastic_check(self, st: dict) -> ScaleDecision | None:
+        """One telemetry sample + policy check for an attached controller;
+        applies the decision (if any) through the shared re-wiring path."""
+        ctl: ElasticController = st["ctl"]
+        now = self.clock.now()
+        tasks = self.rg.tasks_of(ctl.c.job_vertex)
+        emitted = sum(self._task_emitted(v) for v in tasks)
+        busy = sum(self._task_busy_ms(v) for v in tasks)
+        dt = max(now - st["last_t"], 1e-9)
+        rate = max(emitted - st["last_emitted"], 0) / (dt / 1e3)
+        util = max(busy - st["last_busy"], 0.0) / dt / max(len(tasks), 1)
+        st["last_t"], st["last_emitted"], st["last_busy"] = now, emitted, busy
+        d = ctl.check(now, len(tasks), rate, min(util, 1.0))
+        if d is not None and self.apply_scale_decision(d):
+            # re-baseline the counters over the re-wired task group so the
+            # next sample is not skewed by spawned/retired tasks
+            tasks = self.rg.tasks_of(ctl.c.job_vertex)
+            st["last_emitted"] = sum(self._task_emitted(v) for v in tasks)
+            st["last_busy"] = sum(self._task_busy_ms(v) for v in tasks)
+            st["last_t"] = self.clock.now()
+        return d
+
+    # -- hooks backends must provide ----------------------------------------
+    def _spawn_task(self, v) -> None:
+        raise NotImplementedError
+
+    def _open_channel(self, c) -> None:
+        raise NotImplementedError
+
+    def _unroute_channel(self, c) -> None:
+        raise NotImplementedError
+
+    def _drain_tasks(self, vs) -> None:
+        raise NotImplementedError
+
+    def _retire_task(self, v) -> None:
+        raise NotImplementedError
+
+    def _flush_task_outputs(self, v) -> None:
+        raise NotImplementedError
+
+    def _task_is_chained(self, v) -> bool:
+        raise NotImplementedError
+
+    def _task_emitted(self, v) -> int:
+        raise NotImplementedError
+
+    def _task_busy_ms(self, v) -> float:
+        raise NotImplementedError
+
+    def _schedule_elastic(self, st: dict, period_ms: float) -> None:
+        raise NotImplementedError
+
+
+def split_constraints(constraints) -> tuple[list, list[ThroughputConstraint]]:
+    """Partition a mixed constraint list into (latency, throughput) — both
+    backends accept ThroughputConstraints alongside JobConstraints."""
+    latency, throughput = [], []
+    for c in constraints:
+        if isinstance(c, ThroughputConstraint):
+            throughput.append(c)
+        else:
+            latency.append(c)
+    return latency, throughput

@@ -10,6 +10,19 @@ and dynamic task chaining at runtime.
 
 This executor is used at laptop scale (tests, examples); the discrete-event
 simulator (simulator.py) runs the identical control plane at paper scale.
+
+Elastic re-parallelization (paper §6, core/elastic.py): the engine inherits
+the shared ``RuntimeRewirer`` layer, so ``scale_out``/``scale_in`` mutate a
+RUNNING job — task threads are spawned/retired mid-run, channel senders are
+re-wired per job-edge pattern (atomic routing-list swaps, no locks on the
+hot path), retiring tasks are drained before their thread stops (no
+in-flight item is lost), and the QoS manager/reporter scopes are refreshed
+via ``compute_qos_setup``.  Both the manager's ``ScaleRequest``
+countermeasure and attached ``ElasticController``s drive this path —
+exactly the same code the simulator executes at paper scale.
+
+``run(duration)`` is now ``start()`` + sleep + ``stop()``; tests and
+long-lived servers can call start/stop directly and mutate in between.
 """
 from __future__ import annotations
 
@@ -24,6 +37,7 @@ from .buffers import BufferSizingPolicy, OutputBuffer
 from .chaining import ChainRequest, DRAIN_QUEUES
 from .clock import Clock, RealClock
 from .constraints import JobConstraint
+from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
 from .graphs import ALL_TO_ALL, Channel, JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReporter, Tag
@@ -46,6 +60,15 @@ class SourceSpec:
     rate_items_per_s: float
     make_payload: Callable[[int], tuple[Any, int]]  # seq -> (payload, size_bytes)
     key_of: Callable[[int], int] = lambda seq: seq
+    #: optional bursty pacing: elapsed_ms -> items/s, overrides the fixed
+    #: rate (same contract as SimSourceSpec.rate_fn — shared benchmark
+    #: scenarios run unchanged on both backends)
+    rate_fn: Callable[[float], float] | None = None
+
+    def rate_at(self, elapsed_ms: float) -> float:
+        if self.rate_fn is not None:
+            return self.rate_fn(elapsed_ms)
+        return self.rate_items_per_s
 
 
 @dataclass
@@ -59,6 +82,7 @@ class EngineResult:
     manager_history: list
     give_ups: list[GiveUp]
     chained_groups: list[tuple[str, ...]]
+    scale_log: list = field(default_factory=list)
 
     @property
     def mean_latency_ms(self) -> float:
@@ -165,6 +189,7 @@ class TaskExecutor:
         self.senders: dict[str, list[ChannelSender]] = {}  # dst job vertex -> senders
         self._rr: dict[str, int] = {}
         self.chained = False          # this task was pulled into another thread
+        self.retired = False          # elastically scaled in (thread stopped)
         self.paused = threading.Event()
         self.paused.set()             # set == running
         self.idle = threading.Event()
@@ -173,6 +198,8 @@ class TaskExecutor:
         self.drained = threading.Event()
         self._pending_task_sample: float | None = None
         self._busy_ms = 0.0
+        self.busy_ms_total = 0.0      # lifetime busy time (elastic telemetry)
+        self.emitted = 0              # lifetime emissions (elastic telemetry)
         self._window_start = engine.clock.now()
         self.thread: threading.Thread | None = None
 
@@ -197,6 +224,7 @@ class TaskExecutor:
                 cur.created_at_ms if cur else now),
             key=key if key is not None else (cur.key if cur else 0),
         )
+        self.emitted += 1
         for dst_jv, senders in self.senders.items():
             if len(senders) == 1:
                 senders[0].send(item)
@@ -235,7 +263,9 @@ class TaskExecutor:
                 self.emit(item.payload)  # identity
         finally:
             self._current_item = None
-            self._busy_ms += (time.perf_counter() - t0) * 1e3
+            dt = (time.perf_counter() - t0) * 1e3
+            self._busy_ms += dt
+            self.busy_ms_total += dt
 
     def process_batch(self, items: list[StreamItem], in_channel_id: str) -> None:
         """Batch mode: one fn call per delivered output buffer — the buffer
@@ -265,7 +295,9 @@ class TaskExecutor:
                 self.fn([it.payload for it in items], self.emit, self)
         finally:
             self._current_item = None
-            self._busy_ms += (time.perf_counter() - t0) * 1e3
+            dt = (time.perf_counter() - t0) * 1e3
+            self._busy_ms += dt
+            self.busy_ms_total += dt
 
     # -- thread body ------------------------------------------------------------------
     def run(self) -> None:
@@ -318,11 +350,11 @@ class TaskExecutor:
 # ---------------------------------------------------------------------------
 
 
-class StreamEngine:
+class StreamEngine(RuntimeRewirer):
     def __init__(
         self,
         jg: JobGraph,
-        constraints: list[JobConstraint],
+        constraints: list,
         num_workers: int,
         sources: dict[str, SourceSpec],
         initial_buffer_bytes: int = 32 * 1024,
@@ -333,16 +365,22 @@ class StreamEngine:
         clock: Clock | None = None,
     ) -> None:
         self.jg = jg
-        self.constraints = constraints
+        # latency (JobConstraint) and throughput (ThroughputConstraint) goals
+        # may be mixed in ``constraints``; only latency ones go through the
+        # §3.4.2 setup — throughput ones arm the scale-out countermeasure.
+        self.constraints, self.throughput_constraints = split_constraints(
+            constraints)
         self.rg = RuntimeGraph(jg, num_workers)
         self.sources = sources
         self.clock = clock or RealClock()
         self.enable_qos = enable_qos
         self.enable_chaining = enable_chaining
         self.interval_ms = measurement_interval_ms
+        self.initial_buffer_bytes = initial_buffer_bytes
+        self.policy = policy
 
         # QoS setup (master, §3.4.2)
-        self.allocations = compute_qos_setup(jg, constraints, self.rg)
+        self.allocations = compute_qos_setup(jg, self.constraints, self.rg)
         self.reporter_setup = compute_reporter_setup(self.allocations, self.rg)
         self.reporters: dict[int, QoSReporter] = {
             w: QoSReporter(w, self.clock, measurement_interval_ms)
@@ -355,7 +393,8 @@ class StreamEngine:
             for mgr, chans in routes.items():
                 self.reporters[w].assign_manager(mgr, chans, ())
         self.managers: dict[int, QoSManager] = {
-            w: QoSManager(alloc, self.rg, self.clock, policy=policy)
+            w: QoSManager(alloc, self.rg, self.clock, policy=policy,
+                          throughput_constraints=self.throughput_constraints)
             for w, alloc in self.allocations.items()
         }
         self.measured_channels: set[str] = set()
@@ -382,6 +421,12 @@ class StreamEngine:
         self._stop = threading.Event()
         self._chained_groups: list[tuple[str, ...]] = []
         self._give_ups: list[GiveUp] = []
+        self._threads: list[threading.Thread] = []
+        self._closed_senders: list[ChannelSender] = []
+        self._ctrl: threading.Thread | None = None
+        self._running = False
+        self._t0 = 0.0
+        self._init_rewirer()
 
     # -- stats ---------------------------------------------------------------------
     def record_sink_latency(self, lat_ms: float) -> None:
@@ -396,6 +441,15 @@ class StreamEngine:
     # -- delivery ---------------------------------------------------------------------
     def deliver(self, channel: Channel, items: list[StreamItem]) -> None:
         dst = self.executors[channel.dst]
+        if dst.retired:
+            # straggler delivery to an elastically retired task: hand the
+            # items to a surviving sibling so nothing is lost — falling
+            # through to the chained check below, since a chained sibling's
+            # thread is gone and its inbox is never drained
+            group = self.rg.tasks_of(channel.dst.job_vertex)
+            if not group:
+                return
+            dst = self.executors[group[items[0].key % len(group)]]
         if dst.chained:
             # the task was pulled into a chain: its thread is gone, items are
             # handed over synchronously in the caller's thread
@@ -410,7 +464,6 @@ class StreamEngine:
     # -- source pacing ------------------------------------------------------------------
     def _source_body(self, v: RuntimeVertex, spec: SourceSpec) -> None:
         ex = self.executors[v]
-        period_s = 1.0 / max(spec.rate_items_per_s, 1e-9)
         seq = 0
         next_t = time.monotonic()
         while not self._stop.is_set():
@@ -419,7 +472,8 @@ class StreamEngine:
             if now < next_t:
                 time.sleep(min(next_t - now, 0.05))
                 continue
-            next_t += period_s
+            rate = spec.rate_at(self.clock.now() - self._t0)
+            next_t += 1.0 / max(rate, 1e-9)
             payload, size = spec.make_payload(seq)
             item = StreamItem(payload, size, self.clock.now(), key=spec.key_of(seq))
             t0 = time.perf_counter()
@@ -431,7 +485,9 @@ class StreamEngine:
                     ex.emit(payload)
             finally:
                 ex._current_item = None
-                ex._busy_ms += (time.perf_counter() - t0) * 1e3
+                dt = (time.perf_counter() - t0) * 1e3
+                ex._busy_ms += dt
+                ex.busy_ms_total += dt
             seq += 1
 
     # -- QoS control loop ------------------------------------------------------------------
@@ -439,30 +495,51 @@ class StreamEngine:
         while not self._stop.is_set():
             time.sleep(self.interval_ms / 1e3 / 4)
             # cpu utilization sampling feeds the chaining precondition
-            for v, ex in self.executors.items():
-                if v.id in self.measured_tasks:
+            # (snapshot: elastic re-wiring swaps these dicts live)
+            measured = self.measured_tasks
+            for v, ex in list(self.executors.items()):
+                if v.id in measured and not ex.retired:
                     self.reporters[self.rg.worker(v)].record_task_cpu(
                         v.id, ex.cpu_utilization(), ex.chained
                     )
             # reporters -> managers
-            for rep in self.reporters.values():
+            managers = self.managers
+            for rep in list(self.reporters.values()):
                 for mgr_id, report in rep.maybe_flush():
-                    self.managers[mgr_id].receive_report(report)
+                    mgr = managers.get(mgr_id)
+                    if mgr is not None:
+                        mgr.receive_report(report)
+            # attached elastic controllers sample on their own cadence
+            for st in list(self._elastic):
+                if self.clock.now() >= st.get("next_ms", 0.0):
+                    st["next_ms"] = self.clock.now() + st["period_ms"]
+                    self.elastic_check(st)
             if not self.enable_qos:
                 continue
             # managers act
-            for mgr in self.managers.values():
+            for mgr in list(self.managers.values()):
                 for action in mgr.check():
                     self._route_action(action)
 
     def _route_action(self, action: Action) -> None:
         if isinstance(action, BufferSizeUpdate):
-            self.senders[action.channel_id].try_update_size(
-                action.new_size_bytes, action.base_version
-            )
+            sender = self.senders.get(action.channel_id)
+            if sender is not None:
+                sender.try_update_size(
+                    action.new_size_bytes, action.base_version
+                )
         elif isinstance(action, ChainRequest):
             if self.enable_chaining:
                 self.apply_chain(action)
+        elif isinstance(action, ScaleRequest):
+            try:
+                self.scale_out(action.job_vertex, action.to_parallelism,
+                               reason=action.reason)
+            except ValueError:
+                # vertex not scalable (source / POINTWISE-pinned): the
+                # countermeasure is inapplicable, never fatal to the
+                # control loop
+                pass
         elif isinstance(action, GiveUp):
             self._give_ups.append(action)
 
@@ -508,36 +585,164 @@ class StreamEngine:
         finally:
             head.paused.set()
 
-    # -- run --------------------------------------------------------------------------------
-    def run(self, duration_ms: float) -> EngineResult:
-        threads: list[threading.Thread] = []
-        for v, ex in self.executors.items():
-            if v.job_vertex in self.sources:
-                th = threading.Thread(
-                    target=self._source_body,
-                    args=(v, self.sources[v.job_vertex]),
-                    daemon=True,
-                    name=f"src-{v.id}",
-                )
-            else:
-                th = threading.Thread(target=ex.run, daemon=True, name=f"task-{v.id}")
-                ex.thread = th
-            threads.append(th)
-        ctrl = threading.Thread(target=self._control_body, daemon=True, name="qos-ctrl")
-        t0 = self.clock.now()
-        for th in threads:
-            th.start()
-        ctrl.start()
-        time.sleep(duration_ms / 1e3)
-        self._stop.set()
-        for ex in self.executors.values():
-            ex.stop_flag = True
-            ex.inbox.put(None)
-        for th in threads:
+    # -- elastic re-wiring hooks (RuntimeRewirer; see core/elastic.py) -------------------
+    def _start_task_thread(self, v: RuntimeVertex, ex: TaskExecutor) -> None:
+        if v.job_vertex in self.sources:
+            th = threading.Thread(
+                target=self._source_body,
+                args=(v, self.sources[v.job_vertex]),
+                daemon=True,
+                name=f"src-{v.id}",
+            )
+        else:
+            th = threading.Thread(target=ex.run, daemon=True, name=f"task-{v.id}")
+        ex.thread = th
+        self._threads.append(th)
+        th.start()
+
+    def _spawn_task(self, v: RuntimeVertex) -> None:
+        ex = TaskExecutor(v, self)
+        executors = dict(self.executors)
+        executors[v] = ex
+        self.executors = executors  # atomic swap: hot paths never see a gap
+        if self._running:
+            self._start_task_thread(v, ex)
+
+    def _open_channel(self, c: Channel) -> None:
+        s = ChannelSender(c, self, self.initial_buffer_bytes)
+        senders = dict(self.senders)
+        senders[c.id] = s
+        self.senders = senders
+        src_ex = self.executors[c.src]
+        cur = list(src_ex.senders.get(c.dst.job_vertex, ()))
+        cur.append(s)
+        cur.sort(key=lambda sd: sd.channel.dst.index)
+        # atomic list swap — emitting threads either see the old or the new
+        # routing group, never a half-built one
+        src_ex.senders[c.dst.job_vertex] = cur
+
+    def _unroute_channel(self, c: Channel) -> None:
+        src_ex = self.executors.get(c.src)
+        s = self.senders.get(c.id)
+        if src_ex is not None and s is not None:
+            cur = [x for x in src_ex.senders.get(c.dst.job_vertex, ())
+                   if x is not s]
+            src_ex.senders[c.dst.job_vertex] = cur
+        if s is not None:
+            # an emitting thread may have picked the old routing list just
+            # before the swap; flush, give it a grace period, flush again so
+            # its item still ships before the destination drains.  The sender
+            # is kept on a closed list and flushed once more at stop() —
+            # deliver() reroutes anything late to a surviving sibling, so no
+            # item is ever lost to this race.
+            s.flush()
+            time.sleep(0.02)
+            s.flush()
+            self._closed_senders.append(s)
+        senders = dict(self.senders)
+        senders.pop(c.id, None)
+        self.senders = senders
+
+    def _drain_tasks(self, vs) -> None:
+        deadline = time.monotonic() + 5.0
+        for v in vs:
+            ex = self.executors.get(v)
+            if ex is None:
+                continue
+            while time.monotonic() < deadline:
+                if ex.inbox.empty() and ex.idle.is_set():
+                    break
+                time.sleep(0.005)
+
+    def _retire_task(self, v: RuntimeVertex) -> None:
+        ex = self.executors.get(v)
+        if ex is None:
+            return
+        ex.retired = True  # deliver() reroutes stragglers to siblings
+        ex.stop_flag = True
+        ex.inbox.put(None)
+        th = ex.thread
+        if th is not None and th.is_alive():
             th.join(timeout=2.0)
-        ctrl.join(timeout=2.0)
-        dur = self.clock.now() - t0
-        history = []
+
+    def _flush_task_outputs(self, v: RuntimeVertex) -> None:
+        ex = self.executors.get(v)
+        if ex is None:
+            return
+        closed: set[str] = set()
+        for senders_list in list(ex.senders.values()):
+            for s in list(senders_list):
+                s.flush()
+                closed.add(s.channel.id)
+        if closed:
+            self.senders = {
+                k: s for k, s in self.senders.items() if k not in closed
+            }
+
+    def _task_is_chained(self, v: RuntimeVertex) -> bool:
+        ex = self.executors.get(v)
+        return ex is not None and ex.chained
+
+    def _task_emitted(self, v: RuntimeVertex) -> int:
+        ex = self.executors.get(v)
+        return 0 if ex is None else ex.emitted
+
+    def _task_busy_ms(self, v: RuntimeVertex) -> float:
+        ex = self.executors.get(v)
+        return 0.0 if ex is None else ex.busy_ms_total
+
+    def _schedule_elastic(self, st: dict, period_ms: float) -> None:
+        # the QoS control thread polls attached controllers on their cadence
+        st["period_ms"] = period_ms
+        st["next_ms"] = self.clock.now() + period_ms
+
+    # -- run --------------------------------------------------------------------------------
+    def start(self) -> None:
+        """Start all task/source threads and the QoS control loop; the job
+        then runs until ``stop()`` and may be mutated live (scale_out/in)."""
+        if self._running:
+            raise RuntimeError("engine already running")
+        self._running = True
+        self._t0 = self.clock.now()
+        for v, ex in list(self.executors.items()):
+            self._start_task_thread(v, ex)
+        self._ctrl = threading.Thread(
+            target=self._control_body, daemon=True, name="qos-ctrl")
+        self._ctrl.start()
+
+    def stop(self) -> EngineResult:
+        """Stop sources, then drain layer by layer in topological order so
+        every in-flight item reaches the sinks (item conservation), and
+        collect the result."""
+        self._stop.set()  # sources + control loop wind down
+        for jv_name in self.jg.topological_order():
+            group = list(self.rg.tasks_of(jv_name))
+            for v in group:
+                ex = self.executors.get(v)
+                if ex is None:
+                    continue
+                if jv_name not in self.sources:
+                    ex.stop_flag = True
+                    ex.inbox.put(None)
+                th = ex.thread
+                if th is not None and th.is_alive():
+                    th.join(timeout=2.0)
+            # this layer is quiet: push its buffered output to the next one
+            for v in group:
+                ex = self.executors.get(v)
+                if ex is None:
+                    continue
+                for senders_list in list(ex.senders.values()):
+                    for s in list(senders_list):
+                        s.flush()
+            for s in self._closed_senders:
+                if s.channel.src.job_vertex == jv_name:
+                    s.flush()  # scale-in stragglers; deliver() reroutes
+        if self._ctrl is not None:
+            self._ctrl.join(timeout=2.0)
+        self._running = False
+        dur = self.clock.now() - self._t0
+        history = list(self._manager_history_archive)
         for mgr in self.managers.values():
             history.extend(mgr.history)
         return EngineResult(
@@ -552,4 +757,10 @@ class StreamEngine:
             manager_history=history,
             give_ups=self._give_ups,
             chained_groups=self._chained_groups,
+            scale_log=list(self.scale_log),
         )
+
+    def run(self, duration_ms: float) -> EngineResult:
+        self.start()
+        time.sleep(duration_ms / 1e3)
+        return self.stop()

@@ -263,17 +263,21 @@ class RuntimeGraph:
             "workers": self.num_workers,
         }
 
-    # -- elastic scale-out (paper §6 future work; core/elastic.py) ----------
+    # -- elastic re-parallelization (paper §6 future work; core/elastic.py) --
+    def _check_elastic_edges(self, job_vertex: str, verb: str) -> None:
+        jg = self.job_graph
+        for e in jg.in_edges(job_vertex) + jg.out_edges(job_vertex):
+            if e.pattern != ALL_TO_ALL:
+                raise ValueError(
+                    f"cannot {verb} {job_vertex}: edge {e} is {e.pattern}")
+
     def grow_vertex(self, job_vertex: str, new_parallelism: int
                     ) -> tuple[list[RuntimeVertex], list[Channel]]:
         """Add subtasks to ``job_vertex`` and wire them with the existing
         job-edge patterns.  Only ALL_TO_ALL neighbourhoods are growable
         (POINTWISE wiring pins parallelism to the peer's)."""
         jg = self.job_graph
-        for e in jg.in_edges(job_vertex) + jg.out_edges(job_vertex):
-            if e.pattern != ALL_TO_ALL:
-                raise ValueError(
-                    f"cannot grow {job_vertex}: edge {e} is {e.pattern}")
+        self._check_elastic_edges(job_vertex, "grow")
         group = self._by_job_vertex[job_vertex]
         old_n = len(group)
         if new_parallelism <= old_n:
@@ -305,6 +309,45 @@ class RuntimeGraph:
                     self._by_job_edge[(job_vertex, e.dst)].append(ch)
                     new_cs.append(ch)
         return new_vs, new_cs
+
+    def shrink_vertex(self, job_vertex: str, new_parallelism: int
+                      ) -> tuple[list[RuntimeVertex], list[Channel]]:
+        """Retire the highest-index subtasks of ``job_vertex`` down to
+        ``new_parallelism`` and unlink their channels.  Returns the retired
+        vertices and removed channels; the execution layer is responsible for
+        draining the retired tasks before it stops them.
+
+        The ``worker(v)`` mapping of retired vertices is intentionally kept:
+        in-flight items and late telemetry may still reference them while the
+        backend quiesces.
+        """
+        self._check_elastic_edges(job_vertex, "shrink")
+        group = self._by_job_vertex[job_vertex]
+        old_n = len(group)
+        if new_parallelism >= old_n or new_parallelism < 1:
+            return [], []
+        retired = group[new_parallelism:]
+        del group[new_parallelism:]
+        retired_set = set(retired)
+        removed_cs = [c for c in self.channels
+                      if c.src in retired_set or c.dst in retired_set]
+        removed_set = set(removed_cs)
+        self.vertices = [v for v in self.vertices if v not in retired_set]
+        self.channels = [c for c in self.channels if c not in removed_set]
+        for v in retired:
+            self._out.pop(v, None)
+            self._in.pop(v, None)
+        for c in removed_cs:
+            if c.src not in retired_set:
+                self._out[c.src] = [x for x in self._out[c.src] if x != c]
+            if c.dst not in retired_set:
+                self._in[c.dst] = [x for x in self._in[c.dst] if x != c]
+        for key, chans in self._by_job_edge.items():
+            if job_vertex in key:
+                self._by_job_edge[key] = [
+                    c for c in chans if c not in removed_set
+                ]
+        return retired, removed_cs
 
 
 # ---------------------------------------------------------------------------

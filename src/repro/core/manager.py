@@ -13,7 +13,12 @@ QoS Reporters, and reacts to latency-constraint violations:
    sequence's channels (Eq. 2/3, first-writer-wins versioning), then dynamic
    task chaining (longest chainable series); after each adjustment the
    manager waits one constraint window so that stale measurements flush out,
-3. when preconditions for further countermeasures are exhausted and the
+3. elastic scale-out (§6, core/elastic.py) as the third countermeasure:
+   when buffers and chaining are exhausted but a throughput-constrained
+   stage on the violated path is saturated, the manager emits a
+   ``ScaleRequest`` that the execution layer routes to the shared runtime
+   re-wiring layer (``RuntimeRewirer``),
+4. when preconditions for all countermeasures are exhausted and the
    constraint still stands violated, the failure is reported to the master
    (who notifies the user).
 """
@@ -27,6 +32,7 @@ from .buffers import BufferSizingPolicy
 from .chaining import ChainRequest, TaskRuntimeInfo, find_chain
 from .clock import Clock
 from .constraints import JobConstraint
+from .elastic import ScaleRequest, ThroughputConstraint
 from .graphs import Channel, RuntimeGraph, RuntimeVertex
 from .measurement import QoSReport
 from .setup import ConstraintScope, ManagerAllocation
@@ -56,7 +62,7 @@ class GiveUp:
     estimate_ms: float
 
 
-Action = BufferSizeUpdate | ChainRequest | GiveUp
+Action = BufferSizeUpdate | ChainRequest | ScaleRequest | GiveUp
 
 
 # ---------------------------------------------------------------------------
@@ -121,6 +127,10 @@ class QoSManager:
         policy: BufferSizingPolicy | None = None,
         cpu_threshold: float = 0.90,
         chain_mode: str = "drain",
+        throughput_constraints: Iterable[ThroughputConstraint] = (),
+        scale_step: int = 2,
+        scale_max_parallelism: int = 64,
+        scale_util_threshold: float = 0.85,
     ) -> None:
         self.worker = allocation.worker
         self.allocation = allocation
@@ -129,6 +139,10 @@ class QoSManager:
         self.policy = policy or BufferSizingPolicy()
         self.cpu_threshold = cpu_threshold
         self.chain_mode = chain_mode
+        self.throughput_constraints = tuple(throughput_constraints)
+        self.scale_step = scale_step
+        self.scale_max_parallelism = scale_max_parallelism
+        self.scale_util_threshold = scale_util_threshold
 
         max_window = max(
             (s.constraint.window_ms for s in allocation.scopes), default=15_000.0
@@ -403,6 +417,14 @@ class QoSManager:
             return None
         return res.worst_estimate_ms, res.worst_elements
 
+    def defer_until(self, until_ms: float) -> None:
+        """Hold all countermeasure cycles until ``until_ms`` (used by the
+        re-wiring layer so a freshly scoped manager waits one constraint
+        window before acting — §3.5's post-adjustment discipline)."""
+        for idx in range(len(self.allocation.scopes)):
+            self._scope_cooldown_until[idx] = max(
+                self._scope_cooldown_until.get(idx, 0.0), until_ms)
+
     # -- main control step -------------------------------------------------------
     def check(self) -> list[Action]:
         """Run one violation-detection + countermeasure cycle; returns actions
@@ -518,4 +540,49 @@ class QoSManager:
             )
             if req is not None:
                 return [req]
+        # 3. elastic scale-out (§6): buffers settled and no chain available.
+        #    If a throughput-constrained stage on this path is saturated, the
+        #    latency violation is a capacity problem — request more replicas
+        #    instead of giving up.
+        scale = self._propose_scale(scope)
+        if scale is not None:
+            return [scale]
         return []
+
+    def _vertex_is_scalable(self, job_vertex: str) -> bool:
+        """Mirror the re-wiring layer's preconditions: sources and
+        POINTWISE-pinned neighbourhoods cannot be re-parallelized, so no
+        ScaleRequest may target them."""
+        jg = self.rg.job_graph
+        in_edges = jg.in_edges(job_vertex)
+        if not in_edges or jg.vertices[job_vertex].is_source:
+            return False
+        from .graphs import ALL_TO_ALL
+        return all(e.pattern == ALL_TO_ALL
+                   for e in in_edges + jg.out_edges(job_vertex))
+
+    def _propose_scale(self, scope: ConstraintScope) -> ScaleRequest | None:
+        for tc in self.throughput_constraints:
+            if tc.job_vertex not in scope.path:
+                continue
+            if not self._vertex_is_scalable(tc.job_vertex):
+                continue
+            tasks = self.rg.tasks_of(tc.job_vertex)
+            utils = [self._task_cpu[v.id][0] for v in tasks
+                     if v.id in self._task_cpu]
+            if not utils:
+                continue
+            mean_util = sum(utils) / len(utils)
+            if mean_util < self.scale_util_threshold:
+                continue  # not saturated: more replicas would not help
+            cap = min(self.scale_max_parallelism, tc.max_parallelism)
+            cur = len(tasks)
+            if cur >= cap:
+                continue
+            return ScaleRequest(
+                tc.job_vertex, cur,
+                min(cur + self.scale_step, cap),
+                f"latency violated with {tc.job_vertex} saturated "
+                f"(util {mean_util:.2f})",
+            )
+        return None

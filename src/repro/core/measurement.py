@@ -156,6 +156,13 @@ class QoSReporter:
             self._mgr_offset[manager_id] = self.rng.uniform(0, self.interval_ms)
             self._last_flush[manager_id] = -float("inf")
 
+    def reset_assignments(self) -> None:
+        """Drop manager routes ahead of a QoS-setup refresh (elastic
+        re-wiring): per-manager flush offsets/cadence survive, so managers
+        that persist across the refresh keep their report rhythm."""
+        self._mgr_channels.clear()
+        self._mgr_tasks.clear()
+
     def interested_channels(self) -> set[str]:
         out: set[str] = set()
         for s in self._mgr_channels.values():

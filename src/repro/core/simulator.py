@@ -12,6 +12,15 @@ Simplifications vs. the threaded engine (recorded here on purpose):
 * CPython thread-scheduling noise is absent — latencies are deterministic,
 * per-worker CPU contention is modeled per task only (a worker is assumed to
   have enough cores for its unchained tasks, like the paper's 8-core nodes).
+
+Elastic re-parallelization (paper §6) goes through the SAME shared runtime
+re-wiring layer as the threaded engine (core/elastic.py RuntimeRewirer):
+``scale_out``/``scale_in`` mutate the running simulation — tasks join or
+retire, channels re-wire per job-edge pattern, retiring tasks hand their
+queues to surviving siblings (no item loss), and QoS manager/reporter
+scopes are refreshed.  Attached ``ElasticController``s and the manager's
+``ScaleRequest`` countermeasure drive the identical ``ScaleDecision`` path
+on both backends.
 """
 from __future__ import annotations
 
@@ -26,6 +35,7 @@ from .buffers import BufferSizingPolicy, OutputBuffer
 from .chaining import ChainRequest
 from .clock import SimClock
 from .constraints import JobConstraint
+from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
 from .graphs import JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReporter, Tag
@@ -64,6 +74,14 @@ class SimSourceSpec:
     #: forwards each stream group to the one Decoder responsible for it.
     keys: int | None = None
     keys_per_task: int | None = None
+    #: optional bursty pacing: elapsed_ms -> items/s (same contract as
+    #: SourceSpec.rate_fn on the threaded engine)
+    rate_fn: Callable[[float], float] | None = None
+
+    def rate_at(self, elapsed_ms: float) -> float:
+        if self.rate_fn is not None:
+            return self.rate_fn(elapsed_ms)
+        return self.rate_items_per_s
 
 
 class _WorkerCPU:
@@ -165,6 +183,7 @@ class _SimTask:
         self.queue: deque[SimItem] = deque()
         self.busy = False
         self.halted = False
+        self.retired = False           # elastically scaled in
         self.chained_into: RuntimeVertex | None = None  # member of a chain
         self.chain_next: RuntimeVertex | None = None    # next stage if chained
         self._fan_count = 0
@@ -177,6 +196,15 @@ class _SimTask:
         self._inflight_since: float | None = None
 
     def enqueue(self, items: list[SimItem], channel_id: str) -> None:
+        if self.retired:
+            # straggler delivery after scale-in: hand over to surviving
+            # siblings so nothing is lost
+            group = self.sim.rg.tasks_of(self.vertex.job_vertex)
+            if group:
+                for it in items:
+                    self.sim.tasks[group[it.key % len(group)]].enqueue(
+                        [it], channel_id)
+                return
         self.queue.extend(items)
         self._try_start()
 
@@ -281,13 +309,17 @@ class _SimTask:
                 sim.tasks[ch.channel.dst].enqueue([item], ch.channel.id)
             else:
                 ch.send(item)
+                if self.retired:
+                    # the channel was unlinked from the runtime graph; no
+                    # later buffer-full event will flush it, so ship now
+                    ch.flush()
 
 
-class StreamSimulator:
+class StreamSimulator(RuntimeRewirer):
     def __init__(
         self,
         jg: JobGraph,
-        constraints: list[JobConstraint],
+        constraints: list,
         num_workers: int,
         sources: dict[str, SimSourceSpec],
         initial_buffer_bytes: int = 32 * 1024,
@@ -301,18 +333,21 @@ class StreamSimulator:
         cores_per_worker: int = 8,
     ) -> None:
         self.jg = jg
-        self.constraints = constraints
+        self.constraints, self.throughput_constraints = split_constraints(
+            constraints)
         self.rg = RuntimeGraph(jg, num_workers)
         self.clock = SimClock()
         self.net = net or SimNetConfig()
         self.enable_qos = enable_qos
         self.enable_chaining = enable_chaining
         self.interval_ms = measurement_interval_ms
+        self.initial_buffer_bytes = initial_buffer_bytes
+        self.policy = policy
         self.rng = random.Random(seed)
         self.sources = sources
         self.latency_bucket_ms = latency_bucket_ms
 
-        self.allocations = compute_qos_setup(jg, constraints, self.rg)
+        self.allocations = compute_qos_setup(jg, self.constraints, self.rg)
         self.reporter_setup = compute_reporter_setup(self.allocations, self.rg)
         self.reporters = {
             w: QoSReporter(w, self.clock, measurement_interval_ms,
@@ -326,7 +361,8 @@ class StreamSimulator:
             for mgr, chans in routes.items():
                 self.reporters[w].assign_manager(mgr, chans, ())
         self.managers = {
-            w: QoSManager(alloc, self.rg, self.clock, policy=policy)
+            w: QoSManager(alloc, self.rg, self.clock, policy=policy,
+                          throughput_constraints=self.throughput_constraints)
             for w, alloc in self.allocations.items()
         }
         self.measured_channels: set[str] = set()
@@ -352,8 +388,8 @@ class StreamSimulator:
 
         self.chained_channels: dict[str, bool] = {}
         self.chained_groups: list[tuple[str, ...]] = []
-        self._elastic: list = []  # (controller,) attached via attach_elastic
         self.give_ups: list[GiveUp] = []
+        self._init_rewirer()
         self.sink_latencies: list[float] = []
         self.latency_timeline: dict[int, tuple[float, int]] = {}
         self.total_bytes = 0
@@ -381,30 +417,44 @@ class StreamSimulator:
 
     def _control_tick(self) -> None:
         tick = self.interval_ms / 4.0
-        for v in self.rg.vertices:
+        for v in list(self.rg.vertices):
             if v.id in self.measured_tasks:
                 t = self.tasks[v]
                 self.reporters[self.rg.worker(v)].record_task_cpu(
                     v.id, self._cpu_utilization(v, tick),
                     t.chained_into is not None or t.chain_next is not None,
                 )
+        managers = self.managers
         for rep in self.reporters.values():
             for mgr_id, report in rep.maybe_flush():
-                self.managers[mgr_id].receive_report(report)
+                mgr = managers.get(mgr_id)
+                if mgr is not None:
+                    mgr.receive_report(report)
         if self.enable_qos:
-            for mgr in self.managers.values():
+            # snapshot: a routed ScaleRequest rebuilds self.managers live
+            for mgr in list(self.managers.values()):
                 for action in mgr.check():
                     self._route_action(action)
         self.schedule(self.clock.now() + tick, self._control_tick)
 
     def _route_action(self, action: Action) -> None:
         if isinstance(action, BufferSizeUpdate):
-            self.channels[action.channel_id].buffer.try_update_size(
-                action.new_size_bytes, action.base_version
-            )
+            ch = self.channels.get(action.channel_id)
+            if ch is not None:
+                ch.buffer.try_update_size(
+                    action.new_size_bytes, action.base_version
+                )
         elif isinstance(action, ChainRequest):
             if self.enable_chaining:
                 self._apply_chain(action)
+        elif isinstance(action, ScaleRequest):
+            try:
+                self.scale_out(action.job_vertex, action.to_parallelism,
+                               reason=action.reason)
+            except ValueError:
+                # vertex not scalable: inapplicable countermeasure, never
+                # fatal to the simulation
+                pass
         elif isinstance(action, GiveUp):
             self.give_ups.append(action)
 
@@ -424,51 +474,79 @@ class StreamSimulator:
             self.tasks[b].chained_into = req.tasks[0]
         self.chained_groups.append(tuple(v.id for v in req.tasks))
 
-    # -- elastic throughput scaling (core/elastic.py; paper §6) -------------------
-    def attach_elastic(self, controller) -> None:
-        """Attach an ElasticController; its constraint's vertex is watched
-        and scaled live."""
-        self._elastic.append({
-            "ctl": controller, "last_t": 0.0, "last_emitted": 0,
-            "last_busy": 0.0,
-        })
-        period = controller.c.window_ms / 2.0
-        self.schedule(period, self._make_elastic_tick(self._elastic[-1],
-                                                      period))
+    # -- elastic re-wiring hooks (RuntimeRewirer; core/elastic.py, paper §6) ------
+    def _spawn_task(self, v: RuntimeVertex) -> None:
+        self.tasks[v] = _SimTask(v, self)
 
-    def _make_elastic_tick(self, st, period):
+    def _open_channel(self, c) -> None:
+        sc = _SimChannel(c, self, self.initial_buffer_bytes)
+        self.channels[c.id] = sc
+        src_task = self.tasks[c.src]
+        lst = list(src_task.out_by_jv.get(c.dst.job_vertex, ()))
+        lst.append(sc)
+        lst.sort(key=lambda s2: s2.channel.dst.index)
+        src_task.out_by_jv[c.dst.job_vertex] = lst
+
+    def _unroute_channel(self, c) -> None:
+        src_task = self.tasks.get(c.src)
+        sc = self.channels.get(c.id)
+        if src_task is not None and sc is not None:
+            src_task.out_by_jv[c.dst.job_vertex] = [
+                x for x in src_task.out_by_jv.get(c.dst.job_vertex, ())
+                if x is not sc
+            ]
+        if sc is not None:
+            sc.flush()  # ship what the closed channel still buffers
+        self.channels.pop(c.id, None)
+
+    def _drain_tasks(self, vs) -> None:
+        # event model: retiring tasks hand their queues to surviving
+        # siblings at retire time; nothing to wait on
+        pass
+
+    def _retire_task(self, v: RuntimeVertex) -> None:
+        t = self.tasks.get(v)
+        if t is None:
+            return
+        t.retired = True
+        group = self.rg.tasks_of(v.job_vertex)
+        items = list(t.queue)
+        t.queue.clear()
+        for it in items:
+            self.tasks[group[it.key % len(group)]].enqueue([it], "rebalance")
+
+    def _flush_task_outputs(self, v: RuntimeVertex) -> None:
+        t = self.tasks.get(v)
+        if t is None:
+            return
+        for chans in list(t.out_by_jv.values()):
+            for sc in list(chans):
+                sc.flush()
+                self.channels.pop(sc.channel.id, None)
+
+    def _task_is_chained(self, v: RuntimeVertex) -> bool:
+        t = self.tasks.get(v)
+        return t is not None and (
+            t.chained_into is not None or t.chain_next is not None)
+
+    def _task_emitted(self, v: RuntimeVertex) -> int:
+        t = self.tasks.get(v)
+        return 0 if t is None else t.emitted
+
+    def _task_busy_ms(self, v: RuntimeVertex) -> float:
+        t = self.tasks.get(v)
+        return 0.0 if t is None else t.busy_ms_total
+
+    def _schedule_elastic(self, st: dict, period_ms: float) -> None:
         def tick() -> None:
-            ctl = st["ctl"]
-            now = self.clock.now()
-            tasks = [self.tasks[v]
-                     for v in self.rg.tasks_of(ctl.c.job_vertex)]
-            emitted = sum(t.emitted for t in tasks)
-            busy = sum(t.busy_ms_total for t in tasks)
-            dt = max(now - st["last_t"], 1e-9)
-            rate = (emitted - st["last_emitted"]) / (dt / 1e3)
-            util = (busy - st["last_busy"]) / dt / max(len(tasks), 1)
-            st["last_t"], st["last_emitted"], st["last_busy"] = (
-                now, emitted, busy)
-            d = ctl.check(now, len(tasks), rate, util)
-            if d is not None and d.to_parallelism > d.from_parallelism:
-                self.apply_scale_out(d.job_vertex, d.to_parallelism)
-            self.schedule(now + period, tick)
+            self.elastic_check(st)
+            self.schedule(self.clock.now() + period_ms, tick)
 
-        return tick
+        self.schedule(self.clock.now() + period_ms, tick)
 
     def apply_scale_out(self, job_vertex: str, new_parallelism: int) -> None:
-        """Live re-wiring: new tasks + channels join the running job; the
-        upstream key-routing rebalances over the larger group."""
-        new_vs, new_cs = self.rg.grow_vertex(job_vertex, new_parallelism)
-        for v in new_vs:
-            self.tasks[v] = _SimTask(v, self)
-        for c in new_cs:
-            sc = _SimChannel(c, self, 32 * 1024)
-            self.channels[c.id] = sc
-            src_task = self.tasks[c.src]
-            src_task.out_by_jv.setdefault(c.dst.job_vertex, []).append(sc)
-            src_task.out_by_jv[c.dst.job_vertex].sort(
-                key=lambda s2: s2.channel.dst.index)
+        """Back-compat alias for the shared re-wiring path."""
+        self.scale_out(job_vertex, new_parallelism, reason="manual")
 
     # -- sources ---------------------------------------------------------------------
     def _start_sources(self) -> None:
@@ -500,7 +578,7 @@ class StreamSimulator:
                     last.route(out)
 
             self.schedule(now + svc, done)
-            period = 1e3 / spec.rate_items_per_s
+            period = 1e3 / max(spec.rate_at(now), 1e-9)
             self.schedule(now + period, self._make_source_event(v, spec, seq + 1))
 
         return fire
@@ -519,7 +597,7 @@ class StreamSimulator:
             n_events += 1
             if max_events is not None and n_events >= max_events:
                 break
-        history = []
+        history = list(self._manager_history_archive)
         for mgr in self.managers.values():
             history.extend(mgr.history)
         timeline = {
@@ -538,6 +616,7 @@ class StreamSimulator:
             manager_history=history,
             total_bytes=self.total_bytes,
             total_buffers=self.total_buffers,
+            scale_log=list(self.scale_log),
         )
 
 
@@ -553,6 +632,7 @@ class SimResult:
     manager_history: list
     total_bytes: int
     total_buffers: int
+    scale_log: list = field(default_factory=list)
 
     def mean_latency_ms(self, after_ms: float = 0.0) -> float:
         if not self.latency_timeline:

@@ -15,6 +15,14 @@ The paper's two degrees of freedom, re-read for TPU serving (DESIGN.md §2.2):
   jitted calls).  The §3.6 veto applies to stages whose boundary is a
   materialization point.
 
+* **elastic scale-out -> replica autoscaling.**  With ``elastic=True`` an
+  ``ElasticController`` (core/elastic.py) watches Decode throughput +
+  utilization and grows/shrinks the Decode replica group live through the
+  shared runtime re-wiring layer — the same ``ScaleDecision`` path the
+  simulator executes at paper scale.  A ``ThroughputConstraint`` is also
+  registered with the QoS managers, arming the manager's third
+  countermeasure (scale-out before GiveUp) under the latency SLO.
+
 Pipeline:  Ingress (source) -> Prefill (batch) -> Decode -> Egress (sink).
 Batch shapes are bucketed to powers of two so the jit cache stays bounded.
 """
@@ -31,12 +39,14 @@ import numpy as np
 from ..core import (
     ALL_TO_ALL,
     POINTWISE,
+    ElasticController,
     JobConstraint,
     JobGraph,
     JobSequence,
     JobVertex,
     SourceSpec,
     StreamEngine,
+    ThroughputConstraint,
 )
 from ..core.buffers import BufferSizingPolicy
 from ..models import Model
@@ -60,6 +70,8 @@ class ServingResult:
     duration_ms: float
     chained_groups: list
     final_buffer_sizes: dict
+    scale_log: list = field(default_factory=list)
+    decode_replicas: int = 1
 
     @property
     def mean_latency_ms(self) -> float:
@@ -111,6 +123,9 @@ class QoSServer:
         enable_chaining: bool = True,
         num_workers: int = 1,
         unchainable_decode: bool = False,
+        elastic: bool = False,
+        max_decode_replicas: int = 4,
+        decode_min_rps: float | None = None,
     ) -> None:
         self.model = model
         self.params = params
@@ -165,11 +180,16 @@ class QoSServer:
         self.jg.add_vertex(JobVertex("Ingress", 1, is_source=True))
         self.jg.add_vertex(JobVertex("Prefill", 1, fn=prefill_fn,
                                      batch_fn=True))
-        self.jg.add_vertex(JobVertex("Decode", 1, fn=decode_fn,
-                                     chainable=not unchainable_decode))
+        # elastic Decode replicas must stay unchained (a fused
+        # Prefill->Decode thread cannot be re-parallelized) and need
+        # ALL_TO_ALL wiring so the replica group can grow
+        self.jg.add_vertex(JobVertex(
+            "Decode", 1, fn=decode_fn,
+            chainable=not (unchainable_decode or elastic)))
         self.jg.add_vertex(JobVertex("Egress", 1, is_sink=True))
         self.jg.add_edge("Ingress", "Prefill", POINTWISE)
-        self.jg.add_edge("Prefill", "Decode", POINTWISE)
+        self.jg.add_edge("Prefill", "Decode",
+                         ALL_TO_ALL if elastic else POINTWISE)
         self.jg.add_edge("Decode", "Egress", ALL_TO_ALL)
 
         seq = JobSequence.of(
@@ -179,6 +199,21 @@ class QoSServer:
         self.constraints = [
             JobConstraint(seq, latency_limit_ms, window_ms, name="slo")
         ]
+        self.elastic_ctl: ElasticController | None = None
+        if elastic:
+            tc = ThroughputConstraint(
+                "Decode", decode_min_rps or spec.rate_per_s,
+                window_ms=window_ms,
+                # the replica budget binds BOTH scaling authorities (the
+                # controller and the manager's ScaleRequest countermeasure)
+                max_parallelism=max_decode_replicas)
+            # registering the throughput constraint with the engine arms the
+            # manager's scale-out countermeasure under the latency SLO
+            self.constraints.append(tc)
+            self.elastic_ctl = ElasticController(
+                tc, hi_water=0.75, lo_water=0.20,
+                max_parallelism=max_decode_replicas, step=1,
+                cooldown_ms=2.0 * window_ms)
 
         rng = np.random.default_rng(0)
         counter = [0]
@@ -212,6 +247,8 @@ class QoSServer:
             enable_chaining=enable_chaining,
             policy=BufferSizingPolicy(omega_bytes=initial_buffer_bytes * 8),
         )
+        if self.elastic_ctl is not None:
+            self.engine.attach_elastic(self.elastic_ctl)
 
     # -- jit caches (bucketed batch shapes) ------------------------------------
     def _prefill_for(self, bsz: int):
@@ -236,4 +273,6 @@ class QoSServer:
             duration_ms=res.duration_ms,
             chained_groups=res.chained_groups,
             final_buffer_sizes=res.final_buffer_sizes,
+            scale_log=list(res.scale_log),
+            decode_replicas=len(self.engine.rg.tasks_of("Decode")),
         )

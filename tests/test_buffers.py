@@ -1,5 +1,8 @@
 """Adaptive output-buffer sizing, Eq. (2)/(3) (paper §3.5.1) — property
 tests on the policy invariants."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

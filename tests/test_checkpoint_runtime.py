@@ -32,6 +32,26 @@ def test_gc_keeps_latest(tmp_path):
     assert ck.steps() == [30, 40]
 
 
+def test_steps_ignores_and_cleans_stale_tmp(tmp_path):
+    """A step_<n>.tmp staging dir surviving a crash must neither break
+    steps() nor be treated as a checkpoint; startup discards it."""
+    ck = Checkpointer(tmp_path)
+    state = {"x": jnp.zeros(2)}
+    ck.save(10, state, blocking=True)
+    stale = tmp_path / "step_11.tmp"
+    stale.mkdir()
+    (stale / "partial.npy").write_bytes(b"junk")
+    assert ck.steps() == [10]
+    assert ck.latest_step() == 10
+    got, step, _ = ck.restore(state)
+    assert step == 10
+    np.testing.assert_array_equal(np.asarray(got["x"]), np.zeros(2))
+    # a fresh Checkpointer on the same dir cleans the stale staging dir
+    Checkpointer(tmp_path)
+    assert not stale.exists()
+    assert (tmp_path / "step_10").exists()
+
+
 def test_supervisor_restarts_from_checkpoint(tmp_path):
     ck = Checkpointer(tmp_path)
     sup = TrainingSupervisor(ck, save_every=5)

@@ -42,6 +42,7 @@ CONFIGS = {
 }
 
 
+@pytest.mark.slow
 @pytest.mark.parametrize("family", sorted(CONFIGS))
 def test_decode_matches_teacher_forced(family):
     cfg = CONFIGS[family]

@@ -1,6 +1,9 @@
 """Streaming data pipeline: tokenizer roundtrip (hypothesis), packing,
 replay determinism (the rollback-recovery contract)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

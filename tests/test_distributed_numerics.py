@@ -3,6 +3,8 @@ run in a subprocess with 8 host devices, compare losses for a dense and a
 MoE smoke model (this is the test class that catches wrong-math shardings,
 e.g. psum over different token sets)."""
 import json
+
+import pytest
 import subprocess
 import sys
 import textwrap
@@ -52,6 +54,7 @@ CODE = textwrap.dedent("""
 """)
 
 
+@pytest.mark.slow
 def test_distributed_loss_matches_single_device():
     r = subprocess.run([sys.executable, "-c", CODE], capture_output=True,
                        text=True, timeout=900, cwd=".")

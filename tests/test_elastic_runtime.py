@@ -1,0 +1,304 @@
+"""Live elastic re-parallelization through the shared runtime re-wiring
+layer (core/elastic.py RuntimeRewirer) — the paper's §6 countermeasure as a
+first-class runtime mutation on BOTH execution backends.
+
+Covers:
+* scale-out then scale-in round-trip on the threaded StreamEngine with
+  strict item conservation (drain loses nothing),
+* the identical bursty-workload scenario on the simulator and the threaded
+  engine, both growing and shrinking through the same ScaleDecision path,
+* the QoS manager's ScaleRequest third countermeasure (scale-out before
+  GiveUp when a throughput-constrained stage is saturated),
+* guard rails (sources and chained tasks are not scalable).
+"""
+import time
+
+import pytest
+
+from repro.core import (
+    ALL_TO_ALL,
+    ElasticController,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    ScaleRequest,
+    SimSourceSpec,
+    SourceSpec,
+    StreamEngine,
+    StreamSimulator,
+    ThroughputConstraint,
+)
+
+
+def three_stage_job(work_fn=None, work_cost_ms=4.0, work_parallelism=2):
+    """One job description usable by both backends (the simulator reads
+    sim_cpu_ms; the threaded engine runs work_fn)."""
+    jg = JobGraph("elastic-rt")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Work", work_parallelism, fn=work_fn,
+                            sim_cpu_ms=work_cost_ms, sim_item_bytes=256))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+    return jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+
+
+def make_engine(rate_fn=None, work_sleep_s=0.004, rate=225.0):
+    def work(p, emit, ctx):
+        time.sleep(work_sleep_s)
+        emit(p)
+
+    jg, jcs = three_stage_job(work_fn=work)
+    return StreamEngine(
+        jg, jcs, num_workers=2,
+        sources={"Src": SourceSpec(rate, lambda s: (b"x" * 64, 64),
+                                   rate_fn=rate_fn)},
+        initial_buffer_bytes=2048,
+        measurement_interval_ms=400.0,
+        enable_qos=False, enable_chaining=False,
+    )
+
+
+def src_emitted(eng):
+    return sum(ex.emitted for v, ex in eng.executors.items()
+               if v.job_vertex == "Src")
+
+
+# ---------------------------------------------------------------------------
+# Threaded engine: live mutation round-trip, item conservation
+# ---------------------------------------------------------------------------
+
+
+@pytest.mark.slow
+def test_engine_scale_roundtrip_conserves_items():
+    eng = make_engine(rate=150.0)
+    eng.start()
+    time.sleep(1.0)
+    assert eng.scale_out("Work", 4, reason="test")
+    assert len(eng.rg.tasks_of("Work")) == 4
+    # new tasks must actually receive work: give the spread a moment
+    time.sleep(1.0)
+    grown = [ex.emitted for v, ex in eng.executors.items()
+             if v.job_vertex == "Work" and v.index >= 2]
+    assert eng.scale_in("Work", 2, reason="test")
+    assert len(eng.rg.tasks_of("Work")) == 2
+    time.sleep(1.0)
+    res = eng.stop()
+    assert any(n > 0 for n in grown), "spawned tasks never processed items"
+    # strict conservation: every source emission reached the sinks, no item
+    # was lost in the scale-out or the drain-before-retire
+    assert src_emitted(eng) == res.items_at_sinks
+    assert [d.to_parallelism for d in res.scale_log] == [4, 2]
+
+
+@pytest.mark.slow
+def test_engine_scale_in_skips_chained_tasks():
+    eng = make_engine(rate=50.0)
+    eng.start()
+    time.sleep(0.3)
+    # simulate a chained Work subtask: it must veto retirement
+    work_tasks = eng.rg.tasks_of("Work")
+    eng.executors[work_tasks[-1]].chained = True
+    assert not eng.scale_in("Work", 1, reason="test")
+    assert len(eng.rg.tasks_of("Work")) == 2
+    eng.executors[work_tasks[-1]].chained = False
+    eng.stop()
+
+
+def test_scaling_sources_is_rejected():
+    eng = make_engine(rate=50.0)
+    with pytest.raises(ValueError):
+        eng.scale_out("Src", 4)
+    with pytest.raises(ValueError):
+        eng.scale_in("Src", 1)
+
+
+# ---------------------------------------------------------------------------
+# Identical bursty scenario on both backends (acceptance criterion)
+# ---------------------------------------------------------------------------
+
+
+def _controller(window_ms, cooldown_ms, min_rate):
+    return ElasticController(
+        ThroughputConstraint("Work", min_rate, window_ms=window_ms),
+        hi_water=0.7, lo_water=0.25, max_parallelism=8, step=2,
+        cooldown_ms=cooldown_ms)
+
+
+def test_bursty_workload_grows_and_shrinks_simulator():
+    jg, jcs = three_stage_job(work_cost_ms=4.0)
+    sim = StreamSimulator(
+        jg, jcs, num_workers=2,
+        sources={"Src": SimSourceSpec(
+            225.0, item_bytes=256, keys=64,
+            rate_fn=lambda t: 225.0 if t < 20_000.0 else 10.0)},
+        initial_buffer_bytes=2048, enable_qos=False)
+    ctl = _controller(4_000.0, 4_000.0, 500.0)
+    sim.attach_elastic(ctl)
+    sim.run(45_000.0)
+    growths = [d for d in ctl.decisions
+               if d.to_parallelism > d.from_parallelism]
+    shrinks = [d for d in ctl.decisions
+               if d.to_parallelism < d.from_parallelism]
+    assert growths and shrinks, ctl.decisions
+    # grown through the burst, shrunk back after it subsided
+    assert max(d.to_parallelism for d in growths) >= 4
+    assert len(sim.rg.tasks_of("Work")) == 2
+    assert sim.scale_log  # shared re-wiring layer recorded the mutations
+
+
+@pytest.mark.slow
+def test_bursty_workload_grows_and_shrinks_engine():
+    eng = make_engine(
+        rate_fn=lambda t: 225.0 if t < 3_000.0 else 10.0)
+    ctl = _controller(1_200.0, 1_200.0, 700.0)
+    eng.attach_elastic(ctl)
+    res = eng.run(7_000.0)
+    growths = [d for d in ctl.decisions
+               if d.to_parallelism > d.from_parallelism]
+    shrinks = [d for d in ctl.decisions
+               if d.to_parallelism < d.from_parallelism]
+    assert growths, "engine never scaled out under the burst"
+    assert shrinks, "engine never scaled back in after the burst"
+    assert len(eng.rg.tasks_of("Work")) == 2
+    # conservation holds across the full grow/shrink cycle
+    assert src_emitted(eng) == res.items_at_sinks
+    assert res.scale_log
+
+
+# ---------------------------------------------------------------------------
+# Manager third countermeasure: ScaleRequest before GiveUp
+# ---------------------------------------------------------------------------
+
+
+def test_manager_scale_request_before_giveup_simulator():
+    jg = JobGraph("m3")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Work", 2, sim_cpu_ms=4.0, sim_item_bytes=256,
+                            chainable=False))
+    jg.add_vertex(JobVertex("Sink", 2, is_sink=True, sim_cpu_ms=0.01,
+                            chainable=False))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+    sim = StreamSimulator(
+        jg,
+        [JobConstraint(seq, 30.0, 4_000.0, name="slo"),
+         ThroughputConstraint("Work", 500.0, window_ms=4_000.0)],
+        num_workers=2,
+        sources={"Src": SimSourceSpec(225.0, item_bytes=256, keys=64)},
+        initial_buffer_bytes=4096, enable_qos=True, enable_chaining=True)
+    res = sim.run(40_000.0)
+    # the saturated stage was scaled out by a manager ScaleRequest (recorded
+    # with its reason), not only given up on
+    assert any("saturated" in d.reason for d in res.scale_log), res.scale_log
+    assert len(sim.rg.tasks_of("Work")) > 2
+
+
+def test_manager_proposes_scale_request_only_when_saturated():
+    from repro.core import RuntimeGraph
+    from repro.core.manager import QoSManager
+    from repro.core.setup import compute_qos_setup
+    from repro.core.clock import SimClock
+
+    jg, jcs = three_stage_job()
+    rg = RuntimeGraph(jg, 2)
+    allocs = compute_qos_setup(jg, jcs, rg)
+    tc = ThroughputConstraint("Work", 500.0)
+    w, alloc = next(iter(allocs.items()))
+    mgr = QoSManager(alloc, rg, SimClock(), throughput_constraints=[tc])
+    scope = alloc.scopes[0]
+    # no cpu telemetry yet -> no proposal
+    assert mgr._propose_scale(scope) is None
+    for v in rg.tasks_of("Work"):
+        mgr._task_cpu[v.id] = (0.4, False)
+    assert mgr._propose_scale(scope) is None  # not saturated
+    for v in rg.tasks_of("Work"):
+        mgr._task_cpu[v.id] = (0.95, False)
+    req = mgr._propose_scale(scope)
+    assert isinstance(req, ScaleRequest)
+    assert req.job_vertex == "Work"
+    assert req.to_parallelism > req.from_parallelism
+
+
+def test_manager_never_proposes_scaling_unscalable_vertices():
+    """A ThroughputConstraint on a source or POINTWISE-pinned vertex must
+    not yield a ScaleRequest (routing one would be inapplicable)."""
+    from repro.core import RuntimeGraph
+    from repro.core.clock import SimClock
+    from repro.core.manager import QoSManager
+    from repro.core.setup import compute_qos_setup
+
+    jg, jcs = three_stage_job()
+    rg = RuntimeGraph(jg, 2)
+    allocs = compute_qos_setup(jg, jcs, rg)
+    w, alloc = next(iter(allocs.items()))
+    mgr = QoSManager(alloc, rg, SimClock(),
+                     throughput_constraints=[ThroughputConstraint("Src", 1.0)])
+    for v in rg.tasks_of("Src"):
+        mgr._task_cpu[v.id] = (0.99, False)
+    assert mgr._propose_scale(alloc.scopes[0]) is None
+
+
+def test_throughput_constraint_cap_binds_both_authorities():
+    """max_parallelism on the constraint caps the manager's ScaleRequest
+    and the ElasticController alike."""
+    from repro.core import RuntimeGraph
+    from repro.core.clock import SimClock
+    from repro.core.manager import QoSManager
+    from repro.core.setup import compute_qos_setup
+
+    jg, jcs = three_stage_job()
+    rg = RuntimeGraph(jg, 2)
+    allocs = compute_qos_setup(jg, jcs, rg)
+    w, alloc = next(iter(allocs.items()))
+    tc = ThroughputConstraint("Work", 500.0, max_parallelism=2)
+    mgr = QoSManager(alloc, rg, SimClock(), throughput_constraints=[tc])
+    for v in rg.tasks_of("Work"):
+        mgr._task_cpu[v.id] = (0.99, False)
+    assert mgr._propose_scale(alloc.scopes[0]) is None  # at the cap already
+    ctl = ElasticController(tc, max_parallelism=64)
+    assert ctl.check(1e6, 2, 10.0, 0.99) is None  # constraint cap binds
+
+
+def test_retired_straggler_reroutes_through_chained_sibling():
+    """deliver() to a retired task whose surviving sibling is chained must
+    hand over synchronously (the chained thread is gone), not enqueue into
+    a dead inbox."""
+    from repro.core.engine import StreamItem
+
+    eng = make_engine(rate=50.0)
+    work = eng.rg.tasks_of("Work")
+    eng.executors[work[1]].retired = True
+    eng.executors[work[0]].chained = True
+    ch = next(c for c in eng.rg.in_channels(work[1]))
+    items = [StreamItem(b"x", 64, 0.0, key=0)]
+    eng.deliver(ch, items)  # key 0 -> sibling Work[0], which is chained
+    assert eng.executors[work[0]].emitted == 1  # processed synchronously
+    assert eng.executors[work[0]].inbox.empty()
+    assert eng.executors[work[1]].inbox.empty()
+
+
+# ---------------------------------------------------------------------------
+# QoS scope refresh across re-wiring
+# ---------------------------------------------------------------------------
+
+
+def test_scale_out_refreshes_qos_scopes_simulator():
+    jg, jcs = three_stage_job()
+    sim = StreamSimulator(
+        jg, jcs, num_workers=2,
+        sources={"Src": SimSourceSpec(100.0, item_bytes=256, keys=16)},
+        initial_buffer_bytes=2048, enable_qos=True)
+    before_tasks = set(sim.measured_tasks)
+    sim.scale_out("Work", 4, reason="test")
+    # new subtasks are measured by the refreshed reporter/manager setup
+    new_ids = {v.id for v in sim.rg.tasks_of("Work")}
+    assert new_ids <= sim.measured_tasks
+    assert sim.measured_tasks != before_tasks
+    # managers own scopes over the grown runtime graph
+    for alloc in sim.allocations.values():
+        for scope in alloc.scopes:
+            assert all(v in sim.rg.vertices for v in scope.anchor_tasks)

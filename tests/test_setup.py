@@ -1,5 +1,8 @@
 """Algorithms 1-3 (paper §3.4.2) incl. hypothesis property tests on the
 side conditions."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra
 from hypothesis import given, settings
 from hypothesis import strategies as st
 

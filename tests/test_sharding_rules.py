@@ -1,6 +1,8 @@
 """Sharding rules + a real multi-device lower/compile in a subprocess (the
 subprocess gets 8 host devices via XLA_FLAGS; this process keeps 1)."""
 import json
+
+import pytest
 import subprocess
 import sys
 import textwrap
@@ -52,6 +54,7 @@ def test_long500k_batch_replicates():
     assert rules["batch"] is None
 
 
+@pytest.mark.slow
 def test_multidevice_compile_subprocess():
     """Lower + compile a smoke train step on a real (2,4) mesh with 8 host
     devices, and sanity-check the collective parser output."""

@@ -36,6 +36,7 @@ def adaptive():
     return run_media(qos=True)
 
 
+@pytest.mark.slow
 def test_buffer_sizing_improves_latency_order_of_magnitude(unopt, adaptive):
     """Fig. 7 vs Fig. 8: adaptive buffers must improve mean latency by >10x
     (the paper got ~10x from buffers alone)."""
@@ -56,6 +57,7 @@ def test_constraint_met_stops_actions(adaptive):
     assert len(late) == 0
 
 
+@pytest.mark.slow
 def test_chaining_triggers_under_tight_constraint():
     """When buffers alone cannot meet the SLO, the managers chain the
     Decoder..Encoder series (Fig. 9's mechanism)."""
@@ -67,6 +69,7 @@ def test_chaining_triggers_under_tight_constraint():
             "Decoder", "Merger", "Overlay", "Encoder"]
 
 
+@pytest.mark.slow
 def test_give_up_reports_on_infeasible_constraint():
     """§3.5: when countermeasures are exhausted the master is notified.
     Construct the exhausted state deterministically: buffers already at
