@@ -32,6 +32,9 @@ def run_one(buffer_bytes: int, rate: float, duration_ms: float = 60_000.0):
                                          item_bytes=128)},
         initial_buffer_bytes=buffer_bytes,
         enable_qos=False,
+        # the pure Fig. 2 sweep: buffer-fill time must be the only latency
+        # knob, so the max-buffer-lifetime flush is explicitly disabled
+        max_buffer_lifetime_ms=None,
     )
     res = sim.run(duration_ms, max_events=3_000_000)
     return res.mean_latency_ms(duration_ms * 0.2), res.throughput_items_per_s

@@ -153,6 +153,119 @@ def run_elastic_burst(smoke: bool = False):
     return rows
 
 
+# -- keyed_burst: stateful windowed aggregate through grow -> shrink ---------
+
+
+def _keyed_job(agg_fn=None, agg_cost_ms: float = 2.0):
+    """Stateful keyed job for BOTH backends: Src -> Agg(stateful) -> Sink
+    (also stateful, so the sink holds the ground-truth per-key counts)."""
+    jg = JobGraph("keyed-burst")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Agg", 2, fn=agg_fn, sim_cpu_ms=agg_cost_ms,
+                            sim_item_bytes=64, stateful=True))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01,
+                            stateful=True))
+    jg.add_edge("Src", "Agg", ALL_TO_ALL)
+    jg.add_edge("Agg", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Agg"), "Agg", ("Agg", "Sink"))
+    return jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+
+
+def _merge_states(backend_tasks, group):
+    merged: dict = {}
+    for v in group:
+        for k, n in backend_tasks(v).state.items():
+            merged[k] = merged.get(k, 0) + n
+    return merged
+
+
+def run_keyed_burst(smoke: bool = False):
+    """A stateful windowed-aggregate stage rescaled grow -> shrink mid-run on
+    both backends; asserts the per-key aggregates are EXACT (state migrated
+    with its key ranges, no key lost, duplicated, or split across owners)."""
+    rows = []
+    keys = 48
+    # -- simulator ----------------------------------------------------------
+    jg, jcs = _keyed_job(agg_cost_ms=2.0)
+    sim = StreamSimulator(
+        jg, jcs, num_workers=2,
+        sources={"Src": SimSourceSpec(
+            200.0, item_bytes=64, keys=keys,
+            # burst, taper, then silence so the pipeline fully drains
+            rate_fn=lambda t: 200.0 if t < 8_000.0 else (
+                50.0 if t < 12_000.0 else 1e-9))},
+        initial_buffer_bytes=256, enable_qos=False,
+        max_buffer_lifetime_ms=500.0)
+    sim.schedule(3_000.0, lambda: sim.scale_out("Agg", 5))
+    sim.schedule(10_000.0, lambda: sim.scale_in("Agg", 2))
+    t0 = time.perf_counter()
+    res = sim.run(20_000.0)
+    wall = (time.perf_counter() - t0) * 1e6
+    group = sim.rg.tasks_of("Agg")
+    agg = _merge_states(lambda v: sim.tasks[v], group)
+    truth = dict(sim.tasks[sim.rg.tasks_of("Sink")[0]].state.items())
+    router = sim.rg.routers["Agg"]
+    single_owner = all(
+        router.owner(k) == v.index
+        for v in group for k in sim.tasks[v].state.keys())
+    assert agg == truth, (
+        f"keyed_burst_sim: per-key aggregates not exact "
+        f"({sum(agg.values())} vs {sum(truth.values())})")
+    assert single_owner, "keyed_burst_sim: key served off its owner"
+    rows.append((
+        "keyed_burst_sim", wall,
+        f"keys={len(agg)};items={sum(agg.values())};exact=True;"
+        f"single_owner=True;final={len(group)};"
+        f"rescales={len(res.scale_log)}",
+    ))
+    # -- threaded engine ----------------------------------------------------
+    def agg_fn(p, emit, ctx):
+        ctx.state.bump(ctx._current_item.key)
+        time.sleep(0.001)
+        emit(p)
+
+    phase_ms = 700.0 if smoke else 1_200.0
+    jg2, jcs2 = _keyed_job(agg_fn=agg_fn)
+    eng = StreamEngine(
+        jg2, jcs2, num_workers=2,
+        sources={"Src": SourceSpec(
+            120.0, lambda s: (b"x" * 64, 64), key_of=lambda s: s % keys)},
+        initial_buffer_bytes=512, measurement_interval_ms=400.0,
+        enable_qos=False, enable_chaining=False,
+        max_buffer_lifetime_ms=300.0)
+    t0 = time.perf_counter()
+    eng.start()
+    time.sleep(phase_ms / 1e3)
+    eng.scale_out("Agg", 4, reason="keyed_burst")
+    time.sleep(phase_ms / 1e3)
+    eng.scale_in("Agg", 2, reason="keyed_burst")
+    time.sleep(phase_ms / 1e3)
+    res2 = eng.stop()
+    wall = (time.perf_counter() - t0) * 1e6
+    expected: dict = {}
+    for v, ex in eng.executors.items():
+        if v.job_vertex == "Src":
+            for s in range(ex.emitted):
+                expected[s % keys] = expected.get(s % keys, 0) + 1
+    group2 = eng.rg.tasks_of("Agg")
+    agg2 = _merge_states(lambda v: eng.executors[v], group2)
+    router2 = eng.rg.routers["Agg"]
+    single_owner2 = all(
+        router2.owner(k) == v.index
+        for v in group2 for k in eng.executors[v].state.keys())
+    assert agg2 == expected, (
+        f"keyed_burst_engine: per-key aggregates not exact "
+        f"({sum(agg2.values())} vs {sum(expected.values())})")
+    assert single_owner2, "keyed_burst_engine: key served off its owner"
+    rows.append((
+        "keyed_burst_engine", wall,
+        f"keys={len(agg2)};items={sum(agg2.values())};exact=True;"
+        f"single_owner=True;sinks={res2.items_at_sinks};"
+        f"rescales={len(res2.scale_log)}",
+    ))
+    return rows
+
+
 def run(quick: bool = True, smoke: bool = False):
     rows = []
     grid = [(40, 10)] if smoke else [(40, 10), (200, 50), (800, 200)]
@@ -166,6 +279,7 @@ def run(quick: bool = True, smoke: bool = False):
             f"routes={r['routes']}",
         ))
     rows.extend(run_elastic_burst(smoke=smoke))
+    rows.extend(run_keyed_burst(smoke=smoke))
     return rows
 
 

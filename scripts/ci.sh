@@ -1,0 +1,24 @@
+#!/usr/bin/env bash
+# CI canary: the fast test suite plus the seconds-level smoke benchmarks
+# (benchmarks/run.py --smoke), which exercise both execution backends end to
+# end — including the elastic_burst and keyed_burst rescaling scenarios.
+#
+#   scripts/ci.sh            # fast tests + smoke benchmarks
+#   CI_FULL=1 scripts/ci.sh  # additionally run the slow-marked tests
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+echo "== pytest (fast) =="
+python -m pytest -x -q -m "not slow"
+
+if [[ "${CI_FULL:-0}" == "1" ]]; then
+  echo "== pytest (slow) =="
+  python -m pytest -x -q -m "slow"
+fi
+
+echo "== smoke benchmarks =="
+python -m benchmarks.run --smoke
+
+echo "CI OK"

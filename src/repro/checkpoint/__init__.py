@@ -1,3 +1,7 @@
 """Checkpointing."""
 
-from .checkpointer import Checkpointer  # noqa: F401
+from .checkpointer import (  # noqa: F401
+    Checkpointer,
+    pack_keyed_state,
+    unpack_keyed_state,
+)

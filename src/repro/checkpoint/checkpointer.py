@@ -13,19 +13,56 @@ step and replays.
   target a *different* mesh: ``restore(..., shardings=...)`` device_puts
   each leaf with the new sharding.  This is what lets a 512-chip job resume
   on 448 chips after losing a pod slice.
+
+The same plane also carries the streaming runtime's keyed-state handoff
+(``pack_keyed_state``/``unpack_keyed_state``): when elastic rescaling moves
+key ranges between subtasks (core/routing.py), the moved entries travel as
+one serialized blob with a small manifest — the in-memory analogue of a
+checkpoint step dir.  These helpers are pure stdlib; jax is imported lazily
+so the streaming core can use them without pulling in the accelerator stack.
 """
 from __future__ import annotations
 
 import json
+import pickle
 import shutil
 import threading
 from pathlib import Path
 
-import jax
 import numpy as np
+
+#: keyed-state handoff blob format version (manifest field).
+KEYED_STATE_VERSION = 1
+
+
+def pack_keyed_state(entries: dict, meta: dict | None = None) -> bytes:
+    """Serialize per-key state entries for a migration handoff.  The blob is
+    self-describing (version + key manifest + optional meta such as the
+    source subtask and moved ranges) so a receiver can validate it."""
+    payload = {
+        "version": KEYED_STATE_VERSION,
+        "meta": dict(meta or {}),
+        "keys": list(entries.keys()),
+        "entries": dict(entries),
+    }
+    return pickle.dumps(payload)
+
+
+def unpack_keyed_state(blob: bytes) -> dict:
+    """Deserialize a ``pack_keyed_state`` blob back into its entries."""
+    payload = pickle.loads(blob)
+    version = payload.get("version")
+    if version != KEYED_STATE_VERSION:
+        raise ValueError(f"unsupported keyed-state blob version {version!r}")
+    entries = payload["entries"]
+    if set(payload["keys"]) != set(entries.keys()):
+        raise ValueError("keyed-state blob manifest does not match entries")
+    return entries
 
 
 def _flatten(tree):
+    import jax
+
     flat, treedef = jax.tree_util.tree_flatten_with_path(tree)
     out = {}
     for path, leaf in flat:
@@ -54,6 +91,8 @@ class Checkpointer:
              blocking: bool = False) -> None:
         """state: pytree (params/opt_state/...); extra: JSON-serializable
         (e.g. data-pipeline replay offset)."""
+        import jax
+
         flat, _ = _flatten(state)
 
         def to_host(v):
@@ -125,6 +164,8 @@ class Checkpointer:
         """Restore into the structure of ``state_like`` (a pytree of arrays
         or ShapeDtypeStructs).  ``shardings``: matching pytree of
         NamedShardings for elastic placement on the *current* mesh."""
+        import jax
+
         self.wait()  # an async save may still be staging the latest step
         step = step if step is not None else self.latest_step()
         if step is None:

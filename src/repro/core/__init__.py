@@ -9,8 +9,29 @@ The paper's primary contribution as a composable library:
 * buffers       — output buffers + adaptive sizing, Eq. (2)/(3) (§3.5.1)
 * chaining      — dynamic task chaining + §3.6 fault-tolerance veto (§3.5.2)
 * manager       — violation detection (max-plus DP) + countermeasures (§3.5)
+* routing       — key-range routing + keyed task state (elastic migration)
 * engine        — threaded executor (real time, laptop scale)
 * simulator     — discrete-event executor (paper scale: n=200, m=800)
+
+KeyRouter / StateStore contract (core/routing.py; elastic §6 + the
+elasticity surveys' key-range repartitioning):
+
+* Every consumer group (job vertex) owns ONE ``KeyRouter`` at
+  ``RuntimeGraph.routers[name]`` — a fixed table of ``NUM_KEY_RANGES``
+  virtual key ranges, each mapped to one subtask index.  Both backends
+  route every keyed emission through it; there is no other key routing.
+* Rescaling never rehashes: ``plan(new_size)`` computes the minimal
+  balanced set of ranges that must change owner, ``RuntimeRewirer``
+  migrates exactly those ranges' state (snapshot -> serialized handoff ->
+  restore, via checkpoint/checkpointer.py), then ``commit()`` swaps the
+  table atomically.  Keys in unmoved ranges keep their owner across any
+  number of rescales.
+* A task marked ``JobVertex(stateful=True)`` holds a per-key ``StateStore``
+  (``ctx.state`` in engine task fns; an automatic per-key processed-item
+  count in the simulator).  ``snapshot(key_ranges, evict=True)`` /
+  ``restore(entries)`` move whole ranges; eviction plus processing-time
+  ownership enforcement guarantee no key is ever served by two owners and
+  no per-key state is lost or duplicated across grow/shrink round trips.
 """
 
 from .buffers import BufferSizingPolicy, OutputBuffer
@@ -39,6 +60,13 @@ from .graphs import (
 )
 from .manager import BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReport, QoSReporter, RunningAverage, Tag
+from .routing import (
+    NUM_KEY_RANGES,
+    KeyRouter,
+    MigrationPlan,
+    StateStore,
+    range_of_key,
+)
 from .setup import (
     ManagerAllocation,
     check_side_conditions,
@@ -56,6 +84,7 @@ from .simulator import (
 __all__ = [k for k in dir() if not k.startswith("_")]
 
 from .elastic import (  # noqa: F401,E402
+    DrainTimeout,
     ElasticController,
     RuntimeRewirer,
     ScaleDecision,

@@ -72,8 +72,13 @@ def chainable_series(
         workers = {x.worker for x in infos}
         if len(workers) != 1 or any(x.chained for x in infos):
             return False
-        # (5) fault-tolerance veto
-        if any(not rg.job_graph.vertices[v.job_vertex].chainable for v in run):
+        # (5) fault-tolerance veto; keyed-state vertices are materialization
+        #     points too — a fused stage bypasses KeyRouter ownership (items
+        #     are handed over in the head's thread), which would scatter
+        #     per-key state off its owner and break elastic migration
+        if any(not rg.job_graph.vertices[v.job_vertex].chainable
+               or rg.job_graph.vertices[v.job_vertex].stateful
+               for v in run):
             return False
         # (2) CPU budget
         if sum(x.cpu_utilization for x in infos) >= cpu_threshold:

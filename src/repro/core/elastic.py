@@ -28,14 +28,33 @@ mutation protocol:
 Backends supply only small hooks (``_spawn_task``, ``_open_channel``,
 ``_unroute_channel``, ``_drain_tasks``, ``_retire_task``,
 ``_flush_task_outputs``, ``_task_emitted``, ``_task_busy_ms``,
-``_schedule_elastic``); the policy, graph surgery, and QoS-scope refresh
-live here once.  The QoS manager can also emit a ``ScaleRequest`` as its
-third countermeasure (after buffer sizing and chaining, before GiveUp)
-when a throughput-constrained stage on a violated path is saturated.
+``_schedule_elastic``, plus the keyed-state quartet ``_quiesce_tasks`` /
+``_resume_tasks`` / ``_task_state`` / ``_reroute_queued``); the policy,
+graph surgery, and QoS-scope refresh live here once.  The QoS manager can
+also emit a ``ScaleRequest`` as its third countermeasure (after buffer
+sizing and chaining, before GiveUp) when a throughput-constrained stage on
+a violated path is saturated.
+
+Keyed-state migration: every rescale of a group goes through its
+``KeyRouter`` (core/routing.py).  ``plan()`` computes which virtual key
+ranges change owner; the protocol then (1) quiesces the old owners of the
+moved ranges, (2) snapshots exactly those ranges out of their
+``StateStore``s, (3) ships them through the checkpoint plane's serialized
+handoff (checkpoint/checkpointer.py pack/unpack), (4) installs them on the
+new owners, (5) atomically commits the routing table, re-homes any queued
+items of moved ranges, and resumes.  Unmoved ranges never change owner, so
+a rescale is invisible to every key that did not migrate.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+
+
+class DrainTimeout(RuntimeError):
+    """A task failed to drain its inbox within the drain timeout.  Raised by
+    ``scale_in`` instead of silently retiring an undrained task (which would
+    lose in-flight items); policy-driven callers (``apply_scale_decision``)
+    catch it, record it in ``drain_failures``, and abort the rescale."""
 
 
 @dataclass(frozen=True)
@@ -147,13 +166,24 @@ class RuntimeRewirer:
         self.scale_log: list[ScaleDecision] = []
         self._elastic: list[dict] = []
         self._manager_history_archive: list = []
+        #: drain/chain failures surfaced instead of silently proceeding
+        self.drain_failures: list[str] = []
+        #: how long drains (scale-in, chaining, quiesce) may take
+        self.drain_timeout_s: float = 5.0
 
     # -- public mutation API -------------------------------------------------
     def apply_scale_decision(self, d: ScaleDecision) -> bool:
-        if d.to_parallelism > d.from_parallelism:
-            return self.scale_out(d.job_vertex, d.to_parallelism,
-                                  reason=d.reason)
-        return self.scale_in(d.job_vertex, d.to_parallelism, reason=d.reason)
+        try:
+            if d.to_parallelism > d.from_parallelism:
+                return self.scale_out(d.job_vertex, d.to_parallelism,
+                                      reason=d.reason)
+            return self.scale_in(d.job_vertex, d.to_parallelism,
+                                 reason=d.reason)
+        except DrainTimeout:
+            # policy-driven rescale against a hung task: the failure is
+            # already recorded in drain_failures by scale_in; report the
+            # decision as failed and keep the control loop alive
+            return False
 
     def scale_out(self, job_vertex: str, new_parallelism: int,
                   reason: str = "manual") -> bool:
@@ -162,6 +192,11 @@ class RuntimeRewirer:
         if job_vertex in self.sources:
             raise ValueError(f"cannot scale source vertex {job_vertex!r}")
         old_n = len(self.rg.tasks_of(job_vertex))
+        if new_parallelism <= old_n:
+            return False
+        # plan the key-range remap against the OLD table; nothing routes to
+        # the new subtasks until the moved ranges' state has been installed
+        plan = self.rg.routers[job_vertex].plan(new_parallelism)
         new_vs, new_cs = self.rg.grow_vertex(job_vertex, new_parallelism)
         if not new_vs:
             return False
@@ -171,6 +206,8 @@ class RuntimeRewirer:
         # points at a missing endpoint
         for c in new_cs:
             self._open_channel(c)
+        # migrate moved ranges' state, then atomically swap the routing table
+        self._migrate_keyed_state(job_vertex, plan)
         self._refresh_qos_scopes()
         self.scale_log.append(ScaleDecision(
             job_vertex, old_n, len(self.rg.tasks_of(job_vertex)),
@@ -179,16 +216,30 @@ class RuntimeRewirer:
 
     def scale_in(self, job_vertex: str, new_parallelism: int,
                  reason: str = "manual") -> bool:
-        """Shrink ``job_vertex`` live: stop routing into the retiring tasks,
-        drain them (in-flight items are preserved), retire, flush their
-        outgoing buffers downstream, and refresh QoS scopes.  Chained tasks
-        are never retired (their thread is fused into another's)."""
+        """Shrink ``job_vertex`` live: migrate the retiring tasks' key-range
+        state to the survivors, stop routing into the retiring tasks, drain
+        them (in-flight items are preserved), retire, flush their outgoing
+        buffers downstream, and refresh QoS scopes.  Chained tasks are never
+        retired (their thread is fused into another's).  Raises
+        ``DrainTimeout`` if a retiring task cannot be drained — silently
+        retiring it would lose its in-flight items."""
         if job_vertex in self.sources:
             raise ValueError(f"cannot scale source vertex {job_vertex!r}")
         old_n = len(self.rg.tasks_of(job_vertex))
+        if not 1 <= new_parallelism < old_n:
+            return False
         candidates = self.rg.tasks_of(job_vertex)[new_parallelism:]
         if any(self._task_is_chained(v) for v in candidates):
             return False
+        # validate shrinkability BEFORE migrating, so an inapplicable
+        # rescale cannot leave the routing table half-swapped
+        self.rg._check_elastic_edges(job_vertex, "shrink")
+        # hand the retiring owners' key ranges (with their state) to the
+        # survivors and swap the routing table BEFORE unrouting: from the
+        # swap on, every keyed emission targets a survivor, and leftover
+        # items in retiring inboxes are re-homed by ownership enforcement
+        plan = self.rg.routers[job_vertex].plan(new_parallelism)
+        self._migrate_keyed_state(job_vertex, plan)
         retired_vs, removed_cs = self.rg.shrink_vertex(
             job_vertex, new_parallelism)
         if not retired_vs:
@@ -199,8 +250,14 @@ class RuntimeRewirer:
         for c in removed_cs:
             if c.dst in retired:
                 self._unroute_channel(c)
-        # 2. drain: every already-delivered item gets processed
-        self._drain_tasks(retired_vs)
+        # 2. drain: every already-delivered item gets processed (or re-homed
+        #    to its new owner).  A hung task is surfaced as DrainTimeout —
+        #    but only AFTER the retirement completes structurally below, so
+        #    the graph, routing table, and executor set stay consistent: the
+        #    hung task is marked retired (deliver() reroutes stragglers to
+        #    survivors) and its thread, once unstuck, drains its leftover
+        #    inbox into the surviving group before exiting.
+        drained = self._drain_tasks(retired_vs)
         # 3. retire the tasks, then push their last outputs downstream
         for v in retired_vs:
             self._retire_task(v)
@@ -210,18 +267,106 @@ class RuntimeRewirer:
         self.scale_log.append(ScaleDecision(
             job_vertex, old_n, len(self.rg.tasks_of(job_vertex)),
             reason, self.clock.now()))
+        if not drained:
+            msg = (f"scale_in({job_vertex!r}): tasks "
+                   f"{[v.id for v in retired_vs]} failed to drain within "
+                   f"{self.drain_timeout_s}s; retired undrained (leftover "
+                   f"items re-home to survivors when the task unblocks)")
+            self.drain_failures.append(msg)
+            raise DrainTimeout(msg)
         return True
+
+    # -- keyed-state migration (core/routing.py + checkpoint handoff) --------
+    def _migrate_keyed_state(self, job_vertex: str, plan) -> None:
+        """Pause-drain-snapshot-install-swap for one ``MigrationPlan``:
+        quiesce the old owners of the moved ranges, snapshot exactly those
+        ranges, ship them through the checkpoint plane's serialized handoff,
+        install on the new owners, commit the routing table atomically, and
+        only then evict the moved entries from the old owners — a failure in
+        any fallible step (e.g. unpicklable user state) therefore aborts
+        with the old table and all state intact, never half-migrated.
+        Stateless groups skip the machinery: their rescale is just the
+        table swap."""
+        from .graphs import RuntimeVertex
+
+        router = self.rg.routers[job_vertex]
+        if not plan.moves or not self.jg.vertices[job_vertex].stateful:
+            router.commit(plan)
+            return
+        from ..checkpoint.checkpointer import (
+            pack_keyed_state,
+            unpack_keyed_state,
+        )
+
+        old_owners = [RuntimeVertex(job_vertex, i) for i in plan.sources]
+        if not self._quiesce_tasks(old_owners):
+            # a source task would not pause between items in time: the
+            # snapshot below may race its in-flight per-key update (that one
+            # item's state change can strand on the old owner).  Proceed —
+            # the table swap must not block on a hung task — but loudly.
+            self.drain_failures.append(
+                f"migrate({job_vertex!r}): old owners "
+                f"{[v.id for v in old_owners]} not quiesced within "
+                f"{self.drain_timeout_s}s; snapshot may race one in-flight "
+                f"item per unparked task")
+        try:
+            # 1. snapshot WITHOUT evicting + pack (the fallible step)
+            blobs: list[bytes] = []
+            for v in old_owners:
+                store = self._task_state(v)
+                if store is None:
+                    continue
+                entries = store.snapshot(plan.ranges_from(v.index),
+                                         evict=False)
+                if entries:
+                    blobs.append(pack_keyed_state(
+                        entries,
+                        meta={"job_vertex": job_vertex, "from": v.index,
+                              "ranges": plan.ranges_from(v.index)}))
+            # 2. install, batched per gaining owner
+            for blob in blobs:
+                by_target: dict[int, dict] = {}
+                for key, value in unpack_keyed_state(blob).items():
+                    _, new_owner = plan.moves[router.range_of(key)]
+                    by_target.setdefault(new_owner, {})[key] = value
+                for new_owner, batch in by_target.items():
+                    dst = self._task_state(
+                        RuntimeVertex(job_vertex, new_owner))
+                    if dst is not None:
+                        dst.restore(batch)
+            # 3. swap the table, then evict the moved entries from their old
+            #    owners — from here on exactly one store serves each key
+            router.commit(plan)
+            for v in old_owners:
+                store = self._task_state(v)
+                if store is not None:
+                    store.snapshot(plan.ranges_from(v.index), evict=True)
+            # items of moved ranges already queued at old owners are re-homed
+            # now that the table points at the state's new location
+            self._reroute_queued(old_owners)
+        finally:
+            self._resume_tasks(old_owners)
 
     # -- QoS scope refresh ---------------------------------------------------
     def _refresh_qos_scopes(self) -> None:
         """Re-run the master's QoS setup (Algorithms 1-3) against the mutated
-        runtime graph and swap in fresh manager/reporter scopes.  Managers
-        restart their measurement windows (§4.3.2-style warmup) — their past
-        history is archived for the final result."""
+        runtime graph and swap in fresh manager/reporter scopes.
+
+        Warm start: the fresh managers adopt the element stores (measurement
+        windows) and per-constraint cooldowns of the managers they replace
+        for every vertex/channel that survived the re-wiring, so only NEW
+        group members start cold — a violated path stays detectable within
+        one reporting interval instead of paying a full §4.3.2-style warmup
+        after every rescale.  The carried cooldowns also preserve the §3.5
+        post-adjustment discipline: a scope that just fired a countermeasure
+        (e.g. the ScaleRequest that triggered this very refresh) keeps
+        waiting out its constraint window instead of re-firing every cycle.
+        Past manager history is archived for the final result."""
         from .manager import QoSManager
         from .setup import compute_qos_setup, compute_reporter_setup
 
-        for mgr in self.managers.values():
+        old_managers = dict(self.managers)
+        for mgr in old_managers.values():
             self._manager_history_archive.extend(mgr.history)
         self.allocations = compute_qos_setup(
             self.jg, self.constraints, self.rg)
@@ -239,16 +384,12 @@ class RuntimeRewirer:
                           throughput_constraints=self.throughput_constraints)
             for w, alloc in self.allocations.items()
         }
-        # §3.5 discipline carries across the rebuild: after a re-wiring the
-        # fresh managers wait one constraint window before acting, so stale
-        # pre-scale measurements (and queue backlog) flush out first —
-        # without this, a ScaleRequest-triggered refresh would let the new
-        # manager fire another ScaleRequest every check cycle.
-        now = self.clock.now()
+        # warm start: adopt surviving element stores from EVERY old manager
+        # (manager placement may move workers across a refresh); adopt_state
+        # filters to the new subgraph, so retired elements are dropped
         for mgr in self.managers.values():
-            horizon = max((s.constraint.window_ms
-                           for s in mgr.allocation.scopes), default=0.0)
-            mgr.defer_until(now + horizon)
+            for old in old_managers.values():
+                mgr.adopt_state(old)
         measured_channels: set[str] = set()
         measured_tasks: set[str] = set()
         for r in self.reporters.values():
@@ -299,7 +440,9 @@ class RuntimeRewirer:
     def _unroute_channel(self, c) -> None:
         raise NotImplementedError
 
-    def _drain_tasks(self, vs) -> None:
+    def _drain_tasks(self, vs) -> bool:
+        """Drain the given tasks' pending input; return False on timeout
+        (never silently proceed on an undrained inbox)."""
         raise NotImplementedError
 
     def _retire_task(self, v) -> None:
@@ -319,6 +462,26 @@ class RuntimeRewirer:
 
     def _schedule_elastic(self, st: dict, period_ms: float) -> None:
         raise NotImplementedError
+
+    # -- keyed-state hooks (defaults: stateless backend) ---------------------
+    def _quiesce_tasks(self, vs) -> bool:
+        """Pause the given tasks and wait until they are between items, so a
+        state snapshot never races an in-flight update (no-op for the
+        discrete-event backend, where migration runs within one event).
+        Returns False if some task could not be parked in time."""
+        return True
+
+    def _resume_tasks(self, vs) -> None:
+        """Undo ``_quiesce_tasks``."""
+
+    def _task_state(self, v):
+        """Return the task's ``StateStore`` (or None for stateless tasks)."""
+        return None
+
+    def _reroute_queued(self, vs) -> None:
+        """After a routing-table commit: re-home items of moved key ranges
+        still queued at their old owners (backends that enforce ownership at
+        processing time may leave this a no-op)."""
 
 
 def split_constraints(constraints) -> tuple[list, list[ThroughputConstraint]]:

@@ -41,6 +41,7 @@ from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
 from .graphs import ALL_TO_ALL, Channel, JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReporter, Tag
+from .routing import StateStore
 from .setup import compute_qos_setup, compute_reporter_setup
 
 
@@ -83,6 +84,7 @@ class EngineResult:
     give_ups: list[GiveUp]
     chained_groups: list[tuple[str, ...]]
     scale_log: list = field(default_factory=list)
+    drain_failures: list = field(default_factory=list)
 
     @property
     def mean_latency_ms(self) -> float:
@@ -150,6 +152,20 @@ class ChannelSender:
             if not self.buffer.empty:
                 self._flush_locked(self.engine.clock.now())
 
+    def flush_if_stale(self, now_ms: float, max_lifetime_ms: float) -> bool:
+        """Max-buffer-lifetime flush (§3.5.1 companion): ship an under-filled
+        buffer once it has been open longer than ``max_lifetime_ms``, so low
+        rates cannot strand items until shutdown."""
+        if self.chained:
+            return False
+        with self._lock:
+            opened = self.buffer.opened_at_ms
+            if (self.buffer.empty or opened is None
+                    or now_ms - opened < max_lifetime_ms):
+                return False
+            self._flush_locked(now_ms)
+            return True
+
     def _flush_locked(self, now: float) -> None:
         items, nbytes, lifetime = self.buffer.take(now)
         eng = self.engine
@@ -184,6 +200,10 @@ class TaskExecutor:
         jv = engine.jg.vertices[vertex.job_vertex]
         self.fn = jv.fn
         self.batch_mode = jv.batch_fn
+        self.stateful = jv.stateful
+        #: per-key state, exposed to user code as ``ctx.state``; for stateful
+        #: vertices it is migrated along key ranges on elastic rescaling
+        self.state = StateStore()
         self.is_sink = jv.is_sink or not engine.jg.out_edges(vertex.job_vertex)
         self.inbox: queue.Queue[tuple[str, list[StreamItem]] | None] = queue.Queue()
         self.senders: dict[str, list[ChannelSender]] = {}  # dst job vertex -> senders
@@ -192,6 +212,7 @@ class TaskExecutor:
         self.retired = False          # elastically scaled in (thread stopped)
         self.paused = threading.Event()
         self.paused.set()             # set == running
+        self.parked = threading.Event()  # thread is waiting at the pause gate
         self.idle = threading.Event()
         self.idle.set()
         self.stop_flag = False
@@ -225,14 +246,40 @@ class TaskExecutor:
             key=key if key is not None else (cur.key if cur else 0),
         )
         self.emitted += 1
+        routers = eng.rg.routers
         for dst_jv, senders in self.senders.items():
             if len(senders) == 1:
                 senders[0].send(item)
             else:
-                idx = item.key % len(senders)
+                # key-range routing: the group's KeyRouter owns the key ->
+                # subtask table (senders are sorted by dst index, and the
+                # group is always contiguous from 0).  Mid-rescale a sender
+                # list may transiently disagree with the table; clamp, and
+                # ownership is enforced at the receiver.
+                idx = min(routers[dst_jv].owner(item.key), len(senders) - 1)
                 senders[idx].send(item)
 
     _current_item: StreamItem | None = None
+
+    def _forward_if_not_owner(self, item: StreamItem,
+                              in_channel_id: str) -> bool:
+        """Re-home ``item`` to its key range's owner if that is not us."""
+        eng = self.engine
+        router = eng.rg.routers.get(self.vertex.job_vertex)
+        if router is None:
+            return False
+        owner = router.owner(item.key)
+        if owner == self.vertex.index:
+            return False
+        target = eng.executors.get(
+            RuntimeVertex(self.vertex.job_vertex, owner))
+        if target is None or target is self or target.retired:
+            return False  # owner unreachable: process here rather than drop
+        if target.chained:
+            target.process(item, in_channel_id)
+        else:
+            target.inbox.put((in_channel_id, [item]))
+        return True
 
     # -- item processing -----------------------------------------------------------
     def process(self, item: StreamItem, in_channel_id: str) -> None:
@@ -245,6 +292,12 @@ class TaskExecutor:
                 item.tag.channel_id, now - item.tag.created_at_ms
             )
             item.tag = None
+        # key-ownership enforcement (stateful stages): an item whose key
+        # range was migrated away (or that raced a routing-table swap) is
+        # forwarded to the range's owner — its state lives there, so no key
+        # is ever served by two owners
+        if self.stateful and self._forward_if_not_owner(item, in_channel_id):
+            return
         vid = self.vertex.id
         if (
             self._pending_task_sample is None
@@ -303,7 +356,12 @@ class TaskExecutor:
     def run(self) -> None:
         eng = self.engine
         while not self.stop_flag:
-            self.paused.wait()
+            if not self.paused.is_set():
+                # park visibly: a quiescing migration knows no further item
+                # can start until paused is set again
+                self.parked.set()
+                self.paused.wait()
+                self.parked.clear()
             try:
                 got = self.inbox.get(timeout=0.02)
             except queue.Empty:
@@ -363,8 +421,13 @@ class StreamEngine(RuntimeRewirer):
         enable_chaining: bool = True,
         policy: BufferSizingPolicy | None = None,
         clock: Clock | None = None,
+        max_buffer_lifetime_ms: float | None = 5_000.0,
     ) -> None:
         self.jg = jg
+        #: max output-buffer lifetime (§3.5.1 companion): with QoS off and a
+        #: low rate, an undersized buffer would otherwise strand items until
+        #: shutdown; None disables (e.g. for pure Fig. 2 sweeps)
+        self.max_buffer_lifetime_ms = max_buffer_lifetime_ms
         # latency (JobConstraint) and throughput (ThroughputConstraint) goals
         # may be mixed in ``constraints``; only latency ones go through the
         # §3.4.2 setup — throughput ones arm the scale-out countermeasure.
@@ -442,24 +505,42 @@ class StreamEngine(RuntimeRewirer):
     def deliver(self, channel: Channel, items: list[StreamItem]) -> None:
         dst = self.executors[channel.dst]
         if dst.retired:
-            # straggler delivery to an elastically retired task: hand the
-            # items to a surviving sibling so nothing is lost — falling
-            # through to the chained check below, since a chained sibling's
-            # thread is gone and its inbox is never drained
-            group = self.rg.tasks_of(channel.dst.job_vertex)
+            # straggler delivery to an elastically retired task: hand each
+            # item to its key range's surviving owner so nothing is lost and
+            # keyed state stays with its one owner
+            jv = channel.dst.job_vertex
+            group = self.rg.tasks_of(jv)
             if not group:
                 return
-            dst = self.executors[group[items[0].key % len(group)]]
+            router = self.rg.routers[jv]
+            for it in items:
+                owner = router.owner(it.key)
+                sibling = self.executors.get(group[min(owner,
+                                                       len(group) - 1)])
+                if sibling is None or sibling.retired:
+                    # routing table and group transiently disagree: any
+                    # surviving member beats dropping the item
+                    sibling = next(
+                        (ex for g in group
+                         if (ex := self.executors.get(g)) is not None
+                         and not ex.retired), None)
+                if sibling is not None:
+                    self._hand_to(sibling, channel.id, [it])
+            return
+        self._hand_to(dst, channel.id, items)
+
+    def _hand_to(self, dst: TaskExecutor, channel_id: str,
+                 items: list[StreamItem]) -> None:
         if dst.chained:
             # the task was pulled into a chain: its thread is gone, items are
             # handed over synchronously in the caller's thread
             if dst.batch_mode:
-                dst.process_batch(items, channel.id)
+                dst.process_batch(items, channel_id)
             else:
                 for it in items:
-                    dst.process(it, channel.id)
+                    dst.process(it, channel_id)
             return
-        dst.inbox.put((channel.id, items))
+        dst.inbox.put((channel_id, items))
 
     # -- source pacing ------------------------------------------------------------------
     def _source_body(self, v: RuntimeVertex, spec: SourceSpec) -> None:
@@ -494,6 +575,13 @@ class StreamEngine(RuntimeRewirer):
     def _control_body(self) -> None:
         while not self._stop.is_set():
             time.sleep(self.interval_ms / 1e3 / 4)
+            # max-buffer-lifetime sweep: ship under-filled buffers that have
+            # been open too long (runs regardless of enable_qos — it is a
+            # liveness guarantee, not a countermeasure)
+            if self.max_buffer_lifetime_ms is not None:
+                now = self.clock.now()
+                for s in list(self.senders.values()):
+                    s.flush_if_stale(now, self.max_buffer_lifetime_ms)
             # cpu utilization sampling feeds the chaining precondition
             # (snapshot: elastic re-wiring swaps these dicts live)
             measured = self.measured_tasks
@@ -563,8 +651,8 @@ class StreamEngine(RuntimeRewirer):
             if req.mode == DRAIN_QUEUES:
                 for t in tasks[1:]:
                     t.chained = True  # thread exits after draining its inbox
-                for t in tasks[1:]:
-                    t.drained.wait(timeout=5.0)
+                stuck = [t for t in tasks[1:]
+                         if not t.drained.wait(timeout=self.drain_timeout_s)]
             else:  # drop
                 for t in tasks[1:]:
                     t.chained = True
@@ -573,7 +661,27 @@ class StreamEngine(RuntimeRewirer):
                             t.inbox.get_nowait()
                         except queue.Empty:
                             break
-                    t.drained.wait(timeout=5.0)
+                stuck = [t for t in tasks[1:]
+                         if not t.drained.wait(timeout=self.drain_timeout_s)]
+            if stuck:
+                # a hung task never handed over its thread: abort the chain
+                # loudly instead of fusing around an undrained inbox.  Tasks
+                # that DID drain stay chained (deliver() hands to them
+                # synchronously); the stuck ones resume their normal loop.
+                for t in stuck:
+                    t.chained = False
+                    if t.drained.wait(timeout=0.25):
+                        # it raced past the abort — saw chained=True, drained
+                        # its inbox, and exited — so keep it fused: with its
+                        # thread gone, only the synchronous deliver() path
+                        # may serve it
+                        t.chained = True
+                self.drain_failures.append(
+                    f"apply_chain({[v.id for v in req.tasks]}): drain "
+                    f"timeout on "
+                    f"{[t.vertex.id for t in stuck if not t.chained]} after "
+                    f"{self.drain_timeout_s}s; chain aborted")
+                return
             # 4. flip the senders to direct invocation; flush any stragglers
             #    that raced in while draining (delivered synchronously via the
             #    chained-destination path in deliver()).
@@ -643,16 +751,19 @@ class StreamEngine(RuntimeRewirer):
         senders.pop(c.id, None)
         self.senders = senders
 
-    def _drain_tasks(self, vs) -> None:
-        deadline = time.monotonic() + 5.0
+    def _drain_tasks(self, vs) -> bool:
+        deadline = time.monotonic() + self.drain_timeout_s
+        drained = True
         for v in vs:
             ex = self.executors.get(v)
             if ex is None:
                 continue
-            while time.monotonic() < deadline:
-                if ex.inbox.empty() and ex.idle.is_set():
+            while not (ex.inbox.empty() and ex.idle.is_set()):
+                if time.monotonic() >= deadline:
+                    drained = False
                     break
                 time.sleep(0.005)
+        return drained
 
     def _retire_task(self, v: RuntimeVertex) -> None:
         ex = self.executors.get(v)
@@ -678,6 +789,41 @@ class StreamEngine(RuntimeRewirer):
             self.senders = {
                 k: s for k, s in self.senders.items() if k not in closed
             }
+
+    def _quiesce_tasks(self, vs) -> bool:
+        # pause the old owners and wait until each is between items, so the
+        # state snapshot cannot race an in-flight per-key update (a chained
+        # task runs in its caller's thread and cannot be paused; its store
+        # lock still keeps every snapshot internally consistent)
+        for v in vs:
+            ex = self.executors.get(v)
+            if ex is not None:
+                ex.paused.clear()
+        deadline = time.monotonic() + self.drain_timeout_s
+        parked_all = True
+        for v in vs:
+            ex = self.executors.get(v)
+            if (ex is None or ex.chained or ex.thread is None
+                    or not ex.thread.is_alive()):
+                continue
+            if not ex.parked.wait(
+                    timeout=max(deadline - time.monotonic(), 0.0)):
+                parked_all = False
+        return parked_all
+
+    def _resume_tasks(self, vs) -> None:
+        for v in vs:
+            ex = self.executors.get(v)
+            if ex is not None:
+                ex.paused.set()
+
+    def _task_state(self, v: RuntimeVertex) -> StateStore | None:
+        ex = self.executors.get(v)
+        return None if ex is None else ex.state
+
+    # _reroute_queued: inherited no-op — the engine enforces key ownership at
+    # processing time (TaskExecutor._forward_if_not_owner), so items of moved
+    # ranges still queued at an old owner re-home themselves on resume.
 
     def _task_is_chained(self, v: RuntimeVertex) -> bool:
         ex = self.executors.get(v)
@@ -758,6 +904,7 @@ class StreamEngine(RuntimeRewirer):
             give_ups=self._give_ups,
             chained_groups=self._chained_groups,
             scale_log=list(self.scale_log),
+            drain_failures=list(self.drain_failures),
         )
 
     def run(self, duration_ms: float) -> EngineResult:

@@ -14,6 +14,8 @@ from __future__ import annotations
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
 
+from .routing import KeyRouter
+
 # ---------------------------------------------------------------------------
 # Job graph
 # ---------------------------------------------------------------------------
@@ -55,6 +57,15 @@ class JobVertex:
     #: which is exactly what makes the output-buffer size the batch-size
     #: knob (DESIGN.md §2.2)
     batch_fn: bool = False
+    #: keyed state: each subtask holds a per-key ``StateStore``
+    #: (core/routing.py) and key ownership is enforced at processing time, so
+    #: elastic rescaling migrates the moved key ranges' state.  The threaded
+    #: engine exposes the store to user code as ``ctx.state``; the simulator
+    #: maintains a per-key processed-item count automatically (its tasks are
+    #: cost models without user code).  Stateful vertices also veto dynamic
+    #: task chaining (a fused stage bypasses KeyRouter ownership), like
+    #: ``chainable=False``.  Stateful sources are not supported.
+    stateful: bool = False
 
     def __repr__(self) -> str:  # compact
         return f"JobVertex({self.name} x{self.parallelism})"
@@ -196,6 +207,11 @@ class RuntimeGraph:
         self._out: dict[RuntimeVertex, list[Channel]] = {}
         self._in: dict[RuntimeVertex, list[Channel]] = {}
         self._by_job_edge: dict[tuple[str, str], list[Channel]] = {}
+        #: one KeyRouter per consumer group (job vertex): the single
+        #: key-range -> subtask table both backends route keyed items with.
+        #: Rescaling goes plan -> migrate state -> commit (core/elastic.py);
+        #: grow_vertex/shrink_vertex deliberately do NOT touch the routers.
+        self.routers: dict[str, KeyRouter] = {}
         self._expand(allocator or self._default_allocator)
 
     # -- expansion -----------------------------------------------------------
@@ -218,6 +234,7 @@ class RuntimeGraph:
                 self._in[rv] = []
                 group.append(rv)
             self._by_job_vertex[name] = group
+            self.routers[name] = KeyRouter(jv.parallelism)
         for je in jg.edges:
             chans: list[Channel] = []
             src_group = self._by_job_vertex[je.src]

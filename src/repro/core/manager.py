@@ -172,6 +172,50 @@ class QoSManager:
             self._in_idx.setdefault(c.dst, []).append(c)
         self.history: list[ViolationRecord] = []
 
+    # -- warm start across QoS-scope refreshes --------------------------------
+    def adopt_state(self, old: "QoSManager") -> None:
+        """Carry a predecessor manager's state across an elastic re-wiring
+        (RuntimeRewirer._refresh_qos_scopes): element stores (measurement
+        windows) for every channel/task that survived into this manager's
+        subgraph, the §3.5.1 buffer bookkeeping, and per-constraint
+        cooldowns (matched by constraint name, since scope indices shift).
+        Elements that joined in the re-wiring have no entries and start
+        cold; retired elements are filtered out."""
+        chan_ids = {c.id for c in self.allocation.subgraph.channels}
+        task_ids = {v.id for v in self.allocation.subgraph.vertices}
+        for cid, w in old._chan_lat.items():
+            if cid in chan_ids and cid not in self._chan_lat:
+                self._chan_lat[cid] = w
+        for cid, w in old._chan_oblt.items():
+            if cid in chan_ids and cid not in self._chan_oblt:
+                self._chan_oblt[cid] = w
+        for cid, bv in old._chan_buf.items():
+            if cid in chan_ids and cid not in self._chan_buf:
+                self._chan_buf[cid] = bv
+        for tid, w in old._task_lat.items():
+            if tid in task_ids and tid not in self._task_lat:
+                self._task_lat[tid] = w
+        for tid, uc in old._task_cpu.items():
+            if tid in task_ids and tid not in self._task_cpu:
+                self._task_cpu[tid] = uc
+        for cid, d in old._last_update_dir.items():
+            if cid in chan_ids:
+                self._last_update_dir.setdefault(cid, d)
+        for cid, t in old._settled_until.items():
+            if cid in chan_ids:
+                self._settled_until[cid] = max(
+                    self._settled_until.get(cid, 0.0), t)
+        old_cooldowns = {
+            old.allocation.scopes[i].constraint.name: t
+            for i, t in old._scope_cooldown_until.items()
+            if i < len(old.allocation.scopes)
+        }
+        for idx, scope in enumerate(self.allocation.scopes):
+            t = old_cooldowns.get(scope.constraint.name)
+            if t is not None:
+                self._scope_cooldown_until[idx] = max(
+                    self._scope_cooldown_until.get(idx, 0.0), t)
+
     # -- report ingestion -----------------------------------------------------
     def receive_report(self, report: QoSReport) -> None:
         now = report.sent_at_ms

@@ -1,0 +1,237 @@
+"""Key-range routing + per-key task state (elastic state migration).
+
+The paper's elastic re-parallelization (§6) re-spreads key routing when a
+stage's parallelism changes.  A bare ``key % group_size`` re-homes *every*
+key on *every* rescale, which silently detaches keys from any per-key state
+their old owner held.  The standard fix (key-range repartitioning with state
+handoff — Röger & Mayer's elasticity survey, Fragkoulis et al.'s stream
+systems survey) is implemented here:
+
+* ``KeyRouter`` — every consumer group owns a fixed number of *virtual key
+  ranges* (``NUM_KEY_RANGES``, default 128).  A key hashes to a range, a
+  range maps to one owning subtask index.  On rescale the table is
+  **remapped, not rehashed**: a minimal, balanced set of ranges moves to the
+  new/surviving owners and every other range keeps its owner — unmoved keys
+  never change subtask.  ``plan()`` computes the remap without mutating the
+  table; the execution layer migrates the moved ranges' state and then
+  ``commit()``s the new table in one atomic swap.
+* ``StateStore`` — optional per-task keyed state with a
+  ``snapshot(key_ranges)`` / ``restore(entries)`` API sliced along the same
+  virtual ranges, so a migration moves exactly the re-homed keys.
+
+Both execution backends (core/engine.py, core/simulator.py) route keyed
+emissions through the group's ``KeyRouter`` — the single replacement for the
+former ad-hoc modulo sites — and ``RuntimeRewirer`` (core/elastic.py) drives
+the pause-drain-snapshot-install-swap migration protocol around it.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import Any, Iterable
+
+#: fixed virtual-partition count shared by routers and state stores; a power
+#: of two well above any realistic parallelism so ranges stay divisible.
+NUM_KEY_RANGES = 128
+
+
+def range_of_key(key: Any, num_ranges: int = NUM_KEY_RANGES) -> int:
+    """Key -> virtual range.  Integer keys map directly: dense integer key
+    populations (stream-group ids, request ids — what every scenario here
+    uses) then spread perfectly evenly over the range space, matching the
+    historical ``key % group_size`` balance exactly when nothing has been
+    rescaled.  Because a correlated key set may still leave some ranges
+    cold, ``KeyRouter.plan`` spreads every donation evenly across the
+    donor's owned ranges instead of carving off a contiguous block.
+    Non-integer keys go through ``hash``."""
+    k = key if isinstance(key, int) else hash(key)
+    return k % num_ranges
+
+
+@dataclass(frozen=True)
+class MigrationPlan:
+    """A computed (not yet applied) routing-table remap.
+
+    ``moves`` holds only the ranges that change owner:
+    ``range -> (old_owner, new_owner)``.  Everything else keeps its owner.
+    """
+
+    new_size: int
+    new_owners: tuple[int, ...]
+    moves: dict[int, tuple[int, int]] = field(default_factory=dict)
+
+    @property
+    def sources(self) -> list[int]:
+        """Old owners that lose at least one range (migration sources)."""
+        return sorted({old for old, _ in self.moves.values()})
+
+    @property
+    def targets(self) -> list[int]:
+        """Owners that gain at least one range (migration targets)."""
+        return sorted({new for _, new in self.moves.values()})
+
+    def ranges_from(self, owner: int) -> list[int]:
+        """Ranges this plan takes away from ``owner``."""
+        return sorted(r for r, (old, _) in self.moves.items() if old == owner)
+
+
+class KeyRouter:
+    """Key-range -> subtask assignment table for one consumer group.
+
+    The owner table is an immutable tuple; readers on the emit hot path see
+    either the old or the new table, never a partial remap.
+    """
+
+    def __init__(self, group_size: int,
+                 num_ranges: int = NUM_KEY_RANGES) -> None:
+        if group_size < 1:
+            raise ValueError("group_size must be >= 1")
+        self.num_ranges = num_ranges
+        self.group_size = group_size
+        self._owners: tuple[int, ...] = tuple(
+            r % group_size for r in range(num_ranges))
+
+    # -- routing (hot path) --------------------------------------------------
+    def range_of(self, key: Any) -> int:
+        return range_of_key(key, self.num_ranges)
+
+    def owner(self, key: Any) -> int:
+        """Subtask index that owns ``key``."""
+        return self._owners[range_of_key(key, self.num_ranges)]
+
+    def owner_of_range(self, r: int) -> int:
+        return self._owners[r]
+
+    def ranges_of(self, owner: int) -> list[int]:
+        return [r for r, o in enumerate(self._owners) if o == owner]
+
+    # -- rescale -------------------------------------------------------------
+    def plan(self, new_size: int) -> MigrationPlan:
+        """Compute the minimal balanced remap for ``new_size`` owners.
+
+        Invariants: every owner ends with ``num_ranges/new_size`` ranges
+        (+/-1); only over-target or orphaned (owner >= new_size) ranges
+        move; the choice is deterministic.  Donations are spread EVENLY
+        across each donor's owned ranges (Bresenham selection) and handed to
+        the gaining owners round-robin — so even when a key population only
+        heats part of the range space (e.g. dense ids narrower than
+        ``num_ranges``), every rescale still sheds a proportional share of
+        the hot ranges to every gaining owner."""
+        if new_size < 1:
+            raise ValueError("new_size must be >= 1")
+        old = self._owners
+        base, rem = divmod(self.num_ranges, new_size)
+        targets = [base + (1 if i < rem else 0) for i in range(new_size)]
+        owned: dict[int, list[int]] = {}
+        for r, o in enumerate(old):
+            owned.setdefault(o, []).append(r)
+        kept = [0] * new_size
+        orphans: list[int] = []
+        for o in sorted(owned):
+            rs = owned[o]
+            if o >= new_size:
+                orphans.extend(rs)  # retiring owner: everything moves
+                continue
+            excess = len(rs) - targets[o]
+            if excess <= 0:
+                kept[o] = len(rs)
+                continue
+            n = len(rs)
+            # Bresenham spread: donate `excess` of the n owned ranges at
+            # even intervals, keep the rest in place
+            donated = [rs[i] for i in range(n)
+                       if (i + 1) * excess // n > i * excess // n]
+            orphans.extend(donated)
+            kept[o] = n - excess
+        gaining = [o for o in range(new_size) if kept[o] < targets[o]]
+        slots = {o: targets[o] - kept[o] for o in gaining}
+        new_owners = list(old)
+        moves: dict[int, tuple[int, int]] = {}
+        gi = 0
+        for r in orphans:
+            while slots[gaining[gi % len(gaining)]] == 0:
+                gi += 1
+            o = gaining[gi % len(gaining)]
+            slots[o] -= 1
+            gi += 1
+            new_owners[r] = o
+            if old[r] != o:
+                moves[r] = (old[r], o)
+        return MigrationPlan(new_size, tuple(new_owners), moves)
+
+    def commit(self, plan: MigrationPlan) -> None:
+        """Atomically swap in the planned table (after state migration)."""
+        self._owners = plan.new_owners
+        self.group_size = plan.new_size
+
+
+class StateStore:
+    """Per-task keyed state, sliced along the router's virtual key ranges.
+
+    User code (threaded engine: ``ctx.state`` inside the task fn) reads and
+    writes per-key entries; the migration protocol moves whole ranges with
+    ``snapshot(key_ranges, evict=True)`` on the old owner and
+    ``restore(entries)`` on the new one.  All operations take the store lock
+    so a snapshot never observes a half-applied update from the task thread.
+    """
+
+    def __init__(self, num_ranges: int = NUM_KEY_RANGES) -> None:
+        self.num_ranges = num_ranges
+        self._data: dict[Any, Any] = {}
+        self._lock = threading.Lock()
+
+    # -- per-key access ------------------------------------------------------
+    def get(self, key: Any, default: Any = None) -> Any:
+        with self._lock:
+            return self._data.get(key, default)
+
+    def put(self, key: Any, value: Any) -> None:
+        with self._lock:
+            self._data[key] = value
+
+    def bump(self, key: Any, amount: int = 1) -> int:
+        """Increment-and-get — the common keyed-aggregate primitive."""
+        with self._lock:
+            v = self._data.get(key, 0) + amount
+            self._data[key] = v
+            return v
+
+    def pop(self, key: Any, default: Any = None) -> Any:
+        with self._lock:
+            return self._data.pop(key, default)
+
+    def keys(self) -> list[Any]:
+        with self._lock:
+            return list(self._data.keys())
+
+    def items(self) -> list[tuple[Any, Any]]:
+        with self._lock:
+            return list(self._data.items())
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+    def __contains__(self, key: Any) -> bool:
+        with self._lock:
+            return key in self._data
+
+    # -- migration API -------------------------------------------------------
+    def snapshot(self, key_ranges: Iterable[int],
+                 evict: bool = True) -> dict[Any, Any]:
+        """Extract every entry whose key falls in ``key_ranges``.  With
+        ``evict`` (the migration default) the entries leave this store so no
+        key is ever served by two owners."""
+        ranges = set(key_ranges)
+        with self._lock:
+            hit = {k: v for k, v in self._data.items()
+                   if range_of_key(k, self.num_ranges) in ranges}
+            if evict:
+                for k in hit:
+                    del self._data[k]
+        return hit
+
+    def restore(self, entries: dict[Any, Any]) -> None:
+        """Install migrated entries (new-owner side of a handoff)."""
+        with self._lock:
+            self._data.update(entries)

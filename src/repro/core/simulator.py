@@ -39,6 +39,7 @@ from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
 from .graphs import JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReporter, Tag
+from .routing import StateStore
 from .setup import compute_qos_setup, compute_reporter_setup
 
 
@@ -179,6 +180,11 @@ class _SimTask:
         self.svc_ms = jv.sim_cpu_ms
         self.fan_in = max(jv.sim_fan_in, 1)
         self.out_bytes = jv.sim_item_bytes
+        self.stateful = jv.stateful
+        #: per-key state; for stateful vertices the simulator maintains a
+        #: per-key processed-item count (its tasks are cost models without
+        #: user code) and migration moves it along key ranges
+        self.state = StateStore()
         self.is_sink = not sim.jg.out_edges(vertex.job_vertex)
         self.queue: deque[SimItem] = deque()
         self.busy = False
@@ -196,14 +202,46 @@ class _SimTask:
         self._inflight_since: float | None = None
 
     def enqueue(self, items: list[SimItem], channel_id: str) -> None:
+        jv = self.vertex.job_vertex
         if self.retired:
-            # straggler delivery after scale-in: hand over to surviving
-            # siblings so nothing is lost
-            group = self.sim.rg.tasks_of(self.vertex.job_vertex)
+            # straggler delivery after scale-in: hand each item to its key
+            # range's surviving owner so nothing is lost and keyed state
+            # stays with its one owner
+            group = self.sim.rg.tasks_of(jv)
             if group:
+                router = self.sim.rg.routers[jv]
                 for it in items:
-                    self.sim.tasks[group[it.key % len(group)]].enqueue(
-                        [it], channel_id)
+                    owner = router.owner(it.key)
+                    target = self.sim.tasks.get(
+                        group[min(owner, len(group) - 1)])
+                    if target is None or target.retired:
+                        # routing table and group transiently disagree: pick
+                        # any survivor directly (never recurse into another
+                        # retired task)
+                        target = next(
+                            (t for g in group
+                             if (t := self.sim.tasks.get(g)) is not None
+                             and not t.retired), None)
+                    if target is not None:
+                        target.enqueue([it], channel_id)
+                return
+        if self.stateful:
+            # key-ownership enforcement: items whose range migrated away (or
+            # that were in flight across a routing-table swap) are re-homed
+            # to the range's owner — its state lives there
+            router = self.sim.rg.routers[jv]
+            mine: list[SimItem] = []
+            for it in items:
+                owner = router.owner(it.key)
+                if owner != self.vertex.index:
+                    target = self.sim.tasks.get(RuntimeVertex(jv, owner))
+                    if target is not None and target is not self \
+                            and not target.retired:
+                        target.enqueue([it], channel_id)
+                        continue
+                mine.append(it)
+            items = mine
+            if not items:
                 return
         self.queue.extend(items)
         self._try_start()
@@ -236,6 +274,13 @@ class _SimTask:
         # total service time across the chain this item will traverse; the
         # whole chain runs on one core of this task's worker (§3.5.2)
         svc, stages = self._chain_service(item)
+        # keyed aggregation happens at service START: a migration event
+        # fired while this item is in service then snapshots a store that
+        # already counts it (a completion-time bump would land in the old
+        # owner's store AFTER its ranges were snapshotted away)
+        for t in stages:
+            if t.stateful:
+                t.state.bump(item.key)
         self.busy = True
         self.busy_ms_window += svc
         self.busy_ms_total += svc
@@ -292,11 +337,16 @@ class _SimTask:
         self._try_start()
 
     def route(self, item: SimItem) -> None:
+        routers = self.sim.rg.routers
         for jv_name, chans in self.out_by_jv.items():
             if len(chans) == 1:
                 ch = chans[0]
             else:
-                ch = chans[item.key % len(chans)]
+                # key-range routing via the consumer group's KeyRouter
+                # (channels sorted by dst index; clamped while a rescale is
+                # transiently re-wiring this sender)
+                idx = min(routers[jv_name].owner(item.key), len(chans) - 1)
+                ch = chans[idx]
             if self.sim.chained_channels.get(ch.channel.id, False):
                 # direct hand-over: zero-cost, record ~0 channel latency sample
                 sim = self.sim
@@ -331,8 +381,14 @@ class StreamSimulator(RuntimeRewirer):
         seed: int = 0,
         latency_bucket_ms: float = 1_000.0,
         cores_per_worker: int = 8,
+        max_buffer_lifetime_ms: float | None = 5_000.0,
     ) -> None:
         self.jg = jg
+        #: max output-buffer lifetime (§3.5.1 companion; same contract as
+        #: StreamEngine): an under-filled buffer ships once it has been open
+        #: this long, so low rates cannot strand items forever.  None
+        #: disables (pure Fig. 2 buffer-size sweeps).
+        self.max_buffer_lifetime_ms = max_buffer_lifetime_ms
         self.constraints, self.throughput_constraints = split_constraints(
             constraints)
         self.rg = RuntimeGraph(jg, num_workers)
@@ -437,6 +493,19 @@ class StreamSimulator(RuntimeRewirer):
                     self._route_action(action)
         self.schedule(self.clock.now() + tick, self._control_tick)
 
+    def _flush_stale_tick(self) -> None:
+        """Max-buffer-lifetime sweep (§3.5.1 companion, same contract as the
+        engine's control-loop sweep): ship under-filled buffers that have
+        been open longer than ``max_buffer_lifetime_ms``."""
+        now = self.clock.now()
+        lifetime = self.max_buffer_lifetime_ms
+        for ch in list(self.channels.values()):
+            buf = ch.buffer
+            if (buf.items and buf.opened_at_ms is not None
+                    and now - buf.opened_at_ms >= lifetime):
+                ch.flush()
+        self.schedule(now + lifetime / 2.0, self._flush_stale_tick)
+
     def _route_action(self, action: Action) -> None:
         if isinstance(action, BufferSizeUpdate):
             ch = self.channels.get(action.channel_id)
@@ -499,10 +568,37 @@ class StreamSimulator(RuntimeRewirer):
             sc.flush()  # ship what the closed channel still buffers
         self.channels.pop(c.id, None)
 
-    def _drain_tasks(self, vs) -> None:
+    def _drain_tasks(self, vs) -> bool:
         # event model: retiring tasks hand their queues to surviving
         # siblings at retire time; nothing to wait on
-        pass
+        return True
+
+    def _task_state(self, v: RuntimeVertex) -> StateStore | None:
+        t = self.tasks.get(v)
+        return None if t is None else t.state
+
+    def _reroute_queued(self, vs) -> None:
+        # after a routing-table commit: items of moved key ranges still
+        # queued at their old owners are re-homed in the same event (the
+        # enqueue-side ownership check covers in-flight deliveries)
+        for v in vs:
+            t = self.tasks.get(v)
+            if t is None or not t.stateful:
+                continue
+            router = self.rg.routers[v.job_vertex]
+            pending = list(t.queue)
+            t.queue.clear()
+            keep: list[SimItem] = []
+            for it in pending:
+                owner = router.owner(it.key)
+                if owner != v.index:
+                    target = self.tasks.get(RuntimeVertex(v.job_vertex, owner))
+                    if target is not None and not target.retired:
+                        target.enqueue([it], "rebalance")
+                        continue
+                keep.append(it)
+            t.queue.extend(keep)
+            t._try_start()
 
     def _retire_task(self, v: RuntimeVertex) -> None:
         t = self.tasks.get(v)
@@ -510,10 +606,14 @@ class StreamSimulator(RuntimeRewirer):
             return
         t.retired = True
         group = self.rg.tasks_of(v.job_vertex)
+        if not group:
+            return
+        router = self.rg.routers[v.job_vertex]
         items = list(t.queue)
         t.queue.clear()
         for it in items:
-            self.tasks[group[it.key % len(group)]].enqueue([it], "rebalance")
+            owner = min(router.owner(it.key), len(group) - 1)
+            self.tasks[group[owner]].enqueue([it], "rebalance")
 
     def _flush_task_outputs(self, v: RuntimeVertex) -> None:
         t = self.tasks.get(v)
@@ -569,6 +669,9 @@ class StreamSimulator(RuntimeRewirer):
             task = self.tasks[v]
             # a source "processes" the item (its cpu cost) then routes it
             svc, stages = task._chain_service(item)
+            for t in stages:  # stateful chained stages count at start too
+                if t.stateful:
+                    t.state.bump(item.key)
             task.busy_ms_window += svc
             last = stages[-1]
 
@@ -587,6 +690,9 @@ class StreamSimulator(RuntimeRewirer):
     def run(self, duration_ms: float, max_events: int | None = None) -> "SimResult":
         self._start_sources()
         self.schedule(self.interval_ms / 4.0, self._control_tick)
+        if self.max_buffer_lifetime_ms is not None:
+            self.schedule(self.max_buffer_lifetime_ms / 2.0,
+                          self._flush_stale_tick)
         n_events = 0
         while self._heap:
             t, _, fn = heapq.heappop(self._heap)
@@ -617,6 +723,7 @@ class StreamSimulator(RuntimeRewirer):
             total_bytes=self.total_bytes,
             total_buffers=self.total_buffers,
             scale_log=list(self.scale_log),
+            drain_failures=list(self.drain_failures),
         )
 
 
@@ -633,6 +740,7 @@ class SimResult:
     total_bytes: int
     total_buffers: int
     scale_log: list = field(default_factory=list)
+    drain_failures: list = field(default_factory=list)
 
     def mean_latency_ms(self, after_ms: float = 0.0) -> float:
         if not self.latency_timeline:

@@ -52,6 +52,11 @@ from ..core.buffers import BufferSizingPolicy
 from ..models import Model
 
 
+#: completed-session records older than this many request ids are pruned
+#: from the Decode replicas' keyed state (ids are a monotonic sequence).
+SESSION_RETENTION = 4096
+
+
 @dataclass
 class RequestSpec:
     """Synthetic open-loop request generator (benchmark driver)."""
@@ -169,11 +174,25 @@ class QoSServer:
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
                 out_tokens.append(tok)
             outs = np.stack([np.asarray(t) for t in out_tokens], 1)
+            sessions = getattr(ctx, "state", None)
             for i, r in enumerate(reqs):
+                if sessions is not None:
+                    # per-request session record keyed by request id (KV
+                    # position + generated count): elastic Decode replicas
+                    # migrate it with their key ranges instead of dropping
+                    # it when the replica group is rescaled.  Request ids
+                    # are monotonic, so pruning the id one retention window
+                    # behind bounds the store in a long-running server.
+                    sessions.put(r["id"], {
+                        "generated": len(out_tokens),
+                        "kv_pos": spec.prompt_len + len(out_tokens) - 1,
+                    })
+                    sessions.pop(r["id"] - SESSION_RETENTION, None)
                 emit(
                     {"request_id": r["id"], "tokens": outs[i].tolist()},
                     size_bytes=64,
                     created_at_ms=r["t_arrival"],
+                    key=r["id"],
                 )
 
         self.jg = JobGraph("qos-serving")
@@ -182,9 +201,12 @@ class QoSServer:
                                      batch_fn=True))
         # elastic Decode replicas must stay unchained (a fused
         # Prefill->Decode thread cannot be re-parallelized) and need
-        # ALL_TO_ALL wiring so the replica group can grow
+        # ALL_TO_ALL wiring so the replica group can grow; stateful (elastic
+        # only, since stateful vertices also veto chaining) keys the
+        # per-request session records to the replica group's KeyRouter so a
+        # rescale migrates them with their key ranges
         self.jg.add_vertex(JobVertex(
-            "Decode", 1, fn=decode_fn,
+            "Decode", 1, fn=decode_fn, stateful=elastic,
             chainable=not (unchainable_decode or elastic)))
         self.jg.add_vertex(JobVertex("Egress", 1, is_sink=True))
         self.jg.add_edge("Ingress", "Prefill", POINTWISE)

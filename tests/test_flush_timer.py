@@ -1,0 +1,78 @@
+"""Output-buffer max-lifetime flush (ROADMAP regression: with QoS off and a
+low rate, items sat in under-filled output buffers until shutdown).
+
+The regression pair: with the flush timer items ship within the configured
+lifetime; with it disabled (``max_buffer_lifetime_ms=None``) the old
+behaviour is reproduced — the simulator never delivers them at all, and the
+engine only at shutdown."""
+import pytest
+
+from repro.core import (
+    ALL_TO_ALL,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    SimSourceSpec,
+    SourceSpec,
+    StreamEngine,
+    StreamSimulator,
+)
+
+BIG_BUFFER = 1 << 20  # never fills at 1 item/s
+
+
+def _sim_job():
+    jg = JobGraph("flush")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True, sim_cpu_ms=0.01,
+                            sim_item_bytes=64))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01))
+    jg.add_edge("Src", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Sink"))
+    return jg, [JobConstraint(seq, 1e9, 5_000.0, name="mon")]
+
+
+def _make_sim(max_buffer_lifetime_ms):
+    jg, jcs = _sim_job()
+    return StreamSimulator(
+        jg, jcs, num_workers=1,
+        sources={"Src": SimSourceSpec(1.0, item_bytes=64)},  # 1 item/s
+        initial_buffer_bytes=BIG_BUFFER, enable_qos=False,
+        max_buffer_lifetime_ms=max_buffer_lifetime_ms)
+
+
+def test_sim_flush_timer_ships_low_rate_items():
+    res = _make_sim(max_buffer_lifetime_ms=1_000.0).run(15_000.0)
+    # items reach the sink DURING the run, with bounded buffer dwell
+    assert len(res.sink_latencies_ms) >= 10
+    assert max(res.sink_latencies_ms) < 2_500.0
+
+
+def test_sim_without_flush_timer_strands_low_rate_items():
+    # the pre-fix behaviour, kept reachable for A/B: nothing ever ships
+    res = _make_sim(max_buffer_lifetime_ms=None).run(15_000.0)
+    assert len(res.sink_latencies_ms) == 0
+
+
+@pytest.mark.slow
+def test_engine_flush_timer_bounds_low_rate_latency():
+    def make_payload(s):
+        return b"x" * 64, 64
+
+    jg = JobGraph("flush-eng")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True))
+    jg.add_edge("Src", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Sink"))
+    eng = StreamEngine(
+        jg, [JobConstraint(seq, 1e9, 5_000.0, name="mon")], num_workers=1,
+        sources={"Src": SourceSpec(1.0, make_payload)},  # 1 item/s
+        initial_buffer_bytes=BIG_BUFFER,
+        measurement_interval_ms=200.0,  # control tick = 50 ms
+        enable_qos=False, enable_chaining=False,
+        max_buffer_lifetime_ms=400.0)
+    res = eng.run(3_500.0)
+    assert res.items_at_sinks >= 2
+    # without the timer these items would only flush at stop(), i.e. with
+    # latencies up to the whole run duration
+    assert max(res.sink_latencies_ms) < 1_500.0

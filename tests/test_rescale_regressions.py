@@ -1,0 +1,210 @@
+"""Rescale-adjacent regressions (ISSUE 2 satellites):
+
+* manager warm start — ``_refresh_qos_scopes`` used to rebuild QoS managers
+  from scratch, discarding measurement windows and forcing a §4.3.2-style
+  warmup after every rescale.  Surviving vertices/channels now carry their
+  element stores over, so a violated path is re-detected within one
+  reporting interval (here: immediately after the rescale, with zero new
+  reports).
+* silent drain timeouts — ``drained.wait``/drain deadlines used to be
+  ignored; a hung task made chaining or retirement proceed on an undrained
+  inbox.  Now scale-in raises ``DrainTimeout`` and chaining aborts, both
+  recorded in ``drain_failures``.
+"""
+import threading
+import time
+
+import pytest
+
+from repro.core import (
+    ALL_TO_ALL,
+    DrainTimeout,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    QoSManager,
+    SimSourceSpec,
+    SourceSpec,
+    StreamEngine,
+    StreamSimulator,
+)
+from repro.core.chaining import ChainRequest
+from repro.core.clock import SimClock
+from repro.core.engine import StreamItem
+from repro.core.measurement import ChannelStats, QoSReport, TaskStats
+from repro.core.setup import compute_qos_setup
+
+
+def _three_stage(work_fn=None, work_cost_ms=4.0):
+    jg = JobGraph("warm")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Work", 2, fn=work_fn, sim_cpu_ms=work_cost_ms,
+                            sim_item_bytes=256, chainable=False))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01,
+                            chainable=False))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+    return jg, seq
+
+
+# ---------------------------------------------------------------------------
+# Warm start
+# ---------------------------------------------------------------------------
+
+
+def test_adopt_state_carries_surviving_elements_and_cooldowns():
+    from repro.core import RuntimeGraph
+
+    jg, seq = _three_stage()
+    jcs = [JobConstraint(seq, 30.0, 4_000.0, name="slo")]
+    rg = RuntimeGraph(jg, 2)
+    allocs = compute_qos_setup(jg, jcs, rg)
+    w, alloc = next(iter(allocs.items()))
+    clock = SimClock()
+    old = QoSManager(alloc, rg, clock)
+    chan = next(iter(alloc.subgraph.channels))
+    task = next(iter(alloc.subgraph.vertices))
+    old.receive_report(QoSReport(
+        worker=w, sent_at_ms=10.0,
+        channel_stats=[ChannelStats(chan.id, mean_latency_ms=50.0,
+                                    mean_oblt_ms=20.0,
+                                    buffer_size_bytes=1024, n_samples=3)],
+        task_stats=[TaskStats(task.id, mean_latency_ms=7.0,
+                              cpu_utilization=0.9, n_samples=2)]))
+    old._scope_cooldown_until[0] = 9_999.0
+    fresh = QoSManager(alloc, rg, clock)
+    assert fresh.channel_latency(chan, 4_000.0) is None  # cold by default
+    fresh.adopt_state(old)
+    assert fresh.channel_latency(chan, 4_000.0) == pytest.approx(50.0)
+    assert fresh.task_latency(task, 4_000.0) == pytest.approx(7.0)
+    assert fresh.oblt(chan, 4_000.0) == pytest.approx(20.0)
+    assert fresh._chan_buf[chan.id][0] == 1024
+    # per-constraint cooldown carried (matched by constraint name)
+    assert fresh._scope_cooldown_until[0] == 9_999.0
+
+
+def test_violated_path_redetected_immediately_after_rescale():
+    """The regression: pre-fix, the refreshed managers started with empty
+    element stores, so right after a rescale nothing was evaluable and the
+    still-violated path went undetected for a full warmup.  Post-fix the
+    carried stores make it detectable with ZERO new reports — well within
+    one reporting interval."""
+    jg, seq = _three_stage(work_cost_ms=4.0)
+    jcs = [JobConstraint(seq, 30.0, 4_000.0, name="slo")]
+    # enable_qos=False: reports still flow to the managers (detection keeps
+    # working) but no countermeasure may cure the violation mid-test — the
+    # probe below must see a persistently violated path
+    sim = StreamSimulator(
+        jg, jcs, num_workers=2,
+        sources={"Src": SimSourceSpec(225.0, item_bytes=256, keys=64)},
+        initial_buffer_bytes=4096, enable_qos=False, enable_chaining=False)
+    probe: dict = {}
+
+    def do_scale():
+        # the constraint has been violated for a while; managers hold
+        # measurement windows.  Rescale, then probe detection immediately.
+        assert any(mgr.worst_sequence(scope) is not None
+                   for mgr in sim.managers.values()
+                   for scope in mgr.allocation.scopes)
+        sim.scale_out("Work", 3, reason="test")
+
+        def check():
+            ests = [mgr.worst_sequence(scope)
+                    for mgr in sim.managers.values()
+                    for scope in mgr.allocation.scopes]
+            probe["evaluable"] = [e for e in ests if e is not None]
+
+        sim.schedule(sim.clock.now() + 1.0, check)
+
+    sim.schedule(12_000.0, do_scale)
+    sim.run(14_000.0)
+    assert probe.get("evaluable"), (
+        "refreshed managers lost their measurement windows (cold restart)")
+    # the carried windows still show the pre-rescale violation
+    assert max(e[0] for e in probe["evaluable"]) > 30.0
+
+
+# ---------------------------------------------------------------------------
+# Drain timeouts
+# ---------------------------------------------------------------------------
+
+
+def _stuck_engine(stuck_stage="Work", rate=5.0, stall_s=8.0):
+    started = threading.Event()
+
+    def stall(p, emit, ctx):
+        if p == b"stuck":
+            started.set()
+            time.sleep(stall_s)
+        emit(p)
+
+    jg = JobGraph("stuck")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True))
+    jg.add_vertex(JobVertex("Work", 2,
+                            fn=stall if stuck_stage == "Work" else None))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True,
+                            fn=stall if stuck_stage == "Sink" else None))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+    eng = StreamEngine(
+        jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")], num_workers=1,
+        sources={"Src": SourceSpec(rate, lambda s: (b"x" * 16, 16))},
+        initial_buffer_bytes=256, measurement_interval_ms=400.0,
+        enable_qos=False, enable_chaining=False)
+    return eng, started
+
+
+def test_scale_in_raises_drain_timeout_on_stuck_task():
+    eng, started = _stuck_engine(stuck_stage="Work")
+    eng.start()
+    eng.drain_timeout_s = 0.3
+    stuck_v = eng.rg.tasks_of("Work")[1]
+    eng.executors[stuck_v].inbox.put(
+        ("inject", [StreamItem(b"stuck", 16, 0.0, key=1)]))
+    assert started.wait(timeout=2.0)
+    with pytest.raises(DrainTimeout):
+        eng.scale_in("Work", 1, reason="test")
+    assert eng.drain_failures  # surfaced, not silent
+    assert any("failed to drain" in f for f in eng.drain_failures)
+    # the retirement completed structurally despite the hung task: the
+    # graph, routing table, and executor flags stay consistent
+    assert len(eng.rg.tasks_of("Work")) == 1
+    assert eng.executors[stuck_v].retired
+
+
+def test_apply_scale_decision_aborts_on_drain_timeout():
+    """Policy-driven rescales (ElasticController / control loop) must not
+    crash the control thread: DrainTimeout is caught, recorded, and the
+    decision reports failure."""
+    from repro.core import ScaleDecision
+
+    eng, started = _stuck_engine(stuck_stage="Work")
+    eng.start()
+    eng.drain_timeout_s = 0.3
+    stuck_v = eng.rg.tasks_of("Work")[1]
+    eng.executors[stuck_v].inbox.put(
+        ("inject", [StreamItem(b"stuck", 16, 0.0, key=1)]))
+    assert started.wait(timeout=2.0)
+    d = ScaleDecision("Work", 2, 1, "idle", 0.0)
+    assert eng.apply_scale_decision(d) is False
+    assert eng.drain_failures
+
+
+def test_apply_chain_aborts_on_drain_timeout():
+    eng, started = _stuck_engine(stuck_stage="Sink")
+    eng.start()
+    eng.drain_timeout_s = 0.3
+    work0 = eng.rg.tasks_of("Work")[0]
+    sink0 = eng.rg.tasks_of("Sink")[0]
+    eng.executors[sink0].inbox.put(
+        ("inject", [StreamItem(b"stuck", 16, 0.0, key=0)]))
+    assert started.wait(timeout=2.0)
+    eng.apply_chain(ChainRequest(tasks=(work0, sink0), worker=0))
+    # chain aborted loudly: no fused group, senders untouched, task resumed
+    assert eng._chained_groups == []
+    assert not any(s.chained for s in eng.senders.values())
+    assert eng.executors[sink0].chained is False
+    assert eng.drain_failures

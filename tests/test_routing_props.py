@@ -1,0 +1,91 @@
+"""Property-style tests for key-range routing + keyed state over random key
+streams and random rescale sequences (hypothesis, optional test extra)."""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import NUM_KEY_RANGES, KeyRouter, StateStore, range_of_key
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    sizes=st.lists(st.integers(min_value=1, max_value=16), min_size=1,
+                   max_size=6),
+    keys=st.lists(st.integers(min_value=0, max_value=10_000), min_size=1,
+                  max_size=200),
+)
+def test_router_invariants_over_random_rescale_sequences(sizes, keys):
+    router = KeyRouter(sizes[0])
+    for new_size in sizes[1:]:
+        before = {k: router.owner(k) for k in keys}
+        plan = router.plan(new_size)
+        moved = set(plan.moves)
+        router.commit(plan)
+        # every range owned by a live subtask
+        assert all(0 <= router.owner_of_range(r) < new_size
+                   for r in range(NUM_KEY_RANGES))
+        # balance within 1
+        counts = [0] * new_size
+        for r in range(NUM_KEY_RANGES):
+            counts[router.owner_of_range(r)] += 1
+        assert max(counts) - min(counts) <= 1
+        # determinism: unmoved ranges -> unmoved keys
+        for k in keys:
+            if range_of_key(k) not in moved:
+                assert router.owner(k) == before[k]
+            else:
+                assert router.owner(k) == plan.moves[range_of_key(k)][1]
+
+
+@settings(deadline=None, max_examples=50)
+@given(
+    keys=st.lists(st.integers(min_value=-1_000, max_value=10_000),
+                  min_size=1, max_size=300),
+    n_from=st.integers(min_value=1, max_value=8),
+    n_to=st.integers(min_value=1, max_value=8),
+)
+def test_migration_partitions_state_exactly(keys, n_from, n_to):
+    """Simulated migration over a random key stream: per-key totals are
+    conserved, and afterwards every key lives on exactly one store — the
+    one the router owns it with."""
+    router = KeyRouter(n_from)
+    stores = {i: StateStore() for i in range(max(n_from, n_to))}
+    totals = {}
+    for k in keys:
+        stores[router.owner(k)].bump(k)
+        totals[k] = totals.get(k, 0) + 1
+    plan = router.plan(n_to)
+    # snapshot moved ranges from each source, install on targets (the
+    # RuntimeRewirer protocol without the execution backends)
+    for src in plan.sources:
+        entries = stores[src].snapshot(plan.ranges_from(src), evict=True)
+        for k, v in entries.items():
+            stores[plan.moves[range_of_key(k)][1]].restore({k: v})
+    router.commit(plan)
+    merged = {}
+    holders = {}
+    for i, s in stores.items():
+        for k, v in s.items():
+            merged[k] = merged.get(k, 0) + v
+            holders.setdefault(k, []).append(i)
+    assert merged == totals  # nothing lost, nothing duplicated
+    for k, hs in holders.items():
+        assert hs == [router.owner(k)]  # exactly one owner, the routed one
+
+
+@settings(deadline=None, max_examples=30)
+@given(keys=st.lists(
+    st.one_of(st.integers(min_value=-100, max_value=100), st.text(max_size=8)),
+    min_size=1, max_size=100))
+def test_state_store_snapshot_restore_roundtrip_any_hashable(keys):
+    s = StateStore()
+    for k in keys:
+        s.bump(k)
+    all_ranges = range(NUM_KEY_RANGES)
+    snap = s.snapshot(all_ranges, evict=True)
+    assert len(s) == 0
+    s.restore(snap)
+    for k in set(keys):
+        assert s.get(k) == keys.count(k)
