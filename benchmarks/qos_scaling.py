@@ -33,6 +33,7 @@ from repro.core import (  # noqa: E402
     StreamEngine,
     StreamSimulator,
     ThroughputConstraint,
+    WorkerPool,
     check_side_conditions,
 )
 from repro.core.setup import compute_qos_setup, compute_reporter_setup  # noqa: E402
@@ -266,6 +267,116 @@ def run_keyed_burst(smoke: bool = False):
     return rows
 
 
+# -- placement_burst: packed vs spread pools under the same bursty load -----
+
+
+def _remote_fraction(rg) -> float:
+    """Share of channels that cross workers — the locality cost the two
+    policies trade off (remote channels pay serialize + ship)."""
+    if not rg.channels:
+        return 0.0
+    remote = sum(1 for c in rg.channels
+                 if rg.worker(c.src) != rg.worker(c.dst))
+    return remote / len(rg.channels)
+
+
+def run_placement_burst(smoke: bool = False):
+    """The same bursty scale-out/in on elastic ``packed`` vs ``spread``
+    worker pools, BOTH backends: growing Work past the pool's slot capacity
+    must ACQUIRE workers (cloud acquisition), the shrink back must RELEASE
+    every one of them (pool returns to its initial size), and the derived
+    column reports the locality each policy bought (fraction of remote
+    channels at peak)."""
+    rows = []
+    for policy in ("packed", "spread"):
+        # -- simulator ------------------------------------------------------
+        jg, jcs = _burst_job(work_cost_ms=4.0)
+        pool = WorkerPool(2, policy=policy, slots_per_worker=4,
+                          max_workers=8)
+        sim = StreamSimulator(
+            jg, jcs, sources={"Src": SimSourceSpec(
+                150.0, item_bytes=256, keys=64,
+                rate_fn=lambda t: 150.0 if t < 6_000.0 else 1e-9)},
+            initial_buffer_bytes=2048, enable_qos=False,
+            max_buffer_lifetime_ms=500.0, pool=pool)
+        peak = {}
+
+        def _grow_and_sample():
+            sim.scale_out("Work", 8, reason="placement_burst")
+            loads = pool.loads()
+            peak["remote"] = _remote_fraction(sim.rg)
+            peak["workers"] = len(loads)
+            peak["imbalance"] = max(loads.values()) - min(loads.values())
+
+        sim.schedule(2_000.0, _grow_and_sample)
+        sim.schedule(7_000.0,
+                     lambda: sim.scale_in("Work", 2, reason="burst over"))
+        t0 = time.perf_counter()
+        sim.run(12_000.0)
+        wall = (time.perf_counter() - t0) * 1e6
+        st = pool.stats()
+        assert st["acquired"] > 0, f"placement_burst_sim_{policy}: " \
+            f"scale-out past capacity never acquired a worker"
+        assert st["released"] == st["acquired"], \
+            f"placement_burst_sim_{policy}: acquired workers not released"
+        assert pool.size() == 2, \
+            f"placement_burst_sim_{policy}: pool did not return to initial"
+        rows.append((
+            f"placement_burst_sim_{policy}", wall,
+            f"acquired={st['acquired']};released={st['released']};"
+            f"final_workers={pool.size()};peak_workers={peak['workers']};"
+            f"peak_imbalance={peak['imbalance']};"
+            f"peak_remote={peak['remote']:.2f}",
+        ))
+        # -- threaded engine ------------------------------------------------
+        def work(p, emit, ctx):
+            time.sleep(0.002)
+            emit(p)
+
+        phase_s = 0.5 if smoke else 1.0
+        jg2, jcs2 = _burst_job(work_fn=work, work_cost_ms=3.0)
+        pool2 = WorkerPool(2, policy=policy, slots_per_worker=4,
+                           max_workers=8)
+        eng = StreamEngine(
+            jg2, jcs2, sources={"Src": SourceSpec(
+                100.0, lambda s: (b"x" * 64, 64))},
+            initial_buffer_bytes=1024, measurement_interval_ms=400.0,
+            enable_qos=False, enable_chaining=False,
+            max_buffer_lifetime_ms=300.0, pool=pool2)
+        t0 = time.perf_counter()
+        eng.start()
+        time.sleep(phase_s)
+        eng.scale_out("Work", 8, reason="placement_burst")
+        peak_remote_eng = _remote_fraction(eng.rg)
+        loads2 = pool2.loads()
+        peak_imbalance_eng = max(loads2.values()) - min(loads2.values())
+        time.sleep(phase_s)
+        eng.scale_in("Work", 2, reason="burst over")
+        time.sleep(phase_s)
+        res = eng.stop()
+        wall = (time.perf_counter() - t0) * 1e6
+        st2 = pool2.stats()
+        emitted = sum(ex.emitted for v, ex in eng.executors.items()
+                      if v.job_vertex == "Src")
+        assert st2["acquired"] > 0 and st2["released"] == st2["acquired"], \
+            f"placement_burst_engine_{policy}: acquire/release mismatch " \
+            f"({st2})"
+        assert pool2.size() == 2, \
+            f"placement_burst_engine_{policy}: pool did not return to initial"
+        assert emitted == res.items_at_sinks, \
+            f"placement_burst_engine_{policy}: items lost " \
+            f"({emitted} emitted vs {res.items_at_sinks} at sinks)"
+        rows.append((
+            f"placement_burst_engine_{policy}", wall,
+            f"acquired={st2['acquired']};released={st2['released']};"
+            f"final_workers={pool2.size()};"
+            f"peak_imbalance={peak_imbalance_eng};"
+            f"peak_remote={peak_remote_eng:.2f};"
+            f"sinks={res.items_at_sinks}",
+        ))
+    return rows
+
+
 def run(quick: bool = True, smoke: bool = False):
     rows = []
     grid = [(40, 10)] if smoke else [(40, 10), (200, 50), (800, 200)]
@@ -280,6 +391,7 @@ def run(quick: bool = True, smoke: bool = False):
         ))
     rows.extend(run_elastic_burst(smoke=smoke))
     rows.extend(run_keyed_burst(smoke=smoke))
+    rows.extend(run_placement_burst(smoke=smoke))
     return rows
 
 

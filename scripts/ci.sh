@@ -1,7 +1,9 @@
 #!/usr/bin/env bash
 # CI canary: the fast test suite plus the seconds-level smoke benchmarks
 # (benchmarks/run.py --smoke), which exercise both execution backends end to
-# end — including the elastic_burst and keyed_burst rescaling scenarios.
+# end — including the elastic_burst and keyed_burst rescaling scenarios and
+# the placement_burst worker-pool scenario (packed vs spread policies:
+# acquire on saturated scale-out, release on scale-in, both backends).
 #
 #   scripts/ci.sh            # fast tests + smoke benchmarks
 #   CI_FULL=1 scripts/ci.sh  # additionally run the slow-marked tests

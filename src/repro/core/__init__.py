@@ -10,6 +10,9 @@ The paper's primary contribution as a composable library:
 * chaining      — dynamic task chaining + §3.6 fault-tolerance veto (§3.5.2)
 * manager       — violation detection (max-plus DP) + countermeasures (§3.5)
 * routing       — key-range routing + keyed task state (elastic migration)
+* placement     — first-class workers: WorkerPool with elastic
+                  acquire/release + packed/spread/affinity policies (§3.1.2
+                  worker(v), §6 cloud elasticity)
 * engine        — threaded executor (real time, laptop scale)
 * simulator     — discrete-event executor (paper scale: n=200, m=800)
 
@@ -60,6 +63,15 @@ from .graphs import (
 )
 from .manager import BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReport, QoSReporter, RunningAverage, Tag
+from .placement import (
+    MODULO,
+    PACKED,
+    SPREAD,
+    PoolEvent,
+    PoolSaturated,
+    Worker,
+    WorkerPool,
+)
 from .routing import (
     NUM_KEY_RANGES,
     KeyRouter,

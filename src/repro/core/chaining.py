@@ -17,6 +17,14 @@ constrained sequence is *chainable* iff:
 The QoS manager chains the **longest** chainable series found in a violated
 sequence.  When establishing a chain the worker either *drops* the in-flight
 queues between the tasks or *drains* them first (§3.5.2); both are supported.
+
+Condition 1's worker equality is evaluated against the live placement layer
+(core/placement.py): ``TaskRuntimeInfo.worker`` is ``rg.worker(v)``, i.e.
+the WorkerPool's assignment, and both execution backends re-check
+co-location when a ChainRequest is applied (a rescale may have raced the
+decision).  Chains are also *reversible*: the re-wiring layer
+(core/elastic.py) can unchain a series — the exact inverse of establishing
+it — which is how scale-in retires tasks that were fused into a chain.
 """
 from __future__ import annotations
 

@@ -28,12 +28,24 @@ mutation protocol:
 Backends supply only small hooks (``_spawn_task``, ``_open_channel``,
 ``_unroute_channel``, ``_drain_tasks``, ``_retire_task``,
 ``_flush_task_outputs``, ``_task_emitted``, ``_task_busy_ms``,
-``_schedule_elastic``, plus the keyed-state quartet ``_quiesce_tasks`` /
-``_resume_tasks`` / ``_task_state`` / ``_reroute_queued``); the policy,
-graph surgery, and QoS-scope refresh live here once.  The QoS manager can
-also emit a ``ScaleRequest`` as its third countermeasure (after buffer
-sizing and chaining, before GiveUp) when a throughput-constrained stage on
-a violated path is saturated.
+``_schedule_elastic``, ``_dissolve_chain``, ``_add_worker``, plus the
+keyed-state quartet ``_quiesce_tasks`` / ``_resume_tasks`` /
+``_task_state`` / ``_reroute_queued``); the policy, graph surgery, and
+QoS-scope refresh live here once.  The QoS manager can also emit a
+``ScaleRequest`` as its third countermeasure (after buffer sizing and
+chaining, before GiveUp) when a throughput-constrained stage on a violated
+path is saturated.
+
+Worker placement (core/placement.py): the runtime graph's ``WorkerPool``
+decides where spawned subtasks land.  ``scale_out`` therefore doubles as
+the cloud-acquisition path — when the pool's placement policy saturates,
+the pool acquires a worker and ``_sync_new_workers`` gives the backend its
+per-worker plumbing before any task/channel references it.  ``scale_in``
+is the give-back path: retiring tasks free their pool slots and every
+non-initial worker the retirement emptied is released.  Chains are
+registered in ``active_chains`` when applied; scale_in **unchains before
+retiring** (reverse of §3.5.2) so a fused series no longer vetoes
+elasticity — the two countermeasures compose.
 
 Keyed-state migration: every rescale of a group goes through its
 ``KeyRouter`` (core/routing.py).  ``plan()`` computes which virtual key
@@ -170,6 +182,14 @@ class RuntimeRewirer:
         self.drain_failures: list[str] = []
         #: how long drains (scale-in, chaining, quiesce) may take
         self.drain_timeout_s: float = 5.0
+        #: live chains (tuples of RuntimeVertex, dataflow order): appended by
+        #: the backends' chain application, removed by ``_unchain`` — the
+        #: registry scale_in consults to unchain before retiring
+        self.active_chains: list[tuple] = []
+        #: dissolved chains, for results/tests: (task ids, reason)
+        self.unchain_log: list[tuple[tuple[str, ...], str]] = []
+        #: workers released back to the pool by scale_in, in order
+        self.released_workers: list[int] = []
 
     # -- public mutation API -------------------------------------------------
     def apply_scale_decision(self, d: ScaleDecision) -> bool:
@@ -200,6 +220,10 @@ class RuntimeRewirer:
         new_vs, new_cs = self.rg.grow_vertex(job_vertex, new_parallelism)
         if not new_vs:
             return False
+        # placement may have acquired fresh workers (pool saturated): give
+        # the backend its per-worker plumbing (QoS reporter, CPU model)
+        # before any task or channel can reference them
+        self._sync_new_workers()
         for v in new_vs:
             self._spawn_task(v)
         # wire channels only after every new task exists, so no channel ever
@@ -219,8 +243,11 @@ class RuntimeRewirer:
         """Shrink ``job_vertex`` live: migrate the retiring tasks' key-range
         state to the survivors, stop routing into the retiring tasks, drain
         them (in-flight items are preserved), retire, flush their outgoing
-        buffers downstream, and refresh QoS scopes.  Chained tasks are never
-        retired (their thread is fused into another's).  Raises
+        buffers downstream, and refresh QoS scopes.  A retiring task that was
+        pulled into a chain is first **unchained** (reverse of §3.5.2: its
+        thread/queues are re-established and the fused channels revert to
+        buffered hand-over), so chaining never vetoes elasticity.  Workers
+        emptied by the retirement are released back to the pool.  Raises
         ``DrainTimeout`` if a retiring task cannot be drained — silently
         retiring it would lose its in-flight items."""
         if job_vertex in self.sources:
@@ -229,11 +256,28 @@ class RuntimeRewirer:
         if not 1 <= new_parallelism < old_n:
             return False
         candidates = self.rg.tasks_of(job_vertex)[new_parallelism:]
-        if any(self._task_is_chained(v) for v in candidates):
-            return False
-        # validate shrinkability BEFORE migrating, so an inapplicable
-        # rescale cannot leave the routing table half-swapped
+        # validate shrinkability FIRST: an inapplicable rescale must not
+        # dissolve chains (a manager countermeasure) or half-swap routing
         self.rg._check_elastic_edges(job_vertex, "shrink")
+        # unchain-before-retire: dissolve every chain that contains a
+        # retiring task (the whole chain, head included — a fused series
+        # only functions as a unit)
+        chains: list[tuple] = []
+        for v in candidates:
+            ch = self._chain_of(v)
+            if ch is not None and ch not in chains:
+                chains.append(ch)
+        for ch in chains:
+            if not self._unchain(ch, reason=f"scale_in {job_vertex}"):
+                self.drain_failures.append(
+                    f"scale_in({job_vertex!r}): could not unchain "
+                    f"{[v.id for v in ch]}; rescale aborted")
+                return False
+        if any(self._task_is_chained(v) for v in candidates):
+            # chained flag without a registered chain (inconsistent state,
+            # e.g. a test-injected flag): retiring would orphan the fused
+            # thread, so refuse rather than guess
+            return False
         # hand the retiring owners' key ranges (with their state) to the
         # survivors and swap the routing table BEFORE unrouting: from the
         # swap on, every keyed emission targets a survivor, and leftover
@@ -263,6 +307,13 @@ class RuntimeRewirer:
             self._retire_task(v)
         for v in retired_vs:
             self._flush_task_outputs(v)
+        # 4. release workers the retirement emptied (never the initial
+        #    fleet): the pool models cloud give-back; per-worker backend
+        #    plumbing (reporters) stays for straggler telemetry
+        for w in sorted({self.rg.worker(v) for v in retired_vs}):
+            if self.rg.pool.release_if_empty(
+                    w, reason=f"scale_in {job_vertex}"):
+                self.released_workers.append(w)
         self._refresh_qos_scopes()
         self.scale_log.append(ScaleDecision(
             job_vertex, old_n, len(self.rg.tasks_of(job_vertex)),
@@ -275,6 +326,47 @@ class RuntimeRewirer:
             self.drain_failures.append(msg)
             raise DrainTimeout(msg)
         return True
+
+    # -- chain registry + unchain (reverse of §3.5.2) ------------------------
+    def _chain_of(self, v):
+        """The live chain (tuple of RuntimeVertex) containing ``v`` — head
+        included — or None.  Backends register chains in ``active_chains``
+        when they apply a ChainRequest."""
+        for chain in self.active_chains:
+            if v in chain:
+                return chain
+        return None
+
+    def _unchain(self, chain, reason: str = "manual") -> bool:
+        """Dissolve ``chain``: re-establish the member tasks' own execution
+        (thread / queue) and revert the fused channels to buffered
+        hand-over.  The backend does the mechanics (``_dissolve_chain``);
+        bookkeeping and the audit log live here."""
+        if chain not in self.active_chains:
+            return False
+        if not self._dissolve_chain(chain):
+            return False
+        self.active_chains.remove(chain)
+        self.unchain_log.append((tuple(v.id for v in chain), reason))
+        return True
+
+    def unchain_all(self, reason: str = "manual") -> int:
+        """Dissolve every live chain (e.g. before a topology change that
+        invalidates co-location); returns how many were dissolved."""
+        n = 0
+        for chain in list(self.active_chains):
+            if self._unchain(chain, reason=reason):
+                n += 1
+        return n
+
+    # -- worker-pool sync ----------------------------------------------------
+    def _sync_new_workers(self) -> None:
+        """Give the backend per-worker plumbing for workers the pool
+        acquired since the last sync (reporters are keyed by worker id on
+        both backends)."""
+        for w in self.rg.pool.worker_ids():
+            if w not in self.reporters:
+                self._add_worker(w)
 
     # -- keyed-state migration (core/routing.py + checkpoint handoff) --------
     def _migrate_keyed_state(self, job_vertex: str, plan) -> None:
@@ -452,6 +544,18 @@ class RuntimeRewirer:
         raise NotImplementedError
 
     def _task_is_chained(self, v) -> bool:
+        raise NotImplementedError
+
+    def _dissolve_chain(self, chain) -> bool:
+        """Backend mechanics of unchaining: restore each fused member's own
+        execution and flip the chain channels back to buffered hand-over.
+        Returns False if the chain could not be dissolved (the caller then
+        aborts the rescale instead of orphaning a fused task)."""
+        return False
+
+    def _add_worker(self, w: int) -> None:
+        """Create per-worker plumbing (QoS reporter, CPU model) for a
+        freshly acquired pool worker."""
         raise NotImplementedError
 
     def _task_emitted(self, v) -> int:

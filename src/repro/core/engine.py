@@ -41,6 +41,7 @@ from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
 from .graphs import ALL_TO_ALL, Channel, JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReporter, Tag
+from .placement import WorkerPool
 from .routing import StateStore
 from .setup import compute_qos_setup, compute_reporter_setup
 
@@ -85,6 +86,10 @@ class EngineResult:
     chained_groups: list[tuple[str, ...]]
     scale_log: list = field(default_factory=list)
     drain_failures: list = field(default_factory=list)
+    #: chains dissolved live (unchain-before-retire): (task ids, reason)
+    unchain_log: list = field(default_factory=list)
+    #: worker-pool acquire/release audit (core/placement.py PoolEvent)
+    pool_events: list = field(default_factory=list)
 
     @property
     def mean_latency_ms(self) -> float:
@@ -320,11 +325,47 @@ class TaskExecutor:
             self._busy_ms += dt
             self.busy_ms_total += dt
 
+    def _split_batch_by_owner(self, items: list[StreamItem],
+                              in_channel_id: str) -> list[StreamItem]:
+        """Key-ownership enforcement for batch stages: a delivered buffer may
+        mix keys whose ranges live on different owners (it was keyed by its
+        first item, or raced a routing-table swap).  Split it at ownership
+        boundaries, forward every foreign sub-batch to its range's owner,
+        and return only the sub-batch this task owns — so stateful batch
+        stages keep strict single-owner per-key state, exactly like per-item
+        stages do via ``_forward_if_not_owner``."""
+        eng = self.engine
+        router = eng.rg.routers.get(self.vertex.job_vertex)
+        if router is None:
+            return items
+        mine: list[StreamItem] = []
+        foreign: dict[int, list[StreamItem]] = {}
+        for it in items:
+            owner = router.owner(it.key)
+            if owner == self.vertex.index:
+                mine.append(it)
+            else:
+                foreign.setdefault(owner, []).append(it)
+        for owner, batch in foreign.items():
+            target = eng.executors.get(
+                RuntimeVertex(self.vertex.job_vertex, owner))
+            if target is None or target is self or target.retired:
+                mine.extend(batch)  # owner unreachable: keep, never drop
+            elif target.chained:
+                target.process_batch(batch, in_channel_id)
+            else:
+                target.inbox.put((in_channel_id, batch))
+        return mine
+
     def process_batch(self, items: list[StreamItem], in_channel_id: str) -> None:
         """Batch mode: one fn call per delivered output buffer — the buffer
         size IS the batch size (the serving-plane reading of §2.2.1)."""
         eng = self.engine
         now = eng.clock.now()
+        if self.stateful:
+            items = self._split_batch_by_owner(items, in_channel_id)
+            if not items:
+                return
         for item in items:
             if item.tag is not None:
                 worker = eng.rg.worker(self.vertex)
@@ -413,8 +454,8 @@ class StreamEngine(RuntimeRewirer):
         self,
         jg: JobGraph,
         constraints: list,
-        num_workers: int,
-        sources: dict[str, SourceSpec],
+        num_workers: int | None = None,
+        sources: dict[str, SourceSpec] | None = None,
         initial_buffer_bytes: int = 32 * 1024,
         measurement_interval_ms: float = 1_000.0,
         enable_qos: bool = True,
@@ -422,6 +463,7 @@ class StreamEngine(RuntimeRewirer):
         policy: BufferSizingPolicy | None = None,
         clock: Clock | None = None,
         max_buffer_lifetime_ms: float | None = 5_000.0,
+        pool: WorkerPool | None = None,
     ) -> None:
         self.jg = jg
         #: max output-buffer lifetime (§3.5.1 companion): with QoS off and a
@@ -433,8 +475,10 @@ class StreamEngine(RuntimeRewirer):
         # §3.4.2 setup — throughput ones arm the scale-out countermeasure.
         self.constraints, self.throughput_constraints = split_constraints(
             constraints)
-        self.rg = RuntimeGraph(jg, num_workers)
-        self.sources = sources
+        # worker placement: an explicit WorkerPool (elastic policies,
+        # acquire/release) or a fixed modulo fleet of ``num_workers``
+        self.rg = RuntimeGraph(jg, num_workers, pool=pool)
+        self.sources = sources or {}
         self.clock = clock or RealClock()
         self.enable_qos = enable_qos
         self.enable_chaining = enable_chaining
@@ -447,7 +491,7 @@ class StreamEngine(RuntimeRewirer):
         self.reporter_setup = compute_reporter_setup(self.allocations, self.rg)
         self.reporters: dict[int, QoSReporter] = {
             w: QoSReporter(w, self.clock, measurement_interval_ms)
-            for w in range(num_workers)
+            for w in self.rg.worker_ids()
         }
         for w, routes in self.reporter_setup.task_routes.items():
             for mgr, tasks in routes.items():
@@ -636,6 +680,15 @@ class StreamEngine(RuntimeRewirer):
         tasks = [self.executors[v] for v in req.tasks]
         if any(t.chained for t in tasks):
             return
+        # chaining is only legal for co-located tasks (§3.5.2 condition 1):
+        # the manager's telemetry normally guarantees this, but re-wiring
+        # may have raced the decision — re-check against the live placement
+        workers = {self.rg.worker(v) for v in req.tasks}
+        if len(workers) != 1:
+            self.drain_failures.append(
+                f"apply_chain({[v.id for v in req.tasks]}): tasks span "
+                f"workers {sorted(workers)}; chain refused")
+            return
         head = tasks[0]
         # 1. halt the first task in the series
         head.paused.clear()
@@ -690,8 +743,51 @@ class StreamEngine(RuntimeRewirer):
             for cid in chain_channel_ids:
                 self.senders[cid].flush()
             self._chained_groups.append(tuple(v.id for v in req.tasks))
+            # live-chain registry: scale_in consults this to unchain a
+            # retiring member (head included) before retiring it
+            self.active_chains.append(tuple(req.tasks))
         finally:
             head.paused.set()
+
+    def _dissolve_chain(self, chain) -> bool:
+        """Reverse of apply_chain (unchaining, for scale-in): re-establish
+        each fused member's own thread, then revert the chain channels to
+        buffered hand-over.  No queue is dropped, so item conservation holds
+        through an unchain exactly as through a drain."""
+        head = self.executors.get(chain[0])
+        members = [self.executors.get(v) for v in chain[1:]]
+        if head is None or any(ex is None for ex in members):
+            return False
+        # 1. halt the head between items so no fused invocation is running
+        #    down the chain while we flip it apart
+        head.paused.clear()
+        try:
+            if (chain[0].job_vertex not in self.sources and not head.chained
+                    and head.thread is not None and head.thread.is_alive()):
+                if not head.parked.wait(timeout=self.drain_timeout_s):
+                    # head stuck mid-item: a fused invocation may still be
+                    # running down the chain — restarting member threads now
+                    # would run the same task on two threads.  Abort; the
+                    # caller surfaces the failure and the rescale stops.
+                    return False
+            # 2. give the fused members their threads back FIRST, so the
+            #    re-buffered channels have live consumers from the start
+            for v, ex in zip(chain[1:], members):
+                ex.chained = False
+                ex.stop_flag = False
+                ex.drained.clear()
+                if self._running:
+                    self._start_task_thread(v, ex)
+            # 3. flip the chain channels back to buffered hand-over
+            for a, b in zip(chain, chain[1:]):
+                for c in self.rg.out_channels(a):
+                    if c.dst == b:
+                        s = self.senders.get(c.id)
+                        if s is not None:
+                            s.chained = False
+        finally:
+            head.paused.set()
+        return True
 
     # -- elastic re-wiring hooks (RuntimeRewirer; see core/elastic.py) -------------------
     def _start_task_thread(self, v: RuntimeVertex, ex: TaskExecutor) -> None:
@@ -707,6 +803,13 @@ class StreamEngine(RuntimeRewirer):
         ex.thread = th
         self._threads.append(th)
         th.start()
+
+    def _add_worker(self, w: int) -> None:
+        # pool acquired a worker mid-run: give it a QoS reporter before any
+        # task or channel on it reports (atomic dict swap, hot paths read)
+        reporters = dict(self.reporters)
+        reporters[w] = QoSReporter(w, self.clock, self.interval_ms)
+        self.reporters = reporters
 
     def _spawn_task(self, v: RuntimeVertex) -> None:
         ex = TaskExecutor(v, self)
@@ -905,6 +1008,8 @@ class StreamEngine(RuntimeRewirer):
             chained_groups=self._chained_groups,
             scale_log=list(self.scale_log),
             drain_failures=list(self.drain_failures),
+            unchain_log=list(self.unchain_log),
+            pool_events=list(self.rg.pool.events),
         )
 
     def run(self, duration_ms: float) -> EngineResult:

@@ -7,13 +7,17 @@ declare who talks to whom and with which wiring pattern.
 The *runtime graph* ``G = (V, E)`` is the parallelized expansion used by the
 execution framework: each job vertex becomes ``parallelism`` runtime vertices
 (tasks), each job edge becomes a set of channels.  Every runtime vertex is
-allocated to a *worker node*; ``worker(v)`` denotes that mapping.
+allocated to a *worker node*; ``worker(v)`` denotes that mapping, and the
+mapping itself is owned by a ``WorkerPool`` (core/placement.py) whose
+placement policy decides where expansion and elastic growth land — and
+whether a saturated pool acquires a fresh worker.
 """
 from __future__ import annotations
 
 from dataclasses import dataclass, field
 from typing import Any, Callable, Iterable, Sequence
 
+from .placement import WorkerPool
 from .routing import KeyRouter
 
 # ---------------------------------------------------------------------------
@@ -64,7 +68,10 @@ class JobVertex:
     #: maintains a per-key processed-item count automatically (its tasks are
     #: cost models without user code).  Stateful vertices also veto dynamic
     #: task chaining (a fused stage bypasses KeyRouter ownership), like
-    #: ``chainable=False``.  Stateful sources are not supported.
+    #: ``chainable=False``.  Stateful sources are not supported.  A stateful
+    #: ``batch_fn`` stage has each delivered buffer split at key-ownership
+    #: boundaries before its fn runs (foreign sub-batches are forwarded to
+    #: their owners), so even mixed-key batches keep single-owner state.
     stateful: bool = False
 
     def __repr__(self) -> str:  # compact
@@ -191,15 +198,27 @@ class Channel:
 class RuntimeGraph:
     """Parallelized job graph + worker allocation (paper §3.1.2).
 
-    ``worker(v)`` maps every runtime vertex to a worker node.  The default
-    allocator spreads each job vertex's subtasks evenly across workers the way
-    the paper's evaluation does ("eight tasks of each type per node").
+    ``worker(v)`` maps every runtime vertex to a worker node.  Placement is
+    delegated to a ``WorkerPool`` (core/placement.py): the default pool uses
+    the ``modulo`` policy, spreading each job vertex's subtasks evenly across
+    a fixed fleet the way the paper's evaluation does ("eight tasks of each
+    type per node"); elastic pools (``packed``/``spread`` + per-vertex
+    affinity) additionally acquire workers when placement saturates and let
+    the re-wiring layer release them once emptied.
     """
 
-    def __init__(self, job_graph: JobGraph, num_workers: int,
-                 allocator: Callable[[RuntimeVertex, int], int] | None = None):
+    def __init__(self, job_graph: JobGraph, num_workers: int | None = None,
+                 allocator: Callable[[RuntimeVertex, int], int] | None = None,
+                 pool: WorkerPool | None = None):
         self.job_graph = job_graph
-        self.num_workers = num_workers
+        if pool is None:
+            if num_workers is None:
+                raise ValueError("need num_workers or an explicit pool")
+            pool = WorkerPool(num_workers)
+        self.pool = pool
+        #: size of the initial fleet (legacy attribute; live count is
+        #: ``pool.size()`` / ``stats()["workers"]``)
+        self.num_workers = pool.initial_workers
         self.vertices: list[RuntimeVertex] = []
         self.channels: list[Channel] = []
         self._by_job_vertex: dict[str, list[RuntimeVertex]] = {}
@@ -212,24 +231,29 @@ class RuntimeGraph:
         #: Rescaling goes plan -> migrate state -> commit (core/elastic.py);
         #: grow_vertex/shrink_vertex deliberately do NOT touch the routers.
         self.routers: dict[str, KeyRouter] = {}
-        self._expand(allocator or self._default_allocator)
+        self._expand(allocator)
 
     # -- expansion -----------------------------------------------------------
-    @staticmethod
-    def _default_allocator(v: RuntimeVertex, num_workers: int) -> int:
-        # Block allocation: subtask i of a job vertex with parallelism m gets
-        # worker floor(i / (m / n)); equivalently spread evenly, keeping
-        # consecutive subtasks co-located (matches the paper's testbed layout).
-        return v.index % num_workers
+    def _place(self, rv: RuntimeVertex,
+               allocator: Callable[[RuntimeVertex, int], int] | None) -> int:
+        """Placement for one task: the pool's policy, unless a legacy custom
+        allocator decides (its choice is still recorded with the pool so
+        load/release bookkeeping stays truthful)."""
+        if allocator is not None:
+            w = allocator(rv, self.num_workers)
+            self.pool.assign(rv, w)
+            return w
+        return self.pool.place(rv)
 
-    def _expand(self, allocator: Callable[[RuntimeVertex, int], int]) -> None:
+    def _expand(self, allocator: Callable[[RuntimeVertex, int], int] | None
+                ) -> None:
         jg = self.job_graph
         for name, jv in jg.vertices.items():
             group = []
             for i in range(jv.parallelism):
                 rv = RuntimeVertex(name, i)
                 self.vertices.append(rv)
-                self._worker[rv] = allocator(rv, self.num_workers)
+                self._worker[rv] = self._place(rv, allocator)
                 self._out[rv] = []
                 self._in[rv] = []
                 group.append(rv)
@@ -270,6 +294,13 @@ class RuntimeGraph:
     def vertices_on_worker(self, w: int) -> list[RuntimeVertex]:
         return [v for v in self.vertices if self._worker[v] == w]
 
+    def worker_ids(self) -> list[int]:
+        """Live worker ids (the pool's fleet), plus any worker still
+        referenced by a vertex (covers custom-allocator placements)."""
+        ids = set(self.pool.worker_ids())
+        ids.update(self._worker.values())
+        return sorted(ids)
+
     def num_runtime_edges(self, je_src: str, je_dst: str) -> int:
         return len(self._by_job_edge[(je_src, je_dst)])
 
@@ -277,7 +308,7 @@ class RuntimeGraph:
         return {
             "vertices": len(self.vertices),
             "channels": len(self.channels),
-            "workers": self.num_workers,
+            "workers": self.pool.size(),
         }
 
     # -- elastic re-parallelization (paper §6 future work; core/elastic.py) --
@@ -303,8 +334,12 @@ class RuntimeGraph:
         new_cs: list[Channel] = []
         for i in range(old_n, new_parallelism):
             rv = RuntimeVertex(job_vertex, i)
+            # policy placement first (it may raise PoolSaturated on an
+            # unmatchable affinity): an elastic pool may acquire a fresh
+            # worker here when every matching worker is at capacity
+            w = self.pool.place(rv)
             self.vertices.append(rv)
-            self._worker[rv] = i % self.num_workers
+            self._worker[rv] = w
             self._out[rv] = []
             self._in[rv] = []
             group.append(rv)
@@ -334,9 +369,10 @@ class RuntimeGraph:
         vertices and removed channels; the execution layer is responsible for
         draining the retired tasks before it stops them.
 
-        The ``worker(v)`` mapping of retired vertices is intentionally kept:
-        in-flight items and late telemetry may still reference them while the
-        backend quiesces.
+        The ``worker(v)`` mapping of retired vertices is intentionally kept
+        (in-flight items and late telemetry may still reference them while
+        the backend quiesces), but their pool slots are dropped so emptied
+        workers become releasable by the re-wiring layer.
         """
         self._check_elastic_edges(job_vertex, "shrink")
         group = self._by_job_vertex[job_vertex]
@@ -354,6 +390,7 @@ class RuntimeGraph:
         for v in retired:
             self._out.pop(v, None)
             self._in.pop(v, None)
+            self.pool.unassign(v)
         for c in removed_cs:
             if c.src not in retired_set:
                 self._out[c.src] = [x for x in self._out[c.src] if x != c]

@@ -11,7 +11,8 @@ QoS Reporters, and reacts to latency-constraint violations:
    anchored at the manager's owned anchor tasks,
 2. countermeasures (§3.5): first adaptive output-buffer sizing on the worst
    sequence's channels (Eq. 2/3, first-writer-wins versioning), then dynamic
-   task chaining (longest chainable series); after each adjustment the
+   task chaining (longest chainable series, co-location judged against the
+   live worker placement — core/placement.py); after each adjustment the
    manager waits one constraint window so that stale measurements flush out,
 3. elastic scale-out (§6, core/elastic.py) as the third countermeasure:
    when buffers and chaining are exhausted but a throughput-constrained

@@ -1,0 +1,282 @@
+"""Worker placement layer: first-class workers with elastic acquire/release.
+
+The paper's runtime graph allocates every task to a *worker node* (§3.1.2:
+``worker(v)``), and dynamic task chaining (§3.5.2) is only legal within one
+worker — yet until this module the mapping was a bare ``index %
+num_workers`` expression, so placement could not spread load, scale-in could
+not retire chained tasks, and nothing modeled the cloud's ability to add or
+remove machines (§6: "exploit the capability of a cloud to elastically
+scale on demand").  Röger & Mayer's elasticity survey (PAPERS.md) identifies
+operator placement and live reconfiguration as the two mechanisms that must
+compose for elastic stream processing; this module is the placement half.
+
+* ``Worker`` — a first-class runtime entity: id, task-slot capacity, and a
+  tag set (machine class / capability labels, e.g. ``{"accel"}``).
+* ``WorkerPool`` — owns the live worker set and the task -> worker
+  assignment load.  ``acquire()`` models cloud worker acquisition (new id,
+  never reused, bounded by ``max_workers``); ``release(w)`` returns an
+  **empty** worker to the cloud — releasing a worker that still hosts tasks
+  raises, which is the invariant the property tests pin down.  Workers of
+  the initial fleet are never released, so a grow -> shrink round trip
+  returns the pool to its initial size.
+* placement policies (``place(v)``):
+    - ``MODULO`` ("modulo") — the paper's testbed layout, ``index %
+      initial_fleet`` ("eight tasks of each type per node"); never acquires.
+      This is the default and reproduces the historical allocation exactly.
+    - ``PACKED`` ("packed") — fill the lowest-id worker with a free slot
+      before touching the next; acquires only when every worker is full.
+      Maximizes co-location (chaining opportunity), minimizes fleet size.
+    - ``SPREAD`` ("spread") — least-loaded worker first; acquires as soon
+      as every worker is at capacity.  Maximizes load spreading at the cost
+      of cross-worker channels.
+  Both elastic policies honour per-vertex **affinity**: ``affinity`` maps a
+  job vertex to the tag set its tasks require, candidate workers are
+  filtered to those carrying every required tag, and a worker acquired on
+  behalf of such a vertex is provisioned with exactly those tags (the cloud
+  hands you the machine class you asked for).  Affinity also expresses
+  constraint-aware co-location: two job vertices that share an exclusive
+  tag can only ever land on the same (tagged) workers, which is what makes
+  their tasks chainable.
+
+The execution layers consume this through ``RuntimeGraph`` (which delegates
+``worker(v)`` to the pool) and ``RuntimeRewirer`` (core/elastic.py), which
+places spawned subtasks through the policy on ``scale_out`` — acquiring a
+worker when the pool saturates — and releases emptied non-initial workers on
+``scale_in``.  Both executors derive their local-vs-remote channel cost
+(same-worker shared-memory hand-over vs. serialize + ship) from the same
+``worker(v)`` mapping, so the QoS manager's latency estimates see placement
+locality, and the §3.5.2 co-location precondition for chaining is evaluated
+against it.
+"""
+from __future__ import annotations
+
+import threading
+from dataclasses import dataclass, field
+from typing import TYPE_CHECKING, Iterable, Mapping
+
+if TYPE_CHECKING:  # pragma: no cover - import cycle guard (graphs -> placement)
+    from .graphs import RuntimeVertex
+
+MODULO = "modulo"
+PACKED = "packed"
+SPREAD = "spread"
+
+POLICIES = (MODULO, PACKED, SPREAD)
+
+
+@dataclass(frozen=True)
+class Worker:
+    """One worker node: identity, capacity, and capability tags."""
+
+    id: int
+    #: task slots; None = unbounded (the legacy modulo fleet)
+    slots: int | None = None
+    tags: frozenset[str] = frozenset()
+
+    def __repr__(self) -> str:
+        t = f",tags={set(self.tags)}" if self.tags else ""
+        return f"Worker({self.id},slots={self.slots}{t})"
+
+
+@dataclass(frozen=True)
+class PoolEvent:
+    """Acquire/release audit record (the pool has no clock; the re-wiring
+    layer stamps its ScaleDecision log instead)."""
+
+    kind: str  # "acquire" | "release"
+    worker: int
+    reason: str = ""
+
+
+class PoolSaturated(RuntimeError):
+    """Placement needed a new worker but ``max_workers`` was reached and no
+    existing worker matched the vertex's affinity tags."""
+
+
+class WorkerPool:
+    """Live worker set + task assignments + pluggable placement policy.
+
+    Thread-safe: the threaded engine places/unassigns from its control and
+    rescale paths concurrently with telemetry reads.
+    """
+
+    def __init__(
+        self,
+        initial_workers: int,
+        *,
+        policy: str = MODULO,
+        slots_per_worker: int | None = None,
+        max_workers: int | None = None,
+        affinity: Mapping[str, Iterable[str]] | None = None,
+        worker_tags: Mapping[int, Iterable[str]] | None = None,
+    ) -> None:
+        if initial_workers < 1:
+            raise ValueError("initial_workers must be >= 1")
+        if policy not in POLICIES:
+            raise ValueError(f"unknown placement policy {policy!r}")
+        if policy != MODULO and slots_per_worker is None:
+            raise ValueError(f"policy {policy!r} needs slots_per_worker "
+                             f"(capacity is what triggers acquisition)")
+        self.policy = policy
+        self.slots_per_worker = slots_per_worker
+        self.initial_workers = initial_workers
+        self.max_workers = max_workers
+        self.affinity: dict[str, frozenset[str]] = {
+            jv: frozenset(tags) for jv, tags in (affinity or {}).items()
+        }
+        self._lock = threading.Lock()
+        worker_tags = worker_tags or {}
+        self.workers: dict[int, Worker] = {
+            w: Worker(w, slots_per_worker,
+                      frozenset(worker_tags.get(w, ())))
+            for w in range(initial_workers)
+        }
+        self._next_id = initial_workers
+        #: worker -> ids of tasks currently assigned there
+        self._assigned: dict[int, set[str]] = {
+            w: set() for w in self.workers
+        }
+        #: task id -> worker (reverse index; authoritative load bookkeeping)
+        self._task_worker: dict[str, int] = {}
+        self.events: list[PoolEvent] = []
+
+    # -- queries -------------------------------------------------------------
+    def worker_ids(self) -> list[int]:
+        with self._lock:
+            return sorted(self.workers)
+
+    def size(self) -> int:
+        with self._lock:
+            return len(self.workers)
+
+    def load(self, worker: int) -> int:
+        with self._lock:
+            return len(self._assigned.get(worker, ()))
+
+    def loads(self) -> dict[int, int]:
+        with self._lock:
+            return {w: len(ts) for w, ts in self._assigned.items()}
+
+    def worker_of(self, task_id: str) -> int | None:
+        with self._lock:
+            return self._task_worker.get(task_id)
+
+    def acquired_workers(self) -> list[int]:
+        """Workers acquired beyond the initial fleet (release candidates)."""
+        with self._lock:
+            return sorted(w for w in self.workers
+                          if w >= self.initial_workers)
+
+    # -- placement -----------------------------------------------------------
+    def place(self, v: "RuntimeVertex") -> int:
+        """Choose a worker for ``v`` per the policy (acquiring one if the
+        pool is saturated and may still grow), record the assignment, and
+        return the worker id."""
+        with self._lock:
+            w = self._choose_locked(v)
+            self._assigned[w].add(v.id)
+            self._task_worker[v.id] = w
+            return w
+
+    def _choose_locked(self, v: "RuntimeVertex") -> int:
+        if self.policy == MODULO:
+            return v.index % self.initial_workers
+        need = self.affinity.get(v.job_vertex, frozenset())
+        cands = [w for w, wk in self.workers.items() if need <= wk.tags]
+        cap = self.slots_per_worker
+        free = [w for w in cands if len(self._assigned[w]) < cap]
+        if free:
+            if self.policy == PACKED:
+                return min(free)  # fill lowest-id worker first
+            # SPREAD: least-loaded matching worker, lowest id on ties
+            return min(free, key=lambda w: (len(self._assigned[w]), w))
+        # every matching worker is at capacity: acquire if allowed
+        if self._may_acquire_locked():
+            return self._acquire_locked(need, reason=f"place {v.id}").id
+        if cands:  # capped fleet, all over capacity: least-overloaded match
+            return min(cands, key=lambda w: (len(self._assigned[w]), w))
+        raise PoolSaturated(
+            f"no worker matches affinity {sorted(need)} for {v.id} and the "
+            f"pool is capped at max_workers={self.max_workers}")
+
+    def _may_acquire_locked(self) -> bool:
+        return (self.max_workers is None
+                or len(self.workers) < self.max_workers)
+
+    # -- elastic acquire / release -------------------------------------------
+    def acquire(self, tags: Iterable[str] = (),
+                reason: str = "manual") -> Worker:
+        """Explicitly acquire a new worker (cloud provisioning).  Ids are
+        monotonic and never reused so late telemetry can't alias."""
+        with self._lock:
+            if not self._may_acquire_locked():
+                raise PoolSaturated(
+                    f"max_workers={self.max_workers} reached")
+            return self._acquire_locked(frozenset(tags), reason)
+
+    def _acquire_locked(self, tags: frozenset[str], reason: str) -> Worker:
+        w = Worker(self._next_id, self.slots_per_worker, tags)
+        self._next_id += 1
+        self.workers[w.id] = w
+        self._assigned[w.id] = set()
+        self.events.append(PoolEvent("acquire", w.id, reason))
+        return w
+
+    def release(self, worker: int, reason: str = "manual") -> None:
+        """Return an EMPTY non-initial worker to the cloud.  Releasing a
+        worker that still hosts tasks, or one of the initial fleet, is a
+        caller bug and raises."""
+        with self._lock:
+            if worker not in self.workers:
+                raise KeyError(f"unknown worker {worker}")
+            if worker < self.initial_workers:
+                raise ValueError(
+                    f"worker {worker} belongs to the initial fleet")
+            if self._assigned[worker]:
+                raise ValueError(
+                    f"worker {worker} still hosts "
+                    f"{sorted(self._assigned[worker])}")
+            del self.workers[worker]
+            del self._assigned[worker]
+            self.events.append(PoolEvent("release", worker, reason))
+
+    def release_if_empty(self, worker: int, reason: str = "scale_in") -> bool:
+        """Release ``worker`` iff it is empty and not part of the initial
+        fleet; returns whether it was released."""
+        with self._lock:
+            if (worker not in self.workers
+                    or worker < self.initial_workers
+                    or self._assigned[worker]):
+                return False
+            del self.workers[worker]
+            del self._assigned[worker]
+            self.events.append(PoolEvent("release", worker, reason))
+            return True
+
+    # -- assignment bookkeeping ----------------------------------------------
+    def assign(self, v: "RuntimeVertex", worker: int) -> None:
+        """Record an externally decided placement (custom allocators)."""
+        with self._lock:
+            if worker not in self.workers:
+                raise KeyError(f"unknown worker {worker}")
+            self._assigned[worker].add(v.id)
+            self._task_worker[v.id] = worker
+
+    def unassign(self, v: "RuntimeVertex") -> None:
+        """Drop ``v``'s slot (task retired).  Idempotent; the worker itself
+        stays acquired until the re-wiring layer decides to release it."""
+        with self._lock:
+            w = self._task_worker.pop(v.id, None)
+            if w is not None:
+                self._assigned.get(w, set()).discard(v.id)
+
+    def stats(self) -> dict[str, int]:
+        with self._lock:
+            return {
+                "workers": len(self.workers),
+                "acquired": sum(1 for e in self.events
+                                if e.kind == "acquire"),
+                "released": sum(1 for e in self.events
+                                if e.kind == "release"),
+                "tasks": len(self._task_worker),
+            }

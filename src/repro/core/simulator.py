@@ -39,6 +39,7 @@ from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
 from .graphs import JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReporter, Tag
+from .placement import WorkerPool
 from .routing import StateStore
 from .setup import compute_qos_setup, compute_reporter_setup
 
@@ -370,8 +371,8 @@ class StreamSimulator(RuntimeRewirer):
         self,
         jg: JobGraph,
         constraints: list,
-        num_workers: int,
-        sources: dict[str, SimSourceSpec],
+        num_workers: int | None = None,
+        sources: dict[str, SimSourceSpec] | None = None,
         initial_buffer_bytes: int = 32 * 1024,
         measurement_interval_ms: float = 1_000.0,
         enable_qos: bool = True,
@@ -382,6 +383,7 @@ class StreamSimulator(RuntimeRewirer):
         latency_bucket_ms: float = 1_000.0,
         cores_per_worker: int = 8,
         max_buffer_lifetime_ms: float | None = 5_000.0,
+        pool: WorkerPool | None = None,
     ) -> None:
         self.jg = jg
         #: max output-buffer lifetime (§3.5.1 companion; same contract as
@@ -391,7 +393,9 @@ class StreamSimulator(RuntimeRewirer):
         self.max_buffer_lifetime_ms = max_buffer_lifetime_ms
         self.constraints, self.throughput_constraints = split_constraints(
             constraints)
-        self.rg = RuntimeGraph(jg, num_workers)
+        # worker placement: an explicit WorkerPool (elastic policies,
+        # acquire/release) or a fixed modulo fleet of ``num_workers``
+        self.rg = RuntimeGraph(jg, num_workers, pool=pool)
         self.clock = SimClock()
         self.net = net or SimNetConfig()
         self.enable_qos = enable_qos
@@ -399,16 +403,18 @@ class StreamSimulator(RuntimeRewirer):
         self.interval_ms = measurement_interval_ms
         self.initial_buffer_bytes = initial_buffer_bytes
         self.policy = policy
+        self.seed = seed
         self.rng = random.Random(seed)
-        self.sources = sources
+        self.sources = sources or {}
         self.latency_bucket_ms = latency_bucket_ms
+        self.cores_per_worker = cores_per_worker
 
         self.allocations = compute_qos_setup(jg, self.constraints, self.rg)
         self.reporter_setup = compute_reporter_setup(self.allocations, self.rg)
         self.reporters = {
             w: QoSReporter(w, self.clock, measurement_interval_ms,
                            rng=random.Random(seed * 7919 + w))
-            for w in range(num_workers)
+            for w in self.rg.worker_ids()
         }
         for w, routes in self.reporter_setup.task_routes.items():
             for mgr, tasks in routes.items():
@@ -427,9 +433,10 @@ class StreamSimulator(RuntimeRewirer):
             self.measured_channels |= r.interested_channels()
             self.measured_tasks |= r.interested_tasks()
 
-        self.cpus: list[_WorkerCPU] = [
-            _WorkerCPU(self, cores_per_worker) for _ in range(num_workers)
-        ]
+        self.cpus: dict[int, _WorkerCPU] = {
+            w: _WorkerCPU(self, cores_per_worker)
+            for w in self.rg.worker_ids()
+        }
         self.tasks: dict[RuntimeVertex, _SimTask] = {
             v: _SimTask(v, self) for v in self.rg.vertices
         }
@@ -531,6 +538,14 @@ class StreamSimulator(RuntimeRewirer):
         tasks = [self.tasks[v] for v in req.tasks]
         if any(t.chained_into is not None or t.chain_next is not None for t in tasks):
             return
+        # chaining is only legal for co-located tasks (§3.5.2 condition 1):
+        # re-check against the live placement, mirroring the threaded engine
+        workers = {self.rg.worker(v) for v in req.tasks}
+        if len(workers) != 1:
+            self.drain_failures.append(
+                f"apply_chain({[v.id for v in req.tasks]}): tasks span "
+                f"workers {sorted(workers)}; chain refused")
+            return
         # §3.5.2 drain: in the event model queued items of downstream tasks are
         # simply processed before any new item reaches them via the chain (new
         # items enter at the head); re-wiring is atomic at this event time.
@@ -542,6 +557,36 @@ class StreamSimulator(RuntimeRewirer):
             self.tasks[a].chain_next = b
             self.tasks[b].chained_into = req.tasks[0]
         self.chained_groups.append(tuple(v.id for v in req.tasks))
+        # live-chain registry: scale_in consults this to unchain a retiring
+        # member (head included) before retiring it
+        self.active_chains.append(tuple(req.tasks))
+
+    def _dissolve_chain(self, chain) -> bool:
+        """Reverse of _apply_chain (unchaining, for scale-in): clear the
+        chain pointers and revert the fused channels to buffered transport.
+        Atomic at this event time; items already in service finish under the
+        chain's summed service time, new arrivals run per-task."""
+        for a, b in zip(chain, chain[1:]):
+            for c in self.rg.out_channels(a):
+                if c.dst == b:
+                    self.chained_channels.pop(c.id, None)
+            ta, tb = self.tasks.get(a), self.tasks.get(b)
+            if ta is not None:
+                ta.chain_next = None
+            if tb is not None:
+                tb.chained_into = None
+        for v in chain:
+            t = self.tasks.get(v)
+            if t is not None:
+                t._try_start()  # queued items resume under per-task service
+        return True
+
+    def _add_worker(self, w: int) -> None:
+        # pool acquired a worker mid-run: per-worker CPU model + reporter
+        self.cpus[w] = _WorkerCPU(self, self.cores_per_worker)
+        self.reporters[w] = QoSReporter(
+            w, self.clock, self.interval_ms,
+            rng=random.Random(self.seed * 7919 + w))
 
     # -- elastic re-wiring hooks (RuntimeRewirer; core/elastic.py, paper §6) ------
     def _spawn_task(self, v: RuntimeVertex) -> None:
@@ -724,6 +769,8 @@ class StreamSimulator(RuntimeRewirer):
             total_buffers=self.total_buffers,
             scale_log=list(self.scale_log),
             drain_failures=list(self.drain_failures),
+            unchain_log=list(self.unchain_log),
+            pool_events=list(self.rg.pool.events),
         )
 
 
@@ -741,6 +788,10 @@ class SimResult:
     total_buffers: int
     scale_log: list = field(default_factory=list)
     drain_failures: list = field(default_factory=list)
+    #: chains dissolved live (unchain-before-retire): (task ids, reason)
+    unchain_log: list = field(default_factory=list)
+    #: worker-pool acquire/release audit (core/placement.py PoolEvent)
+    pool_events: list = field(default_factory=list)
 
     def mean_latency_ms(self, after_ms: float = 0.0) -> float:
         if not self.latency_timeline:

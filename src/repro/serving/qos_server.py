@@ -25,6 +25,12 @@ The paper's two degrees of freedom, re-read for TPU serving (DESIGN.md §2.2):
 
 Pipeline:  Ingress (source) -> Prefill (batch) -> Decode -> Egress (sink).
 Batch shapes are bucketed to powers of two so the jit cache stays bounded.
+
+Results carry per-Decode-replica **token-throughput** and **KV-cache
+occupancy** gauges (``ServingResult.replica_metrics``) — the saturation
+signals a token-level autoscaler needs (request throughput undercounts load
+when generation lengths vary; KV occupancy is the memory bound).  Metrics
+only for now: the scaling policies still act on request throughput.
 """
 from __future__ import annotations
 
@@ -77,6 +83,18 @@ class ServingResult:
     final_buffer_sizes: dict
     scale_log: list = field(default_factory=list)
     decode_replicas: int = 1
+    #: per-Decode-replica gauges (metrics only — groundwork for token-level
+    #: autoscaling): replica id -> {tokens_generated,
+    #: token_throughput_per_s, kv_cache_sessions, kv_cache_tokens}.
+    #: Token throughput (not request throughput) and KV-cache occupancy are
+    #: the real saturation signals for LLM decode; today they are reported,
+    #: tomorrow a controller can consume them.
+    replica_metrics: dict = field(default_factory=dict)
+
+    @property
+    def total_token_throughput_per_s(self) -> float:
+        return sum(m["token_throughput_per_s"]
+                   for m in self.replica_metrics.values())
 
     @property
     def mean_latency_ms(self) -> float:
@@ -139,6 +157,9 @@ class QoSServer:
         self._jit_prefill = {}
         self._jit_decode = {}
         self.batch_sizes: list[int] = []
+        #: per-replica generated-token counters (replica id -> tokens);
+        #: sampled with the KV-cache occupancy gauges into replica_metrics
+        self._replica_tokens: dict[str, int] = {}
         self._lock = threading.Lock()
 
         cfg = model.cfg
@@ -174,6 +195,11 @@ class QoSServer:
                 tok = jnp.argmax(logits, -1).astype(jnp.int32)
                 out_tokens.append(tok)
             outs = np.stack([np.asarray(t) for t in out_tokens], 1)
+            with self._lock:
+                rid = ctx.vertex.id
+                self._replica_tokens[rid] = (
+                    self._replica_tokens.get(rid, 0)
+                    + len(reqs) * len(out_tokens))
             sessions = getattr(ctx, "state", None)
             for i, r in enumerate(reqs):
                 if sessions is not None:
@@ -199,15 +225,16 @@ class QoSServer:
         self.jg.add_vertex(JobVertex("Ingress", 1, is_source=True))
         self.jg.add_vertex(JobVertex("Prefill", 1, fn=prefill_fn,
                                      batch_fn=True))
-        # elastic Decode replicas must stay unchained (a fused
-        # Prefill->Decode thread cannot be re-parallelized) and need
-        # ALL_TO_ALL wiring so the replica group can grow; stateful (elastic
-        # only, since stateful vertices also veto chaining) keys the
-        # per-request session records to the replica group's KeyRouter so a
-        # rescale migrates them with their key ranges
+        # elastic Decode needs ALL_TO_ALL wiring so the replica group can
+        # grow, and stateful=True keys the per-request session records to
+        # the replica group's KeyRouter so a rescale migrates them with
+        # their key ranges (stateful also vetoes chaining — a fused stage
+        # would bypass ownership).  Chaining itself no longer conflicts
+        # with elasticity: the re-wiring layer unchains before retiring
+        # (reverse of §3.5.2), so only the explicit §3.6 annotation vetoes.
         self.jg.add_vertex(JobVertex(
             "Decode", 1, fn=decode_fn, stateful=elastic,
-            chainable=not (unchainable_decode or elastic)))
+            chainable=not unchainable_decode))
         self.jg.add_vertex(JobVertex("Egress", 1, is_sink=True))
         self.jg.add_edge("Ingress", "Prefill", POINTWISE)
         self.jg.add_edge("Prefill", "Decode",
@@ -285,6 +312,37 @@ class QoSServer:
             self._jit_decode[bsz] = jax.jit(self.model.decode_step)
         return self._jit_decode[bsz]
 
+    # -- metrics ---------------------------------------------------------------
+    def replica_metrics(self, duration_ms: float) -> dict:
+        """Per-Decode-replica token-throughput and KV-cache-occupancy gauges
+        (metrics only).  KV occupancy comes from the replica's keyed session
+        records: live sessions and their KV positions are exactly what a
+        token-level autoscaler would treat as cache pressure."""
+        out: dict[str, dict] = {}
+        dur_s = max(duration_ms / 1e3, 1e-9)
+        with self._lock:
+            tokens = dict(self._replica_tokens)
+        # cover retired replicas too: a replica scaled in mid-run still
+        # generated tokens (its sessions migrated to the survivors, so its
+        # KV gauges read from its now-evicted store — i.e. zero)
+        execs = {v.id: ex for v, ex in self.engine.executors.items()
+                 if v.job_vertex == "Decode"}
+        live = {v.id for v in self.engine.rg.tasks_of("Decode")}
+        for rid in sorted(live | set(tokens) | set(execs)):
+            ex = execs.get(rid)
+            sessions = ex.state.items() if ex is not None else []
+            toks = tokens.get(rid, 0)
+            out[rid] = {
+                "tokens_generated": toks,
+                "token_throughput_per_s": toks / dur_s,
+                "kv_cache_sessions": len(sessions),
+                "kv_cache_tokens": sum(
+                    rec["kv_pos"] + 1 for _, rec in sessions
+                    if isinstance(rec, dict) and "kv_pos" in rec),
+                "live": rid in live,
+            }
+        return out
+
     # -- run ----------------------------------------------------------------------
     def run(self, duration_ms: float) -> ServingResult:
         res = self.engine.run(duration_ms)
@@ -297,4 +355,5 @@ class QoSServer:
             final_buffer_sizes=res.final_buffer_sizes,
             scale_log=list(res.scale_log),
             decode_replicas=len(self.engine.rg.tasks_of("Decode")),
+            replica_metrics=self.replica_metrics(res.duration_ms),
         )

@@ -1,0 +1,392 @@
+"""First-class workers (core/placement.py): placement policies, elastic
+acquire/release through the shared re-wiring layer, co-location-constrained
+chaining, and unchain-before-retire on BOTH execution backends."""
+import time
+
+import pytest
+
+from repro.core import (
+    ALL_TO_ALL,
+    ChainRequest,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    PoolSaturated,
+    RuntimeGraph,
+    RuntimeVertex,
+    SimSourceSpec,
+    SourceSpec,
+    StreamEngine,
+    StreamItem,
+    StreamSimulator,
+    WorkerPool,
+)
+
+
+def rv(jv: str, i: int) -> RuntimeVertex:
+    return RuntimeVertex(jv, i)
+
+
+# ---------------------------------------------------------------------------
+# WorkerPool unit behaviour
+# ---------------------------------------------------------------------------
+
+
+def test_modulo_policy_reproduces_legacy_layout():
+    pool = WorkerPool(3)
+    for i in range(7):
+        assert pool.place(rv("A", i)) == i % 3
+    # a second job vertex restarts at worker 0, exactly like the old
+    # ``index % num_workers`` allocator
+    assert pool.place(rv("B", 0)) == 0
+    assert pool.size() == 3  # modulo never acquires
+
+
+def test_packed_fills_lowest_worker_then_acquires():
+    pool = WorkerPool(2, policy="packed", slots_per_worker=2, max_workers=4)
+    assert [pool.place(rv("A", i)) for i in range(4)] == [0, 0, 1, 1]
+    # saturated: the fifth placement acquires worker 2
+    assert pool.place(rv("A", 4)) == 2
+    assert pool.size() == 3
+    assert [e.kind for e in pool.events] == ["acquire"]
+
+
+def test_spread_places_least_loaded_then_acquires():
+    pool = WorkerPool(2, policy="spread", slots_per_worker=2, max_workers=4)
+    assert [pool.place(rv("A", i)) for i in range(4)] == [0, 1, 0, 1]
+    assert pool.place(rv("A", 4)) == 2  # all full -> acquire
+    assert pool.place(rv("A", 5)) == 2  # least-loaded is the new worker
+
+
+def test_capped_pool_overloads_instead_of_failing():
+    pool = WorkerPool(1, policy="spread", slots_per_worker=1, max_workers=1)
+    assert pool.place(rv("A", 0)) == 0
+    # may not grow: placement falls back to the least-overloaded worker
+    assert pool.place(rv("A", 1)) == 0
+    assert pool.load(0) == 2
+
+
+def test_affinity_filters_candidates_and_provisions_tags():
+    pool = WorkerPool(
+        2, policy="spread", slots_per_worker=2, max_workers=4,
+        affinity={"Gpu": {"accel"}}, worker_tags={1: {"accel"}})
+    # Gpu tasks only land on accel workers
+    assert pool.place(rv("Gpu", 0)) == 1
+    assert pool.place(rv("Gpu", 1)) == 1
+    # accel workers saturated: the acquired worker carries the needed tags
+    w = pool.place(rv("Gpu", 2))
+    assert w == 2
+    assert pool.workers[w].tags == frozenset({"accel"})
+    # untagged vertices never steal accel capacity decisions
+    assert pool.place(rv("Cpu", 0)) == 0
+
+
+def test_affinity_unmatchable_raises_pool_saturated():
+    pool = WorkerPool(1, policy="spread", slots_per_worker=1, max_workers=1,
+                      affinity={"Gpu": {"accel"}})
+    with pytest.raises(PoolSaturated):
+        pool.place(rv("Gpu", 0))
+
+
+def test_release_only_when_empty_and_never_initial_fleet():
+    pool = WorkerPool(1, policy="packed", slots_per_worker=1, max_workers=4)
+    pool.place(rv("A", 0))
+    w = pool.place(rv("A", 1))  # acquired
+    assert w == 1
+    with pytest.raises(ValueError):
+        pool.release(w)  # still hosts A[1]
+    pool.unassign(rv("A", 1))
+    with pytest.raises(ValueError):
+        pool.release(0)  # initial fleet is never released
+    pool.release(w)
+    assert pool.size() == 1
+    assert not pool.release_if_empty(0)  # initial: refused, not raised
+
+
+# ---------------------------------------------------------------------------
+# RuntimeGraph integration
+# ---------------------------------------------------------------------------
+
+
+def _abc_job(m=4):
+    jg = JobGraph("t")
+    jg.add_vertex(JobVertex("A", m, is_source=True))
+    jg.add_vertex(JobVertex("B", m))
+    jg.add_vertex(JobVertex("C", 1, is_sink=True))
+    jg.add_edge("A", "B", ALL_TO_ALL)
+    jg.add_edge("B", "C", ALL_TO_ALL)
+    return jg
+
+
+def test_runtime_graph_default_pool_matches_legacy_allocation():
+    rg = RuntimeGraph(_abc_job(4), num_workers=2)
+    for v in rg.vertices:
+        assert rg.worker(v) == v.index % 2
+    assert rg.pool.size() == 2
+
+
+def test_runtime_graph_grow_places_through_pool_and_shrink_frees_slots():
+    pool = WorkerPool(2, policy="spread", slots_per_worker=4, max_workers=8)
+    rg = RuntimeGraph(_abc_job(2), pool=pool)
+    before = pool.stats()["tasks"]
+    rg.grow_vertex("B", 6)
+    assert pool.stats()["tasks"] == before + 4
+    rg.shrink_vertex("B", 2)
+    assert pool.stats()["tasks"] == before
+    # retired vertices keep worker(v) for straggler telemetry
+    assert rg.worker(RuntimeVertex("B", 5)) is not None
+
+
+# ---------------------------------------------------------------------------
+# Both backends: spread scale-out past capacity acquires, scale-in releases
+# ---------------------------------------------------------------------------
+
+
+def _backend_job(work_fn=None):
+    jg = JobGraph("pool-elastic")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Work", 2, fn=work_fn, sim_cpu_ms=1.0,
+                            sim_item_bytes=64))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+    return jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+
+
+def test_spread_scale_out_acquires_and_scale_in_releases_simulator():
+    pool = WorkerPool(2, policy="spread", slots_per_worker=3, max_workers=6)
+    jg, jcs = _backend_job()
+    sim = StreamSimulator(
+        jg, jcs, sources={"Src": SimSourceSpec(50.0, item_bytes=64, keys=8)},
+        initial_buffer_bytes=256, enable_qos=True, pool=pool)
+    assert sim.scale_out("Work", 6, reason="test")
+    st = pool.stats()
+    assert st["acquired"] >= 1, "saturated scale-out must acquire a worker"
+    # acquired workers got their per-worker plumbing before use
+    assert set(pool.worker_ids()) <= set(sim.reporters)
+    assert set(pool.worker_ids()) <= set(sim.cpus)
+    assert sim.scale_in("Work", 2, reason="test")
+    assert pool.size() == 2, "scale-in must release the emptied workers"
+    assert pool.stats()["released"] == st["acquired"]
+    assert sim.released_workers
+
+
+@pytest.mark.slow
+def test_spread_scale_out_acquires_and_scale_in_releases_engine():
+    def work(p, emit, ctx):
+        time.sleep(0.001)
+        emit(p)
+
+    pool = WorkerPool(2, policy="spread", slots_per_worker=3, max_workers=6)
+    jg, jcs = _backend_job(work_fn=work)
+    eng = StreamEngine(
+        jg, jcs, sources={"Src": SourceSpec(60.0, lambda s: (b"x" * 64, 64))},
+        initial_buffer_bytes=256, measurement_interval_ms=400.0,
+        enable_qos=False, enable_chaining=False,
+        max_buffer_lifetime_ms=200.0, pool=pool)
+    eng.start()
+    time.sleep(0.5)
+    assert eng.scale_out("Work", 6, reason="test")
+    assert pool.stats()["acquired"] >= 1
+    assert set(pool.worker_ids()) <= set(eng.reporters)
+    time.sleep(0.5)
+    assert eng.scale_in("Work", 2, reason="test")
+    assert pool.size() == 2
+    time.sleep(0.5)
+    res = eng.stop()
+    emitted = sum(ex.emitted for v, ex in eng.executors.items()
+                  if v.job_vertex == "Src")
+    assert emitted == res.items_at_sinks  # conservation across the cycle
+    assert any(e.kind == "acquire" for e in res.pool_events)
+    assert any(e.kind == "release" for e in res.pool_events)
+
+
+# ---------------------------------------------------------------------------
+# Unchain-before-retire (reverse of §3.5.2) on both backends
+# ---------------------------------------------------------------------------
+
+
+def _chain_job(work_fn=None, tail_fn=None, stateful=False):
+    jg = JobGraph("unchain")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Work", 2, fn=work_fn, sim_cpu_ms=1.0,
+                            sim_item_bytes=64, stateful=stateful))
+    jg.add_vertex(JobVertex("Tail", 1, fn=tail_fn, is_sink=True,
+                            sim_cpu_ms=0.5, stateful=stateful))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Tail", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Tail"))
+    return jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+
+
+def test_simulator_unchains_then_retires_chained_task():
+    # stateful Work/Tail give the simulator ground-truth per-key counts on
+    # both sides of the retired stage, so conservation is checked EXACTLY
+    jg, jcs = _chain_job(stateful=True)
+    sim = StreamSimulator(
+        jg, jcs, num_workers=1,
+        sources={"Src": SimSourceSpec(
+            100.0, item_bytes=64, keys=8,
+            rate_fn=lambda t: 100.0 if t < 4_000.0 else 1e-9)},
+        initial_buffer_bytes=256, enable_qos=False,
+        max_buffer_lifetime_ms=200.0)
+    work = list(sim.rg.tasks_of("Work"))
+    tail = sim.rg.tasks_of("Tail")[0]
+    sim.schedule(1_000.0, lambda: sim._apply_chain(
+        ChainRequest((work[1], tail), worker=0)))
+    done = {}
+
+    def shrink():
+        done["ok"] = sim.scale_in("Work", 1, reason="test")
+
+    sim.schedule(2_000.0, shrink)
+    res = sim.run(8_000.0)
+    assert done["ok"], "scale-in must succeed on a chained task (unchain)"
+    assert not res.drain_failures, res.drain_failures
+    assert len(sim.rg.tasks_of("Work")) == 1
+    assert not sim.active_chains
+    assert res.unchain_log == [((work[1].id, tail.id), "scale_in Work")]
+    # the chain was really dissolved, not orphaned
+    assert sim.tasks[tail].chained_into is None
+    assert not sim.chained_channels
+    # exact conservation: every item counted at Work (chained or not,
+    # including Work[1]'s migrated state) reached the sink
+    total_work = sum(n for v in sim.rg.tasks_of("Work")
+                     for _, n in sim.tasks[v].state.items())
+    total_tail = sum(n for _, n in sim.tasks[tail].state.items())
+    assert total_work == total_tail == len(res.sink_latencies_ms) > 0
+
+
+def test_engine_unchains_then_retires_chained_task_conserving_items():
+    def work(p, emit, ctx):
+        emit(p)
+
+    jg, jcs = _chain_job(work_fn=work)
+    eng = StreamEngine(
+        jg, jcs, num_workers=1,
+        sources={"Src": SourceSpec(80.0, lambda s: (b"x" * 32, 32))},
+        initial_buffer_bytes=256, measurement_interval_ms=400.0,
+        enable_qos=False, enable_chaining=False,
+        max_buffer_lifetime_ms=200.0)
+    eng.start()
+    time.sleep(0.4)
+    work_tasks = list(eng.rg.tasks_of("Work"))
+    tail = eng.rg.tasks_of("Tail")[0]
+    eng.apply_chain(ChainRequest((work_tasks[1], tail), worker=0))
+    assert eng.active_chains, "chain must be registered"
+    assert eng.executors[tail].chained
+    time.sleep(0.4)
+    # scale-in targets the chain head: unchain, then retire — no veto,
+    # no DrainTimeout
+    assert eng.scale_in("Work", 1, reason="test")
+    assert len(eng.rg.tasks_of("Work")) == 1
+    assert not eng.active_chains
+    assert not eng.executors[tail].chained, "fused member got its thread back"
+    assert eng.executors[tail].thread.is_alive()
+    time.sleep(0.4)
+    res = eng.stop()
+    assert res.unchain_log == [
+        ((work_tasks[1].id, tail.id), "scale_in Work")]
+    assert not res.drain_failures
+    emitted = sum(ex.emitted for v, ex in eng.executors.items()
+                  if v.job_vertex == "Src")
+    assert emitted == res.items_at_sinks, "exact item conservation"
+
+
+def test_engine_scale_in_refuses_untracked_chained_flag():
+    """A chained flag without a registered chain (inconsistent state) must
+    still veto retirement rather than orphan the fused thread."""
+    def work(p, emit, ctx):
+        emit(p)
+
+    jg, jcs = _chain_job(work_fn=work)
+    eng = StreamEngine(
+        jg, jcs, num_workers=1,
+        sources={"Src": SourceSpec(10.0, lambda s: (b"x" * 32, 32))},
+        initial_buffer_bytes=256, enable_qos=False, enable_chaining=False)
+    eng.start()
+    work_tasks = eng.rg.tasks_of("Work")
+    eng.executors[work_tasks[1]].chained = True
+    assert not eng.scale_in("Work", 1, reason="test")
+    assert len(eng.rg.tasks_of("Work")) == 2
+    eng.executors[work_tasks[1]].chained = False
+    eng.stop()
+
+
+# ---------------------------------------------------------------------------
+# Co-location-constrained chaining at the execution layer
+# ---------------------------------------------------------------------------
+
+
+def test_engine_refuses_cross_worker_chain():
+    def work(p, emit, ctx):
+        emit(p)
+
+    jg, jcs = _chain_job(work_fn=work)
+    eng = StreamEngine(
+        jg, jcs, num_workers=2,
+        sources={"Src": SourceSpec(10.0, lambda s: (b"x" * 32, 32))},
+        initial_buffer_bytes=256, enable_qos=False, enable_chaining=False)
+    work_tasks = eng.rg.tasks_of("Work")
+    tail = eng.rg.tasks_of("Tail")[0]
+    # Work[1] is on worker 1, Tail[0] on worker 0: not co-located
+    assert eng.rg.worker(work_tasks[1]) != eng.rg.worker(tail)
+    eng.apply_chain(ChainRequest((work_tasks[1], tail), worker=1))
+    assert not eng.active_chains
+    assert not eng.executors[tail].chained
+    assert any("chain refused" in f for f in eng.drain_failures)
+
+
+def test_simulator_refuses_cross_worker_chain():
+    jg, jcs = _chain_job()
+    sim = StreamSimulator(
+        jg, jcs, num_workers=2,
+        sources={"Src": SimSourceSpec(10.0, item_bytes=64, keys=4)},
+        initial_buffer_bytes=256, enable_qos=False)
+    work = sim.rg.tasks_of("Work")
+    tail = sim.rg.tasks_of("Tail")[0]
+    assert sim.rg.worker(work[1]) != sim.rg.worker(tail)
+    sim._apply_chain(ChainRequest((work[1], tail), worker=1))
+    assert not sim.active_chains
+    assert sim.tasks[tail].chained_into is None
+    assert any("chain refused" in f for f in sim.drain_failures)
+
+
+# ---------------------------------------------------------------------------
+# Mixed-key batch split at ownership boundaries (stateful batch stages)
+# ---------------------------------------------------------------------------
+
+
+def test_stateful_batch_stage_splits_mixed_key_buffers():
+    seen: dict[str, list] = {}
+
+    def bfn(payloads, emit, ctx):
+        seen.setdefault(ctx.vertex.id, []).extend(payloads)
+
+    jg = JobGraph("batch-split")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True))
+    jg.add_vertex(JobVertex("Agg", 2, fn=bfn, batch_fn=True, stateful=True))
+    jg.add_edge("Src", "Agg", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Agg"), "Agg")
+    eng = StreamEngine(
+        jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")], num_workers=1,
+        sources={"Src": SourceSpec(1.0, lambda s: (b"x", 1))},
+        enable_qos=False)
+    router = eng.rg.routers["Agg"]
+    agg = eng.rg.tasks_of("Agg")
+    keys0 = [k for k in range(32) if router.owner(k) == 0][:3]
+    keys1 = [k for k in range(32) if router.owner(k) == 1][:3]
+    items = [StreamItem(("k", k), 8, 0.0, key=k) for k in keys0 + keys1]
+    # deliver a mixed-key buffer straight to Agg[0] (no threads needed)
+    eng.executors[agg[0]].process_batch(items, "test-chan")
+    # Agg[0] ran its fn ONLY on the keys it owns
+    assert [p[1] for p in seen[agg[0].id]] == keys0
+    # the foreign sub-batch was forwarded (one message, keys intact)
+    ch_id, forwarded = eng.executors[agg[1]].inbox.get_nowait()
+    assert ch_id == "test-chan"
+    assert [it.key for it in forwarded] == keys1
+    # processing the forwarded sub-batch keeps single-owner state
+    eng.executors[agg[1]].process_batch(forwarded, ch_id)
+    assert [p[1] for p in seen[agg[1].id]] == keys1

@@ -1,0 +1,136 @@
+"""Property tests for the placement layer (hypothesis, optional extra):
+
+* pool bookkeeping stays consistent over random place/unassign/release ops,
+  and workers are released ONLY when empty,
+* across randomized grow/shrink/chain sequences on the simulator: chain
+  members are always co-located, no task is orphaned off a live worker,
+  non-initial workers never sit empty (they are released instead), and a
+  final shrink returns the pool to its initial size.
+"""
+import pytest
+
+pytest.importorskip("hypothesis")  # optional test extra
+from hypothesis import given, settings
+from hypothesis import strategies as st
+
+from repro.core import (
+    ALL_TO_ALL,
+    ChainRequest,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    RuntimeVertex,
+    SimSourceSpec,
+    StreamSimulator,
+    WorkerPool,
+)
+
+
+# ---------------------------------------------------------------------------
+# Pure pool invariants
+# ---------------------------------------------------------------------------
+
+
+@settings(deadline=None, max_examples=60)
+@given(
+    policy=st.sampled_from(["packed", "spread"]),
+    ops=st.lists(st.tuples(st.sampled_from(["place", "unassign", "sweep"]),
+                           st.integers(min_value=0, max_value=100)),
+                 min_size=1, max_size=40),
+)
+def test_pool_bookkeeping_over_random_ops(policy, ops):
+    pool = WorkerPool(2, policy=policy, slots_per_worker=2, max_workers=6)
+    live: list[RuntimeVertex] = []
+    seq = 0
+    for kind, arg in ops:
+        if kind == "place":
+            v = RuntimeVertex("A", seq)
+            seq += 1
+            w = pool.place(v)
+            live.append(v)
+            assert w in pool.workers
+        elif kind == "unassign" and live:
+            pool.unassign(live.pop(arg % len(live)))
+        elif kind == "sweep":
+            # release sweep: non-empty workers must REFUSE release; empty
+            # acquired workers go back to the cloud
+            for w in pool.acquired_workers():
+                if pool.load(w) > 0:
+                    with pytest.raises(ValueError):
+                        pool.release(w)
+                else:
+                    pool.release_if_empty(w)
+        # bookkeeping invariants after every op
+        assert sum(pool.loads().values()) == len(live)
+        assert pool.size() >= pool.initial_workers
+        for v in live:
+            assert pool.worker_of(v.id) in pool.workers
+    # grow -> shrink round trip: drop everything, sweep, back to initial
+    for v in live:
+        pool.unassign(v)
+    for w in pool.acquired_workers():
+        assert pool.release_if_empty(w)
+    assert pool.size() == pool.initial_workers
+    assert pool.stats()["tasks"] == 0
+
+
+# ---------------------------------------------------------------------------
+# Randomized grow/shrink/chain sequences on the simulator
+# ---------------------------------------------------------------------------
+
+
+def _prop_job():
+    jg = JobGraph("prop")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Work", 2, sim_cpu_ms=1.0, sim_item_bytes=64))
+    jg.add_vertex(JobVertex("Tail", 1, is_sink=True, sim_cpu_ms=0.5))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Tail", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Tail"))
+    return jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+
+
+@settings(deadline=None, max_examples=25)
+@given(
+    ops=st.lists(st.tuples(st.sampled_from(["grow", "shrink", "chain"]),
+                           st.integers(min_value=0, max_value=8)),
+                 min_size=1, max_size=12),
+)
+def test_placement_invariants_over_random_rescale_sequences(ops):
+    jg, jcs = _prop_job()
+    pool = WorkerPool(2, policy="spread", slots_per_worker=3, max_workers=10)
+    sim = StreamSimulator(
+        jg, jcs,
+        sources={"Src": SimSourceSpec(50.0, item_bytes=64, keys=8)},
+        initial_buffer_bytes=256, enable_qos=False, pool=pool)
+    tail = sim.rg.tasks_of("Tail")[0]
+    for kind, arg in ops:
+        cur = len(sim.rg.tasks_of("Work"))
+        if kind == "grow":
+            sim.scale_out("Work", min(cur + 1 + arg % 3, 8), reason="prop")
+        elif kind == "shrink":
+            sim.scale_in("Work", max(1, cur - 1 - arg % 3), reason="prop")
+        else:  # attempt a chain into the sink; the co-location guard may
+            # legitimately refuse — either way the invariants must hold
+            group = sim.rg.tasks_of("Work")
+            v = group[arg % len(group)]
+            sim._apply_chain(
+                ChainRequest((v, tail), worker=sim.rg.worker(v)))
+        # 1. chain members are always co-located
+        for chain in sim.active_chains:
+            assert len({sim.rg.worker(x) for x in chain}) == 1, chain
+        # 2. no orphaned tasks: every live task sits on a live pool worker
+        for v in sim.rg.vertices:
+            assert sim.rg.worker(v) in pool.workers, f"{v} orphaned"
+        assert pool.stats()["tasks"] == len(sim.rg.vertices)
+        # 3. workers are released only when empty — and conversely, a
+        #    non-initial worker never lingers empty (scale-in releases it)
+        for w, load in pool.loads().items():
+            if w >= pool.initial_workers:
+                assert load > 0, f"acquired worker {w} left empty"
+    # 4. grow -> shrink returns the pool to its initial size
+    if len(sim.rg.tasks_of("Work")) > 2:
+        sim.scale_in("Work", 2, reason="prop-final")
+    assert pool.size() == pool.initial_workers
+    assert not sim.drain_failures

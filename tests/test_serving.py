@@ -44,3 +44,30 @@ def test_adaptive_batching_changes_batch_size(model_and_params):
         len(res.batch_sizes) >= 2
         and res.batch_sizes[-1] < res.batch_sizes[0])
     assert res.p(0.9) < 30.0 or moved
+
+
+@pytest.mark.slow
+def test_replica_token_and_kv_cache_gauges(model_and_params):
+    """Per-Decode-replica token-throughput and KV-cache-occupancy gauges
+    (metrics only — groundwork for token-level autoscaling)."""
+    m, params, cfg = model_and_params
+    spec = RequestSpec(rate_per_s=20.0, prompt_len=8, gen_len=2,
+                       vocab=cfg.vocab_size)
+    srv = QoSServer(m, params, spec, latency_limit_ms=500.0,
+                    enable_qos=False, initial_buffer_bytes=2048)
+    res = srv.run(12_000.0)
+    assert res.completed > 0
+    replicas = {v.id for v in srv.engine.rg.tasks_of("Decode")}
+    assert set(res.replica_metrics) == replicas
+    total_tokens = sum(g["tokens_generated"]
+                       for g in res.replica_metrics.values())
+    # every completed request generated gen_len tokens on some replica
+    assert total_tokens >= res.completed * spec.gen_len
+    for g in res.replica_metrics.values():
+        assert g["token_throughput_per_s"] >= 0.0
+        # session records ARE the KV occupancy: each live session pins at
+        # least one KV slot (its kv_pos is past the prompt)
+        assert g["kv_cache_tokens"] >= g["kv_cache_sessions"]
+    assert res.total_token_throughput_per_s > 0.0
+    assert sum(g["kv_cache_sessions"]
+               for g in res.replica_metrics.values()) > 0
