@@ -202,6 +202,10 @@ def run_keyed_burst(smoke: bool = False):
     t0 = time.perf_counter()
     res = sim.run(20_000.0)
     wall = (time.perf_counter() - t0) * 1e6
+    # events/sec over the sim.run wall — the CI perf canary (scripts/ci.sh
+    # reads it from this derived column, warn-only).  PR-4 baseline on the
+    # pre-overhaul event core: ~40k events/s through this same harness.
+    events_per_sec = res.events / (wall / 1e6)
     group = sim.rg.tasks_of("Agg")
     agg = _merge_states(lambda v: sim.tasks[v], group)
     truth = dict(sim.tasks[sim.rg.tasks_of("Sink")[0]].state.items())
@@ -217,7 +221,8 @@ def run_keyed_burst(smoke: bool = False):
         "keyed_burst_sim", wall,
         f"keys={len(agg)};items={sum(agg.values())};exact=True;"
         f"single_owner=True;final={len(group)};"
-        f"rescales={len(res.scale_log)}",
+        f"rescales={len(res.scale_log)};"
+        f"events={res.events};events_per_sec={events_per_sec:.0f}",
     ))
     # -- threaded engine ----------------------------------------------------
     def agg_fn(p, emit, ctx):

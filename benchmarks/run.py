@@ -2,28 +2,62 @@
 benches.  Prints ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
+                                            [--bench-out]
 
 ``--smoke``: CI mode — tiny shapes, seconds not minutes, to catch executor
 regressions.  Only modules whose ``run`` accepts a ``smoke`` keyword take
 part (the rest are skipped); failures still exit non-zero.
+
+``--bench-out``: record the run — every module's rows land in
+``BENCH_<module>.json`` at the repo root via :func:`write_bench`, the
+repo's perf trajectory (one JSON per module per recorded run; commit them
+to track events/sec across PRs).  Modules may also call ``write_bench``
+directly with richer payloads (benchmarks/scale.py writes
+``BENCH_scale.json`` with wall-time / events-per-sec / latency /
+throughput for the Fig. 8 n=200 run).
 """
 from __future__ import annotations
 
 import argparse
 import inspect
+import json
 import sys
+import time
 import traceback
+from pathlib import Path
 
 sys.path.insert(0, "src")
+
+#: repo root — BENCH_<name>.json files land here.
+BENCH_DIR = Path(__file__).resolve().parent.parent
 
 MODULES = [
     ("buffer_tradeoff", "Fig. 2: buffer size x rate -> latency/throughput"),
     ("media_pipeline", "Figs. 7-10: media job scenario suite"),
     ("qos_scaling", "§3.4: QoS setup algorithms at n=200, m=800"),
+    ("scale", "Fig. 8 at n=200: constraints on/off, >=13x latency factor"),
     ("serving_qos", "serving-plane QoS: adaptive batching + chaining"),
     ("kernels", "Pallas kernel validation vs oracles"),
     ("roofline", "dry-run roofline terms per (arch x shape)"),
 ]
+
+
+#: bench names written during this process — the generic ``--bench-out``
+#: row dump never clobbers an artifact a module wrote itself, and a smoke
+#: run never overwrites a module's recorded full-scale artifact.
+_written: set[str] = set()
+
+
+def write_bench(name: str, payload: dict) -> Path:
+    """Shared bench-writer: record ``payload`` as ``BENCH_<name>.json`` at
+    the repo root.  The envelope carries the bench name and a wall-clock
+    stamp; everything else is the caller's measurement dict."""
+    out = BENCH_DIR / f"BENCH_{name}.json"
+    doc = {"bench": name, "recorded_unix_s": round(time.time(), 1)}
+    doc.update(payload)
+    out.write_text(json.dumps(doc, indent=1, sort_keys=True) + "\n")
+    _written.add(name)
+    return out
 
 
 def main() -> None:
@@ -32,6 +66,9 @@ def main() -> None:
     ap.add_argument("--only", default=None)
     ap.add_argument("--smoke", action="store_true",
                     help="CI smoke mode: tiny shapes, seconds not minutes")
+    ap.add_argument("--bench-out", action="store_true",
+                    help="write BENCH_<module>.json rows next to the repo "
+                         "root (perf trajectory)")
     args = ap.parse_args()
 
     failures = []
@@ -46,8 +83,18 @@ def main() -> None:
                 if "smoke" not in inspect.signature(mod.run).parameters:
                     continue  # module has no smoke-sized variant yet
                 kwargs["smoke"] = True
+            rows = []
             for name, us, derived in mod.run(**kwargs):
+                rows.append({"name": name, "us_per_call": round(us, 1),
+                             "derived": derived})
                 print(f"{name},{us:.1f},{derived}", flush=True)
+            if args.bench_out and rows and mod_name not in _written:
+                if args.smoke and (BENCH_DIR / f"BENCH_{mod_name}.json"
+                                   ).exists():
+                    # never replace a recorded full-scale artifact with a
+                    # smoke-sized row dump
+                    continue
+                write_bench(mod_name, {"smoke": args.smoke, "rows": rows})
         except Exception as e:  # noqa: BLE001
             failures.append((mod_name, repr(e)))
             traceback.print_exc()

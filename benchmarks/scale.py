@@ -1,0 +1,140 @@
+"""Fig. 6/8 at paper scale: the livestream pipeline (Partitioner -> Decoder
+-> Merger -> Overlay -> Encoder -> RTPServer) on n=200 simulated workers,
+QoS constraints ON vs OFF.
+
+The paper's headline result: with the 300 ms / 15 s constraint armed, the
+QoS manager's adaptive output-buffer sizing cuts workflow latency by more
+than an order of magnitude (>=13x here, ~80x at the recorded settings)
+while sustaining the same throughput — against the identical job with
+static 32 KB buffers (the constraints-off / Fig. 7 configuration).
+
+Run shape (non-smoke): m=200 parallelism on n=200 workers, 800 streams at
+25 fps (20k items/s offered), 60 s of simulated time per arm, latencies
+averaged after a 60% settle point so the constraints-on arm is measured
+converged.  Routing uses 1024 virtual key ranges (m=200 exceeds the
+default 128-range table; core/routing.py).  Smoke mode shrinks the cluster
+to n=20 for seconds-level CI.
+
+The non-smoke run records the repo's first perf-trajectory artifact,
+``BENCH_scale.json`` (wall time, events/sec, mean/max latency, throughput,
+latency factor), via the shared bench-writer in benchmarks/run.py.
+"""
+from __future__ import annotations
+
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, "src")
+# standalone execution (`python benchmarks/scale.py`): make the repo root
+# importable so the shared bench-writer (benchmarks.run) resolves
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.configs.nephele_media import (  # noqa: E402
+    H264_PACKET_BYTES,
+    MediaJobParams,
+    build_media_job,
+)
+from repro.core import SimSourceSpec, StreamSimulator  # noqa: E402
+
+#: constraints-on mean latency must beat constraints-off by at least this
+#: factor at matched throughput (the paper's Fig. 7 vs Fig. 8 gap).
+LATENCY_FACTOR_FLOOR = 13.0
+#: "matched throughput": the constrained arm must deliver at least this
+#: share of the unconstrained arm's rate.
+THROUGHPUT_MATCH = 0.95
+
+
+def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
+             duration_ms: float, seed: int = 42) -> dict:
+    p = MediaJobParams(parallelism=m, num_workers=n, streams=streams,
+                      fps=25.0, latency_limit_ms=300.0)
+    jg, jcs = build_media_job(p)
+    gpp = (p.streams // p.group_size) // p.parallelism
+    sim = StreamSimulator(
+        jg, jcs, p.num_workers,
+        sources={"Partitioner": SimSourceSpec(
+            rate_items_per_s=p.fps * p.streams / p.parallelism,
+            item_bytes=H264_PACKET_BYTES, keys_per_task=gpp)},
+        initial_buffer_bytes=32 * 1024,
+        measurement_interval_ms=1_000.0,
+        enable_qos=constraints_on, enable_chaining=constraints_on,
+        seed=seed,
+        # m > 128 needs a wider routing table than the default 128 virtual
+        # ranges, or stages past index 127 would never receive a key
+        num_key_ranges=1024 if m > 128 else None,
+    )
+    t0 = time.perf_counter()
+    res = sim.run(duration_ms)
+    wall_s = time.perf_counter() - t0
+    settle = duration_ms * 0.6
+    return {
+        "constraints": "on" if constraints_on else "off",
+        "wall_s": round(wall_s, 3),
+        "events": res.events,
+        "events_per_sec": round(res.events / wall_s, 1),
+        "mean_latency_ms": round(res.mean_latency_ms(settle), 3),
+        "max_latency_ms": round(res.max_latency_ms(settle), 3),
+        "throughput_items_per_s": round(res.throughput_items_per_s, 1),
+        "items_at_sinks": len(res.sink_latencies_ms),
+        "total_buffers": res.total_buffers,
+        "total_mb": round(res.total_bytes / 1e6, 1),
+        "chains": len(res.chained_groups),
+        "give_ups": len(res.give_ups),
+    }
+
+
+def run_scale(n: int, m: int, streams: int, duration_ms: float,
+              record: bool) -> list[tuple[str, float, str]]:
+    off = _run_arm(False, n, m, streams, duration_ms)
+    on = _run_arm(True, n, m, streams, duration_ms)
+    factor = off["mean_latency_ms"] / max(on["mean_latency_ms"], 1e-9)
+    matched = (on["throughput_items_per_s"]
+               >= THROUGHPUT_MATCH * off["throughput_items_per_s"])
+    floor = LATENCY_FACTOR_FLOOR if record else 5.0
+    assert factor >= floor, (
+        f"scale n={n}: constraints-on mean latency "
+        f"{on['mean_latency_ms']}ms vs off {off['mean_latency_ms']}ms — "
+        f"factor {factor:.1f}x below the {floor}x floor")
+    assert matched, (
+        f"scale n={n}: throughput not matched "
+        f"({on['throughput_items_per_s']}/s on vs "
+        f"{off['throughput_items_per_s']}/s off)")
+    if record:
+        from benchmarks.run import write_bench
+        write_bench("scale", {
+            "scenario": "fig8_livestream",
+            "workers": n, "parallelism": m, "streams": streams,
+            "fps": 25.0, "duration_ms": duration_ms,
+            "latency_limit_ms": 300.0, "window_ms": 15_000.0,
+            "latency_factor": round(factor, 1),
+            "throughput_matched": matched,
+            "arms": [off, on],
+        })
+    rows = []
+    for arm in (off, on):
+        derived = (
+            f"mean_ms={arm['mean_latency_ms']};max_ms={arm['max_latency_ms']};"
+            f"thr={arm['throughput_items_per_s']};events={arm['events']};"
+            f"events_per_sec={arm['events_per_sec']}")
+        if arm["constraints"] == "on":
+            derived += f";factor={factor:.1f}x"
+        rows.append((f"scale_n{n}_{arm['constraints']}",
+                     arm["wall_s"] * 1e6, derived))
+    return rows
+
+
+def run(quick: bool = True, smoke: bool = False):
+    if smoke:
+        # seconds-level CI canary: same physics, n=20 cluster, no artifact
+        return run_scale(n=20, m=20, streams=80, duration_ms=30_000.0,
+                         record=False)
+    # the recorded n=200 run (BENCH_scale.json)
+    return run_scale(n=200, m=200, streams=800, duration_ms=60_000.0,
+                     record=True)
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(quick="--full" not in sys.argv,
+                                 smoke="--smoke" in sys.argv):
+        print(f"{name},{us:.0f},{derived}")

@@ -1,0 +1,32 @@
+"""Regenerate tests/golden/sim_decisions.json from the determinism-contract
+scenarios (tests/test_sim_determinism.py).  Only run this for an intentional
+semantic change to the simulator or the QoS control plane — never to paper
+over an unintended trace divergence.
+
+    PYTHONPATH=src python scripts/gen_sim_golden.py
+"""
+import json
+import sys
+from pathlib import Path
+
+sys.path.insert(0, "src")
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tests"))
+
+from test_sim_determinism import GOLDEN, TRACES  # noqa: E402
+
+
+def main() -> None:
+    out = {}
+    for name, fn in TRACES.items():
+        out[name] = fn()
+        print(f"{name}: events={out[name]['events']} "
+              f"history={len(out[name]['history'])} "
+              f"chains={out[name]['chained_groups']} "
+              f"scales={len(out[name]['scale_log'])}")
+    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
+    GOLDEN.write_text(json.dumps(out, indent=1, sort_keys=True))
+    print(f"wrote {GOLDEN}")
+
+
+if __name__ == "__main__":
+    main()

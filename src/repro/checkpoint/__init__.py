@@ -1,7 +1,21 @@
-"""Checkpointing."""
+"""Checkpointing.
 
-from .checkpointer import (  # noqa: F401
-    Checkpointer,
+``pack_keyed_state``/``unpack_keyed_state`` live in the stdlib-only
+``state_codec`` module so the streaming runtime's rescale hot path can use
+them without importing numpy; ``Checkpointer`` (the training-plane
+array checkpointer) is resolved lazily for the same reason (PEP 562).
+"""
+
+from .state_codec import (  # noqa: F401
     pack_keyed_state,
     unpack_keyed_state,
 )
+
+__all__ = ["Checkpointer", "pack_keyed_state", "unpack_keyed_state"]
+
+
+def __getattr__(name: str):
+    if name == "Checkpointer":
+        from .checkpointer import Checkpointer
+        return Checkpointer
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -31,33 +31,14 @@ from pathlib import Path
 
 import numpy as np
 
-#: keyed-state handoff blob format version (manifest field).
-KEYED_STATE_VERSION = 1
-
-
-def pack_keyed_state(entries: dict, meta: dict | None = None) -> bytes:
-    """Serialize per-key state entries for a migration handoff.  The blob is
-    self-describing (version + key manifest + optional meta such as the
-    source subtask and moved ranges) so a receiver can validate it."""
-    payload = {
-        "version": KEYED_STATE_VERSION,
-        "meta": dict(meta or {}),
-        "keys": list(entries.keys()),
-        "entries": dict(entries),
-    }
-    return pickle.dumps(payload)
-
-
-def unpack_keyed_state(blob: bytes) -> dict:
-    """Deserialize a ``pack_keyed_state`` blob back into its entries."""
-    payload = pickle.loads(blob)
-    version = payload.get("version")
-    if version != KEYED_STATE_VERSION:
-        raise ValueError(f"unsupported keyed-state blob version {version!r}")
-    entries = payload["entries"]
-    if set(payload["keys"]) != set(entries.keys()):
-        raise ValueError("keyed-state blob manifest does not match entries")
-    return entries
+# Back-compat re-export: the keyed-state handoff codec moved to the
+# stdlib-only state_codec module so the streaming rescale hot path never
+# pays this module's numpy import.
+from .state_codec import (  # noqa: F401
+    KEYED_STATE_VERSION,
+    pack_keyed_state,
+    unpack_keyed_state,
+)
 
 
 def _flatten(tree):

@@ -66,13 +66,14 @@ class BufferSizingPolicy:
         return None
 
 
-@dataclass
+@dataclass(slots=True)
 class OutputBuffer:
     """A byte-capacity output buffer on one channel (sender side).
 
     The execution layer appends serialized items; ``append`` returns True when
     the buffer must be shipped.  Lifetime (fill time) feeds ``oblt(e,t)``.
     ``version`` implements the §3.5.1 first-writer-wins update rule.
+    Slotted: both backends touch it once per item on their emit hot paths.
     """
 
     channel_id: str

@@ -52,10 +52,13 @@ Keyed-state migration: every rescale of a group goes through its
 ranges change owner; the protocol then (1) quiesces the old owners of the
 moved ranges, (2) snapshots exactly those ranges out of their
 ``StateStore``s, (3) ships them through the checkpoint plane's serialized
-handoff (checkpoint/checkpointer.py pack/unpack), (4) installs them on the
-new owners, (5) atomically commits the routing table, re-homes any queued
-items of moved ranges, and resumes.  Unmoved ranges never change owner, so
-a rescale is invisible to every key that did not migrate.
+handoff (checkpoint/state_codec.py pack/unpack — stdlib-only, so the FIRST
+live rescale never stalls on the accelerator stack's numpy import), (4)
+installs them on the new owners, (5) atomically commits the routing table
+(one tuple swap of the dense lookup table the emit hot paths index),
+re-homes any queued items of moved ranges, and resumes.  Unmoved ranges
+never change owner, so a rescale is invisible to every key that did not
+migrate.
 """
 from __future__ import annotations
 
@@ -385,7 +388,7 @@ class RuntimeRewirer:
         if not plan.moves or not self.jg.vertices[job_vertex].stateful:
             router.commit(plan)
             return
-        from ..checkpoint.checkpointer import (
+        from ..checkpoint.state_codec import (
             pack_keyed_state,
             unpack_keyed_state,
         )

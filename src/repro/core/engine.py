@@ -2,11 +2,21 @@
 
 Implements the common design principles the paper identifies (Fig. 1):
 tasks = threads, channels = producer/consumer queues, items collected in
-byte-capacity output buffers that ship when full.  Cross-worker channels
-pay real serialization (pickle) costs; same-worker channels hand over via
-shared memory.  On top sit the QoS roles: per-worker QoS Reporters and the
-QoS Managers computed by setup.py, applying adaptive output-buffer sizing
-and dynamic task chaining at runtime.
+byte-capacity output buffers that ship when full.  On top sit the QoS
+roles: per-worker QoS Reporters and the QoS Managers computed by setup.py,
+applying adaptive output-buffer sizing and dynamic task chaining at
+runtime.
+
+Serialize-once shipping (PR-4 hot-path overhaul): a cross-worker shipped
+item is pickled exactly ONCE no matter how many cross-worker receivers its
+fan-out has — the blob is cached on the ``StreamItem`` at the first flush
+that needs it and reused by sibling channels — and every cross-worker
+receiver unpickles its OWN payload copy (true wire semantics: a sink
+mutating its payload can never leak the mutation into a sibling receiver
+or back into the sender).  Same-worker channels ship the original objects
+with NO pickle round-trip at all (shared-memory hand-over).  Per-item key
+routing on the emit path is the O(1) dense-table lookup of
+core/routing.py (``router.table[key & router.mask]``).
 
 This executor is used at laptop scale (tests, examples); the discrete-event
 simulator (simulator.py) runs the identical control plane at paper scale.
@@ -53,6 +63,12 @@ class StreamItem:
     created_at_ms: float
     key: int = 0
     tag: Tag | None = None
+    #: serialize-once cache: the payload's pickle, computed lazily at the
+    #: FIRST cross-worker flush that ships this item and reused by every
+    #: other cross-worker channel of the fan-out — one serialization per
+    #: item no matter how many receivers.  Never set on receiver-side
+    #: copies (their payload may be mutated downstream).
+    blob: bytes | None = None
 
 
 @dataclass
@@ -182,9 +198,26 @@ class ChannelSender:
                 self.buffer.version,
             )
         if self.cross_worker:
-            # realistic serialize/deserialize cost for crossing workers
-            blob = pickle.dumps([i.payload for i in items])
-            _ = pickle.loads(blob)
+            # serialize-once shipping: each item's payload is pickled at
+            # most ONCE across the whole fan-out (the blob is cached on the
+            # item, so sibling cross-worker channels reuse it), and every
+            # receiver unpickles its OWN copy — payload isolation across
+            # workers, exactly like a real wire.  Same-worker channels skip
+            # serialization entirely (shared-memory hand-over, below).
+            shipped = []
+            for it in items:
+                blob = it.blob
+                if blob is None:
+                    blob = pickle.dumps(it.payload)
+                    it.blob = blob
+                shipped.append(StreamItem(
+                    payload=pickle.loads(blob),
+                    size_bytes=it.size_bytes,
+                    created_at_ms=it.created_at_ms,
+                    key=it.key,
+                    tag=it.tag,
+                ))
+            items = shipped
         eng.stats_lock_inc(nbytes, len(items))
         eng.deliver(self.channel, items)
 
@@ -208,7 +241,9 @@ class TaskExecutor:
         self.stateful = jv.stateful
         #: per-key state, exposed to user code as ``ctx.state``; for stateful
         #: vertices it is migrated along key ranges on elastic rescaling
-        self.state = StateStore()
+        #: (sliced with the group router's range width)
+        self.state = StateStore(
+            engine.rg.routers[vertex.job_vertex].num_ranges)
         self.is_sink = jv.is_sink or not engine.jg.out_edges(vertex.job_vertex)
         self.inbox: queue.Queue[tuple[str, list[StreamItem]] | None] = queue.Queue()
         self.senders: dict[str, list[ChannelSender]] = {}  # dst job vertex -> senders
@@ -256,12 +291,22 @@ class TaskExecutor:
             if len(senders) == 1:
                 senders[0].send(item)
             else:
-                # key-range routing: the group's KeyRouter owns the key ->
-                # subtask table (senders are sorted by dst index, and the
-                # group is always contiguous from 0).  Mid-rescale a sender
-                # list may transiently disagree with the table; clamp, and
-                # ownership is enforced at the receiver.
-                idx = min(routers[dst_jv].owner(item.key), len(senders) - 1)
+                # O(1) key-range routing: one masked index into the group's
+                # dense lookup table (core/routing.py; senders are sorted by
+                # dst index, and the group is always contiguous from 0).
+                # Mid-rescale a sender list may transiently disagree with
+                # the atomically-swapped table; clamp, and ownership is
+                # enforced at the receiver.
+                router = routers[dst_jv]
+                mask = router.mask
+                key = item.key
+                # non-int keys (hash-routed, see routing.range_of_key)
+                # can't take the masked fast path
+                idx = (router.table[key & mask]
+                       if mask is not None and isinstance(key, int)
+                       else router.owner(key))
+                if idx >= len(senders):
+                    idx = len(senders) - 1
                 senders[idx].send(item)
 
     _current_item: StreamItem | None = None
@@ -464,6 +509,7 @@ class StreamEngine(RuntimeRewirer):
         clock: Clock | None = None,
         max_buffer_lifetime_ms: float | None = 5_000.0,
         pool: WorkerPool | None = None,
+        num_key_ranges: int | None = None,
     ) -> None:
         self.jg = jg
         #: max output-buffer lifetime (§3.5.1 companion): with QoS off and a
@@ -476,8 +522,10 @@ class StreamEngine(RuntimeRewirer):
         self.constraints, self.throughput_constraints = split_constraints(
             constraints)
         # worker placement: an explicit WorkerPool (elastic policies,
-        # acquire/release) or a fixed modulo fleet of ``num_workers``
-        self.rg = RuntimeGraph(jg, num_workers, pool=pool)
+        # acquire/release) or a fixed modulo fleet of ``num_workers``;
+        # num_key_ranges widens the routers for m > 128 stages
+        self.rg = RuntimeGraph(jg, num_workers, pool=pool,
+                               num_key_ranges=num_key_ranges)
         self.sources = sources or {}
         self.clock = clock or RealClock()
         self.enable_qos = enable_qos

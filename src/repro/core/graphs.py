@@ -15,6 +15,7 @@ whether a saturated pool acquires a fresh worker.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
+from functools import cached_property
 from typing import Any, Callable, Iterable, Sequence
 
 from .placement import WorkerPool
@@ -163,12 +164,17 @@ class JobGraph:
 
 @dataclass(frozen=True)
 class RuntimeVertex:
-    """A task: one parallel instance of a job vertex (paper §3.1.2)."""
+    """A task: one parallel instance of a job vertex (paper §3.1.2).
+
+    ``id`` is cached on first access: both execution backends key telemetry
+    by it on their per-item hot paths, and recomputing the f-string
+    dominated simulator profiles before it was memoized.
+    """
 
     job_vertex: str
     index: int
 
-    @property
+    @cached_property
     def id(self) -> str:
         return f"{self.job_vertex}[{self.index}]"
 
@@ -178,12 +184,15 @@ class RuntimeVertex:
 
 @dataclass(frozen=True)
 class Channel:
-    """A runtime edge: a channel along which ``src`` sends items to ``dst``."""
+    """A runtime edge: a channel along which ``src`` sends items to ``dst``.
+
+    ``id`` is cached for the same hot-path reason as ``RuntimeVertex.id``.
+    """
 
     src: RuntimeVertex
     dst: RuntimeVertex
 
-    @property
+    @cached_property
     def id(self) -> str:
         return f"{self.src.id}->{self.dst.id}"
 
@@ -209,13 +218,21 @@ class RuntimeGraph:
 
     def __init__(self, job_graph: JobGraph, num_workers: int | None = None,
                  allocator: Callable[[RuntimeVertex, int], int] | None = None,
-                 pool: WorkerPool | None = None):
+                 pool: WorkerPool | None = None,
+                 num_key_ranges: int | None = None):
         self.job_graph = job_graph
         if pool is None:
             if num_workers is None:
                 raise ValueError("need num_workers or an explicit pool")
             pool = WorkerPool(num_workers)
         self.pool = pool
+        #: virtual key ranges per consumer-group router.  The default
+        #: (routing.NUM_KEY_RANGES = 128) caps a keyed stage's addressable
+        #: parallelism at 128 subtasks; paper-scale jobs (m >= 200, e.g.
+        #: benchmarks/scale.py) pass a larger power of two.  Keep the
+        #: default for anything covered by the determinism goldens — the
+        #: range count changes which keys migrate on rescale.
+        self.num_key_ranges = num_key_ranges
         #: size of the initial fleet (legacy attribute; live count is
         #: ``pool.size()`` / ``stats()["workers"]``)
         self.num_workers = pool.initial_workers
@@ -258,7 +275,9 @@ class RuntimeGraph:
                 self._in[rv] = []
                 group.append(rv)
             self._by_job_vertex[name] = group
-            self.routers[name] = KeyRouter(jv.parallelism)
+            self.routers[name] = (
+                KeyRouter(jv.parallelism) if self.num_key_ranges is None
+                else KeyRouter(jv.parallelism, self.num_key_ranges))
         for je in jg.edges:
             chans: list[Channel] = []
             src_group = self._by_job_vertex[je.src]

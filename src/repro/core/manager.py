@@ -73,7 +73,9 @@ Action = BufferSizeUpdate | ChainRequest | ScaleRequest | GiveUp
 
 class _Window:
     """(ts, value) ring with eviction at ``max_window_ms``; means over any
-    window <= max."""
+    window <= max.  Like measurement.RunningAverage, eviction also runs on
+    ``add()`` so a store that keeps receiving reports but is rarely read
+    stays bounded (evicted entries could never reach a later ``mean()``)."""
 
     __slots__ = ("max_window_ms", "items")
 
@@ -82,7 +84,11 @@ class _Window:
         self.items: deque[tuple[float, float]] = deque()
 
     def add(self, ts: float, v: float) -> None:
-        self.items.append((ts, v))
+        items = self.items
+        lo = ts - self.max_window_ms
+        while items and items[0][0] < lo:
+            items.popleft()
+        items.append((ts, v))
 
     def mean(self, now: float, window_ms: float) -> float | None:
         while self.items and self.items[0][0] < now - self.max_window_ms:

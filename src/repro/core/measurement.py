@@ -39,7 +39,15 @@ class Tag:
 
 class RunningAverage:
     """Windowed running average: values fresher than ``window_ms`` (Eq. 1's
-    time span t); older measurements are discarded (§3.3)."""
+    time span t); older measurements are discarded (§3.3).
+
+    Eviction runs on ``add()`` as well as on reads: a window that keeps
+    receiving samples but is rarely read (e.g. a channel whose manager
+    moved away, or an idle stretch between manager reads) stays bounded
+    instead of accumulating every sample until the next ``value()`` call.
+    Results are unchanged — an entry evicted at add time could never have
+    contributed to a later read (timestamps are monotonic).
+    """
 
     __slots__ = ("window_ms", "_items",)
 
@@ -48,6 +56,7 @@ class RunningAverage:
         self._items: deque[tuple[float, float]] = deque()  # (ts, value)
 
     def add(self, ts_ms: float, value: float) -> None:
+        self._evict(ts_ms)
         self._items.append((ts_ms, value))
 
     def _evict(self, now_ms: float) -> None:
@@ -176,19 +185,23 @@ class QoSReporter:
         return out
 
     # -- sampling decisions ----------------------------------------------------
-    def should_tag(self, channel_id: str) -> bool:
-        """One tagged item per channel per measurement interval (§3.3)."""
-        now = self.clock.now()
-        last = self._last_tagged.get(channel_id, -float("inf"))
-        if now - last >= self.interval_ms:
+    def should_tag(self, channel_id: str, now: float | None = None) -> bool:
+        """One tagged item per channel per measurement interval (§3.3).
+        Hot-path callers that already know the current time pass ``now``."""
+        if now is None:
+            now = self.clock.now()
+        last = self._last_tagged.get(channel_id)
+        if last is None or now - last >= self.interval_ms:
             self._last_tagged[channel_id] = now
             return True
         return False
 
-    def should_sample_task(self, vertex_id: str) -> bool:
-        now = self.clock.now()
-        last = self._last_task_sample.get(vertex_id, -float("inf"))
-        if now - last >= self.interval_ms:
+    def should_sample_task(self, vertex_id: str,
+                           now: float | None = None) -> bool:
+        if now is None:
+            now = self.clock.now()
+        last = self._last_task_sample.get(vertex_id)
+        if last is None or now - last >= self.interval_ms:
             self._last_task_sample[vertex_id] = now
             return True
         return False

@@ -15,6 +15,16 @@ systems survey) is implemented here:
   never change subtask.  ``plan()`` computes the remap without mutating the
   table; the execution layer migrates the moved ranges' state and then
   ``commit()``s the new table in one atomic swap.
+
+O(1) emit-path contract: the dense range->owner table is public as
+``KeyRouter.table`` (an immutable tuple of ``num_ranges`` owner indices),
+and when ``num_ranges`` is a power of two ``KeyRouter.mask`` is
+``num_ranges - 1`` — so for integer keys the per-item routing decision on
+both backends' emit hot paths is the single masked array index
+``router.table[key & router.mask]``, equivalent to ``owner(key)`` (Python's
+``&`` on negative ints follows two's complement, matching ``%``).
+``commit()`` swaps ``table`` atomically together with the owner view, so a
+reader sees either the pre- or post-migration table, never a partial remap.
 * ``StateStore`` — optional per-task keyed state with a
   ``snapshot(key_ranges)`` / ``restore(entries)`` API sliced along the same
   virtual ranges, so a migration moves exactly the re-homed keys.
@@ -88,22 +98,37 @@ class KeyRouter:
             raise ValueError("group_size must be >= 1")
         self.num_ranges = num_ranges
         self.group_size = group_size
-        self._owners: tuple[int, ...] = tuple(
+        #: ``num_ranges - 1`` when the range count is a power of two (the
+        #: default): integer keys route as ``table[key & mask]`` — one masked
+        #: array index on the emit hot path.  None otherwise (fall back to
+        #: ``owner()``).
+        self.mask: int | None = (
+            num_ranges - 1 if num_ranges & (num_ranges - 1) == 0 else None)
+        #: dense range -> owner lookup table (public emit-path view).  An
+        #: immutable tuple swapped atomically by ``commit()``; readers see
+        #: either the old or the new table, never a partial remap.
+        self.table: tuple[int, ...] = tuple(
             r % group_size for r in range(num_ranges))
+
+    # back-compat internal alias (pre-O(1)-table name)
+    @property
+    def _owners(self) -> tuple[int, ...]:
+        return self.table
 
     # -- routing (hot path) --------------------------------------------------
     def range_of(self, key: Any) -> int:
         return range_of_key(key, self.num_ranges)
 
     def owner(self, key: Any) -> int:
-        """Subtask index that owns ``key``."""
-        return self._owners[range_of_key(key, self.num_ranges)]
+        """Subtask index that owns ``key``.  Equivalent to the inlined
+        ``table[key & mask]`` fast path both backends use for int keys."""
+        return self.table[range_of_key(key, self.num_ranges)]
 
     def owner_of_range(self, r: int) -> int:
-        return self._owners[r]
+        return self.table[r]
 
     def ranges_of(self, owner: int) -> list[int]:
-        return [r for r, o in enumerate(self._owners) if o == owner]
+        return [r for r, o in enumerate(self.table) if o == owner]
 
     # -- rescale -------------------------------------------------------------
     def plan(self, new_size: int) -> MigrationPlan:
@@ -119,7 +144,7 @@ class KeyRouter:
         the hot ranges to every gaining owner."""
         if new_size < 1:
             raise ValueError("new_size must be >= 1")
-        old = self._owners
+        old = self.table
         base, rem = divmod(self.num_ranges, new_size)
         targets = [base + (1 if i < rem else 0) for i in range(new_size)]
         owned: dict[int, list[int]] = {}
@@ -160,9 +185,29 @@ class KeyRouter:
         return MigrationPlan(new_size, tuple(new_owners), moves)
 
     def commit(self, plan: MigrationPlan) -> None:
-        """Atomically swap in the planned table (after state migration)."""
-        self._owners = plan.new_owners
+        """Atomically swap in the planned table (after state migration).
+        A single tuple rebind: emit-path readers of ``table`` see either the
+        old or the new mapping in full."""
+        self.table = plan.new_owners
         self.group_size = plan.new_size
+
+
+class _NullLock:
+    """No-op context manager for single-threaded stores (the discrete-event
+    simulator): migration runs within one event, so there is nothing to
+    exclude and the per-item ``bump`` on stateful stages skips the real
+    lock's acquire/release cost."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "_NullLock":
+        return self
+
+    def __exit__(self, *exc) -> None:
+        return None
+
+
+_NULL_LOCK = _NullLock()
 
 
 class StateStore:
@@ -173,12 +218,15 @@ class StateStore:
     ``snapshot(key_ranges, evict=True)`` on the old owner and
     ``restore(entries)`` on the new one.  All operations take the store lock
     so a snapshot never observes a half-applied update from the task thread.
+    Single-threaded executors pass ``locked=False`` to skip the real lock
+    (the discrete-event simulator bumps stateful stages once per item).
     """
 
-    def __init__(self, num_ranges: int = NUM_KEY_RANGES) -> None:
+    def __init__(self, num_ranges: int = NUM_KEY_RANGES,
+                 locked: bool = True) -> None:
         self.num_ranges = num_ranges
         self._data: dict[Any, Any] = {}
-        self._lock = threading.Lock()
+        self._lock = threading.Lock() if locked else _NULL_LOCK
 
     # -- per-key access ------------------------------------------------------
     def get(self, key: Any, default: Any = None) -> Any:
@@ -191,7 +239,13 @@ class StateStore:
 
     def bump(self, key: Any, amount: int = 1) -> int:
         """Increment-and-get — the common keyed-aggregate primitive."""
-        with self._lock:
+        lock = self._lock
+        if lock is _NULL_LOCK:  # single-threaded fast path (simulator)
+            data = self._data
+            v = data.get(key, 0) + amount
+            data[key] = v
+            return v
+        with lock:
             v = self._data.get(key, 0) + amount
             self._data[key] = v
             return v

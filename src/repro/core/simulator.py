@@ -8,6 +8,35 @@ Fig. 1 processing pattern.  Used by benchmarks to reproduce Fig. 2 and the
 Fig. 7/8/9 scenario suite at n=200, and by tests for deterministic QoS
 behaviour checks.
 
+Batched event core (the PR-4 hot-path overhaul).  The event heap stores
+slotted records ``(time, seq, kind, a, b, c)`` — plain tuples dispatched on
+an int ``kind`` — instead of per-item allocated closures:
+
+* a shipped output buffer is ONE event carrying its whole item batch
+  (``_EV_SHIP``: the batch is enqueued and served without further wakeups),
+* one service completion is ONE event (``_EV_COMPLETE``) whose dispatch
+  also starts the task's next queued item and drains the worker CPU's ready
+  queue — there are no intermediate "wakeup" events between completions,
+* sources advance through a mutable per-source record (``_EV_SOURCE`` /
+  ``_EV_SRC_EMIT``) instead of a closure per emitted item,
+* ``schedule(at_ms, fn)`` still accepts arbitrary callables (``_EV_CALL``)
+  for tests/benchmarks that inject actions mid-run.
+
+Per-item routing is the O(1) dense-table lookup of core/routing.py
+(``router.table[key & router.mask]``), and every task/channel caches its
+worker id, CPU model, and QoS reporter (all fixed for the object's
+lifetime — elastic re-wiring only ever ADDS workers and swaps manager
+scopes, never rebinds these).
+
+Determinism contract: under a fixed ``seed`` the event core is bit-exact —
+event count, event order (heap ties broken by a global sequence number),
+all measurement timestamps, and therefore every QoS decision
+(BufferSizeUpdate / ChainRequest / ScaleRequest / GiveUp) are a pure
+function of the scenario.  The slotted core preserves the pre-overhaul
+per-item-closure semantics exactly (same events at the same times in the
+same order, same float arithmetic); tests/test_sim_determinism.py pins
+golden decision traces recorded before the rewrite.
+
 Simplifications vs. the threaded engine (recorded here on purpose):
 * CPython thread-scheduling noise is absent — latencies are deterministic,
 * per-worker CPU contention is modeled per task only (a worker is assumed to
@@ -25,7 +54,6 @@ on both backends.
 from __future__ import annotations
 
 import heapq
-import itertools
 import random
 from collections import deque
 from dataclasses import dataclass, field
@@ -43,6 +71,18 @@ from .placement import WorkerPool
 from .routing import StateStore
 from .setup import compute_qos_setup, compute_reporter_setup
 
+# Slotted event kinds (heap records are ``(time, seq, kind, a, b, c)``;
+# ties break on ``seq``, so ``kind``/payload never reach a comparison).
+_EV_CALL = 0      # a = callable                      (schedule() back-compat)
+_EV_SHIP = 1      # a = dst _SimTask,  b = items, c = channel_id
+_EV_COMPLETE = 2  # a = _SimTask,      b = item,  c = stages
+_EV_SRC_EMIT = 3  # a = last _SimTask, b = source item
+_EV_SOURCE = 4    # a = _SourceState
+_EV_CONTROL = 5   # QoS control tick
+_EV_FLUSH = 6     # stale-buffer sweep
+
+_heappush = heapq.heappush
+
 
 @dataclass
 class SimNetConfig:
@@ -57,7 +97,7 @@ class SimNetConfig:
     propagation_ms: float = 0.15
 
 
-@dataclass
+@dataclass(slots=True)
 class SimItem:
     created_at_ms: float
     size_bytes: int
@@ -86,13 +126,28 @@ class SimSourceSpec:
         return self.rate_items_per_s
 
 
+class _SourceState:
+    """Mutable per-source-subtask record advanced by ``_EV_SOURCE`` events
+    (replaces the closure-per-item source of the pre-overhaul core)."""
+
+    __slots__ = ("task", "spec", "seq", "index")
+
+    def __init__(self, task: "_SimTask", spec: SimSourceSpec) -> None:
+        self.task = task
+        self.spec = spec
+        self.seq = 0
+        self.index = task.vertex.index
+
+
 class _WorkerCPU:
     """Multi-server CPU model: one per worker node (the paper's testbed ran
     eight tasks of four types per 8-core node — §4.2).  Unchained tasks each
     occupy a core for their service time; a chained series occupies ONE core
     for the summed service time (one thread, §3.5.2).  Ready work queues
     FIFO when all cores are busy, which models the scheduling delay that
-    task chaining removes."""
+    task chaining removes.  Completions are slotted ``_EV_COMPLETE`` events;
+    their dispatch frees the core, runs the completion, and drains this
+    ready queue — no helper closures on the heap."""
 
     __slots__ = ("sim", "cores", "busy", "ready")
 
@@ -100,59 +155,50 @@ class _WorkerCPU:
         self.sim = sim
         self.cores = cores
         self.busy = 0
-        self.ready: deque[tuple[float, Callable[[], None]]] = deque()
+        self.ready: deque[tuple[float, "_SimTask", SimItem, tuple]] = deque()
 
-    def submit(self, svc_ms: float, done: Callable[[], None]) -> None:
-        if self.busy < self.cores:
-            self._start(svc_ms, done)
-        else:
-            self.ready.append((svc_ms, done))
-
-    def _start(self, svc_ms: float, done: Callable[[], None]) -> None:
-        self.busy += 1
-
-        def fin() -> None:
-            self.busy -= 1
-            done()
-            while self.ready and self.busy < self.cores:
-                s, d = self.ready.popleft()
-                self._start(s, d)
-
-        self.sim.schedule(self.sim.clock.now() + svc_ms, fin)
 
 
 class _SimChannel:
-    """Sender-side output buffer + transport for one channel."""
+    """Sender-side output buffer + transport for one channel.  Worker ids,
+    the source-side QoS reporter, and the destination task are fixed for the
+    channel's lifetime and cached at construction."""
 
-    __slots__ = ("channel", "buffer", "sim", "cross_worker")
+    __slots__ = ("channel", "cid", "buffer", "sim", "cross_worker",
+                 "src_reporter", "dst_task", "chained")
 
     def __init__(self, channel, sim: "StreamSimulator", capacity: int) -> None:
         self.channel = channel
+        self.cid = channel.id
         self.buffer = OutputBuffer(channel.id, capacity)
         self.sim = sim
         self.cross_worker = sim.rg.worker(channel.src) != sim.rg.worker(channel.dst)
+        self.src_reporter = sim.reporters[sim.rg.worker(channel.src)]
+        self.dst_task = sim.tasks[channel.dst]
+        self.chained = False  # mirror of sim.chained_channels for this id
 
-    def send(self, item: SimItem) -> None:
-        sim = self.sim
-        now = sim.clock.now()
+    def send(self, item: SimItem, now: float) -> None:
         item.emitted_at_ms = now
-        rep = sim.reporters[sim.rg.worker(self.channel.src)]
-        if self.channel.id in sim.measured_channels and rep.should_tag(self.channel.id):
-            item.tag = Tag(self.channel.id, now)
+        sim = self.sim
+        cid = self.cid
+        if cid in sim.measured_channels and self.src_reporter.should_tag(
+                cid, now):
+            item.tag = Tag(cid, now)
         if self.buffer.append(item, item.size_bytes, now):
-            self.flush()
+            self.flush(now)
 
-    def flush(self) -> None:
-        if self.buffer.empty:
+    def flush(self, now: float | None = None) -> None:
+        buf = self.buffer
+        if not buf.items:
             return
         sim = self.sim
-        now = sim.clock.now()
-        items, nbytes, lifetime = self.buffer.take(now)
-        rep = sim.reporters[sim.rg.worker(self.channel.src)]
-        if self.channel.id in sim.measured_channels:
-            rep.record_output_buffer_lifetime(
-                self.channel.id, lifetime, self.buffer.capacity_bytes,
-                self.buffer.version,
+        if now is None:
+            now = sim.clock.now()
+        items, nbytes, lifetime = buf.take(now)
+        cid = self.cid
+        if cid in sim.measured_channels:
+            self.src_reporter.record_output_buffer_lifetime(
+                cid, lifetime, buf.capacity_bytes, buf.version,
             )
         net = sim.net
         if self.cross_worker:
@@ -165,17 +211,26 @@ class _SimChannel:
             delay = net.same_worker_overhead_ms
         sim.total_bytes += nbytes
         sim.total_buffers += 1
-        dst = self.channel.dst
-        cid = self.channel.id
-        sim.schedule(now + delay, lambda: sim.tasks[dst].enqueue(items, cid))
+        sim._seq += 1
+        _heappush(sim._heap, (now + delay, sim._seq, _EV_SHIP,
+                              self.dst_task, items, cid))
 
 
 class _SimTask:
     """Single-server queue; when head of a chain, service covers the whole
     chain (§3.5.2 — one thread runs all chained tasks)."""
 
+    __slots__ = (
+        "vertex", "vid", "sim", "svc_ms", "fan_in", "out_bytes", "stateful",
+        "state", "is_sink", "queue", "busy", "halted", "retired",
+        "chained_into", "chain_next", "_fan_count", "_pending_task_sample",
+        "busy_ms_window", "emitted", "busy_ms_total", "out_by_jv",
+        "out_groups", "_inflight_since", "worker", "cpu", "reporter",
+    )
+
     def __init__(self, vertex: RuntimeVertex, sim: "StreamSimulator") -> None:
         self.vertex = vertex
+        self.vid = vertex.id
         self.sim = sim
         jv = sim.jg.vertices[vertex.job_vertex]
         self.svc_ms = jv.sim_cpu_ms
@@ -184,8 +239,10 @@ class _SimTask:
         self.stateful = jv.stateful
         #: per-key state; for stateful vertices the simulator maintains a
         #: per-key processed-item count (its tasks are cost models without
-        #: user code) and migration moves it along key ranges
-        self.state = StateStore()
+        #: user code) and migration moves it along key ranges (sliced with
+        #: the group router's range width; lock-free: one event at a time)
+        self.state = StateStore(
+            sim.rg.routers[vertex.job_vertex].num_ranges, locked=False)
         self.is_sink = not sim.jg.out_edges(vertex.job_vertex)
         self.queue: deque[SimItem] = deque()
         self.busy = False
@@ -198,11 +255,36 @@ class _SimTask:
         self.busy_ms_window = 0.0
         self.emitted = 0          # lifetime emissions (elastic telemetry)
         self.busy_ms_total = 0.0
-        # emission routing: dst job vertex -> channels sorted by dst index
+        # emission routing: dst job vertex -> channels sorted by dst index;
+        # out_groups is the hot-path projection [(router, channels), ...]
+        # rebuilt by _rebuild_out() after every wiring mutation
         self.out_by_jv: dict[str, list] = {}
+        self.out_groups: list[tuple[Any, list]] = []
         self._inflight_since: float | None = None
+        # fixed for the task's lifetime (workers are only ever added; the
+        # per-worker reporter/CPU objects survive QoS-scope refreshes)
+        self.worker = sim.rg.worker(vertex)
+        self.cpu = sim.cpus[self.worker]
+        self.reporter = sim.reporters[self.worker]
 
-    def enqueue(self, items: list[SimItem], channel_id: str) -> None:
+    def _rebuild_out(self) -> None:
+        """Refresh the hot-path routing projection after a wiring mutation
+        (channel opened/closed).  Router objects are per job vertex and
+        never replaced, so the pairs stay valid until the next mutation."""
+        routers = self.sim.rg.routers
+        self.out_groups = [
+            (routers[jv_name], chans)
+            for jv_name, chans in self.out_by_jv.items()
+        ]
+
+    def enqueue(self, items: list[SimItem], channel_id: str,
+                now: float | None = None) -> None:
+        if not (self.retired or self.stateful):
+            # fast path: plain delivery (the overwhelming majority of ships)
+            self.queue.extend(items)
+            if not (self.busy or self.halted):
+                self._try_start(now)
+            return
         jv = self.vertex.job_vertex
         if self.retired:
             # straggler delivery after scale-in: hand each item to its key
@@ -211,10 +293,14 @@ class _SimTask:
             group = self.sim.rg.tasks_of(jv)
             if group:
                 router = self.sim.rg.routers[jv]
+                table, mask = router.table, router.mask
+                last = len(group) - 1
                 for it in items:
-                    owner = router.owner(it.key)
+                    owner = (table[it.key & mask]
+                             if mask is not None and isinstance(it.key, int)
+                             else router.owner(it.key))
                     target = self.sim.tasks.get(
-                        group[min(owner, len(group) - 1)])
+                        group[owner if owner < last else last])
                     if target is None or target.retired:
                         # routing table and group transiently disagree: pick
                         # any survivor directly (never recurse into another
@@ -224,74 +310,108 @@ class _SimTask:
                              if (t := self.sim.tasks.get(g)) is not None
                              and not t.retired), None)
                     if target is not None:
-                        target.enqueue([it], channel_id)
+                        target.enqueue([it], channel_id, now)
                 return
         if self.stateful:
             # key-ownership enforcement: items whose range migrated away (or
             # that were in flight across a routing-table swap) are re-homed
             # to the range's owner — its state lives there
             router = self.sim.rg.routers[jv]
-            mine: list[SimItem] = []
-            for it in items:
-                owner = router.owner(it.key)
-                if owner != self.vertex.index:
-                    target = self.sim.tasks.get(RuntimeVertex(jv, owner))
-                    if target is not None and target is not self \
-                            and not target.retired:
-                        target.enqueue([it], channel_id)
-                        continue
-                mine.append(it)
-            items = mine
-            if not items:
-                return
+            table, mask = router.table, router.mask
+            index = self.vertex.index
+            all_mine = mask is not None
+            if all_mine:
+                try:
+                    for it in items:
+                        if table[it.key & mask] != index:
+                            all_mine = False
+                            break
+                except TypeError:  # non-int key: hash-routed slow path
+                    all_mine = False
+            if all_mine:
+                pass  # every item is ours: skip the re-home machinery
+            else:
+                mine: list[SimItem] = []
+                for it in items:
+                    owner = (table[it.key & mask]
+                             if mask is not None and isinstance(it.key, int)
+                             else router.owner(it.key))
+                    if owner != index:
+                        target = self.sim.tasks.get(RuntimeVertex(jv, owner))
+                        if target is not None and target is not self \
+                                and not target.retired:
+                            target.enqueue([it], channel_id, now)
+                            continue
+                    mine.append(it)
+                items = mine
+                if not items:
+                    return
         self.queue.extend(items)
-        self._try_start()
+        if not (self.busy or self.halted):
+            self._try_start(now)
 
     def halt(self, halted: bool) -> None:
         self.halted = halted
         if not halted:
             self._try_start()
 
-    def _try_start(self) -> None:
+    def _try_start(self, now: float | None = None) -> None:
         if self.busy or self.halted or not self.queue:
             return
         sim = self.sim
         item = self.queue.popleft()
-        now = sim.clock.now()
+        if now is None:
+            now = sim.clock.now()
         # tag evaluated just before user code (§3.3) — includes queue wait
         if item.tag is not None:
-            sim.reporters[sim.rg.worker(self.vertex)].record_channel_latency(
+            self.reporter.record_channel_latency(
                 item.tag.channel_id, now - item.tag.created_at_ms
             )
             item.tag = None
-        vid = self.vertex.id
-        rep = sim.reporters[sim.rg.worker(self.vertex)]
+        vid = self.vid
         if (
             self._pending_task_sample is None
             and vid in sim.measured_tasks
-            and rep.should_sample_task(vid)
+            and self.reporter.should_sample_task(vid, now)
         ):
             self._pending_task_sample = now
         # total service time across the chain this item will traverse; the
-        # whole chain runs on one core of this task's worker (§3.5.2)
-        svc, stages = self._chain_service(item)
-        # keyed aggregation happens at service START: a migration event
+        # whole chain runs on one core of this task's worker (§3.5.2).
+        # Keyed aggregation happens at service START: a migration event
         # fired while this item is in service then snapshots a store that
         # already counts it (a completion-time bump would land in the old
-        # owner's store AFTER its ranges were snapshotted away)
-        for t in stages:
-            if t.stateful:
-                t.state.bump(item.key)
+        # owner's store AFTER its ranges were snapshotted away).
+        if self.chain_next is None and self.fan_in == 1:
+            # inlined _chain_service fast path (unchained, no fan-in gate)
+            self._fan_count += 1
+            svc = self.svc_ms
+            stages = [self]
+            if self.stateful:
+                self.state.bump(item.key)
+        else:
+            svc, stages = self._chain_service(item)
+            for t in stages:
+                if t.stateful:
+                    t.state.bump(item.key)
         self.busy = True
         self.busy_ms_window += svc
         self.busy_ms_total += svc
-        sim.cpus[sim.rg.worker(self.vertex)].submit(
-            svc, lambda: self._complete(item, stages)
-        )
+        cpu = self.cpu  # inlined _WorkerCPU submit (per-item hot path)
+        if cpu.busy < cpu.cores:
+            cpu.busy += 1
+            sim._seq += 1
+            _heappush(sim._heap,
+                      (now + svc, sim._seq, _EV_COMPLETE, self, item, stages))
+        else:
+            cpu.ready.append((svc, self, item, stages))
 
     def _chain_service(self, item: SimItem) -> tuple[float, list["_SimTask"]]:
         """Walk the chain from this task; figure out which stages run for this
-        item (fan-in gates) and the summed service time."""
+        item (fan-in gates) and the summed service time.  The overwhelmingly
+        common unchained, fan-in-1 case short-circuits."""
+        if self.chain_next is None and self.fan_in == 1:
+            self._fan_count += 1
+            return self.svc_ms, [self]
         stages: list[_SimTask] = []
         svc = 0.0
         t: _SimTask | None = self
@@ -306,64 +426,68 @@ class _SimTask:
             ]
         return svc, stages
 
-    def _complete(self, item: SimItem, stages: list["_SimTask"]) -> None:
+    def _complete(self, item: SimItem, stages: list["_SimTask"],
+                  now: float) -> None:
         sim = self.sim
-        now = sim.clock.now()
         self.busy = False
         last = stages[-1]
-        emitted = last._fan_count % last.fan_in == 0
-        if emitted:
+        fan_in = last.fan_in
+        if fan_in == 1 or last._fan_count % fan_in == 0:
             if self._pending_task_sample is not None:
-                vid = self.vertex.id
+                vid = self.vid
                 if vid in sim.measured_tasks:
-                    sim.reporters[sim.rg.worker(self.vertex)].record_task_latency(
+                    self.reporter.record_task_latency(
                         vid, now - self._pending_task_sample
                     )
                 self._pending_task_sample = None
             # task-latency samples for interior chained stages: service only
-            for t in stages[1:]:
-                vid = t.vertex.id
-                if vid in sim.measured_tasks and sim.reporters[
-                    sim.rg.worker(t.vertex)
-                ].should_sample_task(vid):
-                    sim.reporters[sim.rg.worker(t.vertex)].record_task_latency(
-                        vid, t.svc_ms
-                    )
+            if len(stages) > 1:
+                for t in stages[1:]:
+                    vid = t.vid
+                    if vid in sim.measured_tasks and t.reporter.\
+                            should_sample_task(vid, now):
+                        t.reporter.record_task_latency(vid, t.svc_ms)
             last.emitted += 1
             if last.is_sink:
                 sim.record_sink_latency(now - item.created_at_ms, now)
             else:
                 out = SimItem(item.created_at_ms, last.out_bytes, item.key)
-                last.route(out)
-        self._try_start()
+                last.route(out, now)
+        self._try_start(now)
 
-    def route(self, item: SimItem) -> None:
-        routers = self.sim.rg.routers
-        for jv_name, chans in self.out_by_jv.items():
+    def route(self, item: SimItem, now: float | None = None) -> None:
+        if now is None:
+            now = self.sim.clock.now()
+        key = item.key
+        for router, chans in self.out_groups:
             if len(chans) == 1:
                 ch = chans[0]
             else:
-                # key-range routing via the consumer group's KeyRouter
-                # (channels sorted by dst index; clamped while a rescale is
-                # transiently re-wiring this sender)
-                idx = min(routers[jv_name].owner(item.key), len(chans) - 1)
+                # O(1) key-range routing: one masked index into the consumer
+                # group's dense lookup table (channels sorted by dst index;
+                # clamped while a rescale is transiently re-wiring this
+                # sender)
+                mask = router.mask
+                idx = (router.table[key & mask]
+                       if mask is not None and isinstance(key, int)
+                       else router.owner(key))
+                if idx >= len(chans):
+                    idx = len(chans) - 1
                 ch = chans[idx]
-            if self.sim.chained_channels.get(ch.channel.id, False):
+            if ch.chained:
                 # direct hand-over: zero-cost, record ~0 channel latency sample
                 sim = self.sim
-                rep = sim.reporters[sim.rg.worker(ch.channel.src)]
-                if ch.channel.id in sim.measured_channels and rep.should_tag(
-                    ch.channel.id
-                ):
-                    rep2 = sim.reporters[sim.rg.worker(ch.channel.dst)]
-                    rep2.record_channel_latency(ch.channel.id, 0.0)
-                sim.tasks[ch.channel.dst].enqueue([item], ch.channel.id)
+                cid = ch.cid
+                if cid in sim.measured_channels and ch.src_reporter.\
+                        should_tag(cid, now):
+                    ch.dst_task.reporter.record_channel_latency(cid, 0.0)
+                ch.dst_task.enqueue([item], cid, now)
             else:
-                ch.send(item)
+                ch.send(item, now)
                 if self.retired:
                     # the channel was unlinked from the runtime graph; no
                     # later buffer-full event will flush it, so ship now
-                    ch.flush()
+                    ch.flush(now)
 
 
 class StreamSimulator(RuntimeRewirer):
@@ -384,6 +508,7 @@ class StreamSimulator(RuntimeRewirer):
         cores_per_worker: int = 8,
         max_buffer_lifetime_ms: float | None = 5_000.0,
         pool: WorkerPool | None = None,
+        num_key_ranges: int | None = None,
     ) -> None:
         self.jg = jg
         #: max output-buffer lifetime (§3.5.1 companion; same contract as
@@ -394,8 +519,10 @@ class StreamSimulator(RuntimeRewirer):
         self.constraints, self.throughput_constraints = split_constraints(
             constraints)
         # worker placement: an explicit WorkerPool (elastic policies,
-        # acquire/release) or a fixed modulo fleet of ``num_workers``
-        self.rg = RuntimeGraph(jg, num_workers, pool=pool)
+        # acquire/release) or a fixed modulo fleet of ``num_workers``;
+        # num_key_ranges widens the routers for m > 128 stages
+        self.rg = RuntimeGraph(jg, num_workers, pool=pool,
+                               num_key_ranges=num_key_ranges)
         self.clock = SimClock()
         self.net = net or SimNetConfig()
         self.enable_qos = enable_qos
@@ -448,6 +575,7 @@ class StreamSimulator(RuntimeRewirer):
         for t in self.tasks.values():  # deterministic routing order
             for jv_name in t.out_by_jv:
                 t.out_by_jv[jv_name].sort(key=lambda sc: sc.channel.dst.index)
+            t._rebuild_out()
 
         self.chained_channels: dict[str, bool] = {}
         self.chained_groups: list[tuple[str, ...]] = []
@@ -458,12 +586,28 @@ class StreamSimulator(RuntimeRewirer):
         self.total_bytes = 0
         self.total_buffers = 0
 
-        self._heap: list[tuple[float, int, Callable[[], None]]] = []
-        self._seq = itertools.count()
+        self._heap: list[tuple] = []
+        self._seq = 0
 
     # -- event machinery ---------------------------------------------------------
+    def _push(self, at_ms: float, kind: int, a, b=None, c=None) -> None:
+        """Push one slotted event record (hot path; no allocation beyond the
+        record tuple itself).  The hottest sites inline this body — they all
+        schedule at ``now + <nonnegative delta>``, so the backwards-time
+        guard lives here, where ``schedule()``'s user callbacks enter (the
+        run loop assigns event times to the clock directly and would
+        otherwise rewind it silently)."""
+        if at_ms < self.clock._now:
+            raise ValueError(
+                f"time went backwards: scheduling at {at_ms} < "
+                f"{self.clock._now}")
+        self._seq += 1
+        _heappush(self._heap, (at_ms, self._seq, kind, a, b, c))
+
     def schedule(self, at_ms: float, fn: Callable[[], None]) -> None:
-        heapq.heappush(self._heap, (at_ms, next(self._seq), fn))
+        """Back-compat generic event: run ``fn`` at ``at_ms`` (tests and
+        benchmarks inject scale/chain actions this way)."""
+        self._push(at_ms, _EV_CALL, fn)
 
     def record_sink_latency(self, lat_ms: float, now: float) -> None:
         self.sink_latencies.append(lat_ms)
@@ -498,7 +642,7 @@ class StreamSimulator(RuntimeRewirer):
             for mgr in list(self.managers.values()):
                 for action in mgr.check():
                     self._route_action(action)
-        self.schedule(self.clock.now() + tick, self._control_tick)
+        self._push(self.clock.now() + tick, _EV_CONTROL, None)
 
     def _flush_stale_tick(self) -> None:
         """Max-buffer-lifetime sweep (§3.5.1 companion, same contract as the
@@ -510,8 +654,8 @@ class StreamSimulator(RuntimeRewirer):
             buf = ch.buffer
             if (buf.items and buf.opened_at_ms is not None
                     and now - buf.opened_at_ms >= lifetime):
-                ch.flush()
-        self.schedule(now + lifetime / 2.0, self._flush_stale_tick)
+                ch.flush(now)
+        self._push(now + lifetime / 2.0, _EV_FLUSH, None)
 
     def _route_action(self, action: Action) -> None:
         if isinstance(action, BufferSizeUpdate):
@@ -552,7 +696,9 @@ class StreamSimulator(RuntimeRewirer):
         for a, b in zip(req.tasks, req.tasks[1:]):
             for c in self.rg.out_channels(a):
                 if c.dst == b:
-                    self.channels[c.id].flush()
+                    sc = self.channels[c.id]
+                    sc.flush()
+                    sc.chained = True
                     self.chained_channels[c.id] = True
             self.tasks[a].chain_next = b
             self.tasks[b].chained_into = req.tasks[0]
@@ -570,6 +716,9 @@ class StreamSimulator(RuntimeRewirer):
             for c in self.rg.out_channels(a):
                 if c.dst == b:
                     self.chained_channels.pop(c.id, None)
+                    sc = self.channels.get(c.id)
+                    if sc is not None:
+                        sc.chained = False
             ta, tb = self.tasks.get(a), self.tasks.get(b)
             if ta is not None:
                 ta.chain_next = None
@@ -600,6 +749,7 @@ class StreamSimulator(RuntimeRewirer):
         lst.append(sc)
         lst.sort(key=lambda s2: s2.channel.dst.index)
         src_task.out_by_jv[c.dst.job_vertex] = lst
+        src_task._rebuild_out()
 
     def _unroute_channel(self, c) -> None:
         src_task = self.tasks.get(c.src)
@@ -609,6 +759,7 @@ class StreamSimulator(RuntimeRewirer):
                 x for x in src_task.out_by_jv.get(c.dst.job_vertex, ())
                 if x is not sc
             ]
+            src_task._rebuild_out()
         if sc is not None:
             sc.flush()  # ship what the closed channel still buffers
         self.channels.pop(c.id, None)
@@ -667,7 +818,7 @@ class StreamSimulator(RuntimeRewirer):
         for chans in list(t.out_by_jv.values()):
             for sc in list(chans):
                 sc.flush()
-                self.channels.pop(sc.channel.id, None)
+                self.channels.pop(sc.cid, None)
 
     def _task_is_chained(self, v: RuntimeVertex) -> bool:
         t = self.tasks.get(v)
@@ -699,52 +850,76 @@ class StreamSimulator(RuntimeRewirer):
             for v in self.rg.tasks_of(jv_name):
                 period = 1e3 / spec.rate_items_per_s
                 offset = self.rng.uniform(0, period)
-                self.schedule(offset, self._make_source_event(v, spec, 0))
+                self._push(offset, _EV_SOURCE,
+                           _SourceState(self.tasks[v], spec))
 
-    def _make_source_event(self, v: RuntimeVertex, spec: SimSourceSpec, seq: int):
-        def fire() -> None:
-            now = self.clock.now()
-            if spec.keys_per_task is not None:
-                key = v.index * spec.keys_per_task + seq % spec.keys_per_task
-            elif spec.keys:
-                key = seq % spec.keys
-            else:
-                key = seq
-            item = SimItem(now, spec.item_bytes, key)
-            task = self.tasks[v]
-            # a source "processes" the item (its cpu cost) then routes it
-            svc, stages = task._chain_service(item)
-            for t in stages:  # stateful chained stages count at start too
-                if t.stateful:
-                    t.state.bump(item.key)
-            task.busy_ms_window += svc
-            last = stages[-1]
-
-            def done() -> None:
-                if last._fan_count % last.fan_in == 0:
-                    out = SimItem(item.created_at_ms, last.out_bytes, item.key)
-                    last.route(out)
-
-            self.schedule(now + svc, done)
-            period = 1e3 / max(spec.rate_at(now), 1e-9)
-            self.schedule(now + period, self._make_source_event(v, spec, seq + 1))
-
-        return fire
+    def _fire_source(self, st: _SourceState, now: float) -> None:
+        spec = st.spec
+        seq = st.seq
+        if spec.keys_per_task is not None:
+            key = st.index * spec.keys_per_task + seq % spec.keys_per_task
+        elif spec.keys:
+            key = seq % spec.keys
+        else:
+            key = seq
+        item = SimItem(now, spec.item_bytes, key)
+        task = st.task
+        # a source "processes" the item (its cpu cost) then routes it
+        svc, stages = task._chain_service(item)
+        for t in stages:  # stateful chained stages count at start too
+            if t.stateful:
+                t.state.bump(item.key)
+        task.busy_ms_window += svc
+        self._push(now + svc, _EV_SRC_EMIT, stages[-1], item)
+        period = 1e3 / max(spec.rate_at(now), 1e-9)
+        st.seq = seq + 1
+        self._push(now + period, _EV_SOURCE, st)
 
     # -- run ---------------------------------------------------------------------------
     def run(self, duration_ms: float, max_events: int | None = None) -> "SimResult":
         self._start_sources()
-        self.schedule(self.interval_ms / 4.0, self._control_tick)
+        self._push(self.interval_ms / 4.0, _EV_CONTROL, None)
         if self.max_buffer_lifetime_ms is not None:
-            self.schedule(self.max_buffer_lifetime_ms / 2.0,
-                          self._flush_stale_tick)
+            self._push(self.max_buffer_lifetime_ms / 2.0, _EV_FLUSH, None)
         n_events = 0
-        while self._heap:
-            t, _, fn = heapq.heappop(self._heap)
+        heap = self._heap
+        pop = heapq.heappop
+        clock = self.clock
+        while heap:
+            t, _, kind, a, b, c = pop(heap)
             if t > duration_ms:
                 break
-            self.clock.advance_to(t)
-            fn()
+            # heap pops are time-ordered; assign directly (advance_to's
+            # monotonicity check is a per-event cost the order guarantees)
+            clock._now = t
+            if kind == _EV_COMPLETE:
+                # free the core, run the completion (which starts the task's
+                # next item), then drain the CPU ready queue — one dispatch,
+                # no helper events
+                cpu = a.cpu
+                cpu.busy -= 1
+                a._complete(b, c, t)
+                ready = cpu.ready
+                while ready and cpu.busy < cpu.cores:
+                    svc, t2, it2, st2 = ready.popleft()
+                    cpu.busy += 1
+                    self._seq += 1
+                    _heappush(heap, (t + svc, self._seq, _EV_COMPLETE,
+                                     t2, it2, st2))
+            elif kind == _EV_SHIP:
+                a.enqueue(b, c, t)
+            elif kind == _EV_SRC_EMIT:
+                if a._fan_count % a.fan_in == 0:
+                    out = SimItem(b.created_at_ms, a.out_bytes, b.key)
+                    a.route(out, t)
+            elif kind == _EV_SOURCE:
+                self._fire_source(a, t)
+            elif kind == _EV_CALL:
+                a()
+            elif kind == _EV_CONTROL:
+                self._control_tick()
+            else:  # _EV_FLUSH
+                self._flush_stale_tick()
             n_events += 1
             if max_events is not None and n_events >= max_events:
                 break

@@ -55,6 +55,22 @@ def test_running_average_window_eviction():
     assert ra.value(now_ms=3_000.0) is None
 
 
+def test_running_average_evicts_on_add():
+    """Stale samples leave on add(), not only on value(): a window that is
+    written between manager reads stays bounded at the window span instead
+    of accumulating every sample until the next read."""
+    ra = RunningAverage(window_ms=1000.0)
+    for i in range(10_000):
+        ra.add(float(i), 1.0)
+    # never read — yet only the samples inside the window survive
+    assert len(ra._items) <= 1001
+    assert ra.value(now_ms=9_999.0) == 1.0
+    # results identical to read-time eviction: fresh value wins the window
+    ra.add(20_000.0, 5.0)
+    assert len(ra._items) == 1
+    assert ra.value(now_ms=20_000.0) == 5.0
+
+
 def test_mean_aggregation_per_interval():
     clock = SimClock()
     rep = QoSReporter(0, clock, interval_ms=100.0)

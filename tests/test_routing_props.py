@@ -41,6 +41,53 @@ def test_router_invariants_over_random_rescale_sequences(sizes, keys):
 
 @settings(deadline=None, max_examples=50)
 @given(
+    sizes=st.lists(st.integers(min_value=1, max_value=16), min_size=1,
+                   max_size=6),
+    keys=st.lists(st.integers(min_value=-10_000, max_value=10_000),
+                  min_size=1, max_size=200),
+)
+def test_dense_lookup_table_matches_range_semantics(sizes, keys):
+    """The O(1) emit-path contract (core/routing.py): across any random
+    rescale sequence, the dense ``table``/``mask`` lookup both backends
+    inline is equivalent to the range arithmetic of ``owner()``, the table
+    is exactly NUM_KEY_RANGES wide, and ``commit`` swaps it to precisely
+    the planned owner tuple (atomically: the table object is immutable)."""
+    router = KeyRouter(sizes[0])
+    assert router.mask == NUM_KEY_RANGES - 1  # power-of-two default
+    for new_size in sizes[1:] + [sizes[0]]:
+        plan = router.plan(new_size)
+        router.commit(plan)
+        table, mask = router.table, router.mask
+        assert isinstance(table, tuple) and len(table) == NUM_KEY_RANGES
+        assert table == plan.new_owners
+        for k in keys:
+            # masked index == modulo range arithmetic, negative keys included
+            assert table[k & mask] == router.owner(k)
+            assert k & mask == range_of_key(k)
+
+
+@settings(deadline=None, max_examples=30)
+@given(
+    n_from=st.integers(min_value=1, max_value=12),
+    n_to=st.integers(min_value=1, max_value=12),
+    keys=st.lists(st.integers(min_value=0, max_value=10_000), min_size=1,
+                  max_size=100),
+)
+def test_plan_does_not_mutate_live_table(n_from, n_to, keys):
+    """``plan()`` is pure: until ``commit``, emit-path readers keep seeing
+    the old table (the swap is a single tuple rebind)."""
+    router = KeyRouter(n_from)
+    table_before = router.table
+    owners_before = {k: router.owner(k) for k in keys}
+    plan = router.plan(n_to)
+    assert router.table is table_before
+    assert {k: router.owner(k) for k in keys} == owners_before
+    router.commit(plan)
+    assert router.table is plan.new_owners
+
+
+@settings(deadline=None, max_examples=50)
+@given(
     keys=st.lists(st.integers(min_value=-1_000, max_value=10_000),
                   min_size=1, max_size=300),
     n_from=st.integers(min_value=1, max_value=8),

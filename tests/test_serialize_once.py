@@ -1,0 +1,165 @@
+"""Serialize-once shipping (engine hot path, PR-4 overhaul).
+
+Contract (core/engine.py ChannelSender._flush_locked):
+
+* a cross-worker shipped item is pickled exactly ONCE across its whole
+  fan-out (the blob is cached on the StreamItem and reused by sibling
+  cross-worker channels),
+* every cross-worker receiver unpickles its OWN payload copy — a sink
+  mutating its payload can never leak the mutation into a sibling
+  receiver or back into the sender,
+* same-worker channels ship the original objects with NO pickle
+  round-trip at all.
+"""
+import pickle
+import time
+
+from repro.core import (
+    ALL_TO_ALL,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    SourceSpec,
+    StreamEngine,
+)
+from repro.core import engine as engine_mod
+
+
+class _PickleCounter:
+    """Counts pickle.dumps calls made by the engine module."""
+
+    def __init__(self, monkeypatch):
+        self.dumps = 0
+        real_dumps = pickle.dumps
+
+        def counting_dumps(obj, *a, **kw):
+            self.dumps += 1
+            return real_dumps(obj, *a, **kw)
+
+        fake = type("P", (), {"dumps": staticmethod(counting_dumps),
+                              "loads": staticmethod(pickle.loads)})
+        monkeypatch.setattr(engine_mod, "pickle", fake)
+
+
+def _fanout_engine(collect_a, collect_b, mutate_a=False, rate=120.0):
+    """Src[1]@w0 fans out to SinkA and SinkB; every item is keyed to
+    subtask 1, which the modulo layout places on worker 1 — so both
+    branches cross workers and ship the SAME source items."""
+    def sink_a(p, emit, ctx):
+        if mutate_a:
+            p["v"].append("MUTATED")
+        collect_a.append(p)
+
+    def sink_b(p, emit, ctx):
+        collect_b.append(p)
+
+    jg = JobGraph("fanout")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True))
+    jg.add_vertex(JobVertex("SinkA", 2, fn=sink_a, is_sink=True))
+    jg.add_vertex(JobVertex("SinkB", 2, fn=sink_b, is_sink=True))
+    jg.add_edge("Src", "SinkA", ALL_TO_ALL)
+    jg.add_edge("Src", "SinkB", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "SinkA"), "SinkA")
+    jcs = [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+    sent = []
+
+    def make_payload(s):
+        p = {"seq": s, "v": [s]}
+        sent.append(p)
+        return p, 64
+
+    eng = StreamEngine(
+        jg, jcs, num_workers=2,
+        sources={"Src": SourceSpec(rate, make_payload,
+                                   key_of=lambda s: 1)},
+        initial_buffer_bytes=256, measurement_interval_ms=400.0,
+        enable_qos=False, enable_chaining=False,
+        max_buffer_lifetime_ms=200.0,
+    )
+    return eng, sent
+
+
+def test_fanout_receivers_are_isolated_from_mutation():
+    """A sink mutating its payload never leaks into the sibling branch of
+    the fan-out, nor back into the sender-side originals."""
+    got_a, got_b = [], []
+    eng, sent = _fanout_engine(got_a, got_b, mutate_a=True)
+    eng.start()
+    time.sleep(1.5)
+    res = eng.stop()
+    assert len(got_a) > 5 and len(got_b) > 5, res.drain_failures
+    for p in got_a:
+        assert p["v"][-1] == "MUTATED"  # A really did mutate its copies
+    for p in got_b:
+        assert "MUTATED" not in p["v"], \
+            "mutation at SinkA leaked into SinkB's payload"
+    for p in sent:
+        assert "MUTATED" not in p["v"], \
+            "mutation at SinkA leaked back into the sender's payload"
+    # cross-worker receivers hold their OWN unpickled copies, not the
+    # sender's objects
+    sent_ids = {id(p) for p in sent}
+    assert all(id(p) not in sent_ids for p in got_a)
+    assert all(id(p) not in sent_ids for p in got_b)
+
+
+def test_fanout_serializes_each_item_once(monkeypatch):
+    """Two cross-worker receivers of the same items: pickle.dumps runs once
+    per shipped item, not once per (item, receiver)."""
+    counter = _PickleCounter(monkeypatch)
+    got_a, got_b = [], []
+    eng, sent = _fanout_engine(got_a, got_b)
+    eng.start()
+    time.sleep(1.5)
+    eng.stop()
+    # both branches delivered the same item set (ALL_TO_ALL fan-out with a
+    # fixed key): every dumps call must have been shared between them
+    assert len(got_a) > 5 and len(got_b) > 5
+    n_items = max(len(got_a), len(got_b))
+    assert counter.dumps <= n_items + 2, (
+        f"{counter.dumps} pickle.dumps calls for {n_items} items shipped "
+        f"to 2 cross-worker receivers — serialize-once cache not shared")
+
+
+def test_same_worker_channels_never_pickle(monkeypatch):
+    """A single-worker pipeline ships everything via shared memory: zero
+    pickle round-trips."""
+    counter = _PickleCounter(monkeypatch)
+    got = []
+
+    def sink(p, emit, ctx):
+        got.append(p)
+
+    jg = JobGraph("local")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True))
+    jg.add_vertex(JobVertex("Mid", 1))
+    jg.add_vertex(JobVertex("Sink", 1, fn=sink, is_sink=True))
+    jg.add_edge("Src", "Mid", ALL_TO_ALL)
+    jg.add_edge("Mid", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Mid"), "Mid", ("Mid", "Sink"))
+    jcs = [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+    sent = []
+
+    def make_payload(s):
+        p = {"seq": s}
+        sent.append(p)
+        return p, 64
+
+    eng = StreamEngine(
+        jg, jcs, num_workers=1,
+        sources={"Src": SourceSpec(120.0, make_payload)},
+        initial_buffer_bytes=256, measurement_interval_ms=400.0,
+        enable_qos=False, enable_chaining=False,
+        max_buffer_lifetime_ms=200.0,
+    )
+    eng.start()
+    time.sleep(1.2)
+    eng.stop()
+    assert len(got) > 5
+    assert counter.dumps == 0, (
+        f"{counter.dumps} pickle.dumps calls on a single-worker job — "
+        f"same-worker channels must ship without serialization")
+    # shared-memory semantics: the receiver sees the sender's objects
+    sent_ids = {id(p) for p in sent}
+    assert all(id(p) in sent_ids for p in got)

@@ -1,0 +1,147 @@
+"""Bit-identical determinism contract of the simulator's QoS control plane.
+
+The event core guarantees (core/simulator.py module docstring): under a
+fixed seed, the sequence of QoS decisions — BufferSizeUpdate /
+ChainRequest / ScaleRequest / GiveUp — and the raw timing aggregates
+(event count, sink count, summed sink latency, shipped bytes/buffers) are
+a pure function of the scenario.  The golden file pins the traces produced
+by the pre-overhaul per-item-closure event core; the batched tuple-event
+core MUST reproduce them exactly (the PR-4 hot-path rewrite was proven
+decision-identical against this file).
+
+Regenerate (only for an intentional semantic change, never for a perf
+change): ``PYTHONPATH=src python scripts/gen_sim_golden.py``.
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+from repro.configs.nephele_media import MediaJobParams, build_media_job
+from repro.core import (
+    ALL_TO_ALL,
+    POINTWISE,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    SimSourceSpec,
+    StreamSimulator,
+    ThroughputConstraint,
+)
+
+GOLDEN = Path(__file__).parent / "golden" / "sim_decisions.json"
+
+
+def _trace(res) -> dict:
+    """Project a SimResult onto its determinism-relevant facts.  Records are
+    ``repr``'d, so every float must match to the last bit.  Within one
+    violation record the manager collects its per-channel actions from a
+    set, so that ordering is a hash-seed artifact — the actions of a record
+    are compared as a sorted multiset, everything else positionally."""
+    return {
+        "events": res.events,
+        "sinks": len(res.sink_latencies_ms),
+        "sum_lat": round(sum(res.sink_latencies_ms), 6),
+        "chained_groups": [list(g) for g in res.chained_groups],
+        "scale_log": [repr(d) for d in res.scale_log],
+        "final_buffer_sizes": dict(sorted(res.final_buffer_sizes.items())),
+        "history": [
+            {
+                "constraint": h.constraint_name,
+                "estimate_ms": h.estimate_ms,
+                "at_ms": h.at_ms,
+                "actions": sorted(repr(a) for a in h.actions),
+            }
+            for h in res.manager_history
+        ],
+        "total_bytes": res.total_bytes,
+        "total_buffers": res.total_buffers,
+    }
+
+
+def media_trace() -> dict:
+    """Fig. 7/8 media pipeline, adaptive buffers + chaining armed, seed 7:
+    exercises BufferSizeUpdate streams on a multi-worker pipeline."""
+    p = MediaJobParams(parallelism=4, num_workers=2, streams=32, fps=25.0,
+                       latency_limit_ms=50.0)
+    jg, jcs = build_media_job(p)
+    gpp = (p.streams // p.group_size) // p.parallelism
+    sim = StreamSimulator(
+        jg, jcs, p.num_workers,
+        sources={"Partitioner": SimSourceSpec(
+            rate_items_per_s=p.fps * p.streams / p.parallelism,
+            item_bytes=350, keys_per_task=gpp)},
+        initial_buffer_bytes=32 * 1024, measurement_interval_ms=1_000.0,
+        enable_qos=True, enable_chaining=True, seed=7)
+    return _trace(sim.run(60_000.0))
+
+
+def scale_trace() -> dict:
+    """Overloaded stage under a latency constraint + throughput constraint:
+    the manager walks buffers -> ScaleRequest (live scale-out through the
+    rewirer) -> GiveUp, seed 11."""
+    jg = JobGraph("scale-trace")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Work", 2, sim_cpu_ms=7.0, sim_item_bytes=256))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+    jcs = [JobConstraint(seq, 40.0, 4_000.0, name="lat"),
+           ThroughputConstraint("Work", 400.0, window_ms=4_000.0,
+                                max_parallelism=6)]
+    sim = StreamSimulator(
+        jg, jcs, num_workers=2,
+        sources={"Src": SimSourceSpec(160.0, item_bytes=256, keys=64)},
+        initial_buffer_bytes=1024, enable_qos=True, enable_chaining=True,
+        seed=11)
+    return _trace(sim.run(45_000.0))
+
+
+def chain_trace() -> dict:
+    """Single-worker linear pipeline with an unreachable 8 ms SLO: buffers
+    converge, then the manager fuses A->B (ChainRequest), then gives up,
+    seed 3."""
+    jg = JobGraph("chain-trace")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("A", 1, sim_cpu_ms=0.3, sim_item_bytes=512))
+    jg.add_vertex(JobVertex("B", 1, sim_cpu_ms=0.3, sim_item_bytes=512))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01))
+    jg.add_edge("Src", "A", ALL_TO_ALL)
+    jg.add_edge("A", "B", POINTWISE)
+    jg.add_edge("B", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "A"), "A", ("A", "B"), "B", ("B", "Sink"))
+    jcs = [JobConstraint(seq, 8.0, 4_000.0, name="lat")]
+    sim = StreamSimulator(
+        jg, jcs, num_workers=1,
+        sources={"Src": SimSourceSpec(150.0, item_bytes=512, keys=16)},
+        initial_buffer_bytes=4096, enable_qos=True, enable_chaining=True,
+        seed=3)
+    return _trace(sim.run(60_000.0))
+
+
+TRACES = {
+    "media": media_trace,
+    "scale": scale_trace,
+    "chain": chain_trace,
+}
+
+
+def _assert_trace_equal(name: str, got: dict, want: dict) -> None:
+    for key in want:
+        assert got[key] == want[key], (
+            f"{name}: {key!r} diverged from golden\n"
+            f"  want: {want[key]!r}\n  got:  {got[key]!r}")
+
+
+def test_qos_decisions_bit_identical_to_golden():
+    golden = json.loads(GOLDEN.read_text())
+    for name, fn in TRACES.items():
+        _assert_trace_equal(name, fn(), golden[name])
+
+
+def test_same_seed_same_trace():
+    """Two runs of the same scenario in one process are identical (no
+    hidden global state leaks between simulator instances)."""
+    assert scale_trace() == scale_trace()
