@@ -35,6 +35,7 @@ from repro.core import (  # noqa: E402
     ThroughputConstraint,
     WorkerPool,
     check_side_conditions,
+    key_ranges_for,
 )
 from repro.core.setup import compute_qos_setup, compute_reporter_setup  # noqa: E402
 
@@ -43,7 +44,9 @@ def run_one(m: int, n: int):
     p = MediaJobParams(parallelism=m, num_workers=n)
     jg, jcs = build_media_job(p)
     t0 = time.perf_counter()
-    rg = RuntimeGraph(jg, n)
+    # m beyond the default key-range table would fail fast at expansion
+    # (unaddressable parallelism): widen the routers with the stock policy
+    rg = RuntimeGraph(jg, n, num_key_ranges=key_ranges_for(m))
     t_expand = time.perf_counter() - t0
     n_seq = jcs[0].num_runtime_sequences(rg)
     t0 = time.perf_counter()

@@ -14,7 +14,8 @@ repo's perf trajectory (one JSON per module per recorded run; commit them
 to track events/sec across PRs).  Modules may also call ``write_bench``
 directly with richer payloads (benchmarks/scale.py writes
 ``BENCH_scale.json`` with wall-time / events-per-sec / latency /
-throughput for the Fig. 8 n=200 run).
+throughput per grid: the n=200/m=200 pair in both event cores plus the
+full Fig. 8 n=200/m=800 grid on the batched core).
 """
 from __future__ import annotations
 
@@ -27,6 +28,9 @@ import traceback
 from pathlib import Path
 
 sys.path.insert(0, "src")
+# standalone execution (`python benchmarks/run.py`): make the repo root
+# importable so the canonical-module delegation below resolves
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
 
 #: repo root — BENCH_<name>.json files land here.
 BENCH_DIR = Path(__file__).resolve().parent.parent
@@ -35,7 +39,8 @@ MODULES = [
     ("buffer_tradeoff", "Fig. 2: buffer size x rate -> latency/throughput"),
     ("media_pipeline", "Figs. 7-10: media job scenario suite"),
     ("qos_scaling", "§3.4: QoS setup algorithms at n=200, m=800"),
-    ("scale", "Fig. 8 at n=200: constraints on/off, >=13x latency factor"),
+    ("scale", "Fig. 8 at n=200 up to m=800: constraints on/off, exact + "
+              "batched event cores, >=13x latency factor"),
     ("serving_qos", "serving-plane QoS: adaptive batching + chaining"),
     ("kernels", "Pallas kernel validation vs oracles"),
     ("roofline", "dry-run roofline terms per (arch x shape)"),
@@ -103,4 +108,11 @@ def main() -> None:
 
 
 if __name__ == "__main__":
-    main()
+    # run via the canonical module instance: under ``python -m``, this file
+    # executes as ``__main__`` while modules that self-record call
+    # ``benchmarks.run.write_bench`` — two module instances would split the
+    # ``_written`` registry and the generic row dump would clobber a
+    # module's own artifact (e.g. BENCH_scale.json's grid payload)
+    from benchmarks.run import main as _canonical_main
+
+    _canonical_main()

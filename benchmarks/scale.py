@@ -4,20 +4,27 @@ QoS constraints ON vs OFF.
 
 The paper's headline result: with the 300 ms / 15 s constraint armed, the
 QoS manager's adaptive output-buffer sizing cuts workflow latency by more
-than an order of magnitude (>=13x here, ~80x at the recorded settings)
-while sustaining the same throughput — against the identical job with
-static 32 KB buffers (the constraints-off / Fig. 7 configuration).
+than an order of magnitude (>=13x here) while sustaining the same
+throughput — against the identical job with static 32 KB buffers (the
+constraints-off / Fig. 7 configuration).
 
-Run shape (non-smoke): m=200 parallelism on n=200 workers, 800 streams at
-25 fps (20k items/s offered), 60 s of simulated time per arm, latencies
-averaged after a 60% settle point so the constraints-on arm is measured
-converged.  Routing uses 1024 virtual key ranges (m=200 exceeds the
-default 128-range table; core/routing.py).  Smoke mode shrinks the cluster
-to n=20 for seconds-level CI.
+Recorded grids (non-smoke; BENCH_scale.json via the shared bench-writer in
+benchmarks/run.py):
 
-The non-smoke run records the repo's first perf-trajectory artifact,
-``BENCH_scale.json`` (wall time, events/sec, mean/max latency, throughput,
-latency factor), via the shared bench-writer in benchmarks/run.py.
+* n=200 / m=200 / 800 streams (20k items/s offered), exact AND batched
+  event cores — the pair gives the exact-vs-batched events/sec trajectory
+  at identical physics,
+* n=200 / m=800 / 3200 streams (~80k items/s offered) — the paper's FULL
+  Fig. 8 grid, batched core (`event_mode="batched"`; the exact core's
+  per-completion events make this grid impractical to record).
+
+Latencies are averaged after a 60% settle point so the constraints-on arm
+is measured converged.  Routing uses 1024 virtual key ranges where m
+exceeds the default 128-range table (core/routing.py; `key_ranges_for`
+fails fast when a grid exceeds the widest table instead of silently
+mis-routing).  Smoke mode shrinks the cluster to n=20 for seconds-level CI
+and runs BOTH event modes, asserting cross-mode equivalence (the strict
+decision-level contract lives in tests/test_sim_modes.py).
 """
 from __future__ import annotations
 
@@ -35,7 +42,14 @@ from repro.configs.nephele_media import (  # noqa: E402
     MediaJobParams,
     build_media_job,
 )
-from repro.core import SimSourceSpec, StreamSimulator  # noqa: E402
+from repro.core import (  # noqa: E402
+    SimSourceSpec,
+    StreamSimulator,
+)
+from repro.core.routing import (  # noqa: E402,F401  (re-exported policy)
+    WIDE_KEY_RANGES,
+    key_ranges_for,
+)
 
 #: constraints-on mean latency must beat constraints-off by at least this
 #: factor at matched throughput (the paper's Fig. 7 vs Fig. 8 gap).
@@ -43,14 +57,24 @@ LATENCY_FACTOR_FLOOR = 13.0
 #: "matched throughput": the constrained arm must deliver at least this
 #: share of the unconstrained arm's rate.
 THROUGHPUT_MATCH = 0.95
+#: cross-mode smoke equivalence: batched mean latency within this relative
+#: tolerance of exact (the golden-scenario contract in tests/test_sim_modes
+#: is 1%; the smoke arm allows the same).
+MODE_LATENCY_RTOL = 0.01
 
 
 def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
-             duration_ms: float, seed: int = 42) -> dict:
+             duration_ms: float, seed: int = 42,
+             event_mode: str = "exact") -> dict:
     p = MediaJobParams(parallelism=m, num_workers=n, streams=streams,
                       fps=25.0, latency_limit_ms=300.0)
     jg, jcs = build_media_job(p)
     gpp = (p.streams // p.group_size) // p.parallelism
+    if gpp < 1:
+        raise ValueError(
+            f"grid m={m}/streams={streams}: fewer stream groups "
+            f"({streams // p.group_size}) than Partitioner subtasks ({m}); "
+            f"each subtask needs >= 1 owned group (raise streams)")
     sim = StreamSimulator(
         jg, jcs, p.num_workers,
         sources={"Partitioner": SimSourceSpec(
@@ -60,9 +84,8 @@ def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
         measurement_interval_ms=1_000.0,
         enable_qos=constraints_on, enable_chaining=constraints_on,
         seed=seed,
-        # m > 128 needs a wider routing table than the default 128 virtual
-        # ranges, or stages past index 127 would never receive a key
-        num_key_ranges=1024 if m > 128 else None,
+        num_key_ranges=key_ranges_for(m),
+        event_mode=event_mode,
     )
     t0 = time.perf_counter()
     res = sim.run(duration_ms)
@@ -70,6 +93,7 @@ def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
     settle = duration_ms * 0.6
     return {
         "constraints": "on" if constraints_on else "off",
+        "event_mode": event_mode,
         "wall_s": round(wall_s, 3),
         "events": res.events,
         "events_per_sec": round(res.events / wall_s, 1),
@@ -85,32 +109,36 @@ def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
 
 
 def run_scale(n: int, m: int, streams: int, duration_ms: float,
-              record: bool) -> list[tuple[str, float, str]]:
-    off = _run_arm(False, n, m, streams, duration_ms)
-    on = _run_arm(True, n, m, streams, duration_ms)
+              record_floor: bool,
+              event_mode: str = "exact") -> tuple[list, dict]:
+    """One constraints-off/on grid in one event mode.  Returns the printable
+    rows and the grid record (for BENCH_scale.json)."""
+    off = _run_arm(False, n, m, streams, duration_ms, event_mode=event_mode)
+    on = _run_arm(True, n, m, streams, duration_ms, event_mode=event_mode)
     factor = off["mean_latency_ms"] / max(on["mean_latency_ms"], 1e-9)
     matched = (on["throughput_items_per_s"]
                >= THROUGHPUT_MATCH * off["throughput_items_per_s"])
-    floor = LATENCY_FACTOR_FLOOR if record else 5.0
+    floor = LATENCY_FACTOR_FLOOR if record_floor else 5.0
     assert factor >= floor, (
-        f"scale n={n}: constraints-on mean latency "
+        f"scale n={n} m={m} [{event_mode}]: constraints-on mean latency "
         f"{on['mean_latency_ms']}ms vs off {off['mean_latency_ms']}ms — "
         f"factor {factor:.1f}x below the {floor}x floor")
     assert matched, (
-        f"scale n={n}: throughput not matched "
+        f"scale n={n} m={m} [{event_mode}]: throughput not matched "
         f"({on['throughput_items_per_s']}/s on vs "
         f"{off['throughput_items_per_s']}/s off)")
-    if record:
-        from benchmarks.run import write_bench
-        write_bench("scale", {
-            "scenario": "fig8_livestream",
-            "workers": n, "parallelism": m, "streams": streams,
-            "fps": 25.0, "duration_ms": duration_ms,
-            "latency_limit_ms": 300.0, "window_ms": 15_000.0,
-            "latency_factor": round(factor, 1),
-            "throughput_matched": matched,
-            "arms": [off, on],
-        })
+    grid = {
+        "scenario": "fig8_livestream",
+        "workers": n, "parallelism": m, "streams": streams,
+        "event_mode": event_mode,
+        "fps": 25.0, "duration_ms": duration_ms,
+        "offered_items_per_s": 25.0 * streams,
+        "latency_limit_ms": 300.0, "window_ms": 15_000.0,
+        "latency_factor": round(factor, 1),
+        "throughput_matched": matched,
+        "arms": [off, on],
+    }
+    suffix = "" if event_mode == "exact" else f"_{event_mode}"
     rows = []
     for arm in (off, on):
         derived = (
@@ -119,19 +147,70 @@ def run_scale(n: int, m: int, streams: int, duration_ms: float,
             f"events_per_sec={arm['events_per_sec']}")
         if arm["constraints"] == "on":
             derived += f";factor={factor:.1f}x"
-        rows.append((f"scale_n{n}_{arm['constraints']}",
+        rows.append((f"scale_n{n}_m{m}_{arm['constraints']}{suffix}",
                      arm["wall_s"] * 1e6, derived))
+    return rows, grid
+
+
+def _assert_mode_equivalence(exact_grid: dict, batched_grid: dict) -> None:
+    """Smoke-level cross-mode equivalence: identical item conservation and
+    QoS outcome shape, latency within MODE_LATENCY_RTOL per arm."""
+    for ge, gb in zip(exact_grid["arms"], batched_grid["arms"]):
+        assert ge["items_at_sinks"] == gb["items_at_sinks"], (
+            f"mode equivalence: sink items diverged "
+            f"({ge['items_at_sinks']} exact vs {gb['items_at_sinks']} "
+            f"batched, constraints {ge['constraints']})")
+        assert ge["chains"] == gb["chains"] and \
+            ge["give_ups"] == gb["give_ups"], (
+            f"mode equivalence: QoS outcomes diverged (constraints "
+            f"{ge['constraints']}: chains {ge['chains']}/{gb['chains']}, "
+            f"give_ups {ge['give_ups']}/{gb['give_ups']})")
+        me, mb = ge["mean_latency_ms"], gb["mean_latency_ms"]
+        assert abs(mb - me) <= MODE_LATENCY_RTOL * max(me, 1e-9), (
+            f"mode equivalence: mean latency diverged {me} vs {mb} "
+            f"(constraints {ge['constraints']})")
+
+
+def run_full_grid(duration_ms: float = 60_000.0,
+                  record: bool = True) -> list[tuple[str, float, str]]:
+    """The recorded paper-scale run: m=200 in both event modes (the
+    exact-vs-batched perf trajectory) + the FULL Fig. 8 m=800 grid
+    (batched).  Writes BENCH_scale.json when ``record``."""
+    rows: list = []
+    grids: list[dict] = []
+    for m, streams, mode in ((200, 800, "exact"), (200, 800, "batched"),
+                             (800, 3200, "batched")):
+        r, g = run_scale(n=200, m=m, streams=streams,
+                         duration_ms=duration_ms, record_floor=True,
+                         event_mode=mode)
+        rows.extend(r)
+        grids.append(g)
+        if len(grids) == 2:
+            # check the m=200 exact-vs-batched pair BEFORE spending the
+            # long m=800 leg: a mode divergence should fail in minutes,
+            # not after the costliest grid has run
+            _assert_mode_equivalence(grids[0], grids[1])
+    if record:
+        from benchmarks.run import write_bench
+        write_bench("scale", {"grids": grids})
     return rows
 
 
 def run(quick: bool = True, smoke: bool = False):
     if smoke:
-        # seconds-level CI canary: same physics, n=20 cluster, no artifact
-        return run_scale(n=20, m=20, streams=80, duration_ms=30_000.0,
-                         record=False)
-    # the recorded n=200 run (BENCH_scale.json)
-    return run_scale(n=200, m=200, streams=800, duration_ms=60_000.0,
-                     record=True)
+        # seconds-level CI canary: same physics, n=20 cluster, BOTH event
+        # modes, cross-mode equivalence asserted; no artifact
+        rows, exact_grid = run_scale(n=20, m=20, streams=80,
+                                     duration_ms=30_000.0,
+                                     record_floor=False)
+        brows, batched_grid = run_scale(n=20, m=20, streams=80,
+                                        duration_ms=30_000.0,
+                                        record_floor=False,
+                                        event_mode="batched")
+        _assert_mode_equivalence(exact_grid, batched_grid)
+        return rows + brows
+    # the recorded n=200 grids (BENCH_scale.json), m=800 included
+    return run_full_grid()
 
 
 if __name__ == "__main__":

@@ -6,10 +6,16 @@
 # on saturated scale-out, release on scale-in, both backends), and the
 # scale module's n=20 Fig. 8 arm (constraints on/off latency factor).
 #
+# The scale smoke arm runs the n=20 grid in BOTH event cores (exact +
+# event_mode="batched") and asserts cross-mode equivalence (item
+# conservation, QoS outcomes, latency within 1%) — the strict decision-level
+# contract lives in tests/test_sim_modes.py.
+#
 # Perf canary (WARN-ONLY, never gates): the keyed_burst_sim row reports the
-# batched event core's events/sec; if it drops below the floor we print a
-# warning.  Shared CI machines throttle unpredictably, so this is a canary
-# for humans reading the log, not a flaky gate.
+# exact event core's events/sec and the scale_n20_m20_on_batched row the
+# batched core's; if either drops below its floor we print a warning.
+# Shared CI machines throttle unpredictably, so this is a canary for humans
+# reading the log, not a flaky gate.
 #
 #   scripts/ci.sh            # fast tests + smoke benchmarks
 #   CI_FULL=1 scripts/ci.sh  # additionally run the slow-marked tests
@@ -22,6 +28,9 @@ export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 # steady-state (~200k ev/s); the pre-overhaul core measured ~40k ev/s
 # through this same harness.
 EVENTS_PER_SEC_FLOOR="${EVENTS_PER_SEC_FLOOR:-100000}"
+# batched-core column (scale n=20 smoke, constraints-on arm): ~150k+ ev/s
+# wall on a quiet machine; same halving for shared-machine throttle.
+BATCHED_EVENTS_PER_SEC_FLOOR="${BATCHED_EVENTS_PER_SEC_FLOOR:-75000}"
 
 echo "== pytest (fast) =="
 python -m pytest -x -q -m "not slow"
@@ -48,6 +57,21 @@ if [[ -n "${EPS:-}" ]]; then
   fi
 else
   echo "WARN: keyed_burst_sim events_per_sec not found in smoke output"
+fi
+
+# -- batched column of the canary (opt-in event core, scale smoke arm) -------
+EPS_B="$(grep 'scale_n20_m20_on_batched,' "$SMOKE_OUT" \
+         | grep -o 'events_per_sec=[0-9]*' | head -1 | cut -d= -f2 || true)"
+if [[ -n "${EPS_B:-}" ]]; then
+  if [[ "$EPS_B" -lt "$BATCHED_EVENTS_PER_SEC_FLOOR" ]]; then
+    echo "WARN: batched-core events/sec=$EPS_B below canary floor" \
+         "$BATCHED_EVENTS_PER_SEC_FLOOR (scale_n20_m20_on_batched)"
+  else
+    echo "perf canary OK: batched-core events/sec=$EPS_B" \
+         "(floor $BATCHED_EVENTS_PER_SEC_FLOOR)"
+  fi
+else
+  echo "WARN: scale_n20_m20_on_batched events_per_sec not found in smoke output"
 fi
 rm -f "$SMOKE_OUT"
 

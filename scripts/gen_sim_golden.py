@@ -1,9 +1,15 @@
-"""Regenerate tests/golden/sim_decisions.json from the determinism-contract
-scenarios (tests/test_sim_determinism.py).  Only run this for an intentional
-semantic change to the simulator or the QoS control plane — never to paper
-over an unintended trace divergence.
+"""Regenerate the simulator determinism goldens from the contract scenarios
+(tests/test_sim_determinism.py):
 
-    PYTHONPATH=src python scripts/gen_sim_golden.py
+* tests/golden/sim_decisions.json          — exact event core
+* tests/golden/sim_decisions_batched.json  — batched event core
+  (``event_mode="batched"``; its own bit-exact contract, plus the
+  cross-mode equivalence checks in tests/test_sim_modes.py)
+
+Only run this for an intentional semantic change to the simulator or the
+QoS control plane — never to paper over an unintended trace divergence.
+
+    PYTHONPATH=src python scripts/gen_sim_golden.py [--batched-only]
 """
 import json
 import sys
@@ -12,20 +18,26 @@ from pathlib import Path
 sys.path.insert(0, "src")
 sys.path.insert(0, str(Path(__file__).resolve().parent.parent / "tests"))
 
-from test_sim_determinism import GOLDEN, TRACES  # noqa: E402
+from test_sim_determinism import GOLDEN, GOLDEN_BATCHED, TRACES  # noqa: E402
 
 
-def main() -> None:
+def _generate(event_mode: str, path: Path) -> None:
     out = {}
     for name, fn in TRACES.items():
-        out[name] = fn()
-        print(f"{name}: events={out[name]['events']} "
+        out[name] = fn(event_mode=event_mode)
+        print(f"[{event_mode}] {name}: events={out[name]['events']} "
               f"history={len(out[name]['history'])} "
               f"chains={out[name]['chained_groups']} "
               f"scales={len(out[name]['scale_log'])}")
-    GOLDEN.parent.mkdir(parents=True, exist_ok=True)
-    GOLDEN.write_text(json.dumps(out, indent=1, sort_keys=True))
-    print(f"wrote {GOLDEN}")
+    path.parent.mkdir(parents=True, exist_ok=True)
+    path.write_text(json.dumps(out, indent=1, sort_keys=True))
+    print(f"wrote {path}")
+
+
+def main() -> None:
+    if "--batched-only" not in sys.argv:
+        _generate("exact", GOLDEN)
+    _generate("batched", GOLDEN_BATCHED)
 
 
 if __name__ == "__main__":

@@ -74,9 +74,11 @@ from .placement import (
 )
 from .routing import (
     NUM_KEY_RANGES,
+    WIDE_KEY_RANGES,
     KeyRouter,
     MigrationPlan,
     StateStore,
+    key_ranges_for,
     range_of_key,
 )
 from .setup import (
@@ -91,6 +93,7 @@ from .simulator import (
     SimResult,
     SimSourceSpec,
     StreamSimulator,
+    analytic_emission_times,
 )
 
 __all__ = [k for k in dir() if not k.startswith("_")]

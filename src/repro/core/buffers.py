@@ -90,6 +90,32 @@ class OutputBuffer:
         self.used_bytes += size_bytes
         return self.used_bytes >= self.capacity_bytes
 
+    def room_for(self, size_bytes: int) -> int:
+        """How many more items of ``size_bytes`` this buffer takes before it
+        crosses capacity and must ship (>= 1: ``append`` only reports *after*
+        the crossing item lands).  Batch-aware fill accounting: a batched
+        sender splits a same-size run at these arithmetic fill points
+        instead of checking capacity item by item."""
+        if size_bytes <= 0:
+            return 1 << 30
+        remaining = self.capacity_bytes - self.used_bytes
+        if remaining <= size_bytes:
+            return 1
+        return -(-remaining // size_bytes)  # ceil div
+
+    def append_run(self, items: list[Any], size_bytes_each: int,
+                   opened_at_ms: float) -> bool:
+        """Append a whole same-size run in one call — byte accounting and
+        open-timestamp semantics identical to per-item ``append`` at the
+        run's first-item time.  The caller guarantees (via ``room_for``)
+        that at most the final item crosses capacity; returns True when it
+        did (the buffer must ship at that item's emission instant)."""
+        if self.opened_at_ms is None:
+            self.opened_at_ms = opened_at_ms
+        self.items.extend(items)
+        self.used_bytes += size_bytes_each * len(items)
+        return self.used_bytes >= self.capacity_bytes
+
     def take(self, now_ms: float) -> tuple[list[Any], int, float]:
         """Ship the buffer: returns (items, bytes, lifetime_ms) and resets."""
         lifetime = 0.0 if self.opened_at_ms is None else now_ms - self.opened_at_ms

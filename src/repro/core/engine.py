@@ -50,7 +50,7 @@ from .constraints import JobConstraint
 from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
 from .graphs import ALL_TO_ALL, Channel, JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
-from .measurement import QoSReporter, Tag
+from .measurement import QoSReporter, Tag, latency_percentile
 from .placement import WorkerPool
 from .routing import StateStore
 from .setup import compute_qos_setup, compute_reporter_setup
@@ -114,11 +114,9 @@ class EngineResult:
         return sum(self.sink_latencies_ms) / len(self.sink_latencies_ms)
 
     def latency_percentile(self, q: float) -> float:
-        if not self.sink_latencies_ms:
-            return float("nan")
-        xs = sorted(self.sink_latencies_ms)
-        idx = min(len(xs) - 1, int(q * len(xs)))
-        return xs[idx]
+        """Shared nearest-rank definition (core/measurement.py), so engine
+        and simulator percentiles are the same order statistic."""
+        return latency_percentile(self.sink_latencies_ms, q)
 
     @property
     def throughput_items_per_s(self) -> float:

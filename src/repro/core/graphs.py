@@ -275,9 +275,17 @@ class RuntimeGraph:
                 self._in[rv] = []
                 group.append(rv)
             self._by_job_vertex[name] = group
-            self.routers[name] = (
-                KeyRouter(jv.parallelism) if self.num_key_ranges is None
-                else KeyRouter(jv.parallelism, self.num_key_ranges))
+            try:
+                self.routers[name] = (
+                    KeyRouter(jv.parallelism) if self.num_key_ranges is None
+                    else KeyRouter(jv.parallelism, self.num_key_ranges))
+            except ValueError as e:
+                # unaddressable parallelism (more subtasks than key ranges;
+                # core/routing.py fails fast) — name the graph-level knob
+                raise ValueError(
+                    f"job vertex {name!r}: {e}; pass num_key_ranges >= "
+                    f"{jv.parallelism} (a power of two) to RuntimeGraph / "
+                    f"StreamSimulator / StreamEngine") from None
         for je in jg.edges:
             chans: list[Channel] = []
             src_group = self._by_job_vertex[je.src]

@@ -16,6 +16,7 @@ once per interval, at a per-manager random offset to avoid report bursts.
 """
 from __future__ import annotations
 
+import math
 import random
 from collections import deque
 from dataclasses import dataclass, field
@@ -23,6 +24,20 @@ from typing import Callable, Iterable
 
 from .clock import Clock
 from .graphs import Channel, RuntimeVertex
+
+
+def latency_percentile(latencies_ms: Iterable[float], q: float) -> float:
+    """Nearest-rank percentile: the ceil(q*n)-th smallest value (NaN when
+    empty).  The ONE percentile definition shared by both backends' result
+    types, so cross-backend comparisons compare the same order statistic.
+    The epsilon guards float artifacts like ``0.95 * 20 == 19.000000000004``
+    rounding the rank up a step."""
+    xs = sorted(latencies_ms)
+    if not xs:
+        return float("nan")
+    n = len(xs)
+    rank = max(1, min(n, math.ceil(q * n - 1e-9)))
+    return xs[rank - 1]
 
 # ---------------------------------------------------------------------------
 # Tags & running averages
@@ -210,6 +225,19 @@ class QoSReporter:
     def record_channel_latency(self, channel_id: str, latency_ms: float) -> None:
         s, c = self._chan_lat.get(channel_id, (0.0, 0))
         self._chan_lat[channel_id] = (s + latency_ms, c + 1)
+
+    def record_channel_latency_batch(self, channel_id: str,
+                                     latencies_ms: Iterable[float]) -> None:
+        """Array ingestion for batched executors: one call folds a run's
+        samples into the interval aggregate.  Equivalent to calling
+        ``record_channel_latency`` per element in order (the aggregate is a
+        left-folded (sum, count) pair, so the float arithmetic matches)."""
+        s, c = self._chan_lat.get(channel_id, (0.0, 0))
+        n = 0
+        for lat in latencies_ms:
+            s += lat
+            n += 1
+        self._chan_lat[channel_id] = (s, c + n)
 
     def record_output_buffer_lifetime(self, channel_id: str, lifetime_ms: float,
                                       buffer_size: int, version: int) -> None:

@@ -44,6 +44,29 @@ from typing import Any, Iterable
 #: of two well above any realistic parallelism so ranges stay divisible.
 NUM_KEY_RANGES = 128
 
+#: widest routing table the stock policy will configure (power of two;
+#: covers the paper's m=800 grid).
+WIDE_KEY_RANGES = 1024
+
+
+def key_ranges_for(group_size: int) -> int | None:
+    """Routing-table width for a stage of ``group_size`` subtasks.
+
+    None (the default ``NUM_KEY_RANGES`` table) while it can address the
+    group; ``WIDE_KEY_RANGES`` for paper-scale groups.  A group beyond the
+    widest table fails fast with a clear message — silently mis-routing
+    would starve every subtask past the addressable-owner count
+    (``KeyRouter`` refuses such tables outright; this names the knob)."""
+    if group_size <= NUM_KEY_RANGES:
+        return None
+    if group_size > WIDE_KEY_RANGES:
+        raise ValueError(
+            f"group_size {group_size} exceeds the {WIDE_KEY_RANGES} "
+            f"addressable key-range owners of the widest stock table; "
+            f"raise WIDE_KEY_RANGES (a power of two >= group_size) in "
+            f"core/routing.py to run such a grid")
+    return WIDE_KEY_RANGES
+
 
 def range_of_key(key: Any, num_ranges: int = NUM_KEY_RANGES) -> int:
     """Key -> virtual range.  Integer keys map directly: dense integer key
@@ -96,6 +119,16 @@ class KeyRouter:
                  num_ranges: int = NUM_KEY_RANGES) -> None:
         if group_size < 1:
             raise ValueError("group_size must be >= 1")
+        if group_size > num_ranges:
+            # a router can address at most num_ranges distinct owners: with
+            # more subtasks than ranges, owners >= num_ranges would simply
+            # never receive a key.  Fail fast instead of silently
+            # mis-routing (paper-scale m=800 needs num_ranges >= m).
+            raise ValueError(
+                f"group_size {group_size} exceeds num_ranges {num_ranges}: "
+                f"owners >= {num_ranges} would never be addressed — "
+                f"construct the router with num_ranges >= group_size "
+                f"(a power of two keeps the masked fast path)")
         self.num_ranges = num_ranges
         self.group_size = group_size
         #: ``num_ranges - 1`` when the range count is a power of two (the
@@ -144,6 +177,10 @@ class KeyRouter:
         the hot ranges to every gaining owner."""
         if new_size < 1:
             raise ValueError("new_size must be >= 1")
+        if new_size > self.num_ranges:
+            raise ValueError(
+                f"new_size {new_size} exceeds num_ranges {self.num_ranges}: "
+                f"owners >= {self.num_ranges} would never be addressed")
         old = self.table
         base, rem = divmod(self.num_ranges, new_size)
         targets = [base + (1 if i < rem else 0) for i in range(new_size)]

@@ -37,6 +37,29 @@ per-item-closure semantics exactly (same events at the same times in the
 same order, same float arithmetic); tests/test_sim_determinism.py pins
 golden decision traces recorded before the rewrite.
 
+Batched-completion mode (``event_mode="batched"``, opt-in).  The exact core
+spends one heap event per service completion, which tops out around ~200k
+events/s — not enough for the paper's full Fig. 8 grid (n=200, m=800).  The
+batched mode coalesces a task's queued run of items into ONE completion
+event (``_EV_BATCH``): the run is retired with per-item emission timestamps
+computed analytically (cumulative service times — the exact core's own
+float accumulation, so per-item instants agree bit-for-bit), and a second
+event (``_EV_BDONE``) releases the task and its core at the run's analytic
+end.  Sources coalesce the same way: one ``_EV_SOURCE`` event emits a chunk
+of items at their exact analytic pacing instants (``rate_fn`` is sampled at
+every per-item emission time, so bursty pacing matches item for item).  QoS
+measurement (tags, task samples, buffer lifetimes), buffer fill/flush,
+routing, and manager decision points all run at the same logical instants
+as the exact core — they are just *recorded* from inside the batch event.
+Runs are capped at ``batch_horizon_ms`` (default: one control-tick period)
+so no observer ever sees effects further than one control tick ahead, and
+run splits are timestamp-invariant (tests/test_sim_modes.py).
+See ``StreamSimulator.event_mode`` for the two modes' determinism contract:
+``"exact"`` is pinned bit-exactly by tests/golden/sim_decisions.json;
+``"batched"`` is pinned bit-exactly by tests/golden/sim_decisions_batched.json
+and *decision-equivalent* to exact (same QoS decision multisets, latency
+stats within 1%) on the golden scenarios.
+
 Simplifications vs. the threaded engine (recorded here on purpose):
 * CPython thread-scheduling noise is absent — latencies are deterministic,
 * per-worker CPU contention is modeled per task only (a worker is assumed to
@@ -66,7 +89,7 @@ from .constraints import JobConstraint
 from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
 from .graphs import JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
-from .measurement import QoSReporter, Tag
+from .measurement import QoSReporter, Tag, latency_percentile
 from .placement import WorkerPool
 from .routing import StateStore
 from .setup import compute_qos_setup, compute_reporter_setup
@@ -80,8 +103,29 @@ _EV_SRC_EMIT = 3  # a = last _SimTask, b = source item
 _EV_SOURCE = 4    # a = _SourceState
 _EV_CONTROL = 5   # QoS control tick
 _EV_FLUSH = 6     # stale-buffer sweep
+_EV_BATCH = 7     # a = _SimTask, b = item, c = stages (batched first completion)
+_EV_BDONE = 8     # a = _SimTask — analytic end of a batched run
 
 _heappush = heapq.heappush
+
+
+def analytic_emission_times(start_ms: float, service_ms_seq) -> list[float]:
+    """Per-item completion/emission instants of a queued run served
+    back-to-back from ``start_ms`` — the batched core's analytic timestamps.
+
+    Accumulated EXACTLY like the exact core (sequential float addition:
+    item j completes at ``(...(start + s1) + s2 ...) + sj``), so the two
+    modes' per-item instants agree bit-for-bit, and the sequence is
+    invariant under run-boundary splits: serving ``s[:k]`` then ``s[k:]``
+    from the first run's analytic end replays the identical float ops.
+    Property-tested in tests/test_sim_modes.py.
+    """
+    out = []
+    t = start_ms
+    for s in service_ms_seq:
+        t += s
+        out.append(t)
+    return out
 
 
 @dataclass
@@ -186,6 +230,35 @@ class _SimChannel:
             item.tag = Tag(cid, now)
         if self.buffer.append(item, item.size_bytes, now):
             self.flush(now)
+
+    def send_run(self, items: list[SimItem], times: list[float]) -> None:
+        """Send a same-size run of items with increasing (analytic) emission
+        times — the batched source path.  Tag decisions are evaluated per
+        item at its own instant (one per interval, like ``send``); buffer
+        fill accounting is batch-aware: the run is split at the arithmetic
+        capacity crossings (``OutputBuffer.room_for``/``append_run``) and
+        each crossing group ships at its crossing item's instant, exactly
+        where per-item ``send`` would have shipped it."""
+        sim = self.sim
+        cid = self.cid
+        if cid in sim.measured_channels:
+            rep = self.src_reporter
+            for item, t in zip(items, times):
+                item.emitted_at_ms = t
+                if rep.should_tag(cid, t):
+                    item.tag = Tag(cid, t)
+        else:
+            for item, t in zip(items, times):
+                item.emitted_at_ms = t
+        buf = self.buffer
+        size = items[0].size_bytes
+        start = 0
+        n = len(items)
+        while start < n:
+            end = min(start + buf.room_for(size), n)
+            if buf.append_run(items[start:end], size, times[start]):
+                self.flush(times[end - 1])
+            start = end
 
     def flush(self, now: float | None = None) -> None:
         buf = self.buffer
@@ -401,7 +474,8 @@ class _SimTask:
             cpu.busy += 1
             sim._seq += 1
             _heappush(sim._heap,
-                      (now + svc, sim._seq, _EV_COMPLETE, self, item, stages))
+                      (now + svc, sim._seq, sim._complete_kind,
+                       self, item, stages))
         else:
             cpu.ready.append((svc, self, item, stages))
 
@@ -426,10 +500,17 @@ class _SimTask:
             ]
         return svc, stages
 
-    def _complete(self, item: SimItem, stages: list["_SimTask"],
-                  now: float) -> None:
+    def _finish_item(self, item: SimItem, stages: list["_SimTask"],
+                     now: float, sink_acc: tuple[list, list] | None = None,
+                     ) -> None:
+        """Completion effects of one serviced item at instant ``now``:
+        task-latency samples, emission + routing (or sink recording).
+        Shared by the exact per-event completion and the batched analytic
+        drain — the instants and float arithmetic are identical in both
+        modes.  ``sink_acc`` (batched drains) collects sink latencies into
+        ``(lats, times)`` arrays for one batch-ingestion call instead of
+        per-item recording."""
         sim = self.sim
-        self.busy = False
         last = stages[-1]
         fan_in = last.fan_in
         if fan_in == 1 or last._fan_count % fan_in == 0:
@@ -449,11 +530,131 @@ class _SimTask:
                         t.reporter.record_task_latency(vid, t.svc_ms)
             last.emitted += 1
             if last.is_sink:
-                sim.record_sink_latency(now - item.created_at_ms, now)
+                key = item.key
+                counts = sim.sink_count_by_key
+                counts[key] = counts.get(key, 0) + 1
+                if sink_acc is not None:
+                    sink_acc[0].append(now - item.created_at_ms)
+                    sink_acc[1].append(now)
+                else:
+                    sim.record_sink_latency(now - item.created_at_ms, now)
             else:
                 out = SimItem(item.created_at_ms, last.out_bytes, item.key)
                 last.route(out, now)
+
+    def _complete(self, item: SimItem, stages: list["_SimTask"],
+                  now: float) -> None:
+        self.busy = False
+        self._finish_item(item, stages, now)
         self._try_start(now)
+
+    def _complete_batch(self, item: SimItem, stages: list["_SimTask"],
+                        now: float) -> bool:
+        """Dispatch of one ``_EV_BATCH`` event (batched mode): complete the
+        item that was in service, then retire the task's queued run in this
+        same event — per-item start/emission instants are the exact core's
+        cumulative service times (``analytic_emission_times``), only the
+        heap traffic is coalesced.  The run never computes effects past the
+        batch boundary (next control tick / flush sweep / injected callback
+        — ``StreamSimulator._batch_boundary``): an item whose completion
+        would cross it goes back to a real heap event, so every observer
+        samples state at the same logical instant as in the exact core; a
+        longer queue continues in a fresh run after the boundary, which
+        leaves every per-item instant unchanged (run-split invariance).
+        Returns True when the task still owns its core (a continuation
+        event — ``_EV_BDONE`` at the analytic end, or the crossing item's
+        ``_EV_BATCH`` — was scheduled)."""
+        sim = self.sim
+        self.busy = False
+        self._finish_item(item, stages, now)
+        queue = self.queue
+        if self.halted or not queue:
+            return False
+        # drain safety: a fan-in-gated stage's counter is SHARED state when
+        # a chain traverses it from another task — its gate must then see
+        # real-event interleaving (an analytic bump would race the other
+        # bumpers).  Such tasks — a gated chain member, or the head of a
+        # chain containing a gated interior stage — complete strictly per
+        # event; a standalone gated task is safe (only its own queue, whose
+        # order the drain preserves, ever bumps it).
+        s: _SimTask | None = self
+        while s is not None:
+            if s.fan_in != 1 and (s is not self
+                                  or self.chained_into is not None):
+                self._try_start(now)
+                return False
+            s = None if s.chain_next is None else sim.tasks[s.chain_next]
+        boundary = sim._batch_boundary(now)
+        measured_tasks = sim.measured_tasks
+        reporter = self.reporter
+        heap = sim._heap
+        sink_acc: tuple[list, list] = ([], [])
+        tag_lats: dict[str, list[float]] = {}
+        hold = False
+        t = now
+        while queue and t < boundary:
+            it = queue.popleft()
+            # per-item service start at analytic instant t — the same
+            # bookkeeping, at the same logical time, as the exact core's
+            # _try_start (tag evaluation, task sampling, keyed-state bump
+            # at service START)
+            if it.tag is not None:
+                tag_lats.setdefault(it.tag.channel_id, []).append(
+                    t - it.tag.created_at_ms)
+                it.tag = None
+            vid = self.vid
+            if (
+                self._pending_task_sample is None
+                and vid in measured_tasks
+                and reporter.should_sample_task(vid, t)
+            ):
+                self._pending_task_sample = t
+            if self.chain_next is None and self.fan_in == 1:
+                self._fan_count += 1
+                svc = self.svc_ms
+                run_stages = [self]
+                if self.stateful:
+                    self.state.bump(it.key)
+            else:
+                svc, run_stages = self._chain_service(it)
+                for s in run_stages:
+                    if s.stateful:
+                        s.state.bump(it.key)
+            self.busy_ms_window += svc
+            self.busy_ms_total += svc
+            t_next = t + svc
+            if t_next >= boundary:
+                # crossing item: it is in service now (started at t, like
+                # the exact core), but it completes on the far side of the
+                # boundary — finish it through a real completion event so
+                # its effects order correctly around the observer (a past-
+                # the-cutoff completion is dropped there, also like exact)
+                self.busy = True
+                sim._seq += 1
+                _heappush(heap, (t_next, sim._seq, _EV_BATCH,
+                                 self, it, run_stages))
+                hold = True
+                break
+            t = t_next
+            self._finish_item(it, run_stages, t, sink_acc)
+        else:
+            if t > now:
+                # drained to an idle queue: the run owns its core until its
+                # analytic end
+                self.busy = True
+                sim._seq += 1
+                _heappush(heap, (t, sim._seq, _EV_BDONE, self, None, None))
+                hold = True
+            elif queue:
+                # boundary coincides with ``now`` (e.g. a zero-delay
+                # injected callback): nothing can be drained analytically —
+                # start the next item through the regular event path
+                self._try_start(now)
+        for cid, lats in tag_lats.items():
+            reporter.record_channel_latency_batch(cid, lats)
+        if sink_acc[0]:
+            sim.record_sink_latency_batch(sink_acc[0], sink_acc[1])
+        return hold
 
     def route(self, item: SimItem, now: float | None = None) -> None:
         if now is None:
@@ -509,8 +710,46 @@ class StreamSimulator(RuntimeRewirer):
         max_buffer_lifetime_ms: float | None = 5_000.0,
         pool: WorkerPool | None = None,
         num_key_ranges: int | None = None,
+        event_mode: str = "exact",
+        batch_horizon_ms: float | None = None,
     ) -> None:
         self.jg = jg
+        #: event-core execution mode — the determinism contract:
+        #:
+        #: * ``"exact"`` (default): one heap event per service completion.
+        #:   Bit-exact under a fixed seed — event count/order, every
+        #:   measurement timestamp and QoS decision are pinned by the
+        #:   goldens in tests/golden/sim_decisions.json; any change to this
+        #:   mode's event semantics is a contract break.
+        #: * ``"batched"`` (opt-in): a task's queued run retires in one
+        #:   event with analytically computed per-item emission timestamps
+        #:   (cumulative service times — the same float accumulation as the
+        #:   exact core), and sources emit in analytic chunks.  Still fully
+        #:   deterministic under a fixed seed (pinned by
+        #:   tests/golden/sim_decisions_batched.json), but only
+        #:   *decision-equivalent* to exact: identical item conservation,
+        #:   per-stream counts and QoS decision multisets, latency stats
+        #:   within 1% (tests/test_sim_modes.py) — not bit-exact event
+        #:   traces, because observers (control ticks, flush sweeps) can
+        #:   see a run's effects up to ``batch_horizon_ms`` early.
+        if event_mode not in ("exact", "batched"):
+            raise ValueError(
+                f"event_mode must be 'exact' or 'batched', got {event_mode!r}")
+        self.event_mode = event_mode
+        self.batched = event_mode == "batched"
+        #: max analytic lookahead of one batched run/chunk (caps how far a
+        #: batch event's effects can precede the clock); defaults to one
+        #: control-tick period so measurement skew stays under a tick
+        self.batch_horizon_ms = (
+            batch_horizon_ms if batch_horizon_ms is not None
+            else measurement_interval_ms / 4.0)
+        if self.batched and not self.batch_horizon_ms > 0.0:
+            raise ValueError("batch_horizon_ms must be > 0")
+        self._complete_kind = _EV_BATCH if self.batched else _EV_COMPLETE
+        #: run-boundary cutoff (set by ``run``): the exact core drops heap
+        #: events past the duration; batched drains/chunks mirror that by
+        #: never completing or routing an item past it
+        self._run_until = float("inf")
         #: max output-buffer lifetime (§3.5.1 companion; same contract as
         #: StreamEngine): an under-filled buffer ships once it has been open
         #: this long, so low rates cannot strand items forever.  None
@@ -582,12 +821,26 @@ class StreamSimulator(RuntimeRewirer):
         self.give_ups: list[GiveUp] = []
         self._init_rewirer()
         self.sink_latencies: list[float] = []
+        #: per-stream accounting: sink arrivals per item key (stream-group
+        #: id) — what the cross-mode equivalence suite compares
+        self.sink_count_by_key: dict = {}
         self.latency_timeline: dict[int, tuple[float, int]] = {}
         self.total_bytes = 0
         self.total_buffers = 0
 
         self._heap: list[tuple] = []
         self._seq = 0
+        #: pending schedule() callback times (min-heap): batched runs treat
+        #: the earliest one as an observer boundary, so injected actions
+        #: (scale/chain probes, elastic controller ticks) see no analytic
+        #: lookahead — they sample state at the same instant as exact mode
+        self._call_times: list[float] = []
+        #: the ACTUALLY scheduled next control-tick / flush-sweep instants
+        #: (observer boundaries for batched runs; tracking the scheduled
+        #: floats — not grid arithmetic — keeps the boundary exact even
+        #: when repeated float addition drifts off the nominal period)
+        self._next_control_ms = float("inf")
+        self._next_flush_ms = float("inf")
 
     # -- event machinery ---------------------------------------------------------
     def _push(self, at_ms: float, kind: int, a, b=None, c=None) -> None:
@@ -608,12 +861,50 @@ class StreamSimulator(RuntimeRewirer):
         """Back-compat generic event: run ``fn`` at ``at_ms`` (tests and
         benchmarks inject scale/chain actions this way)."""
         self._push(at_ms, _EV_CALL, fn)
+        _heappush(self._call_times, at_ms)
+
+    def _batch_boundary(self, now: float) -> float:
+        """First instant after ``now`` at which an observer outside a batch
+        can run: the next control tick, the next stale-flush sweep, or the
+        earliest injected ``schedule()`` callback — capped by the batch
+        horizon and the run cutoff.  The tick/sweep instants are the
+        ACTUALLY scheduled event times (tracked when each reschedules
+        itself), so the boundary stays exact even where repeated float
+        addition drifts off the nominal period.  Batched runs and source
+        chunks never compute effects past the boundary (a crossing
+        item/emission falls back to a real heap event), so every
+        control-plane decision point samples buffers, counters and
+        measurement aggregates at the same logical instant as the exact
+        core."""
+        b = now + self.batch_horizon_ms
+        if self._next_control_ms < b:
+            b = self._next_control_ms
+        if self._next_flush_ms < b:
+            b = self._next_flush_ms
+        calls = self._call_times
+        if calls and calls[0] < b:
+            b = calls[0]
+        if self._run_until < b:
+            b = self._run_until
+        return b
 
     def record_sink_latency(self, lat_ms: float, now: float) -> None:
         self.sink_latencies.append(lat_ms)
         b = int(now // self.latency_bucket_ms)
         s, c = self.latency_timeline.get(b, (0.0, 0))
         self.latency_timeline[b] = (s + lat_ms, c + 1)
+
+    def record_sink_latency_batch(self, lats_ms: list[float],
+                                  times_ms: list[float]) -> None:
+        """Timestamp-array ingestion for a batched run's sink arrivals —
+        element-wise identical to ``record_sink_latency`` per item."""
+        self.sink_latencies.extend(lats_ms)
+        bucket = self.latency_bucket_ms
+        timeline = self.latency_timeline
+        for lat, now in zip(lats_ms, times_ms):
+            b = int(now // bucket)
+            s, c = timeline.get(b, (0.0, 0))
+            timeline[b] = (s + lat, c + 1)
 
     # -- QoS control events ---------------------------------------------------------
     def _cpu_utilization(self, v: RuntimeVertex, window_ms: float) -> float:
@@ -624,6 +915,7 @@ class StreamSimulator(RuntimeRewirer):
 
     def _control_tick(self) -> None:
         tick = self.interval_ms / 4.0
+        self._next_control_ms = self.clock.now() + tick
         for v in list(self.rg.vertices):
             if v.id in self.measured_tasks:
                 t = self.tasks[v]
@@ -642,7 +934,7 @@ class StreamSimulator(RuntimeRewirer):
             for mgr in list(self.managers.values()):
                 for action in mgr.check():
                     self._route_action(action)
-        self._push(self.clock.now() + tick, _EV_CONTROL, None)
+        self._push(self._next_control_ms, _EV_CONTROL, None)
 
     def _flush_stale_tick(self) -> None:
         """Max-buffer-lifetime sweep (§3.5.1 companion, same contract as the
@@ -650,12 +942,13 @@ class StreamSimulator(RuntimeRewirer):
         been open longer than ``max_buffer_lifetime_ms``."""
         now = self.clock.now()
         lifetime = self.max_buffer_lifetime_ms
+        self._next_flush_ms = now + lifetime / 2.0
         for ch in list(self.channels.values()):
             buf = ch.buffer
             if (buf.items and buf.opened_at_ms is not None
                     and now - buf.opened_at_ms >= lifetime):
                 ch.flush(now)
-        self._push(now + lifetime / 2.0, _EV_FLUSH, None)
+        self._push(self._next_flush_ms, _EV_FLUSH, None)
 
     def _route_action(self, action: Action) -> None:
         if isinstance(action, BufferSizeUpdate):
@@ -875,16 +1168,124 @@ class StreamSimulator(RuntimeRewirer):
         st.seq = seq + 1
         self._push(now + period, _EV_SOURCE, st)
 
+    def _fire_source_batched(self, st: _SourceState, now: float) -> None:
+        """Batched sources: one ``_EV_SOURCE`` event emits a chunk of items
+        at their exact analytic pacing instants (``rate_at`` is sampled at
+        every per-item emission time, so bursty ``rate_fn`` pacing matches
+        the exact core item for item).  Chunks never compute emission
+        effects past the batch boundary — an emission that would cross it
+        goes back to a real ``_EV_SRC_EMIT`` event, like the exact core's.
+        Boundary-safe emissions toward a single consumer group are grouped
+        per resolved channel and shipped through the batch-aware buffer
+        path (``_SimChannel.send_run``)."""
+        spec = st.spec
+        task = st.task
+        # fan-gated chains: the exact core evaluates a fan-in gate at
+        # EMISSION time — after any bumps by items fired in between —
+        # while a chunk would evaluate it at creation time.  A source
+        # whose chain contains ANY fan_in != 1 stage therefore emits
+        # strictly per item through the exact path (gate timing is then
+        # identical by construction; such chains are rare — gates normally
+        # sit behind non-source stages, e.g. the media job's Merger)
+        stage = task
+        while True:
+            if stage.fan_in != 1:
+                self._fire_source(st, now)
+                return
+            if stage.chain_next is None:
+                break
+            stage = self.tasks[stage.chain_next]
+        limit = self._run_until
+        boundary = self._batch_boundary(now)
+        keys_per_task = spec.keys_per_task
+        nkeys = spec.keys
+        index = st.index
+        seq = st.seq
+        t = now
+        # (channel -> (items, times)) per-chunk runs; per-channel emission
+        # order is the exact core's (analytic times are increasing)
+        runs: dict = {}
+        while True:
+            if keys_per_task is not None:
+                key = index * keys_per_task + seq % keys_per_task
+            elif nkeys:
+                key = seq % nkeys
+            else:
+                key = seq
+            item = SimItem(t, spec.item_bytes, key)
+            svc, stages = task._chain_service(item)
+            for s in stages:  # stateful chained stages count at start too
+                if s.stateful:
+                    s.state.bump(item.key)
+            task.busy_ms_window += svc
+            emit_at = t + svc
+            last = stages[-1]
+            if emit_at >= boundary:
+                # crossing emission: route it through the exact core's own
+                # emit event so it orders correctly around the boundary
+                # observer (dropped there if past the run cutoff), and end
+                # the chunk — its fan-in gate must not see later bumps
+                self._seq += 1
+                _heappush(self._heap, (emit_at, self._seq, _EV_SRC_EMIT,
+                                       last, item, None))
+                seq += 1
+                period = 1e3 / max(spec.rate_at(t), 1e-9)
+                t += period
+                break
+            if last._fan_count % last.fan_in == 0 and not last.is_sink:
+                out = SimItem(item.created_at_ms, last.out_bytes, item.key)
+                groups = last.out_groups
+                # same masked-table lookup route() inlines; route()'s
+                # retired-sender flush branch is irrelevant here — source
+                # vertices are never scalable, so never retired
+                if len(groups) == 1:
+                    router, chans = groups[0]
+                    if len(chans) == 1:
+                        ch = chans[0]
+                    else:
+                        mask = router.mask
+                        idx = (router.table[out.key & mask]
+                               if mask is not None
+                               and isinstance(out.key, int)
+                               else router.owner(out.key))
+                        if idx >= len(chans):
+                            idx = len(chans) - 1
+                        ch = chans[idx]
+                    if ch.chained:
+                        last.route(out, emit_at)
+                    else:
+                        run = runs.get(ch)
+                        if run is None:
+                            run = runs[ch] = ([], [])
+                        run[0].append(out)
+                        run[1].append(emit_at)
+                else:
+                    last.route(out, emit_at)
+            seq += 1
+            period = 1e3 / max(spec.rate_at(t), 1e-9)
+            t += period
+            if t >= boundary or t > limit:
+                break
+        st.seq = seq
+        for ch, (items, times) in runs.items():
+            ch.send_run(items, times)
+        self._seq += 1
+        _heappush(self._heap, (t, self._seq, _EV_SOURCE, st, None, None))
+
     # -- run ---------------------------------------------------------------------------
     def run(self, duration_ms: float, max_events: int | None = None) -> "SimResult":
+        self._run_until = duration_ms
         self._start_sources()
-        self._push(self.interval_ms / 4.0, _EV_CONTROL, None)
+        self._next_control_ms = self.interval_ms / 4.0
+        self._push(self._next_control_ms, _EV_CONTROL, None)
         if self.max_buffer_lifetime_ms is not None:
-            self._push(self.max_buffer_lifetime_ms / 2.0, _EV_FLUSH, None)
+            self._next_flush_ms = self.max_buffer_lifetime_ms / 2.0
+            self._push(self._next_flush_ms, _EV_FLUSH, None)
         n_events = 0
         heap = self._heap
         pop = heapq.heappop
         clock = self.clock
+        batched = self.batched
         while heap:
             t, _, kind, a, b, c = pop(heap)
             if t > duration_ms:
@@ -906,6 +1307,34 @@ class StreamSimulator(RuntimeRewirer):
                     self._seq += 1
                     _heappush(heap, (t + svc, self._seq, _EV_COMPLETE,
                                      t2, it2, st2))
+            elif kind == _EV_BATCH:
+                # batched completion: retire the task's queued run in this
+                # one event; a continued run re-claims the core until its
+                # next scheduled event (_EV_BDONE / crossing _EV_BATCH)
+                cpu = a.cpu
+                cpu.busy -= 1
+                if a._complete_batch(b, c, t):
+                    cpu.busy += 1
+                else:
+                    ready = cpu.ready
+                    while ready and cpu.busy < cpu.cores:
+                        svc, t2, it2, st2 = ready.popleft()
+                        cpu.busy += 1
+                        self._seq += 1
+                        _heappush(heap, (t + svc, self._seq, _EV_BATCH,
+                                         t2, it2, st2))
+            elif kind == _EV_BDONE:
+                cpu = a.cpu
+                cpu.busy -= 1
+                a.busy = False
+                a._try_start(t)
+                ready = cpu.ready
+                while ready and cpu.busy < cpu.cores:
+                    svc, t2, it2, st2 = ready.popleft()
+                    cpu.busy += 1
+                    self._seq += 1
+                    _heappush(heap, (t + svc, self._seq, _EV_BATCH,
+                                     t2, it2, st2))
             elif kind == _EV_SHIP:
                 a.enqueue(b, c, t)
             elif kind == _EV_SRC_EMIT:
@@ -913,8 +1342,12 @@ class StreamSimulator(RuntimeRewirer):
                     out = SimItem(b.created_at_ms, a.out_bytes, b.key)
                     a.route(out, t)
             elif kind == _EV_SOURCE:
-                self._fire_source(a, t)
+                if batched:
+                    self._fire_source_batched(a, t)
+                else:
+                    self._fire_source(a, t)
             elif kind == _EV_CALL:
+                heapq.heappop(self._call_times)
                 a()
             elif kind == _EV_CONTROL:
                 self._control_tick()
@@ -933,6 +1366,7 @@ class StreamSimulator(RuntimeRewirer):
             duration_ms=duration_ms,
             events=n_events,
             sink_latencies_ms=self.sink_latencies,
+            sink_count_by_key=dict(self.sink_count_by_key),
             latency_timeline=timeline,
             final_buffer_sizes={
                 cid: ch.buffer.capacity_bytes for cid, ch in self.channels.items()
@@ -967,6 +1401,14 @@ class SimResult:
     unchain_log: list = field(default_factory=list)
     #: worker-pool acquire/release audit (core/placement.py PoolEvent)
     pool_events: list = field(default_factory=list)
+    #: sink arrivals per item key (per-stream accounting; cross-mode
+    #: equivalence compares these between exact and batched runs)
+    sink_count_by_key: dict = field(default_factory=dict)
+
+    def p95_latency_ms(self) -> float:
+        """95th percentile of raw sink latencies (shared nearest-rank
+        definition — core/measurement.py latency_percentile)."""
+        return latency_percentile(self.sink_latencies_ms, 0.95)
 
     def mean_latency_ms(self, after_ms: float = 0.0) -> float:
         if not self.latency_timeline:

@@ -31,6 +31,10 @@ from repro.core import (
 )
 
 GOLDEN = Path(__file__).parent / "golden" / "sim_decisions.json"
+#: same scenarios, batched event core (event_mode="batched"): the batched
+#: mode has its own bit-exact determinism contract, pinned separately —
+#: the cross-mode *equivalence* contract lives in tests/test_sim_modes.py
+GOLDEN_BATCHED = Path(__file__).parent / "golden" / "sim_decisions_batched.json"
 
 
 def _trace(res) -> dict:
@@ -60,24 +64,28 @@ def _trace(res) -> dict:
     }
 
 
-def media_trace() -> dict:
+def media_sim(event_mode: str = "exact") -> StreamSimulator:
     """Fig. 7/8 media pipeline, adaptive buffers + chaining armed, seed 7:
     exercises BufferSizeUpdate streams on a multi-worker pipeline."""
     p = MediaJobParams(parallelism=4, num_workers=2, streams=32, fps=25.0,
                        latency_limit_ms=50.0)
     jg, jcs = build_media_job(p)
     gpp = (p.streams // p.group_size) // p.parallelism
-    sim = StreamSimulator(
+    return StreamSimulator(
         jg, jcs, p.num_workers,
         sources={"Partitioner": SimSourceSpec(
             rate_items_per_s=p.fps * p.streams / p.parallelism,
             item_bytes=350, keys_per_task=gpp)},
         initial_buffer_bytes=32 * 1024, measurement_interval_ms=1_000.0,
-        enable_qos=True, enable_chaining=True, seed=7)
-    return _trace(sim.run(60_000.0))
+        enable_qos=True, enable_chaining=True, seed=7,
+        event_mode=event_mode)
 
 
-def scale_trace() -> dict:
+def media_trace(event_mode: str = "exact") -> dict:
+    return _trace(media_sim(event_mode).run(60_000.0))
+
+
+def scale_sim(event_mode: str = "exact") -> StreamSimulator:
     """Overloaded stage under a latency constraint + throughput constraint:
     the manager walks buffers -> ScaleRequest (live scale-out through the
     rewirer) -> GiveUp, seed 11."""
@@ -91,15 +99,18 @@ def scale_trace() -> dict:
     jcs = [JobConstraint(seq, 40.0, 4_000.0, name="lat"),
            ThroughputConstraint("Work", 400.0, window_ms=4_000.0,
                                 max_parallelism=6)]
-    sim = StreamSimulator(
+    return StreamSimulator(
         jg, jcs, num_workers=2,
         sources={"Src": SimSourceSpec(160.0, item_bytes=256, keys=64)},
         initial_buffer_bytes=1024, enable_qos=True, enable_chaining=True,
-        seed=11)
-    return _trace(sim.run(45_000.0))
+        seed=11, event_mode=event_mode)
 
 
-def chain_trace() -> dict:
+def scale_trace(event_mode: str = "exact") -> dict:
+    return _trace(scale_sim(event_mode).run(45_000.0))
+
+
+def chain_sim(event_mode: str = "exact") -> StreamSimulator:
     """Single-worker linear pipeline with an unreachable 8 ms SLO: buffers
     converge, then the manager fuses A->B (ChainRequest), then gives up,
     seed 3."""
@@ -113,18 +124,35 @@ def chain_trace() -> dict:
     jg.add_edge("B", "Sink", ALL_TO_ALL)
     seq = JobSequence.of(("Src", "A"), "A", ("A", "B"), "B", ("B", "Sink"))
     jcs = [JobConstraint(seq, 8.0, 4_000.0, name="lat")]
-    sim = StreamSimulator(
+    return StreamSimulator(
         jg, jcs, num_workers=1,
         sources={"Src": SimSourceSpec(150.0, item_bytes=512, keys=16)},
         initial_buffer_bytes=4096, enable_qos=True, enable_chaining=True,
-        seed=3)
-    return _trace(sim.run(60_000.0))
+        seed=3, event_mode=event_mode)
+
+
+def chain_trace(event_mode: str = "exact") -> dict:
+    return _trace(chain_sim(event_mode).run(60_000.0))
 
 
 TRACES = {
     "media": media_trace,
     "scale": scale_trace,
     "chain": chain_trace,
+}
+
+#: simulator builders + run durations for the same scenarios — the
+#: cross-mode equivalence suite (tests/test_sim_modes.py) runs them in both
+#: event modes and compares full SimResults, not just decision traces
+SIMS = {
+    "media": media_sim,
+    "scale": scale_sim,
+    "chain": chain_sim,
+}
+DURATIONS_MS = {
+    "media": 60_000.0,
+    "scale": 45_000.0,
+    "chain": 60_000.0,
 }
 
 
