@@ -32,6 +32,23 @@ EVENTS_PER_SEC_FLOOR="${EVENTS_PER_SEC_FLOOR:-100000}"
 # wall on a quiet machine; same halving for shared-machine throttle.
 BATCHED_EVENTS_PER_SEC_FLOOR="${BATCHED_EVENTS_PER_SEC_FLOOR:-75000}"
 
+# -- lint + pre-flight graph validation (repro.analysis) ---------------------
+# AST rules over src/repro plus graph_check over the canonical topologies;
+# ERROR diagnostics exit non-zero and fail CI, WARNs only print.
+echo "== lint + graph validator =="
+python scripts/lint.py
+
+# -- type-checking arm (scoped: routing, placement, analysis) ----------------
+# The container does not ship mypy and CI must not install packages, so the
+# arm self-skips with a notice when unavailable; run it locally with any
+# environment that has mypy on the path.
+echo "== mypy (scoped) =="
+if python -c "import mypy" 2>/dev/null; then
+  python -m mypy --config-file mypy.ini
+else
+  echo "SKIP: mypy not installed (scoped config in mypy.ini)"
+fi
+
 echo "== pytest (fast) =="
 python -m pytest -x -q -m "not slow"
 
@@ -74,5 +91,23 @@ else
   echo "WARN: scale_n20_m20_on_batched events_per_sec not found in smoke output"
 fi
 rm -f "$SMOKE_OUT"
+
+# -- lockset race detector over the threaded-engine smoke scenarios ----------
+# REPRO_RACE_CHECK=1 instruments StateStore / OutputBuffer / KeyRouter.commit
+# (analysis/race.py) and the keyed_burst + placement_burst scenarios — the
+# ones that rescale stateful stages and elastic pools across threads — must
+# come back with zero race reports.  Runs in its own process: the flag is
+# read once at import, and the canary smoke run above must stay
+# uninstrumented.
+echo "== race detector (keyed_burst + placement_burst) =="
+REPRO_RACE_CHECK=1 python - <<'PY'
+from repro.analysis.race import CHECKER, RACE_CHECK
+assert RACE_CHECK and CHECKER is not None
+from benchmarks.qos_scaling import run_keyed_burst, run_placement_burst
+run_keyed_burst(smoke=True)
+run_placement_burst(smoke=True)
+CHECKER.assert_clean()
+print("race check clean: keyed_burst + placement_burst")
+PY
 
 echo "CI OK"

@@ -1,0 +1,78 @@
+#!/usr/bin/env python
+"""Repo lint + canonical-topology graph validation (CI gate).
+
+Two passes, both reporting structured diagnostics from repro.analysis:
+
+1. AST lint (analysis/lint.py) over ``src/repro`` — the repo's own
+   hot-path discipline: no wall clock in the simulator, stdlib-only
+   state codec, no ``key %`` routing outside core/routing.py,
+   ``__slots__`` in hot modules, no heavyweight module-level imports in
+   lazy zones.
+2. Pre-flight graph validation (analysis/graph_check.py) over every
+   canonical topology builder — the paper's media job plus the benchmark
+   jobs — which must come back with zero ERRORs (the same no-false-
+   positives contract tests/test_analysis_graph_check.py pins).
+
+Exit status 1 iff any ERROR diagnostic was produced; WARNs only print.
+
+    PYTHONPATH=src python scripts/lint.py          # both passes
+    PYTHONPATH=src python scripts/lint.py --rules  # dump the rule catalog
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+sys.path.insert(0, str(ROOT / "src"))
+sys.path.insert(0, str(ROOT))
+
+from repro.analysis import ERROR, REGISTRY  # noqa: E402
+from repro.analysis.lint import lint_tree  # noqa: E402
+
+
+def dump_rules() -> int:
+    for rule_id in sorted(REGISTRY):
+        r = REGISTRY[rule_id]
+        print(f"{r.id}  {r.severity:5s}  {r.title}")
+    return 0
+
+
+def graph_pass() -> list:
+    """Validate every canonical topology (paper media job + benchmark
+    jobs) against the pre-flight rules."""
+    from repro.analysis.graph_check import check_job
+    from repro.configs.nephele_media import MediaJobParams, build_media_job
+
+    from benchmarks.qos_scaling import _burst_job, _keyed_job
+
+    diags = []
+    cases = {
+        "media(default)": build_media_job(MediaJobParams()),
+        "media(m=4,n=2)": build_media_job(
+            MediaJobParams(parallelism=4, num_workers=2)),
+        "elastic_burst": _burst_job(),
+        "keyed_burst": _keyed_job(),
+    }
+    for name, (jg, jcs) in cases.items():
+        for d in check_job(jg, jcs):
+            print(f"[graph:{name}] {d.format()}")
+            diags.append(d)
+    return diags
+
+
+def main(argv: list[str]) -> int:
+    if "--rules" in argv:
+        return dump_rules()
+    diags = lint_tree(ROOT)
+    for d in diags:
+        print(d.format())
+    diags += graph_pass()
+    errors = sum(1 for d in diags if d.severity == ERROR)
+    warns = len(diags) - errors
+    print(f"lint: {errors} error(s), {warns} warning(s)")
+    return 1 if errors else 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main(sys.argv[1:]))

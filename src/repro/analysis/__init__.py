@@ -1,0 +1,44 @@
+"""Static/dynamic analysis layer: pre-flight validation, lint, race check.
+
+Three layers (see docs/analysis.md for the rule catalog):
+
+* ``analysis.graph_check`` — pre-flight job-graph/QoS validator, run by
+  both execution backends at construction (``preflight=False`` opts out).
+* ``analysis.lint`` — repo-specific AST rules (``scripts/lint.py``).
+* ``analysis.race`` — ``REPRO_RACE_CHECK=1`` lockset race detector for
+  the threaded engine.
+
+This package init stays import-light on purpose: ``core/routing.py`` and
+``core/buffers.py`` import ``analysis.race`` at *their* import time, so
+nothing here may import ``repro.core`` (``graph_check`` does, and is
+therefore loaded lazily).
+"""
+from __future__ import annotations
+
+from typing import Any
+
+from .diagnostics import (  # noqa: F401
+    Diagnostic,
+    ERROR,
+    GraphValidationError,
+    REGISTRY,
+    Rule,
+    WARN,
+    diag,
+    register,
+)
+from .race import RACE_CHECK, RaceReport  # noqa: F401
+
+__all__ = [
+    "Diagnostic", "ERROR", "WARN", "Rule", "REGISTRY", "diag", "register",
+    "GraphValidationError", "RACE_CHECK", "RaceReport",
+    "check_job", "run_preflight",
+]
+
+
+def __getattr__(name: str) -> Any:
+    # lazy: graph_check imports repro.core (cycle with core's import of us)
+    if name in ("check_job", "run_preflight"):
+        from . import graph_check
+        return getattr(graph_check, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

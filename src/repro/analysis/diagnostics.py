@@ -1,0 +1,179 @@
+"""Structured diagnostics + the shared rule registry (analysis layer core).
+
+Every analysis layer — the pre-flight graph validator
+(analysis/graph_check.py), the AST lint pass (analysis/lint.py) and the
+build-time checks inside ``core/graphs.py`` — reports problems as
+``Diagnostic`` records: a stable rule id, a severity, a human location, a
+message and a fix hint.  The registry below is the single catalog of rule
+ids, so an error raised while *building* a job graph carries the same id
+and wording as the same condition caught by the *pre-flight* pass, and
+``docs/analysis.md`` can enumerate the catalog mechanically.
+
+This module deliberately imports nothing from ``repro.core`` (it is the
+bottom of the dependency stack: ``core/graphs.py`` imports it to raise
+uniform build-time errors).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterable, Sequence
+
+#: severities — ERROR fails fast (CI, pre-flight), WARN is advisory.
+ERROR = "ERROR"
+WARN = "WARN"
+
+
+@dataclass(frozen=True)
+class Rule:
+    """One registered rule: identity + default severity + fix hint."""
+
+    id: str
+    severity: str
+    title: str
+    hint: str = ""
+
+
+@dataclass(frozen=True)
+class Diagnostic:
+    """One finding: rule id, severity, where, what, and how to fix it."""
+
+    rule: str
+    severity: str
+    location: str
+    message: str
+    hint: str = ""
+
+    def format(self) -> str:
+        s = f"[{self.rule}] {self.severity} {self.location}: {self.message}"
+        if self.hint:
+            s += f" | hint: {self.hint}"
+        return s
+
+
+#: rule id -> Rule.  Populated by ``register`` below; graph/constraint rules
+#: live here (core/graphs.py raises through them), lint rules are registered
+#: by analysis/lint.py on import.
+REGISTRY: dict[str, Rule] = {}
+
+
+def register(rule_id: str, severity: str, title: str, hint: str = "") -> Rule:
+    if severity not in (ERROR, WARN):
+        raise ValueError(f"bad severity {severity!r} for rule {rule_id}")
+    if rule_id in REGISTRY:
+        raise ValueError(f"duplicate rule id {rule_id!r}")
+    rule = Rule(rule_id, severity, title, hint)
+    REGISTRY[rule_id] = rule
+    return rule
+
+
+def diag(rule_id: str, location: str, message: str,
+         hint: str | None = None, severity: str | None = None) -> Diagnostic:
+    """Build a Diagnostic for a registered rule (severity/hint default to
+    the registry's)."""
+    rule = REGISTRY[rule_id]
+    return Diagnostic(rule_id, severity or rule.severity, location, message,
+                      rule.hint if hint is None else hint)
+
+
+class GraphValidationError(ValueError):
+    """Raised when validation finds at least one ERROR diagnostic.
+
+    Subclasses ValueError so call sites that historically caught the ad-hoc
+    ``raise ValueError`` graph checks keep working unchanged.
+    """
+
+    def __init__(self, diagnostics: Iterable[Diagnostic]) -> None:
+        self.diagnostics: tuple[Diagnostic, ...] = tuple(diagnostics)
+        errors = [d for d in self.diagnostics if d.severity == ERROR]
+        if len(errors) == 1 and len(self.diagnostics) == 1:
+            msg = errors[0].format()
+        else:
+            msg = (f"validation failed with {len(errors)} error(s):\n"
+                   + "\n".join("  " + d.format() for d in self.diagnostics))
+        super().__init__(msg)
+
+
+def fail(rule_id: str, location: str, message: str,
+         hint: str | None = None) -> None:
+    """Raise a single-diagnostic GraphValidationError (build-time checks)."""
+    raise GraphValidationError([diag(rule_id, location, message, hint)])
+
+
+def raise_on_error(diagnostics: Sequence[Diagnostic]) -> None:
+    """Raise iff ``diagnostics`` contains at least one ERROR (pre-flight
+    fails-fast semantics; WARNs alone never raise)."""
+    if any(d.severity == ERROR for d in diagnostics):
+        raise GraphValidationError(diagnostics)
+
+
+# ---------------------------------------------------------------------------
+# Graph / constraint / routing / placement / buffer rule catalog.
+# (Lint rules NS-L*** are registered by analysis/lint.py.)
+# ---------------------------------------------------------------------------
+
+register("NS-G001", ERROR, "duplicate job vertex",
+         "job vertex names must be unique within a job graph")
+register("NS-G002", ERROR, "dangling job edge (unknown endpoint)",
+         "add_vertex() both endpoints before add_edge()")
+register("NS-G003", ERROR, "POINTWISE edge with unequal parallelism",
+         "POINTWISE wires subtask i to subtask i; make both degrees equal "
+         "or use ALL_TO_ALL")
+register("NS-G004", ERROR, "job graph contains a cycle",
+         "the job graph must be a DAG (paper §3.1.1)")
+register("NS-G005", ERROR, "duplicate job edge",
+         "the same (src, dst) channel group was added twice; every pair "
+         "may be wired at most once")
+register("NS-G006", ERROR, "sink unreachable from any source",
+         "every sink must be reachable from an in-degree-0 vertex or no "
+         "item can ever arrive there")
+register("NS-G007", WARN, "vertex unreachable from any source",
+         "tasks of this vertex will never receive an item")
+
+register("NS-C001", ERROR, "constraint references unknown job vertex",
+         "every vertex/edge element of a JobSequence must exist in the "
+         "job graph")
+register("NS-C002", ERROR, "constraint spans a non-contiguous sequence",
+         "a JobSequence edge element has no matching job edge; constraints "
+         "must follow existing edges (paper §3.2.4)")
+register("NS-C003", ERROR, "non-positive constraint bound",
+         "latency_limit_ms and window_ms must be > 0")
+register("NS-C004", ERROR, "throughput constraint on unknown vertex",
+         "ThroughputConstraint.job_vertex must name a job vertex")
+register("NS-C005", WARN, "throughput constraint on an unscalable stage",
+         "scale-out needs a non-source stage with ALL_TO_ALL in/out edges "
+         "(POINTWISE pins parallelism to the peer's)")
+
+register("NS-R001", ERROR, "stage parallelism exceeds addressable key ranges",
+         "pass num_key_ranges >= parallelism (a power of two) to "
+         "RuntimeGraph / StreamSimulator / StreamEngine")
+register("NS-R002", WARN, "scale-out headroom exceeds addressable key ranges",
+         "max_parallelism beyond the routing-table width would fail at "
+         "rescale time; widen num_key_ranges or lower max_parallelism")
+register("NS-R003", WARN, "num_key_ranges is not a power of two",
+         "a power of two keeps the table[key & mask] masked fast path on "
+         "the emit hot path")
+
+register("NS-P001", ERROR, "affinity satisfiable by no worker",
+         "no live worker carries the required tags and the pool is capped; "
+         "raise max_workers or tag a worker")
+register("NS-P002", WARN, "affinity ignored by the modulo policy",
+         "the modulo policy places by index only; use packed/spread for "
+         "tag-aware placement")
+register("NS-P003", WARN, "initial tasks exceed capped pool capacity",
+         "placement will overload workers beyond slots_per_worker; raise "
+         "max_workers or slots_per_worker")
+
+register("NS-H001", WARN, "latency constraint can never chain",
+         "no adjacent task pair in the constrained sequence satisfies the "
+         "§3.5.2 chaining conditions (chainable, stateless, single "
+         "in/out channel); the chaining countermeasure is dead for it")
+
+register("NS-B001", ERROR, "invalid buffer sizing bound",
+         "initial buffer bytes and the sizing policy's eps/omega/r/s must "
+         "satisfy 1 <= eps <= omega, 0 < r < 1, s > 1")
+register("NS-B002", ERROR, "non-positive max buffer lifetime",
+         "max_buffer_lifetime_ms must be > 0 (or None to disable flush "
+         "sweeps)")
+register("NS-B003", WARN, "initial buffer above the adaptive ceiling",
+         "initial_buffer_bytes exceeds the policy's omega_bytes; Eq. 3 can "
+         "never grow a buffer back to it after a shrink")

@@ -1,0 +1,384 @@
+"""Pre-flight job-graph / QoS validation (run by both execution backends).
+
+``run_preflight`` is called at the top of ``StreamSimulator.__init__`` and
+``StreamEngine.__init__`` (opt out with ``preflight=False``): it walks the
+*job-level* description — job graph, constraints, pool parameters, buffer
+bounds — and returns structured ``Diagnostic`` records against the shared
+rule catalog in analysis/diagnostics.py.  Any ERROR raises
+``GraphValidationError`` (a ValueError) before the runtime graph is
+expanded; WARNs are stored on the executor as ``preflight_diagnostics``.
+
+Everything here is O(job graph): the pass never expands or iterates
+runtime channels (a paper-scale m=800 media job has ~640k of them), so
+pre-flight cost is negligible even for the largest grids.  It consumes no
+randomness and mutates nothing — the simulator's bit-exact determinism
+goldens are unaffected.
+
+The checks that must also hold while *building* a graph (duplicate vertex,
+dangling edge, POINTWISE mismatch, cycle, key-range addressability) are
+raised by ``core/graphs.py`` through the same registry, so build-time and
+pre-flight failures carry identical rule ids and wording.
+"""
+from __future__ import annotations
+
+from typing import Any, Iterable, Mapping, Sequence
+
+from repro.core.graphs import ALL_TO_ALL, POINTWISE, JobGraph
+from repro.core.placement import MODULO, WorkerPool
+from repro.core.routing import NUM_KEY_RANGES
+
+from .diagnostics import (
+    Diagnostic,
+    ERROR,
+    GraphValidationError,
+    diag,
+    raise_on_error,
+)
+
+__all__ = ["check_job", "run_preflight", "GraphValidationError"]
+
+
+def check_job(
+    jg: JobGraph,
+    constraints: Sequence[Any] = (),
+    *,
+    pool: WorkerPool | None = None,
+    num_workers: int | None = None,
+    num_key_ranges: int | None = None,
+    initial_buffer_bytes: int | None = None,
+    max_buffer_lifetime_ms: float | None = None,
+    policy: Any = None,
+) -> list[Diagnostic]:
+    """Validate one job description; returns every finding (never raises)."""
+    out: list[Diagnostic] = []
+    out.extend(_check_structure(jg))
+    out.extend(_check_constraints(jg, constraints))
+    out.extend(_check_routing(jg, constraints, num_key_ranges))
+    if pool is not None:
+        out.extend(_check_placement(jg, pool))
+    out.extend(_check_chaining(jg, constraints))
+    out.extend(_check_buffers(initial_buffer_bytes, max_buffer_lifetime_ms,
+                              policy))
+    return out
+
+
+def run_preflight(
+    jg: JobGraph,
+    constraints: Sequence[Any] = (),
+    **kwargs: Any,
+) -> list[Diagnostic]:
+    """``check_job`` with ERROR-fails-fast semantics: raises
+    ``GraphValidationError`` on any ERROR, returns the WARNs otherwise."""
+    diags = check_job(jg, constraints, **kwargs)
+    raise_on_error(diags)
+    return diags
+
+
+# ---------------------------------------------------------------------------
+# Structural rules (NS-G***)
+# ---------------------------------------------------------------------------
+
+
+def _check_structure(jg: JobGraph) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    loc = f"job graph {jg.name!r}"
+    # NS-G002: dangling edges (endpoints must exist).  JobGraph.add_edge
+    # enforces this, but hand-mutated graphs reach the executors too.
+    known = set(jg.vertices)
+    seen_pairs: set[tuple[str, str]] = set()
+    for e in jg.edges:
+        for name in (e.src, e.dst):
+            if name not in known:
+                out.append(diag("NS-G002", f"job edge {e.src}->{e.dst}",
+                                f"unknown job vertex {name!r}"))
+        # NS-G005: duplicate channel group
+        if (e.src, e.dst) in seen_pairs:
+            out.append(diag("NS-G005", f"job edge {e.src}->{e.dst}",
+                            f"duplicate job edge {e.src}->{e.dst}"))
+        seen_pairs.add((e.src, e.dst))
+        # NS-G003: POINTWISE parallelism (add_edge enforces; re-check for
+        # graphs whose vertices were swapped after wiring)
+        if (e.pattern == POINTWISE and e.src in known and e.dst in known
+                and jg.vertices[e.src].parallelism
+                != jg.vertices[e.dst].parallelism):
+            out.append(diag(
+                "NS-G003", f"job edge {e.src}->{e.dst}",
+                f"POINTWISE edge requires equal parallelism "
+                f"({e.src} x{jg.vertices[e.src].parallelism} vs "
+                f"{e.dst} x{jg.vertices[e.dst].parallelism})"))
+    # NS-G004: cycle (Kahn without raising)
+    indeg = {n: 0 for n in jg.vertices}
+    for e in jg.edges:
+        if e.dst in indeg:
+            indeg[e.dst] += 1
+    stack = [n for n, d in indeg.items() if d == 0]
+    seen = 0
+    while stack:
+        n = stack.pop()
+        seen += 1
+        for e in jg.out_edges(n):
+            if e.dst not in indeg:
+                continue
+            indeg[e.dst] -= 1
+            if indeg[e.dst] == 0:
+                stack.append(e.dst)
+    if seen != len(jg.vertices):
+        out.append(diag("NS-G004", loc, "job graph contains a cycle"))
+    # NS-G006/NS-G007: reachability from the in-degree-0 frontier
+    reachable = set(jg.sources())
+    frontier = list(reachable)
+    while frontier:
+        n = frontier.pop()
+        for e in jg.out_edges(n):
+            if e.dst in known and e.dst not in reachable:
+                reachable.add(e.dst)
+                frontier.append(e.dst)
+    for name, jv in jg.vertices.items():
+        if name in reachable:
+            continue
+        if jv.is_sink or not jg.out_edges(name):
+            out.append(diag("NS-G006", f"job vertex {name!r}",
+                            f"sink {name!r} is unreachable from every "
+                            f"source"))
+        else:
+            out.append(diag("NS-G007", f"job vertex {name!r}",
+                            f"{name!r} is unreachable from every source"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Constraint rules (NS-C***).  Latency and throughput constraints are
+# duck-typed (sequence vs. job_vertex attribute) so this module needs no
+# import from core/constraints or core/elastic.
+# ---------------------------------------------------------------------------
+
+
+def _split(constraints: Sequence[Any]) -> tuple[list[Any], list[Any]]:
+    latency = [c for c in constraints if hasattr(c, "sequence")]
+    throughput = [c for c in constraints
+                  if hasattr(c, "job_vertex") and not hasattr(c, "sequence")]
+    return latency, throughput
+
+
+def _check_constraints(jg: JobGraph,
+                       constraints: Sequence[Any]) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    edges = {(e.src, e.dst) for e in jg.edges}
+    latency, throughput = _split(constraints)
+    for c in latency:
+        loc = f"constraint {getattr(c, 'name', '?')!r}"
+        for v in c.sequence.vertices():
+            if v not in jg.vertices:
+                out.append(diag("NS-C001", loc,
+                                f"sequence references unknown job vertex "
+                                f"{v!r}"))
+        for (s, d) in c.sequence.edges():
+            if s not in jg.vertices or d not in jg.vertices:
+                out.append(diag("NS-C001", loc,
+                                f"sequence references unknown job vertex "
+                                f"in edge {s}->{d}"))
+            elif (s, d) not in edges:
+                out.append(diag("NS-C002", loc,
+                                f"sequence edge {s}->{d} does not exist in "
+                                f"the job graph"))
+        if not c.latency_limit_ms > 0:
+            out.append(diag("NS-C003", loc,
+                            f"latency_limit_ms={c.latency_limit_ms!r} "
+                            f"must be > 0"))
+        if not c.window_ms > 0:
+            out.append(diag("NS-C003", loc,
+                            f"window_ms={c.window_ms!r} must be > 0"))
+    for c in throughput:
+        loc = f"throughput constraint {getattr(c, 'name', '?')!r}"
+        v = c.job_vertex
+        if v not in jg.vertices:
+            out.append(diag("NS-C004", loc,
+                            f"unknown job vertex {v!r}"))
+            continue
+        if not c.window_ms > 0:
+            out.append(diag("NS-C003", loc,
+                            f"window_ms={c.window_ms!r} must be > 0"))
+        jv = jg.vertices[v]
+        if jv.is_source or not jg.in_edges(v):
+            out.append(diag("NS-C005", loc,
+                            f"{v!r} is a source; the scale-out "
+                            f"countermeasure refuses source vertices"))
+        elif any(e.pattern != ALL_TO_ALL
+                 for e in jg.in_edges(v) + jg.out_edges(v)):
+            out.append(diag("NS-C005", loc,
+                            f"{v!r} has a non-ALL_TO_ALL edge; "
+                            f"grow/shrink requires ALL_TO_ALL wiring"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Routing rules (NS-R***): generalizes the PR-5 m-vs-num_key_ranges
+# fail-fast to a uniform, pre-expansion diagnostic.
+# ---------------------------------------------------------------------------
+
+
+def _check_routing(jg: JobGraph, constraints: Sequence[Any],
+                   num_key_ranges: int | None) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    effective = NUM_KEY_RANGES if num_key_ranges is None else num_key_ranges
+    if num_key_ranges is not None and (
+            num_key_ranges < 1 or num_key_ranges & (num_key_ranges - 1)):
+        out.append(diag("NS-R003", "num_key_ranges",
+                        f"num_key_ranges={num_key_ranges} is not a power "
+                        f"of two; the masked table[key & mask] fast path "
+                        f"is disabled"))
+    for name, jv in jg.vertices.items():
+        if jv.parallelism > effective:
+            out.append(diag(
+                "NS-R001", f"job vertex {name!r}",
+                f"parallelism {jv.parallelism} exceeds the {effective} "
+                f"addressable key ranges: owners >= {effective} would "
+                f"never be addressed; pass num_key_ranges >= "
+                f"{jv.parallelism} (a power of two) to RuntimeGraph / "
+                f"StreamSimulator / StreamEngine"))
+    _, throughput = _split(constraints)
+    for c in throughput:
+        mp = getattr(c, "max_parallelism", None)
+        if (mp is not None and c.job_vertex in jg.vertices
+                and mp > effective
+                and jg.vertices[c.job_vertex].parallelism <= effective):
+            out.append(diag(
+                "NS-R002", f"throughput constraint "
+                f"{getattr(c, 'name', '?')!r}",
+                f"max_parallelism {mp} for {c.job_vertex!r} exceeds the "
+                f"{effective} addressable key ranges"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Placement rules (NS-P***)
+# ---------------------------------------------------------------------------
+
+
+def _check_placement(jg: JobGraph, pool: WorkerPool) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    affinity: Mapping[str, frozenset[str]] = pool.affinity
+    for jv_name in sorted(affinity):
+        if jv_name not in jg.vertices:
+            continue  # affinity for a vertex of another job: inert
+        need = affinity[jv_name]
+        if not need:
+            continue
+        if pool.policy == MODULO:
+            out.append(diag("NS-P002", f"job vertex {jv_name!r}",
+                            f"affinity {sorted(need)} is ignored by the "
+                            f"modulo placement policy"))
+            continue
+        with pool._lock:
+            match = any(need <= w.tags for w in pool.workers.values())
+            capped = (pool.max_workers is not None
+                      and len(pool.workers) >= pool.max_workers)
+        if not match and capped:
+            out.append(diag(
+                "NS-P001", f"job vertex {jv_name!r}",
+                f"no worker carries affinity tags {sorted(need)} and the "
+                f"pool is capped at max_workers={pool.max_workers}"))
+    if pool.policy != MODULO and pool.max_workers is not None:
+        capacity = (pool.slots_per_worker or 0) * pool.max_workers
+        tasks = sum(v.parallelism for v in jg.vertices.values())
+        if capacity and tasks > capacity:
+            out.append(diag(
+                "NS-P003", f"job graph {jg.name!r}",
+                f"{tasks} initial tasks exceed the capped pool capacity "
+                f"of {capacity} slots ({pool.max_workers} x "
+                f"{pool.slots_per_worker})"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Chain-eligibility pre-computation (NS-H001, §3.5.2) — job-level
+# approximation of the five chaining conditions evaluated by
+# core/chaining.py at decision time.
+# ---------------------------------------------------------------------------
+
+
+def _runtime_out_channels(jg: JobGraph, name: str) -> int:
+    """Out-channels of one task of ``name`` (per-pattern fan-out)."""
+    return sum(1 if e.pattern == POINTWISE else jg.vertices[e.dst].parallelism
+               for e in jg.out_edges(name) if e.dst in jg.vertices)
+
+
+def _runtime_in_channels(jg: JobGraph, name: str) -> int:
+    return sum(1 if e.pattern == POINTWISE else jg.vertices[e.src].parallelism
+               for e in jg.in_edges(name) if e.src in jg.vertices)
+
+
+def _pair_chainable(jg: JobGraph, a: str, b: str) -> bool:
+    """Could tasks of adjacent stages ``a -> b`` *ever* fuse?  Conditions
+    §3.5.2 (4) and (5) are static: the head may keep extra in-channels and
+    the tail extra out-channels, but the a->b hand-over itself must be the
+    head's only out-channel and the tail's only in-channel, and neither
+    stage may carry the chainable=False / stateful veto.  Worker
+    co-location and CPU budget (conditions 1-3) are runtime facts — the
+    pre-flight pass stays optimistic about them."""
+    va, vb = jg.vertices[a], jg.vertices[b]
+    if not va.chainable or not vb.chainable or va.stateful or vb.stateful:
+        return False
+    return (_runtime_out_channels(jg, a) == 1
+            and _runtime_in_channels(jg, b) == 1)
+
+
+def _check_chaining(jg: JobGraph,
+                    constraints: Sequence[Any]) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    edges = {(e.src, e.dst) for e in jg.edges}
+    latency, _ = _split(constraints)
+    for c in latency:
+        tasks = [v for v in c.sequence.vertices() if v in jg.vertices]
+        if len(tasks) < 2:
+            continue  # chaining needs >= 2 task elements: inapplicable
+        pairs = [(a, b) for a, b in zip(tasks, tasks[1:])
+                 if (a, b) in edges]
+        if pairs and not any(_pair_chainable(jg, a, b) for a, b in pairs):
+            out.append(diag(
+                "NS-H001", f"constraint {getattr(c, 'name', '?')!r}",
+                f"no adjacent task pair of {tasks} can ever satisfy the "
+                f"§3.5.2 chaining conditions — the chaining "
+                f"countermeasure will never fire for this constraint"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Buffer-bound sanity (NS-B***, §3.5.1)
+# ---------------------------------------------------------------------------
+
+
+def _check_buffers(initial_buffer_bytes: int | None,
+                   max_buffer_lifetime_ms: float | None,
+                   policy: Any) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    if initial_buffer_bytes is not None and initial_buffer_bytes < 1:
+        out.append(diag("NS-B001", "initial_buffer_bytes",
+                        f"initial_buffer_bytes={initial_buffer_bytes} "
+                        f"must be >= 1"))
+    if max_buffer_lifetime_ms is not None and not max_buffer_lifetime_ms > 0:
+        out.append(diag("NS-B002", "max_buffer_lifetime_ms",
+                        f"max_buffer_lifetime_ms={max_buffer_lifetime_ms!r} "
+                        f"must be > 0 (use None to disable flush sweeps)"))
+    if policy is not None:
+        loc = "buffer sizing policy"
+        if policy.eps_bytes < 1 or policy.omega_bytes < policy.eps_bytes:
+            out.append(diag("NS-B001", loc,
+                            f"need 1 <= eps_bytes <= omega_bytes, got "
+                            f"eps={policy.eps_bytes} "
+                            f"omega={policy.omega_bytes}"))
+        if not 0.0 < policy.r < 1.0:
+            out.append(diag("NS-B001", loc,
+                            f"shrink factor r={policy.r!r} must be in "
+                            f"(0, 1) (Eq. 2 decays per ms)"))
+        if not policy.s > 1.0:
+            out.append(diag("NS-B001", loc,
+                            f"growth factor s={policy.s!r} must be > 1 "
+                            f"(Eq. 3 must grow)"))
+        if (initial_buffer_bytes is not None
+                and initial_buffer_bytes > policy.omega_bytes):
+            out.append(diag("NS-B003", "initial_buffer_bytes",
+                            f"initial_buffer_bytes={initial_buffer_bytes} "
+                            f"exceeds the policy ceiling "
+                            f"omega_bytes={policy.omega_bytes}"))
+    return out

@@ -1,0 +1,311 @@
+"""Repo-specific AST lint rules (hot-path discipline as executable policy).
+
+Five PRs of engine/simulator/elastic machinery rest on conventions that
+nothing enforced until now: the simulator must never read wall-clock time
+(determinism), the keyed-state handoff codec must stay stdlib-only (the
+rescale hot path must not pay heavyweight imports), key routing must go
+through ``KeyRouter.table`` (a bare ``key % n`` re-homes every key on
+rescale — the exact bug class core/routing.py exists to kill), designated
+hot modules must keep ``__slots__`` on their per-item classes, and the
+core/checkpoint zones must not import numpy-class libraries at module
+level.  Each rule is a small function over an ``ast`` tree producing the
+same structured ``Diagnostic`` records as the graph validator.
+
+Run via ``scripts/lint.py`` (wired into scripts/ci.sh: ERROR fails CI,
+WARN prints).  Rules are pluggable: append a ``LintRule`` to ``RULES``
+(see docs/analysis.md for a walk-through).
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Callable, Iterable
+
+from .diagnostics import Diagnostic, ERROR, WARN, diag, register
+
+# ---------------------------------------------------------------------------
+# Rule catalog (registered alongside the graph rules in diagnostics.REGISTRY)
+# ---------------------------------------------------------------------------
+
+register("NS-L001", ERROR, "wall-clock read in a simulated-time module",
+         "route every timestamp through core/clock (SimClock); wall-clock "
+         "reads break the simulator's bit-exact determinism contract")
+register("NS-L002", ERROR, "non-stdlib import in a stdlib-only module",
+         "checkpoint/state_codec.py is imported on the rescale hot path "
+         "and must stay dependency-free (stdlib absolute imports only)")
+register("NS-L003", ERROR, "modulo key routing outside core/routing.py",
+         "route keys through KeyRouter.table (key & mask); a bare "
+         "`key % n` re-homes every key on rescale and detaches keyed state")
+register("NS-L004", ERROR, "missing __slots__ in a hot module",
+         "classes in designated hot modules are built once per task/channel "
+         "or touched per item; give them __slots__ (or "
+         "@dataclass(slots=True)), or add them to the module's exempt list")
+register("NS-L005", WARN, "heavyweight module-level import in a lazy zone",
+         "import numpy/jax/... inside the function that needs it; the "
+         "core/checkpoint zones are imported by latency-sensitive paths")
+
+# -- per-rule configuration (paths are repo-relative, POSIX separators) ------
+
+#: modules that must never read wall-clock time directly
+WALLCLOCK_FREE_MODULES = frozenset({
+    "src/repro/core/simulator.py",
+})
+_WALLCLOCK_TIME_FNS = frozenset(
+    {"time", "monotonic", "perf_counter", "process_time", "time_ns",
+     "monotonic_ns", "perf_counter_ns"})
+_WALLCLOCK_DT_FNS = frozenset({"now", "utcnow", "today"})
+
+#: modules restricted to absolute stdlib imports
+STDLIB_ONLY_MODULES = frozenset({
+    "src/repro/checkpoint/state_codec.py",
+})
+
+#: the one module allowed to spell modulo key routing
+KEY_MOD_EXEMPT = frozenset({
+    "src/repro/core/routing.py",
+})
+
+#: hot modules -> class names exempt from the __slots__ requirement
+#: (cold configuration/result/facade objects constructed once per run)
+SLOTS_REQUIRED_MODULES: dict[str, frozenset[str]] = {
+    "src/repro/core/routing.py": frozenset(),
+    "src/repro/core/buffers.py": frozenset(),
+    "src/repro/core/simulator.py": frozenset(
+        {"StreamSimulator", "SimNetConfig", "SimSourceSpec", "SimResult"}),
+}
+
+#: zones whose module level must not import heavyweight libraries
+LAZY_IMPORT_ZONES = ("src/repro/core/", "src/repro/checkpoint/")
+HEAVY_MODULES = frozenset(
+    {"numpy", "jax", "jaxlib", "scipy", "pandas", "torch", "tensorflow"})
+
+
+@dataclass(frozen=True)
+class LintContext:
+    """One file under lint: repo-relative path + parsed tree + source."""
+
+    path: str  # repo-relative, POSIX separators
+    tree: ast.Module
+    source: str
+
+    def loc(self, node: ast.AST) -> str:
+        return f"{self.path}:{getattr(node, 'lineno', 0)}"
+
+
+@dataclass(frozen=True)
+class LintRule:
+    """A pluggable rule: id + checker.  ``applies`` keeps whole-file rules
+    from walking files they can never fire on."""
+
+    id: str
+    check: Callable[[LintContext], list[Diagnostic]]
+    applies: Callable[[str], bool] = lambda path: True
+
+
+# ---------------------------------------------------------------------------
+# NS-L001: no wall-clock reads in simulated-time modules
+# ---------------------------------------------------------------------------
+
+
+def _check_wallclock(ctx: LintContext) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "time":
+            for alias in node.names:
+                if alias.name in _WALLCLOCK_TIME_FNS:
+                    out.append(diag("NS-L001", ctx.loc(node),
+                                    f"imports time.{alias.name} — wall "
+                                    f"clock in a simulated-time module"))
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if not isinstance(f, ast.Attribute):
+                continue
+            base = f.value
+            if (isinstance(base, ast.Name) and base.id == "time"
+                    and f.attr in _WALLCLOCK_TIME_FNS):
+                out.append(diag("NS-L001", ctx.loc(node),
+                                f"calls time.{f.attr}()"))
+            elif f.attr in _WALLCLOCK_DT_FNS and (
+                    (isinstance(base, ast.Name)
+                     and base.id in ("datetime", "date"))
+                    or (isinstance(base, ast.Attribute)
+                        and base.attr in ("datetime", "date"))):
+                out.append(diag("NS-L001", ctx.loc(node),
+                                f"calls datetime {f.attr}()"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# NS-L002: stdlib-only import allowlist
+# ---------------------------------------------------------------------------
+
+
+def _check_stdlib_only(ctx: LintContext) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    stdlib = sys.stdlib_module_names
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                root = alias.name.split(".")[0]
+                if root not in stdlib:
+                    out.append(diag("NS-L002", ctx.loc(node),
+                                    f"imports non-stdlib module "
+                                    f"{alias.name!r}"))
+        elif isinstance(node, ast.ImportFrom):
+            if node.level:
+                out.append(diag("NS-L002", ctx.loc(node),
+                                "relative import in a stdlib-only module"))
+            elif node.module and node.module.split(".")[0] not in stdlib:
+                out.append(diag("NS-L002", ctx.loc(node),
+                                f"imports non-stdlib module "
+                                f"{node.module!r}"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# NS-L003: no `key % n` routing outside core/routing.py
+# ---------------------------------------------------------------------------
+
+
+def _is_key_expr(node: ast.expr) -> bool:
+    return ((isinstance(node, ast.Name) and node.id == "key")
+            or (isinstance(node, ast.Attribute) and node.attr == "key"))
+
+
+def _check_key_mod(ctx: LintContext) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    for node in ast.walk(ctx.tree):
+        if (isinstance(node, ast.BinOp) and isinstance(node.op, ast.Mod)
+                and _is_key_expr(node.left)):
+            out.append(diag("NS-L003", ctx.loc(node),
+                            "modulo routing on a key expression"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# NS-L004: __slots__ required in hot modules
+# ---------------------------------------------------------------------------
+
+
+def _has_slots(cls: ast.ClassDef) -> bool:
+    for stmt in cls.body:
+        if isinstance(stmt, ast.Assign) and any(
+                isinstance(t, ast.Name) and t.id == "__slots__"
+                for t in stmt.targets):
+            return True
+        if (isinstance(stmt, ast.AnnAssign)
+                and isinstance(stmt.target, ast.Name)
+                and stmt.target.id == "__slots__"):
+            return True
+    for dec in cls.decorator_list:
+        if isinstance(dec, ast.Call):
+            name = dec.func
+            is_dc = ((isinstance(name, ast.Name) and name.id == "dataclass")
+                     or (isinstance(name, ast.Attribute)
+                         and name.attr == "dataclass"))
+            if is_dc and any(
+                    kw.arg == "slots"
+                    and isinstance(kw.value, ast.Constant)
+                    and kw.value.value is True
+                    for kw in dec.keywords):
+                return True
+    return False
+
+
+def _check_slots(ctx: LintContext) -> list[Diagnostic]:
+    exempt = SLOTS_REQUIRED_MODULES.get(ctx.path, frozenset())
+    out: list[Diagnostic] = []
+    for node in ctx.tree.body:
+        if not isinstance(node, ast.ClassDef) or node.name in exempt:
+            continue
+        if not _has_slots(node):
+            out.append(diag("NS-L004", ctx.loc(node),
+                            f"class {node.name} in a hot module has no "
+                            f"__slots__"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# NS-L005: heavyweight module-level imports in lazy-import zones
+# ---------------------------------------------------------------------------
+
+
+def _module_level_stmts(tree: ast.Module) -> Iterable[ast.stmt]:
+    """Module body plus conditional blocks at module level (an import under
+    ``if TYPE_CHECKING:`` is still flagged — the guard is free at runtime,
+    but typing-only imports of heavy modules belong behind it, so allow
+    that single idiom)."""
+    for stmt in tree.body:
+        if isinstance(stmt, (ast.If, ast.Try)):
+            # allow `if TYPE_CHECKING:` blocks — never executed at runtime
+            test = getattr(stmt, "test", None)
+            if (isinstance(test, ast.Name)
+                    and test.id == "TYPE_CHECKING"):
+                continue
+            for sub in ast.walk(stmt):
+                if isinstance(sub, (ast.Import, ast.ImportFrom)):
+                    yield sub
+        elif isinstance(stmt, (ast.Import, ast.ImportFrom)):
+            yield stmt
+
+
+def _check_heavy_imports(ctx: LintContext) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    for stmt in _module_level_stmts(ctx.tree):
+        if isinstance(stmt, ast.Import):
+            names = [a.name for a in stmt.names]
+        elif isinstance(stmt, ast.ImportFrom) and not stmt.level:
+            names = [stmt.module or ""]
+        else:
+            continue
+        for name in names:
+            if name.split(".")[0] in HEAVY_MODULES:
+                out.append(diag("NS-L005", ctx.loc(stmt),
+                                f"module-level import of {name!r} in a "
+                                f"lazy-import zone"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Registry + runners
+# ---------------------------------------------------------------------------
+
+RULES: list[LintRule] = [
+    LintRule("NS-L001", _check_wallclock,
+             lambda p: p in WALLCLOCK_FREE_MODULES),
+    LintRule("NS-L002", _check_stdlib_only,
+             lambda p: p in STDLIB_ONLY_MODULES),
+    LintRule("NS-L003", _check_key_mod,
+             lambda p: p.startswith("src/repro/") and p not in KEY_MOD_EXEMPT),
+    LintRule("NS-L004", _check_slots,
+             lambda p: p in SLOTS_REQUIRED_MODULES),
+    LintRule("NS-L005", _check_heavy_imports,
+             lambda p: p.startswith(LAZY_IMPORT_ZONES)),
+]
+
+
+def lint_source(source: str, rel_path: str) -> list[Diagnostic]:
+    """Lint one file's source against every applicable rule."""
+    try:
+        tree = ast.parse(source, filename=rel_path)
+    except SyntaxError as e:
+        return [Diagnostic("NS-L000", ERROR, f"{rel_path}:{e.lineno}",
+                           f"syntax error: {e.msg}")]
+    ctx = LintContext(rel_path, tree, source)
+    out: list[Diagnostic] = []
+    for rule in RULES:
+        if rule.applies(rel_path):
+            out.extend(rule.check(ctx))
+    return out
+
+
+def lint_tree(root: Path, subdir: str = "src/repro") -> list[Diagnostic]:
+    """Lint every ``*.py`` under ``root/subdir``; paths are reported
+    relative to ``root``."""
+    out: list[Diagnostic] = []
+    for path in sorted((root / subdir).rglob("*.py")):
+        rel = path.relative_to(root).as_posix()
+        out.extend(lint_source(path.read_text(), rel))
+    return out

@@ -1,0 +1,315 @@
+"""Eraser-style lockset race detector for the threaded engine.
+
+Enable with ``REPRO_RACE_CHECK=1`` **before the process imports repro**:
+the flag is read exactly once, at import time.  When it is unset this
+module costs nothing — ``make_lock`` *is* ``threading.Lock`` and the core
+classes (``StateStore``, ``OutputBuffer``, ``KeyRouter``) are left
+completely untouched, so the hot paths run the very same bytecode as
+without the detector (the keyed_burst_sim events/sec canary in
+scripts/ci.sh pins that).
+
+When enabled, ``core/routing.py`` / ``core/buffers.py`` instrument their
+shared-state classes at import (``instrument_*`` below) and the engine's
+``ChannelSender`` takes a tracked lock from ``make_lock``:
+
+* every tracked lock acquire/release maintains a per-thread *lockset*;
+* every instrumented method call records an access event (read or write)
+  against its instance;
+* per instance, the classic Eraser state machine runs: *exclusive* while a
+  single thread touches it, *shared* once a second thread reads, and
+  *shared-modified* on any write after sharing.  The *candidate lockset*
+  — the intersection of the locksets held at every shared access — going
+  empty in shared-modified state means no single lock protected the
+  conflicting accesses: a ``RaceReport`` with both stack traces is
+  recorded (once per instance).
+
+The init-then-publish idiom (one thread fills a structure, others only
+read it afterwards) stays silent, as in the original Eraser paper.
+Reports are collected, never raised mid-run — call ``CHECKER.reports`` /
+``CHECKER.assert_clean()`` after the scenario (see tests/test_analysis_race.py
+and the race step of scripts/ci.sh).
+
+Stdlib-only and free of ``repro.core`` imports: the core modules import
+*us* at their own import time.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import traceback
+from dataclasses import dataclass
+from typing import Any, Callable
+
+#: read once at import: instrumentation is selected here and never again.
+RACE_CHECK: bool = os.environ.get("REPRO_RACE_CHECK", "") == "1"
+
+
+@dataclass(frozen=True)
+class RaceReport:
+    """One unsynchronized conflicting-access pair on one instance."""
+
+    resource: str
+    method: str
+    first_thread: str
+    first_stack: str
+    second_thread: str
+    second_stack: str
+
+    def format(self) -> str:
+        return (
+            f"RACE on {self.resource}.{self.method}: no common lock "
+            f"protects accesses from threads "
+            f"{self.first_thread!r} and {self.second_thread!r}\n"
+            f"--- earlier access ({self.first_thread}) ---\n"
+            f"{self.first_stack}"
+            f"--- conflicting access ({self.second_thread}) ---\n"
+            f"{self.second_stack}"
+        )
+
+
+class _ResourceState:
+    """Eraser per-instance state (virgin/exclusive handled by creation)."""
+
+    __slots__ = ("label", "owner", "shared", "modified", "candidate",
+                 "last_thread", "last_stack", "reported")
+
+    def __init__(self, label: str, owner: int) -> None:
+        self.label = label
+        self.owner = owner
+        self.shared = False
+        self.modified = False
+        self.candidate: frozenset[int] = frozenset()
+        self.last_thread = ""
+        self.last_stack = ""
+        self.reported = False
+
+
+def _capture_stack() -> str:
+    # lookup_lines=False defers linecache reads; format() fills them in
+    # only for the few stacks that end up inside a report.
+    frame = sys._getframe(2)
+    summary = traceback.StackSummary.extract(
+        traceback.walk_stack(frame), limit=10, lookup_lines=False)
+    summary.reverse()
+    return "".join(summary.format())
+
+
+class LocksetChecker:
+    """Central event sink: per-thread locksets + per-instance lockset
+    intersection.  Internally serialized by one meta lock (debug mode —
+    throughput is not the point here)."""
+
+    def __init__(self) -> None:
+        self._meta = threading.Lock()
+        self._held = threading.local()
+        #: id(obj) -> (obj, state).  The instance reference is kept on
+        #: purpose: it pins ``id`` stability for the process lifetime.
+        self._resources: dict[int, tuple[Any, _ResourceState]] = {}
+        self.reports: list[RaceReport] = []
+
+    # -- lockset maintenance (called by TrackedLock) -------------------------
+    def _held_map(self) -> dict[int, int]:
+        held = getattr(self._held, "locks", None)
+        if held is None:
+            held = {}
+            self._held.locks = held
+        return held
+
+    def on_acquire(self, lock_id: int) -> None:
+        held = self._held_map()
+        held[lock_id] = held.get(lock_id, 0) + 1
+
+    def on_release(self, lock_id: int) -> None:
+        held = self._held_map()
+        n = held.get(lock_id, 0)
+        if n <= 1:
+            held.pop(lock_id, None)
+        else:
+            held[lock_id] = n - 1
+
+    # -- access events (called by instrumented methods) ----------------------
+    def on_access(self, obj: Any, label: str, method: str,
+                  write: bool) -> None:
+        tid = threading.get_ident()
+        held = frozenset(self._held_map())
+        stack = _capture_stack()
+        tname = threading.current_thread().name
+        with self._meta:
+            entry = self._resources.get(id(obj))
+            if entry is None or entry[0] is not obj:
+                st = _ResourceState(label, tid)
+                self._resources[id(obj)] = (obj, st)
+            else:
+                st = entry[1]
+            if not st.shared:
+                if st.owner == tid:  # still exclusive
+                    st.modified = st.modified or write
+                    st.last_thread, st.last_stack = tname, stack
+                    return
+                # second thread: exclusive -> shared / shared-modified
+                st.shared = True
+                st.candidate = held
+                st.modified = write  # reads forgive the init-phase writes
+            else:
+                st.candidate = st.candidate & held
+                st.modified = st.modified or write
+            if st.modified and not st.candidate and not st.reported:
+                st.reported = True
+                self.reports.append(RaceReport(
+                    st.label, method, st.last_thread, st.last_stack,
+                    tname, stack))
+            st.last_thread, st.last_stack = tname, stack
+
+    # -- results -------------------------------------------------------------
+    def clear(self) -> None:
+        with self._meta:
+            self._resources.clear()
+            self.reports = []
+
+    def assert_clean(self) -> None:
+        if self.reports:
+            raise AssertionError(
+                f"{len(self.reports)} lockset race(s) detected:\n\n"
+                + "\n\n".join(r.format() for r in self.reports))
+
+
+class TrackedLock:
+    """An RLock that feeds the checker's per-thread lockset.  Reentrant so
+    an instrumented method wrapper can take the instance lock *around* the
+    original method's own ``with self._lock`` body."""
+
+    __slots__ = ("_lock",)
+
+    def __init__(self) -> None:
+        self._lock = threading.RLock()
+
+    def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
+        ok = self._lock.acquire(blocking, timeout)
+        if ok:
+            _checker().on_acquire(id(self))
+        return ok
+
+    def release(self) -> None:
+        _checker().on_release(id(self))
+        self._lock.release()
+
+    def __enter__(self) -> "TrackedLock":
+        self.acquire()
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        self.release()
+
+
+class TrackedNullLock:
+    """Placeholder for a store constructed with ``locked=False``: holds
+    nothing, so accesses through it are protected only by whatever locks
+    the caller already holds — exactly what the checker must observe."""
+
+    __slots__ = ()
+
+    def __enter__(self) -> "TrackedNullLock":
+        return self
+
+    def __exit__(self, *exc: object) -> None:
+        return None
+
+
+#: the process-wide checker; None when the detector is disabled.
+CHECKER: LocksetChecker | None = LocksetChecker() if RACE_CHECK else None
+
+
+def _checker() -> LocksetChecker:
+    assert CHECKER is not None
+    return CHECKER
+
+
+if RACE_CHECK:
+    def make_lock() -> Any:
+        """Tracked lock for engine-side channel senders (and anything else
+        that wants its lock discipline observed)."""
+        return TrackedLock()
+else:
+    # zero-cost disabled path: the factory IS threading.Lock — call sites
+    # bind it once at import and pay nothing per construction or per use.
+    make_lock = threading.Lock
+
+
+# ---------------------------------------------------------------------------
+# Class instrumentation (applied by core modules at import, enabled only)
+# ---------------------------------------------------------------------------
+
+
+def _wrap_locked(cls: type, name: str, write: bool) -> None:
+    """Wrap a method of a class whose instances carry ``self._lock``: take
+    the (tracked, reentrant) instance lock around the original call and
+    record the access inside it."""
+    orig = getattr(cls, name)
+
+    def wrapper(self: Any, *args: Any, **kwargs: Any) -> Any:
+        with self._lock:
+            _checker().on_access(self, cls.__name__, name, write)
+            return orig(self, *args, **kwargs)
+
+    wrapper.__name__ = name
+    wrapper.__qualname__ = f"{cls.__name__}.{name}"
+    setattr(cls, name, wrapper)
+
+
+def _wrap_plain(cls: type, name: str, write: bool) -> None:
+    """Wrap a method of a lock-less class (protection, if any, is the
+    caller's responsibility — which is precisely what is being checked)."""
+    orig = getattr(cls, name)
+
+    def wrapper(self: Any, *args: Any, **kwargs: Any) -> Any:
+        _checker().on_access(self, cls.__name__, name, write)
+        return orig(self, *args, **kwargs)
+
+    wrapper.__name__ = name
+    wrapper.__qualname__ = f"{cls.__name__}.{name}"
+    setattr(cls, name, wrapper)
+
+
+def instrument_state_store(cls: type) -> None:
+    """StateStore: swap the instance lock for a tracked one at construction
+    and record every keyed access.  A ``locked=True`` store then shows a
+    non-empty candidate lockset on every access (clean); a ``locked=False``
+    store touched by two threads without an external lock is reported."""
+    orig_init: Callable[..., None] = cls.__init__
+
+    def __init__(self: Any, *args: Any, **kwargs: Any) -> None:
+        orig_init(self, *args, **kwargs)
+        # the original init chose threading.Lock() or the null lock; mirror
+        # that choice with the tracked equivalents (duck-typed: the null
+        # lock has no acquire()).
+        if hasattr(self._lock, "acquire"):
+            self._lock = TrackedLock()
+        else:
+            self._lock = TrackedNullLock()
+
+    __init__.__name__ = "__init__"
+    cls.__init__ = __init__
+    for m in ("get", "keys", "items", "__len__", "__contains__"):
+        _wrap_locked(cls, m, write=False)
+    for m in ("put", "bump", "pop", "snapshot", "restore"):
+        _wrap_locked(cls, m, write=True)
+
+
+def instrument_output_buffer(cls: type) -> None:
+    """OutputBuffer has no lock of its own — the engine guards each buffer
+    with its ChannelSender lock (a ``make_lock`` tracked lock)."""
+    for m in ("room_for",):
+        _wrap_plain(cls, m, write=False)
+    for m in ("append", "append_run", "take", "try_update_size"):
+        _wrap_plain(cls, m, write=True)
+
+
+def instrument_key_router(cls: type) -> None:
+    """KeyRouter: only the rescale-side table writes are instrumented.
+    Emit-path reads of ``table`` are bare attribute loads against an
+    atomically swapped immutable tuple — lock-free *by design* (see
+    core/routing.py) — so instrumenting them would only manufacture false
+    positives.  Two uncoordinated committers, however, are a real race."""
+    _wrap_plain(cls, "plan", write=False)
+    _wrap_plain(cls, "commit", write=True)

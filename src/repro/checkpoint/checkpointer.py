@@ -29,8 +29,6 @@ import shutil
 import threading
 from pathlib import Path
 
-import numpy as np
-
 # Back-compat re-export: the keyed-state handoff codec moved to the
 # stdlib-only state_codec module so the streaming rescale hot path never
 # pays this module's numpy import.
@@ -73,6 +71,7 @@ class Checkpointer:
         """state: pytree (params/opt_state/...); extra: JSON-serializable
         (e.g. data-pipeline replay offset)."""
         import jax
+        import numpy as np
 
         flat, _ = _flatten(state)
 
@@ -146,6 +145,7 @@ class Checkpointer:
         or ShapeDtypeStructs).  ``shardings``: matching pytree of
         NamedShardings for elastic placement on the *current* mesh."""
         import jax
+        import numpy as np
 
         self.wait()  # an async save may still be staging the latest step
         step = step if step is not None else self.latest_step()

@@ -39,7 +39,7 @@ DEFAULT_MIN_OBL_MS = 5.0
 DEFAULT_ZERO_OBL_MS = 1.0
 
 
-@dataclass
+@dataclass(slots=True)
 class BufferSizingPolicy:
     r: float = DEFAULT_R
     eps_bytes: int = DEFAULT_EPS_BYTES
@@ -135,3 +135,14 @@ class OutputBuffer:
         self.capacity_bytes = max(1, int(new_size))
         self.version += 1
         return True
+
+
+# -- lockset race detector hook (analysis/race.py) ---------------------------
+# Zero-cost when disabled: the class above is untouched unless the process
+# was started with REPRO_RACE_CHECK=1 (the engine guards each buffer with
+# its ChannelSender lock — a tracked lock under the flag — so the checker
+# can prove every buffer access happens under it).
+from ..analysis import race as _race  # noqa: E402
+
+if _race.RACE_CHECK:  # pragma: no cover - exercised via subprocess tests
+    _race.instrument_output_buffer(OutputBuffer)

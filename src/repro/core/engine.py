@@ -43,6 +43,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from ..analysis.race import make_lock as _make_tracked_lock
 from .buffers import BufferSizingPolicy, OutputBuffer
 from .chaining import ChainRequest, DRAIN_QUEUES
 from .clock import Clock, RealClock
@@ -142,7 +143,10 @@ class ChannelSender:
             channel.dst
         )
         self.chained = False
-        self._lock = threading.Lock()
+        # the per-sender lock guards the buffer; _make_tracked_lock IS
+        # threading.Lock unless REPRO_RACE_CHECK=1 selected the lockset-
+        # tracked variant at import (analysis/race.py)
+        self._lock = _make_tracked_lock()
 
     def send(self, item: StreamItem) -> None:
         eng = self.engine
@@ -508,8 +512,24 @@ class StreamEngine(RuntimeRewirer):
         max_buffer_lifetime_ms: float | None = 5_000.0,
         pool: WorkerPool | None = None,
         num_key_ranges: int | None = None,
+        preflight: bool = True,
     ) -> None:
         self.jg = jg
+        # pre-flight validation (analysis/graph_check.py): structured
+        # diagnostics over the job-level description.  ERRORs raise
+        # GraphValidationError (a ValueError) before anything is expanded;
+        # WARNs are kept for inspection.  Opt out with preflight=False.
+        # Imported lazily: graph_check itself imports repro.core.
+        if preflight:
+            from ..analysis.graph_check import run_preflight
+            self.preflight_diagnostics = run_preflight(
+                jg, constraints, pool=pool, num_workers=num_workers,
+                num_key_ranges=num_key_ranges,
+                initial_buffer_bytes=initial_buffer_bytes,
+                max_buffer_lifetime_ms=max_buffer_lifetime_ms,
+                policy=policy)
+        else:
+            self.preflight_diagnostics = []
         #: max output-buffer lifetime (§3.5.1 companion): with QoS off and a
         #: low rate, an undersized buffer would otherwise strand items until
         #: shutdown; None disables (e.g. for pure Fig. 2 sweeps)

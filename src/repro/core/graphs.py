@@ -18,6 +18,7 @@ from dataclasses import dataclass, field
 from functools import cached_property
 from typing import Any, Callable, Iterable, Sequence
 
+from ..analysis.diagnostics import GraphValidationError, diag, fail
 from .placement import WorkerPool
 from .routing import KeyRouter
 
@@ -98,20 +99,28 @@ class JobGraph:
         self.edges: list[JobEdge] = []
 
     # -- construction -------------------------------------------------------
+    # build-time checks raise through the shared analysis rule registry
+    # (analysis/diagnostics.py) so their rule ids and wording match the
+    # pre-flight validator's (analysis/graph_check.py) exactly.
     def add_vertex(self, v: JobVertex) -> JobVertex:
         if v.name in self.vertices:
-            raise ValueError(f"duplicate job vertex {v.name!r}")
+            fail("NS-G001", f"job vertex {v.name!r}",
+                 f"duplicate job vertex {v.name!r}")
         self.vertices[v.name] = v
         return v
 
     def add_edge(self, src: str, dst: str, pattern: str = ALL_TO_ALL) -> JobEdge:
         for name in (src, dst):
             if name not in self.vertices:
-                raise ValueError(f"unknown job vertex {name!r}")
+                fail("NS-G002", f"job edge {src}->{dst}",
+                     f"unknown job vertex {name!r}")
         if pattern == POINTWISE and (
             self.vertices[src].parallelism != self.vertices[dst].parallelism
         ):
-            raise ValueError("POINTWISE edge requires equal parallelism")
+            fail("NS-G003", f"job edge {src}->{dst}",
+                 f"POINTWISE edge requires equal parallelism "
+                 f"({src} x{self.vertices[src].parallelism} vs "
+                 f"{dst} x{self.vertices[dst].parallelism})")
         e = JobEdge(src, dst, pattern)
         self.edges.append(e)
         self._check_acyclic()
@@ -144,7 +153,8 @@ class JobGraph:
                 if indeg[e.dst] == 0:
                     stack.append(e.dst)
         if len(order) != len(self.vertices):
-            raise ValueError("job graph contains a cycle")
+            fail("NS-G004", f"job graph {self.name!r}",
+                 "job graph contains a cycle")
         return order
 
     def _check_acyclic(self) -> None:
@@ -282,10 +292,11 @@ class RuntimeGraph:
             except ValueError as e:
                 # unaddressable parallelism (more subtasks than key ranges;
                 # core/routing.py fails fast) — name the graph-level knob
-                raise ValueError(
-                    f"job vertex {name!r}: {e}; pass num_key_ranges >= "
-                    f"{jv.parallelism} (a power of two) to RuntimeGraph / "
-                    f"StreamSimulator / StreamEngine") from None
+                raise GraphValidationError([diag(
+                    "NS-R001", f"job vertex {name!r}",
+                    f"{e}; pass num_key_ranges >= {jv.parallelism} "
+                    f"(a power of two) to RuntimeGraph / StreamSimulator / "
+                    f"StreamEngine")]) from None
         for je in jg.edges:
             chans: list[Channel] = []
             src_group = self._by_job_vertex[je.src]

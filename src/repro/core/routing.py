@@ -81,7 +81,7 @@ def range_of_key(key: Any, num_ranges: int = NUM_KEY_RANGES) -> int:
     return k % num_ranges
 
 
-@dataclass(frozen=True)
+@dataclass(frozen=True, slots=True)
 class MigrationPlan:
     """A computed (not yet applied) routing-table remap.
 
@@ -114,6 +114,8 @@ class KeyRouter:
     The owner table is an immutable tuple; readers on the emit hot path see
     either the old or the new table, never a partial remap.
     """
+
+    __slots__ = ("num_ranges", "group_size", "mask", "table")
 
     def __init__(self, group_size: int,
                  num_ranges: int = NUM_KEY_RANGES) -> None:
@@ -259,6 +261,8 @@ class StateStore:
     (the discrete-event simulator bumps stateful stages once per item).
     """
 
+    __slots__ = ("num_ranges", "_data", "_lock")
+
     def __init__(self, num_ranges: int = NUM_KEY_RANGES,
                  locked: bool = True) -> None:
         self.num_ranges = num_ranges
@@ -326,3 +330,15 @@ class StateStore:
         """Install migrated entries (new-owner side of a handoff)."""
         with self._lock:
             self._data.update(entries)
+
+
+# -- lockset race detector hook (analysis/race.py) ---------------------------
+# Selected ONCE at import: with REPRO_RACE_CHECK unset the classes above are
+# untouched and the hot paths run the exact same bytecode as before this
+# hook existed.  With the flag set, keyed-state accesses and rescale-side
+# router writes feed the per-thread lockset checker.
+from ..analysis import race as _race  # noqa: E402
+
+if _race.RACE_CHECK:  # pragma: no cover - exercised via subprocess tests
+    _race.instrument_state_store(StateStore)
+    _race.instrument_key_router(KeyRouter)

@@ -712,8 +712,25 @@ class StreamSimulator(RuntimeRewirer):
         num_key_ranges: int | None = None,
         event_mode: str = "exact",
         batch_horizon_ms: float | None = None,
+        preflight: bool = True,
     ) -> None:
         self.jg = jg
+        # pre-flight validation (analysis/graph_check.py): same contract as
+        # StreamEngine — ERRORs raise before expansion, WARNs are stored in
+        # preflight_diagnostics, preflight=False opts out.  The pass reads
+        # no randomness and mutates nothing, so the bit-exact determinism
+        # goldens are unaffected.  Imported lazily: graph_check imports
+        # repro.core.
+        if preflight:
+            from ..analysis.graph_check import run_preflight
+            self.preflight_diagnostics = run_preflight(
+                jg, constraints, pool=pool, num_workers=num_workers,
+                num_key_ranges=num_key_ranges,
+                initial_buffer_bytes=initial_buffer_bytes,
+                max_buffer_lifetime_ms=max_buffer_lifetime_ms,
+                policy=policy)
+        else:
+            self.preflight_diagnostics = []
         #: event-core execution mode — the determinism contract:
         #:
         #: * ``"exact"`` (default): one heap event per service completion.

@@ -1,0 +1,289 @@
+"""Pre-flight validator contract (analysis/graph_check.py).
+
+Two halves, mirroring the acceptance criteria:
+
+* one targeted failing-graph fixture per ERROR rule — each must be
+  rejected (the right rule id, ERROR severity, fails-fast at executor
+  construction);
+* a no-false-positives property suite — every graph the existing builders
+  produce (golden determinism scenarios, the qos_scaling and scale
+  benchmark topologies, hypothesis-random valid pipelines) passes with
+  zero ERRORs.
+"""
+from __future__ import annotations
+
+import sys
+from pathlib import Path
+
+import pytest
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+from repro.analysis import ERROR, GraphValidationError, WARN
+from repro.analysis.graph_check import check_job, run_preflight
+from repro.configs.nephele_media import MediaJobParams, build_media_job
+from repro.core import (
+    ALL_TO_ALL,
+    POINTWISE,
+    BufferSizingPolicy,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    SimSourceSpec,
+    StreamSimulator,
+    ThroughputConstraint,
+    WorkerPool,
+)
+from repro.core.graphs import JobEdge
+
+
+def error_ids(jg, constraints=(), **kw) -> set[str]:
+    return {d.rule for d in check_job(jg, constraints, **kw)
+            if d.severity == ERROR}
+
+
+def warn_ids(jg, constraints=(), **kw) -> set[str]:
+    return {d.rule for d in check_job(jg, constraints, **kw)
+            if d.severity == WARN}
+
+
+def linear_job() -> JobGraph:
+    jg = JobGraph("lin")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True))
+    jg.add_vertex(JobVertex("Mid", 2))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True))
+    jg.add_edge("Src", "Mid", ALL_TO_ALL)
+    jg.add_edge("Mid", "Sink", ALL_TO_ALL)
+    return jg
+
+
+# ---------------------------------------------------------------------------
+# Build-time rules raise through the same registry (uniform ids/messages)
+# ---------------------------------------------------------------------------
+
+
+def test_duplicate_vertex_ns_g001():
+    jg = linear_job()
+    with pytest.raises(GraphValidationError, match="NS-G001") as ei:
+        jg.add_vertex(JobVertex("Mid"))
+    assert "duplicate job vertex" in str(ei.value)
+
+
+def test_dangling_edge_ns_g002():
+    jg = linear_job()
+    with pytest.raises(GraphValidationError, match="NS-G002"):
+        jg.add_edge("Mid", "Ghost")
+    # the same condition on a hand-mutated graph is caught at pre-flight
+    jg.edges.append(JobEdge("Mid", "Ghost"))
+    assert "NS-G002" in error_ids(jg)
+
+
+def test_pointwise_mismatch_ns_g003():
+    jg = linear_job()
+    jg.add_vertex(JobVertex("Odd", 3))
+    with pytest.raises(GraphValidationError, match="NS-G003") as ei:
+        jg.add_edge("Mid", "Odd", POINTWISE)
+    assert "POINTWISE edge requires equal parallelism" in str(ei.value)
+
+
+def test_cycle_ns_g004_and_unreachable_ns_g006():
+    jg = JobGraph("cyc")
+    jg.add_vertex(JobVertex("A", 1))
+    jg.add_vertex(JobVertex("B", 1, is_sink=True))
+    # bypass add_edge's eager acyclicity check to exercise pre-flight
+    jg.edges.append(JobEdge("A", "B"))
+    jg.edges.append(JobEdge("B", "A"))
+    ids = error_ids(jg)
+    assert "NS-G004" in ids
+    # nothing is reachable from a source: the sink is starved too
+    assert "NS-G006" in ids
+    with pytest.raises(GraphValidationError, match="NS-G004"):
+        jg.topological_order()
+
+
+def test_duplicate_edge_ns_g005():
+    jg = linear_job()
+    jg.edges.append(JobEdge("Src", "Mid"))
+    assert "NS-G005" in error_ids(jg)
+
+
+def test_constraint_unknown_vertex_ns_c001():
+    jg = linear_job()
+    seq = JobSequence.of("Ghost")
+    assert "NS-C001" in error_ids(jg, [JobConstraint(seq, 10.0, 1000.0)])
+
+
+def test_constraint_noncontiguous_ns_c002():
+    jg = linear_job()
+    # Src and Sink exist but are not adjacent: the sequence edge is absent
+    seq = JobSequence.of(("Src", "Sink"))
+    assert "NS-C002" in error_ids(jg, [JobConstraint(seq, 10.0, 1000.0)])
+
+
+def test_constraint_bad_bounds_ns_c003():
+    jg = linear_job()
+    seq = JobSequence.of(("Src", "Mid"), "Mid")
+    assert "NS-C003" in error_ids(jg, [JobConstraint(seq, -1.0, 1000.0)])
+    assert "NS-C003" in error_ids(jg, [JobConstraint(seq, 10.0, 0.0)])
+
+
+def test_throughput_unknown_vertex_ns_c004():
+    jg = linear_job()
+    assert "NS-C004" in error_ids(jg, [ThroughputConstraint("Ghost", 100.0)])
+
+
+def test_throughput_unscalable_warns_ns_c005():
+    jg = linear_job()
+    assert "NS-C005" in warn_ids(jg, [ThroughputConstraint("Src", 100.0)])
+
+
+def test_unaddressable_parallelism_ns_r001():
+    jg = JobGraph("wide")
+    jg.add_vertex(JobVertex("W", 200, is_source=True))
+    assert "NS-R001" in error_ids(jg)
+    assert not error_ids(jg, num_key_ranges=1024)
+
+
+def test_scale_headroom_warns_ns_r002():
+    jg = linear_job()
+    c = ThroughputConstraint("Mid", 100.0, max_parallelism=4096)
+    assert "NS-R002" in warn_ids(jg, [c])
+
+
+def test_affinity_unsatisfiable_ns_p001():
+    jg = linear_job()
+    pool = WorkerPool(1, policy="packed", slots_per_worker=8, max_workers=1,
+                      affinity={"Mid": {"accel"}})
+    assert "NS-P001" in error_ids(jg, pool=pool)
+    # an uncapped pool can acquire a tagged worker on demand: fine
+    pool2 = WorkerPool(1, policy="packed", slots_per_worker=8,
+                       affinity={"Mid": {"accel"}})
+    assert not error_ids(jg, pool=pool2)
+
+
+def test_buffer_bounds_ns_b001_b002():
+    jg = linear_job()
+    assert "NS-B001" in error_ids(jg, initial_buffer_bytes=0)
+    assert "NS-B002" in error_ids(jg, max_buffer_lifetime_ms=0.0)
+    assert "NS-B001" in error_ids(
+        jg, policy=BufferSizingPolicy(r=1.5))
+    assert "NS-B003" in warn_ids(
+        jg, initial_buffer_bytes=1 << 20,
+        policy=BufferSizingPolicy(omega_bytes=64 * 1024))
+
+
+def test_never_chainable_constraint_warns_ns_h001():
+    jg = JobGraph("veto")
+    jg.add_vertex(JobVertex("Src", 1, is_source=True))
+    jg.add_vertex(JobVertex("A", 1, chainable=False))
+    jg.add_vertex(JobVertex("B", 1, stateful=True))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True))
+    jg.add_edge("Src", "A")
+    jg.add_edge("A", "B")
+    jg.add_edge("B", "Sink")
+    seq = JobSequence.of(("Src", "A"), "A", ("A", "B"), "B", ("B", "Sink"))
+    c = JobConstraint(seq, 8.0, 4000.0)
+    assert "NS-H001" in warn_ids(jg, [c])
+    # identical topology without the vetoes: silent
+    jg2 = JobGraph("ok")
+    for v in (JobVertex("Src", 1, is_source=True), JobVertex("A", 1),
+              JobVertex("B", 1), JobVertex("Sink", 1, is_sink=True)):
+        jg2.add_vertex(v)
+    jg2.add_edge("Src", "A"); jg2.add_edge("A", "B"); jg2.add_edge("B", "Sink")
+    assert "NS-H001" not in warn_ids(jg2, [c])
+
+
+# ---------------------------------------------------------------------------
+# Fails-fast semantics at the executors
+# ---------------------------------------------------------------------------
+
+
+def test_simulator_preflight_fails_fast_and_opts_out():
+    jg = linear_job()
+    with pytest.raises(GraphValidationError, match="NS-B001"):
+        StreamSimulator(jg, [], num_workers=2, sources={},
+                        initial_buffer_bytes=0)
+    # opt-out restores the historical lenient behavior
+    sim = StreamSimulator(jg, [], num_workers=2, sources={},
+                          initial_buffer_bytes=0, preflight=False)
+    assert sim.preflight_diagnostics == []
+
+
+def test_preflight_warnings_are_stored_not_raised():
+    jg = linear_job()
+    sim = StreamSimulator(
+        jg, [ThroughputConstraint("Src", 100.0)], num_workers=2,
+        sources={"Src": SimSourceSpec(10.0)})
+    assert any(d.rule == "NS-C005" for d in sim.preflight_diagnostics)
+    assert all(d.severity == WARN for d in sim.preflight_diagnostics)
+
+
+def test_run_preflight_raises_only_on_error():
+    jg = linear_job()
+    warns = run_preflight(jg, [ThroughputConstraint("Src", 100.0)])
+    assert warns and all(d.severity == WARN for d in warns)
+    with pytest.raises(GraphValidationError):
+        run_preflight(jg, [], initial_buffer_bytes=0)
+
+
+# ---------------------------------------------------------------------------
+# No-false-positives property suite
+# ---------------------------------------------------------------------------
+
+
+def test_golden_scenarios_pass_preflight():
+    from tests.test_sim_determinism import chain_sim, media_sim, scale_sim
+    for fn in (media_sim, scale_sim, chain_sim):
+        sim = fn()  # constructor runs preflight: ERRORs would raise here
+        assert all(d.severity != ERROR for d in sim.preflight_diagnostics)
+
+
+def test_media_grid_passes_preflight():
+    for m, n in [(1, 1), (4, 2), (8, 4), (128, 8), (200, 8), (800, 16)]:
+        p = MediaJobParams(parallelism=m, num_workers=n)
+        jg, jcs = build_media_job(p)
+        nkr = None if m <= 128 else 1024
+        assert not error_ids(jg, jcs, num_key_ranges=nkr), (m, n)
+
+
+def test_benchmark_topologies_pass_preflight():
+    from benchmarks.qos_scaling import _burst_job, _keyed_job
+    for jg, jcs in (_burst_job(), _keyed_job()):
+        assert not error_ids(jg, jcs)
+        # also under the elastic controller's throughput constraint
+        cs = list(jcs) + [ThroughputConstraint("Work" if "Work" in
+                                               jg.vertices else "Agg", 500.0)]
+        assert not error_ids(jg, cs)
+
+
+def test_hypothesis_random_pipelines_pass_preflight():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @st.composite
+    def pipelines(draw):
+        depth = draw(st.integers(min_value=2, max_value=6))
+        pars = [draw(st.integers(min_value=1, max_value=16))
+                for _ in range(depth)]
+        jg = JobGraph("hyp")
+        names = [f"V{i}" for i in range(depth)]
+        for i, (nm, par) in enumerate(zip(names, pars)):
+            jg.add_vertex(JobVertex(
+                nm, par, is_source=(i == 0), is_sink=(i == depth - 1),
+                stateful=draw(st.booleans()) if 0 < i < depth - 1 else False))
+        for a, b in zip(names, names[1:]):
+            pat = (POINTWISE if jg.vertices[a].parallelism
+                   == jg.vertices[b].parallelism and draw(st.booleans())
+                   else ALL_TO_ALL)
+            jg.add_edge(a, b, pat)
+        seq = JobSequence.full_path(names, include_endpoints=False)
+        return jg, [JobConstraint(seq, draw(st.floats(1.0, 1e4)), 1000.0)]
+
+    @hyp.given(pipelines())
+    @hyp.settings(max_examples=50, deadline=None)
+    def check(case):
+        jg, jcs = case
+        assert not error_ids(jg, jcs)
+
+    check()

@@ -1,0 +1,221 @@
+"""AST lint rules (analysis/lint.py): per-rule unit tests on inline
+sources plus the repo-clean gate (the tree under src/repro must produce
+zero findings — the same invariant scripts/lint.py enforces in CI)."""
+from __future__ import annotations
+
+import textwrap
+from pathlib import Path
+
+from repro.analysis import ERROR, WARN
+from repro.analysis.lint import lint_source, lint_tree
+
+REPO = Path(__file__).resolve().parent.parent
+SIM = "src/repro/core/simulator.py"
+CODEC = "src/repro/checkpoint/state_codec.py"
+
+
+def ids(source: str, rel_path: str) -> list[str]:
+    return [d.rule for d in lint_source(textwrap.dedent(source), rel_path)]
+
+
+# -- NS-L001: wall clock in simulated-time modules ---------------------------
+
+
+def test_wallclock_call_flagged_in_simulator():
+    src = """
+        import time
+        def step():
+            return time.monotonic()
+    """
+    assert ids(src, SIM) == ["NS-L001"]
+
+
+def test_wallclock_from_import_flagged():
+    assert ids("from time import perf_counter\n", SIM) == ["NS-L001"]
+
+
+def test_datetime_now_flagged():
+    src = """
+        import datetime
+        def stamp():
+            return datetime.datetime.now()
+    """
+    assert ids(src, SIM) == ["NS-L001"]
+
+
+def test_sim_clock_usage_clean():
+    src = """
+        def step(clock):
+            return clock.now_ms()
+    """
+    assert ids(src, SIM) == []
+
+
+def test_wallclock_rule_scoped_to_listed_modules():
+    src = """
+        import time
+        def step():
+            return time.monotonic()
+    """
+    assert ids(src, "src/repro/core/engine.py") == []
+
+
+# -- NS-L002: stdlib-only allowlist ------------------------------------------
+
+
+def test_non_stdlib_import_flagged_in_codec():
+    # the codec lives inside a lazy-import zone too, so a heavyweight
+    # module-level import trips NS-L005 alongside the stdlib-only rule
+    assert set(ids("import numpy\n", CODEC)) == {"NS-L002", "NS-L005"}
+    assert "NS-L002" in ids("from blosc2 import compress\n", CODEC)
+
+
+def test_relative_import_flagged_in_codec():
+    assert ids("from . import checkpointer\n", CODEC) == ["NS-L002"]
+
+
+def test_stdlib_imports_clean_in_codec():
+    assert ids("import struct\nimport pickle\nfrom io import BytesIO\n",
+               CODEC) == []
+
+
+# -- NS-L003: key % n routing outside core/routing.py ------------------------
+
+
+def test_key_mod_flagged():
+    src = """
+        def route(key, n):
+            return key % n
+    """
+    assert ids(src, "src/repro/core/engine.py") == ["NS-L003"]
+
+
+def test_attribute_key_mod_flagged():
+    src = """
+        def route(item, n):
+            return item.key % n
+    """
+    assert ids(src, "src/repro/core/engine.py") == ["NS-L003"]
+
+
+def test_key_mod_exempt_in_routing():
+    src = """
+        def range_of_key(key, n):
+            return key % n
+    """
+    assert ids(src, "src/repro/core/routing.py") == []
+
+
+def test_non_key_mod_clean():
+    src = """
+        def bucket(seq, n):
+            return seq % n
+    """
+    assert ids(src, "src/repro/core/engine.py") == []
+
+
+# -- NS-L004: __slots__ in hot modules ---------------------------------------
+
+
+def test_missing_slots_flagged_in_hot_module():
+    src = """
+        class Hot:
+            def __init__(self):
+                self.x = 1
+    """
+    assert ids(src, "src/repro/core/buffers.py") == ["NS-L004"]
+
+
+def test_slots_and_dataclass_slots_clean():
+    src = """
+        from dataclasses import dataclass
+
+        class A:
+            __slots__ = ("x",)
+
+        @dataclass(frozen=True, slots=True)
+        class B:
+            x: int = 0
+    """
+    assert ids(src, "src/repro/core/buffers.py") == []
+
+
+def test_slots_exempt_class_clean():
+    src = """
+        class StreamSimulator:
+            def __init__(self):
+                self.big = {}
+    """
+    assert ids(src, SIM) == []
+
+
+def test_slots_rule_scoped_to_hot_modules():
+    src = """
+        class Cold:
+            pass
+    """
+    assert ids(src, "src/repro/core/manager.py") == []
+
+
+# -- NS-L005: heavyweight module-level imports in lazy zones -----------------
+
+
+def test_heavy_module_level_import_flagged():
+    assert ids("import numpy as np\n",
+               "src/repro/checkpoint/checkpointer.py") == ["NS-L005"]
+    assert ids("from jax import numpy as jnp\n",
+               "src/repro/core/manager.py") == ["NS-L005"]
+
+
+def test_heavy_import_inside_function_clean():
+    src = """
+        def save():
+            import numpy as np
+            return np
+    """
+    assert ids(src, "src/repro/checkpoint/checkpointer.py") == []
+
+
+def test_type_checking_guard_allowed():
+    src = """
+        from typing import TYPE_CHECKING
+        if TYPE_CHECKING:
+            import numpy as np
+    """
+    assert ids(src, "src/repro/checkpoint/checkpointer.py") == []
+
+
+def test_try_block_import_still_flagged():
+    src = """
+        try:
+            import torch
+        except ImportError:
+            torch = None
+    """
+    assert ids(src, "src/repro/core/manager.py") == ["NS-L005"]
+
+
+def test_heavy_rule_scoped_to_lazy_zones():
+    assert ids("import numpy as np\n", "src/repro/accel/kernels.py") == []
+
+
+# -- severity wiring + the repo-clean gate -----------------------------------
+
+
+def test_rule_severities():
+    d = lint_source("import numpy\n", CODEC)[0]
+    assert d.severity == ERROR
+    d = lint_source("import numpy\n",
+                    "src/repro/checkpoint/checkpointer.py")[0]
+    assert d.severity == WARN
+
+
+def test_syntax_error_reported_not_raised():
+    diags = lint_source("def broken(:\n", SIM)
+    assert diags and diags[0].rule == "NS-L000"
+    assert diags[0].severity == ERROR
+
+
+def test_repo_tree_is_lint_clean():
+    diags = lint_tree(REPO)
+    assert diags == [], "\n".join(d.format() for d in diags)

@@ -1,0 +1,225 @@
+"""Lockset race detector (analysis/race.py).
+
+The flag is read once at repro import, so every enabled-mode scenario runs
+in a subprocess with ``REPRO_RACE_CHECK=1``; the disabled-mode zero-cost
+assertions run in-process (this test session never sets the flag).
+
+Covers: a seeded race on an unlocked StateStore is detected with both
+stack traces; the same access pattern under the store's own lock, under an
+external tracked lock, and from a single thread stays silent
+(init-then-publish included); an unguarded OutputBuffer shared by two
+writer threads is detected while the engine's ChannelSender-guarded use is
+clean; and the disabled path leaves the core classes untouched.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_checked(body: str, *, flag: str = "1") -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["REPRO_RACE_CHECK"] = flag
+    env["PYTHONPATH"] = str(ROOT / "src")
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=120)
+
+
+# NB: indented to match the 8-space test bodies so the shared
+# textwrap.dedent in run_checked strips both uniformly.
+PREAMBLE = """
+        import threading
+        from repro.analysis.race import CHECKER, RACE_CHECK, make_lock
+        from repro.core.routing import KeyRouter, StateStore
+        assert RACE_CHECK and CHECKER is not None
+
+        def hammer(fn, n=2):
+            ts = [threading.Thread(target=fn, name=f"w{i}")
+                  for i in range(n)]
+            for t in ts: t.start()
+            for t in ts: t.join()
+"""
+
+
+def test_unlocked_state_store_race_detected():
+    p = run_checked(PREAMBLE + """
+        store = StateStore(8, locked=False)
+        def work():
+            for i in range(200):
+                store.bump(i & 7)
+        hammer(work)
+        assert CHECKER.reports, "seeded race was not detected"
+        r = CHECKER.reports[0]
+        assert r.resource == "StateStore"
+        text = r.format()
+        assert "RACE on StateStore" in text
+        assert "earlier access" in text and "conflicting access" in text
+        # both stacks must point back into this scenario's worker
+        assert text.count("in work") >= 2
+        print("DETECTED", r.method)
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "DETECTED" in p.stdout
+
+
+def test_locked_state_store_clean():
+    p = run_checked(PREAMBLE + """
+        store = StateStore(8)  # locked=True default: own tracked lock
+        def work():
+            for i in range(200):
+                store.bump(i & 7)
+                store.get(i & 7)
+        hammer(work)
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+def test_external_tracked_lock_clean():
+    p = run_checked(PREAMBLE + """
+        store = StateStore(8, locked=False)
+        guard = make_lock()
+        def work():
+            for i in range(200):
+                with guard:
+                    store.bump(i & 7)
+        hammer(work)
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+def test_init_then_publish_stays_silent():
+    p = run_checked(PREAMBLE + """
+        store = StateStore(8, locked=False)
+        for i in range(8):
+            store.put(i, i)  # single-thread init writes
+        def reader():
+            for i in range(100):
+                store.get(i & 7)
+        hammer(reader)  # post-publish reads only
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+def test_single_thread_router_clean():
+    p = run_checked(PREAMBLE + """
+        router = KeyRouter(2)
+        plan = router.plan(4)
+        router.commit(plan)
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+def test_unguarded_output_buffer_race_detected():
+    p = run_checked(PREAMBLE + """
+        from repro.core.buffers import OutputBuffer
+        buf = OutputBuffer("c0", 1 << 20)
+        def work():
+            for i in range(300):
+                buf.append(b"x", 16, 0.0)
+        hammer(work)
+        assert any(r.resource == "OutputBuffer" for r in CHECKER.reports)
+        print("DETECTED")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "DETECTED" in p.stdout
+
+
+def test_assert_clean_raises_with_both_stacks():
+    p = run_checked(PREAMBLE + """
+        store = StateStore(4, locked=False)
+        def work():
+            for i in range(200):
+                store.bump(i & 3)
+        hammer(work)
+        try:
+            CHECKER.assert_clean()
+        except AssertionError as e:
+            assert "lockset race" in str(e)
+            print("RAISED")
+        else:
+            raise SystemExit("assert_clean did not raise")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "RAISED" in p.stdout
+
+
+def test_engine_smoke_clean_under_flag():
+    # a short threaded-engine run with a keyed/stateful stage and a live
+    # rescale must produce zero reports (the CI step runs the full
+    # benchmark scenarios; this is the fast in-suite version).
+    p = run_checked("""
+        import time
+        from repro.analysis.race import CHECKER
+        assert CHECKER is not None
+        from repro.core import (
+            ALL_TO_ALL, JobConstraint, JobGraph, JobSequence, JobVertex,
+            SourceSpec, StreamEngine)
+
+        def agg(p, emit, ctx):
+            ctx.state.bump(ctx._current_item.key)
+            emit(p)
+
+        jg = JobGraph("race-smoke")
+        jg.add_vertex(JobVertex("Src", 2, is_source=True))
+        jg.add_vertex(JobVertex("Agg", 2, fn=agg, stateful=True))
+        jg.add_vertex(JobVertex("Sink", 1, is_sink=True))
+        jg.add_edge("Src", "Agg", ALL_TO_ALL)
+        jg.add_edge("Agg", "Sink", ALL_TO_ALL)
+        seq = JobSequence.of(("Src", "Agg"), "Agg", ("Agg", "Sink"))
+        eng = StreamEngine(
+            jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")],
+            num_workers=2,
+            sources={"Src": SourceSpec(200.0, lambda s: (b"x" * 64, 64),
+                                       key_of=lambda s: s % 16)},
+            initial_buffer_bytes=512, measurement_interval_ms=400.0,
+            enable_qos=False, enable_chaining=False,
+            max_buffer_lifetime_ms=200.0)
+        eng.start()
+        time.sleep(0.8)
+        eng.scale_out("Agg", 4, reason="race-smoke")
+        time.sleep(0.8)
+        eng.stop()
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+# -- disabled mode: zero cost, classes untouched (in-process) ----------------
+
+
+def test_disabled_mode_is_zero_cost():
+    import threading
+
+    from repro.analysis import race
+    from repro.core.buffers import OutputBuffer
+    from repro.core.routing import KeyRouter, StateStore
+
+    assert race.RACE_CHECK is False
+    assert race.CHECKER is None
+    assert race.make_lock is threading.Lock
+    # instrumentation never touched the core classes: their methods still
+    # live in their own modules, not in analysis.race wrappers
+    assert StateStore.bump.__module__ == "repro.core.routing"
+    assert KeyRouter.commit.__module__ == "repro.core.routing"
+    assert OutputBuffer.append.__module__ == "repro.core.buffers"
+    assert StateStore.__init__.__module__ == "repro.core.routing"
