@@ -76,8 +76,14 @@ def main() -> None:
                          "root (perf trajectory)")
     args = ap.parse_args()
 
+    # preflight WARNs (graph_check/feasibility, e.g. NS-F002 "goal only
+    # reachable near max scale-out") are advisory and never raise — surface
+    # them per CSV row so a benchmark topology drifting toward its
+    # feasibility edge is visible in the perf trajectory, not swallowed.
+    from repro.analysis import graph_check
+
     failures = []
-    print("name,us_per_call,derived")
+    print("name,us_per_call,derived,preflight_warns")
     for mod_name, desc in MODULES:
         if args.only and args.only != mod_name:
             continue
@@ -89,10 +95,13 @@ def main() -> None:
                     continue  # module has no smoke-sized variant yet
                 kwargs["smoke"] = True
             rows = []
+            warn_mark = graph_check.preflight_warn_count
             for name, us, derived in mod.run(**kwargs):
+                warns = graph_check.preflight_warn_count - warn_mark
+                warn_mark = graph_check.preflight_warn_count
                 rows.append({"name": name, "us_per_call": round(us, 1),
-                             "derived": derived})
-                print(f"{name},{us:.1f},{derived}", flush=True)
+                             "derived": derived, "preflight_warns": warns})
+                print(f"{name},{us:.1f},{derived},{warns}", flush=True)
             if args.bench_out and rows and mod_name not in _written:
                 if args.smoke and (BENCH_DIR / f"BENCH_{mod_name}.json"
                                    ).exists():

@@ -110,4 +110,28 @@ CHECKER.assert_clean()
 print("race check clean: keyed_burst + placement_burst")
 PY
 
+# -- runtime invariant sanitizer over the golden scenarios -------------------
+# REPRO_SANITIZE=1 instruments the output buffers, the simulator event core
+# and the keyed-state migration path (analysis/sanitize.py): channel
+# conservation, event-time monotonicity, post-migration key-ownership
+# exclusivity and buffer fill accounting.  The three golden simulations plus
+# the threaded keyed_burst scenario must come back with zero reports.  Own
+# process for the same read-once-flag reason as the race arm; the canary
+# smoke run above stays uninstrumented, so its events/sec floor is
+# unaffected.
+echo "== invariant sanitizer (goldens + keyed_burst) =="
+REPRO_SANITIZE=1 python - <<'PY'
+import sys
+sys.path.insert(0, "tests")
+from repro.analysis.sanitize import CHECKER, SANITIZE
+assert SANITIZE and CHECKER is not None
+from test_sim_determinism import SIMS, DURATIONS_MS
+for name, build in SIMS.items():
+    build().run(DURATIONS_MS[name])
+from benchmarks.qos_scaling import run_keyed_burst
+run_keyed_burst(smoke=True)
+CHECKER.assert_clean()
+print("sanitizer clean: media + scale + chain goldens, keyed_burst")
+PY
+
 echo "CI OK"

@@ -15,11 +15,17 @@ Two passes, both reporting structured diagnostics from repro.analysis:
 
 Exit status 1 iff any ERROR diagnostic was produced; WARNs only print.
 
-    PYTHONPATH=src python scripts/lint.py          # both passes
-    PYTHONPATH=src python scripts/lint.py --rules  # dump the rule catalog
+    PYTHONPATH=src python scripts/lint.py                # both passes
+    PYTHONPATH=src python scripts/lint.py --rules        # rule catalog
+    PYTHONPATH=src python scripts/lint.py --format json  # machine output
+
+``--format json`` emits one JSON object per line — ``{"id", "severity",
+"file", "line", "message"}`` — for editor/CI integration; the exit-status
+contract is unchanged.
 """
 from __future__ import annotations
 
+import json
 import sys
 from pathlib import Path
 
@@ -36,6 +42,19 @@ def dump_rules() -> int:
         r = REGISTRY[rule_id]
         print(f"{r.id}  {r.severity:5s}  {r.title}")
     return 0
+
+
+def _as_json_line(d) -> str:
+    """One diagnostic as a single JSON line.  Locations are either
+    ``path:lineno`` (AST lint) or a human scope like ``job 'media'``
+    (graph pass) — the latter maps to file=location, line=0."""
+    file, _, tail = d.location.rpartition(":")
+    if file and tail.isdigit():
+        line = int(tail)
+    else:
+        file, line = d.location, 0
+    return json.dumps({"id": d.rule, "severity": d.severity, "file": file,
+                       "line": line, "message": d.message})
 
 
 def graph_pass() -> list:
@@ -56,21 +75,33 @@ def graph_pass() -> list:
     }
     for name, (jg, jcs) in cases.items():
         for d in check_job(jg, jcs):
-            print(f"[graph:{name}] {d.format()}")
-            diags.append(d)
+            diags.append((name, d))
     return diags
 
 
 def main(argv: list[str]) -> int:
     if "--rules" in argv:
         return dump_rules()
+    as_json = False
+    if "--format" in argv:
+        fmt = argv[argv.index("--format") + 1:][:1]
+        if fmt != ["json"]:
+            print(f"unknown --format {fmt[0] if fmt else '(missing)'!r} "
+                  f"(only 'json')", file=sys.stderr)
+            return 2
+        as_json = True
     diags = lint_tree(ROOT)
     for d in diags:
-        print(d.format())
-    diags += graph_pass()
+        print(_as_json_line(d) if as_json else d.format())
+    graph_diags = graph_pass()
+    for name, d in graph_diags:
+        print(_as_json_line(d) if as_json
+              else f"[graph:{name}] {d.format()}")
+    diags += [d for _, d in graph_diags]
     errors = sum(1 for d in diags if d.severity == ERROR)
     warns = len(diags) - errors
-    print(f"lint: {errors} error(s), {warns} warning(s)")
+    if not as_json:
+        print(f"lint: {errors} error(s), {warns} warning(s)")
     return 1 if errors else 0
 
 

@@ -1,17 +1,23 @@
-"""Static/dynamic analysis layer: pre-flight validation, lint, race check.
+"""Static/dynamic analysis layer: validation, lint, race/deadlock, sanitize.
 
-Three layers (see docs/analysis.md for the rule catalog):
+Five layers (see docs/analysis.md for the rule catalog):
 
 * ``analysis.graph_check`` — pre-flight job-graph/QoS validator, run by
   both execution backends at construction (``preflight=False`` opts out).
+* ``analysis.feasibility`` — static QoS-feasibility pass (NS-F00x): the
+  §3 latency/throughput model evaluated over the admissible configuration
+  lattice, dispatched from ``graph_check.check_job``.
 * ``analysis.lint`` — repo-specific AST rules (``scripts/lint.py``).
-* ``analysis.race`` — ``REPRO_RACE_CHECK=1`` lockset race detector for
-  the threaded engine.
+* ``analysis.race`` — ``REPRO_RACE_CHECK=1`` lockset race detector plus
+  lock-order deadlock detection for the threaded engine.
+* ``analysis.sanitize`` — ``REPRO_SANITIZE=1`` runtime invariant
+  sanitizer (channel conservation, event-time monotonicity, key-ownership
+  exclusivity, buffer fill accounting).
 
 This package init stays import-light on purpose: ``core/routing.py`` and
-``core/buffers.py`` import ``analysis.race`` at *their* import time, so
-nothing here may import ``repro.core`` (``graph_check`` does, and is
-therefore loaded lazily).
+``core/buffers.py`` import ``analysis.race`` / ``analysis.sanitize`` at
+*their* import time, so nothing here may import ``repro.core``
+(``graph_check`` and ``feasibility`` do, and are therefore loaded lazily).
 """
 from __future__ import annotations
 
@@ -27,18 +33,22 @@ from .diagnostics import (  # noqa: F401
     diag,
     register,
 )
-from .race import RACE_CHECK, RaceReport  # noqa: F401
+from .race import RACE_CHECK, DeadlockReport, RaceReport  # noqa: F401
+from .sanitize import SANITIZE  # noqa: F401
 
 __all__ = [
     "Diagnostic", "ERROR", "WARN", "Rule", "REGISTRY", "diag", "register",
-    "GraphValidationError", "RACE_CHECK", "RaceReport",
-    "check_job", "run_preflight",
+    "GraphValidationError", "RACE_CHECK", "RaceReport", "DeadlockReport",
+    "SANITIZE", "check_job", "run_preflight", "check_feasibility",
 ]
 
 
 def __getattr__(name: str) -> Any:
-    # lazy: graph_check imports repro.core (cycle with core's import of us)
+    # lazy: these import repro.core (cycle with core's import of us)
     if name in ("check_job", "run_preflight"):
         from . import graph_check
         return getattr(graph_check, name)
+    if name == "check_feasibility":
+        from . import feasibility
+        return feasibility.check_feasibility
     raise AttributeError(f"module {__name__!r} has no attribute {name!r}")

@@ -35,18 +35,27 @@ class Rule:
 
 @dataclass(frozen=True)
 class Diagnostic:
-    """One finding: rule id, severity, where, what, and how to fix it."""
+    """One finding: rule id, severity, where, what, and how to fix it.
+
+    ``detail`` carries optional multi-line evidence (the runtime sanitizer
+    and deadlock detector attach capture-site stack traces here); it is
+    rendered indented below the one-line summary.
+    """
 
     rule: str
     severity: str
     location: str
     message: str
     hint: str = ""
+    detail: str = ""
 
     def format(self) -> str:
         s = f"[{self.rule}] {self.severity} {self.location}: {self.message}"
         if self.hint:
             s += f" | hint: {self.hint}"
+        if self.detail:
+            s += "\n" + "\n".join(
+                "    " + line for line in self.detail.rstrip().splitlines())
         return s
 
 

@@ -1,0 +1,381 @@
+"""Static QoS-feasibility pass (NS-F***): can *any* configuration meet the
+declared constraints?
+
+The paper's QoS managers are reactive — an infeasible constraint (a latency
+bound below the graph's irreducible service time, a throughput target no
+admissible parallelism can reach) only surfaces at runtime as an endless
+GiveUp/ScaleRequest loop.  Deciding whether an SLO is satisfiable at any
+parallelism is a *model* question, answerable before execution: this pass
+is an abstract interpretation over the job graph that
+
+* propagates declared source rates (``SimSourceSpec.rate_items_per_s`` /
+  ``SourceSpec.rate_per_s``) through fan-in/fan-out to a per-stage arrival
+  rate (unknown sources propagate ``None`` — rate-dependent rules stay
+  silent rather than guess);
+* evaluates the §3 latency model — summed task latencies (§3.2.1/§3.2.3)
+  plus per-channel transport and output-buffer residency under the Eq. 2–3
+  sizing floor (§3.2.2/§3.5.1) — across the admissible configuration
+  lattice: every subset of chain-eligible adjacent pairs (reusing
+  graph_check's §3.5.2 pre-computation), buffer size down to the policy
+  floor, parallelism up to the vertex cap;
+* checks each ThroughputConstraint target against the stage's maximum
+  service capacity at its largest admissible parallelism.
+
+Every per-item term is evaluated at its *optimistic* bound (chained where
+chaining is ever possible, buffers at the floor, transport over the
+cheapest link), so an NS-F001/NS-F003 ERROR is sound: no runtime
+configuration can do better than the reported best-achievable figure.
+Parallelism never lowers the per-item bound in this model — it buys
+*stability*, which is what the WARN rules (NS-F002/NS-F004) reason about
+via utilization rho = lambda * service_time / parallelism.
+
+Complexity is O(graph x configurations) — chain subsets are capped at
+2**10 per sequence (beyond that only the lattice extremes are evaluated,
+which is exact for the minimum since every channel term is >= 0).  Nothing
+is simulated, nothing random is consumed, nothing is mutated.
+"""
+from __future__ import annotations
+
+from typing import Any, Mapping, Sequence
+
+from repro.core.graphs import ALL_TO_ALL, JobGraph
+from repro.core.routing import NUM_KEY_RANGES
+
+from .diagnostics import ERROR, WARN, Diagnostic, diag, register
+from .graph_check import _adjacent_task_pairs, _pair_chainable, _split
+
+__all__ = ["check_feasibility"]
+
+#: relative slack on strict comparisons so a bound that equals the limit to
+#: within float noise is not flagged.
+_REL_TOL = 1e-9
+
+#: Eq. 2 buffer floor when no sizing policy is passed (BufferSizingPolicy
+#: default; kept literal so this module needs no core.buffers import).
+_DEFAULT_EPS_BYTES = 200
+
+register("NS-F001", ERROR, "latency constraint statically infeasible",
+         "the irreducible per-item latency (summed service times + cheapest "
+         "transport, chained wherever §3.5.2 allows, buffers at the policy "
+         "floor) already exceeds the bound; raise latency_limit_ms, cut "
+         "sim_cpu_ms, or shorten the constrained sequence")
+register("NS-F002", WARN, "QoS goal reachable only at near-max scale-out",
+         "the smallest workable parallelism is within 10% of the admissible "
+         "cap; raise max_parallelism / num_key_ranges headroom or the "
+         "ScaleRequest countermeasure will have no room left to react")
+register("NS-F003", ERROR, "throughput target exceeds stage capacity",
+         "even at the largest admissible parallelism the stage cannot serve "
+         "min_items_per_s; lower the target, cut sim_cpu_ms, or raise "
+         "max_parallelism / num_key_ranges")
+register("NS-F004", WARN, "stage saturated at every admissible parallelism",
+         "declared source rates keep utilization >= 1 at every parallelism "
+         "the runtime may reach — queues grow without bound and every "
+         "latency constraint through this stage will degrade to GiveUp")
+
+
+def check_feasibility(
+    jg: JobGraph,
+    constraints: Sequence[Any] = (),
+    *,
+    sources: Mapping[str, Any] | None = None,
+    net: Any = None,
+    num_workers: int | None = None,
+    num_key_ranges: int | None = None,
+    policy: Any = None,
+    max_buffer_lifetime_ms: float | None = None,
+) -> list[Diagnostic]:
+    """Feasibility findings for one job description (never raises).
+
+    ``sources`` maps source vertex name -> spec (duck-typed: any object
+    with ``rate_items_per_s`` or ``rate_per_s``); ``net`` is the
+    simulator's ``SimNetConfig`` (None for the threaded engine: transport
+    is then not priced, which only makes bounds more optimistic).
+    """
+    out: list[Diagnostic] = []
+    latency, throughput = _split(constraints)
+    lam_in, lam_out = _stage_rates(jg, sources)
+    caps = {name: _allowed_max(jg, name, throughput, num_key_ranges)
+            for name in jg.vertices}
+
+    for c in latency:
+        out.extend(_check_latency(jg, c, net, num_workers, policy,
+                                  max_buffer_lifetime_ms, lam_out))
+    for c in throughput:
+        out.extend(_check_throughput(jg, c, caps))
+    out.extend(_check_saturation(jg, lam_in, caps))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Rate propagation (abstract interpretation over the DAG)
+# ---------------------------------------------------------------------------
+
+
+def _source_rate(spec: Any) -> float | None:
+    for attr in ("rate_items_per_s", "rate_per_s"):
+        rate = getattr(spec, attr, None)
+        if isinstance(rate, (int, float)):
+            return float(rate)
+    return None
+
+
+def _stage_rates(
+    jg: JobGraph, sources: Mapping[str, Any] | None,
+) -> tuple[dict[str, float | None], dict[str, float | None]]:
+    """Items/s entering and leaving each stage (all subtasks summed).
+
+    Declared rates are per *subtask* (``SimSourceSpec`` semantics), so a
+    source stage offers rate x parallelism.  A stage with ``sim_fan_in=k``
+    aggregates k inputs into one output.  ``None`` means unknown and is
+    absorbing — rate-dependent rules skip rather than guess.  Rate
+    schedules (``rate_fn``) are ignored: the declared base rate is the
+    steady-state figure the constraints were written against.
+    """
+    lam_in: dict[str, float | None] = {}
+    lam_out: dict[str, float | None] = {}
+    try:
+        order = jg.topological_order()
+    except Exception:  # cyclic/broken graph: NS-G004 already reported
+        return ({n: None for n in jg.vertices},
+                {n: None for n in jg.vertices})
+    for name in order:
+        jv = jg.vertices[name]
+        if jv.is_source or not jg.in_edges(name):
+            spec = (sources or {}).get(name)
+            rate = _source_rate(spec) if spec is not None else None
+            lam: float | None = (
+                rate * jv.parallelism if rate is not None else None)
+        else:
+            lam = 0.0
+            for e in jg.in_edges(name):
+                up = lam_out.get(e.src)
+                if up is None:
+                    lam = None
+                    break
+                lam += up
+        lam_in[name] = lam
+        fan = max(1, int(getattr(jv, "sim_fan_in", 1) or 1))
+        lam_out[name] = None if lam is None else lam / fan
+    return lam_in, lam_out
+
+
+# ---------------------------------------------------------------------------
+# Admissible parallelism (mirrors the NS-C005 scalability conditions)
+# ---------------------------------------------------------------------------
+
+
+def _scalable(jg: JobGraph, name: str) -> bool:
+    jv = jg.vertices[name]
+    if jv.is_source or not jg.in_edges(name):
+        return False
+    return all(e.pattern == ALL_TO_ALL
+               for e in jg.in_edges(name) + jg.out_edges(name))
+
+
+def _allowed_max(jg: JobGraph, name: str, throughput: Sequence[Any],
+                 num_key_ranges: int | None) -> int:
+    """Largest parallelism any scaling authority may ever set for ``name``:
+    declared parallelism for unscalable stages, else key-range width capped
+    by the tightest ThroughputConstraint.max_parallelism (the replica
+    budget binds both the controller and the ScaleRequest countermeasure).
+    """
+    declared = jg.vertices[name].parallelism
+    if not _scalable(jg, name):
+        return declared
+    cap = NUM_KEY_RANGES if num_key_ranges is None else max(1, num_key_ranges)
+    for c in throughput:
+        mp = getattr(c, "max_parallelism", None)
+        if c.job_vertex == name and mp is not None:
+            cap = min(cap, mp)
+    return max(declared, cap)
+
+
+# ---------------------------------------------------------------------------
+# NS-F001 — §3 latency model over the configuration lattice
+# ---------------------------------------------------------------------------
+
+
+def _transport_ms(jg: JobGraph, src: str, spec: Any, net: Any,
+                  num_workers: int | None) -> float:
+    """Cheapest per-item transport for one channel out of ``src``:
+    min(same-worker hand-off, cross-worker ship at line rate) on a
+    multi-worker deployment, same-worker only when num_workers == 1.
+    With no network model (threaded engine) transport is not priced."""
+    if net is None:
+        return 0.0
+    nbytes = _item_bytes(jg, src, spec)
+    same = float(net.same_worker_overhead_ms)
+    cross = (float(net.per_buffer_overhead_ms)
+             + nbytes / float(net.bandwidth_bytes_per_ms)
+             + float(net.propagation_ms))
+    if num_workers is not None and num_workers <= 1:
+        return same
+    return min(same, cross)
+
+
+def _item_bytes(jg: JobGraph, src: str, spec: Any) -> int:
+    if spec is not None:
+        b = getattr(spec, "item_bytes", None)
+        if isinstance(b, int) and b > 0:
+            return b
+    return max(0, int(getattr(jg.vertices[src], "sim_item_bytes", 0) or 0))
+
+
+def _residency_ms(jg: JobGraph, src: str, spec: Any, eps_bytes: int,
+                  lam_out: Mapping[str, float | None],
+                  max_buffer_lifetime_ms: float | None) -> float:
+    """Mean output-buffer residency with the buffer shrunk to the Eq. 2
+    floor: a buffer holding k items ships when the k-th arrives, so the
+    mean item waits (k-1)/2 inter-emission gaps.  Optimistically assumes
+    the whole stage output funnels into the observed channel (densest
+    fill, shortest wait) and returns 0 when the rate is unknown."""
+    nbytes = _item_bytes(jg, src, spec)
+    if nbytes <= 0:
+        return 0.0
+    k = -(-eps_bytes // nbytes)  # ceil: items until the floor capacity trips
+    if k <= 1:
+        return 0.0
+    lam = lam_out.get(src)
+    if lam is None or lam <= 0:
+        return 0.0
+    wait = (k - 1) / 2.0 * (1000.0 / lam)
+    if max_buffer_lifetime_ms is not None:
+        wait = min(wait, max_buffer_lifetime_ms / 2.0)  # obl = oblt/2
+    return wait
+
+
+def _check_latency(jg: JobGraph, c: Any, net: Any, num_workers: int | None,
+                   policy: Any, max_buffer_lifetime_ms: float | None,
+                   lam_out: Mapping[str, float | None],
+                   ) -> list[Diagnostic]:
+    seq = c.sequence
+    limit = float(c.latency_limit_ms)
+    if not limit > 0:
+        return []  # NS-C003 already reported
+    edges_in_graph = {(e.src, e.dst) for e in jg.edges}
+    verts = seq.vertices()
+    seq_edges = seq.edges()
+    if (any(v not in jg.vertices for v in verts)
+            or any(v not in jg.vertices for e in seq_edges for v in e)
+            or any(e not in edges_in_graph for e in seq_edges)):
+        return []  # structurally broken sequence: NS-C001/NS-C002 own it
+
+    svc_sum = sum(float(jg.vertices[v].sim_cpu_ms) for v in verts)
+    eps = int(getattr(policy, "eps_bytes", _DEFAULT_EPS_BYTES)
+              or _DEFAULT_EPS_BYTES)
+    # per-channel cost at the lattice's buffer floor; chain-eligible pairs
+    # (adjacent *task* elements, §3.5.2 pre-computation) may zero theirs.
+    # No net model (the threaded engine) means item sizes and transport are
+    # runtime facts of user code — channel terms are then not priced, which
+    # only makes the bound more optimistic (ERRORs stay sound).
+    cost = {
+        (s, d): 0.0 if net is None else (
+            _transport_ms(jg, s, None, net, num_workers)
+            + _residency_ms(jg, s, None, eps, lam_out,
+                            max_buffer_lifetime_ms))
+        for (s, d) in seq_edges
+    }
+    task_pairs = set(_adjacent_task_pairs(seq))
+    chainable = [e for e in seq_edges
+                 if e in task_pairs and _pair_chainable(jg, *e)]
+    fixed = sum(v for e, v in cost.items() if e not in set(chainable))
+
+    # walk the chain-subset lattice (exact min: every cost is >= 0, so the
+    # all-chained corner is the optimum — the walk also yields the best
+    # configuration for the message); cap the enumeration, extremes are
+    # enough for the minimum
+    n = len(chainable)
+    masks = range(1 << n) if n <= 10 else (0, (1 << n) - 1)
+    best = float("inf")
+    best_mask = 0
+    for mask in masks:
+        bound = fixed + svc_sum + sum(
+            cost[e] for i, e in enumerate(chainable) if not mask >> i & 1)
+        if bound < best:
+            best, best_mask = bound, mask
+    if best <= limit * (1.0 + _REL_TOL):
+        return []
+    chained = [e for i, e in enumerate(chainable) if best_mask >> i & 1]
+    how = (f"chained {','.join(f'{s}->{d}' for s, d in chained)}"
+           if chained else "no chainable pair")
+    return [diag(
+        "NS-F001", f"constraint {getattr(c, 'name', '?')!r}",
+        f"no configuration can satisfy latency_limit_ms={limit:g}: best "
+        f"achievable ~= {best:.3f} ms ({svc_sum:.3f} ms summed service "
+        f"time + {best - svc_sum:.3f} ms channel floor; {how}, buffers at "
+        f"the {eps}B policy floor)")]
+
+
+# ---------------------------------------------------------------------------
+# NS-F003 / NS-F002 — throughput targets vs stage capacity
+# ---------------------------------------------------------------------------
+
+
+def _check_throughput(jg: JobGraph, c: Any,
+                      caps: Mapping[str, int]) -> list[Diagnostic]:
+    name = c.job_vertex
+    if name not in jg.vertices:
+        return []  # NS-C004 owns it
+    target = float(getattr(c, "min_items_per_s", 0.0) or 0.0)
+    svc = float(getattr(jg.vertices[name], "sim_cpu_ms", 0.0) or 0.0)
+    if target <= 0 or svc <= 0:
+        return []  # no target, or service time unknown: nothing to bound
+    allowed = caps[name]
+    capacity = allowed * 1000.0 / svc
+    loc = f"throughput constraint {getattr(c, 'name', '?')!r}"
+    if capacity < target * (1.0 - _REL_TOL):
+        return [diag(
+            "NS-F003", loc,
+            f"min_items_per_s={target:g} for {name!r} is unreachable: best "
+            f"achievable capacity ~= {capacity:.1f} items/s at the largest "
+            f"admissible parallelism {allowed} "
+            f"(sim_cpu_ms={svc:g} per item)")]
+    declared = jg.vertices[name].parallelism
+    required = 1  # smallest p with p * 1000/svc >= target (p <= allowed here)
+    while required * 1000.0 / svc < target * (1.0 - _REL_TOL):
+        required += 1
+    if required > declared and required >= 0.9 * allowed:
+        return [diag(
+            "NS-F002", loc,
+            f"min_items_per_s={target:g} for {name!r} needs parallelism "
+            f">= {required} — within 10% of the admissible cap {allowed} "
+            f"(declared {declared})")]
+    return []
+
+
+# ---------------------------------------------------------------------------
+# NS-F004 / NS-F002 — stability under the declared rates
+# ---------------------------------------------------------------------------
+
+
+def _check_saturation(jg: JobGraph, lam_in: Mapping[str, float | None],
+                      caps: Mapping[str, int]) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    for name, jv in jg.vertices.items():
+        lam = lam_in.get(name)
+        svc = float(getattr(jv, "sim_cpu_ms", 0.0) or 0.0)
+        if lam is None or lam <= 0 or svc <= 0 or jv.is_sink:
+            continue
+        allowed = caps[name]
+        declared = jv.parallelism
+        loc = f"job vertex {name!r}"
+        stable_p = None
+        for p in range(declared, allowed + 1):
+            if (lam / p) * (svc / 1000.0) < 1.0 - _REL_TOL:
+                stable_p = p
+                break
+        if stable_p is None:
+            rho = (lam / allowed) * (svc / 1000.0)
+            out.append(diag(
+                "NS-F004", loc,
+                f"declared rates offer {lam:g} items/s against "
+                f"sim_cpu_ms={svc:g}: utilization {rho:.2f} >= 1 even at "
+                f"the largest admissible parallelism {allowed}"))
+        elif stable_p > declared and stable_p >= 0.9 * allowed:
+            out.append(diag(
+                "NS-F002", loc,
+                f"declared rates ({lam:g} items/s, sim_cpu_ms={svc:g}) "
+                f"need parallelism >= {stable_p} for utilization < 1 — "
+                f"within 10% of the admissible cap {allowed} "
+                f"(declared {declared})"))
+    return out

@@ -48,6 +48,8 @@ def check_job(
     initial_buffer_bytes: int | None = None,
     max_buffer_lifetime_ms: float | None = None,
     policy: Any = None,
+    sources: Mapping[str, Any] | None = None,
+    net: Any = None,
 ) -> list[Diagnostic]:
     """Validate one job description; returns every finding (never raises)."""
     out: list[Diagnostic] = []
@@ -59,7 +61,21 @@ def check_job(
     out.extend(_check_chaining(jg, constraints))
     out.extend(_check_buffers(initial_buffer_bytes, max_buffer_lifetime_ms,
                               policy))
+    # semantic layer: static QoS feasibility (lazy import — feasibility
+    # reuses helpers from this module, so the import must not be cyclic at
+    # module load time)
+    from . import feasibility as _feasibility
+    out.extend(_feasibility.check_feasibility(
+        jg, constraints, sources=sources, net=net, num_workers=num_workers,
+        num_key_ranges=num_key_ranges, policy=policy,
+        max_buffer_lifetime_ms=max_buffer_lifetime_ms))
     return out
+
+
+#: process-wide count of WARN diagnostics returned by ``run_preflight`` —
+#: benchmark harnesses read the delta around a scenario to surface the
+#: pre-flight WARN count per recorded row without touching the executors.
+preflight_warn_count = 0
 
 
 def run_preflight(
@@ -69,8 +85,10 @@ def run_preflight(
 ) -> list[Diagnostic]:
     """``check_job`` with ERROR-fails-fast semantics: raises
     ``GraphValidationError`` on any ERROR, returns the WARNs otherwise."""
+    global preflight_warn_count
     diags = check_job(jg, constraints, **kwargs)
     raise_on_error(diags)
+    preflight_warn_count += sum(1 for d in diags if d.severity != ERROR)
     return diags
 
 
@@ -323,6 +341,16 @@ def _pair_chainable(jg: JobGraph, a: str, b: str) -> bool:
             and _runtime_in_channels(jg, b) == 1)
 
 
+def _adjacent_task_pairs(seq: Any) -> list[tuple[str, str]]:
+    """Candidate §3.5.2 chain pairs of a (duck-typed) sequence — prefers
+    the JobSequence helper, falls back to zipping the task elements."""
+    fn = getattr(seq, "adjacent_task_pairs", None)
+    if fn is not None:
+        return list(fn())
+    ts = list(seq.vertices())
+    return list(zip(ts, ts[1:]))
+
+
 def _check_chaining(jg: JobGraph,
                     constraints: Sequence[Any]) -> list[Diagnostic]:
     out: list[Diagnostic] = []
@@ -332,8 +360,9 @@ def _check_chaining(jg: JobGraph,
         tasks = [v for v in c.sequence.vertices() if v in jg.vertices]
         if len(tasks) < 2:
             continue  # chaining needs >= 2 task elements: inapplicable
-        pairs = [(a, b) for a, b in zip(tasks, tasks[1:])
-                 if (a, b) in edges]
+        pairs = [(a, b) for a, b in _adjacent_task_pairs(c.sequence)
+                 if a in jg.vertices and b in jg.vertices
+                 and (a, b) in edges]
         if pairs and not any(_pair_chainable(jg, a, b) for a, b in pairs):
             out.append(diag(
                 "NS-H001", f"constraint {getattr(c, 'name', '?')!r}",

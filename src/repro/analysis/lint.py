@@ -45,6 +45,12 @@ register("NS-L004", ERROR, "missing __slots__ in a hot module",
 register("NS-L005", WARN, "heavyweight module-level import in a lazy zone",
          "import numpy/jax/... inside the function that needs it; the "
          "core/checkpoint zones are imported by latency-sensitive paths")
+register("NS-L006", ERROR, "raw lock construction in a race-instrumented "
+         "module",
+         "construct locks via analysis.race.make_lock() (it IS "
+         "threading.Lock when the detector is off); a raw "
+         "threading.Lock()/RLock() is invisible to the lockset race "
+         "detector and the lock-order deadlock pass")
 
 # -- per-rule configuration (paths are repo-relative, POSIX separators) ------
 
@@ -80,6 +86,17 @@ SLOTS_REQUIRED_MODULES: dict[str, frozenset[str]] = {
 LAZY_IMPORT_ZONES = ("src/repro/core/", "src/repro/checkpoint/")
 HEAVY_MODULES = frozenset(
     {"numpy", "jax", "jaxlib", "scipy", "pandas", "torch", "tensorflow"})
+
+#: modules whose lock discipline the race/deadlock checkers observe — every
+#: lock they construct must come from analysis.race.make_lock() so the
+#: checkers see its acquire/release stream
+RACE_LOCK_MODULES = frozenset({
+    "src/repro/core/engine.py",
+    "src/repro/core/routing.py",
+    "src/repro/core/buffers.py",
+    "src/repro/core/elastic.py",
+})
+_RAW_LOCK_NAMES = frozenset({"Lock", "RLock"})
 
 
 @dataclass(frozen=True)
@@ -269,6 +286,40 @@ def _check_heavy_imports(ctx: LintContext) -> list[Diagnostic]:
 
 
 # ---------------------------------------------------------------------------
+# NS-L006: no raw lock construction in race-instrumented modules
+# ---------------------------------------------------------------------------
+
+
+def _check_raw_locks(ctx: LintContext) -> list[Diagnostic]:
+    """Flag ``threading.Lock()`` / ``threading.RLock()`` calls (and bare
+    ``Lock()`` / ``RLock()`` when imported from threading) in modules the
+    race/deadlock checkers instrument."""
+    from_threading: set[str] = set()
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.ImportFrom) and node.module == "threading":
+            for alias in node.names:
+                if alias.name in _RAW_LOCK_NAMES:
+                    from_threading.add(alias.asname or alias.name)
+    out: list[Diagnostic] = []
+    for node in ast.walk(ctx.tree):
+        if not isinstance(node, ast.Call):
+            continue
+        f = node.func
+        raw = None
+        if (isinstance(f, ast.Attribute) and f.attr in _RAW_LOCK_NAMES
+                and isinstance(f.value, ast.Name)
+                and f.value.id == "threading"):
+            raw = f"threading.{f.attr}"
+        elif isinstance(f, ast.Name) and f.id in from_threading:
+            raw = f.id
+        if raw is not None:
+            out.append(diag("NS-L006", ctx.loc(node),
+                            f"constructs {raw}() directly in a "
+                            f"race-instrumented module"))
+    return out
+
+
+# ---------------------------------------------------------------------------
 # Registry + runners
 # ---------------------------------------------------------------------------
 
@@ -283,6 +334,8 @@ RULES: list[LintRule] = [
              lambda p: p in SLOTS_REQUIRED_MODULES),
     LintRule("NS-L005", _check_heavy_imports,
              lambda p: p.startswith(LAZY_IMPORT_ZONES)),
+    LintRule("NS-L006", _check_raw_locks,
+             lambda p: p in RACE_LOCK_MODULES),
 ]
 
 

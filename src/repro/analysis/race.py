@@ -25,9 +25,22 @@ shared-state classes at import (``instrument_*`` below) and the engine's
 
 The init-then-publish idiom (one thread fills a structure, others only
 read it afterwards) stays silent, as in the original Eraser paper.
+
+The same tracked-lock stream also feeds **deadlock detection**:
+
+* a lock-order acquisition graph (GoodLock-style): acquiring ``b`` while
+  holding ``a`` adds edge ``a -> b``; an acquisition that would close a
+  cycle is a lock-order inversion and yields a ``DeadlockReport`` with
+  *both* acquisition stacks — the one that established the first order
+  and the one that closed the cycle;
+* a blocked-drain watchdog: when the engine times out waiting for a task
+  to drain/park (chaining, unchaining, state migration), it calls
+  ``CHECKER.report_blocked_drain`` and the stuck threads' held tracked
+  locks (with their acquire stacks) are recorded.
+
 Reports are collected, never raised mid-run — call ``CHECKER.reports`` /
-``CHECKER.assert_clean()`` after the scenario (see tests/test_analysis_race.py
-and the race step of scripts/ci.sh).
+``CHECKER.deadlocks`` / ``CHECKER.assert_clean()`` after the scenario
+(see tests/test_analysis_race.py and the race step of scripts/ci.sh).
 
 Stdlib-only and free of ``repro.core`` imports: the core modules import
 *us* at their own import time.
@@ -66,6 +79,33 @@ class RaceReport:
             f"--- conflicting access ({self.second_thread}) ---\n"
             f"{self.second_stack}"
         )
+
+
+@dataclass(frozen=True)
+class DeadlockReport:
+    """One deadlock finding: a lock-order inversion (two locks acquired in
+    opposite orders on different code paths — threads interleaving those
+    paths block each other forever, GoodLock-style) or a blocked drain (a
+    thread stuck past the drain timeout while holding tracked locks)."""
+
+    kind: str  # "lock-order" | "blocked-drain"
+    description: str
+    first_stack: str = ""
+    second_stack: str = ""
+
+    def format(self) -> str:
+        s = f"DEADLOCK ({self.kind}): {self.description}"
+        if self.first_stack:
+            s += (f"\n--- earlier acquisition (established the first "
+                  f"order) ---\n{self.first_stack}")
+        if self.second_stack:
+            s += (f"--- conflicting acquisition (closed the cycle) ---\n"
+                  f"{self.second_stack}")
+        return s
+
+
+def _lock_name(lock_id: int) -> str:
+    return f"lock#{lock_id & 0xffffff:06x}"
 
 
 class _ResourceState:
@@ -107,6 +147,17 @@ class LocksetChecker:
         #: purpose: it pins ``id`` stability for the process lifetime.
         self._resources: dict[int, tuple[Any, _ResourceState]] = {}
         self.reports: list[RaceReport] = []
+        # -- deadlock detection state (all guarded by _meta) ----------------
+        #: lock-order graph: a -> {b} means some thread acquired b while
+        #: holding a.  A path b ~> a at (a -> b) time is an inversion.
+        self._order: dict[int, set[int]] = {}
+        #: (a, b) -> stack of the first acquisition of b while holding a.
+        self._edge_stacks: dict[tuple[int, int], str] = {}
+        #: global holdings (the thread-local ``_held`` can't be read from
+        #: the watchdog's thread): tid -> {lock_id: first-acquire stack}.
+        self._held_by_tid: dict[int, dict[int, str]] = {}
+        self._reported_cycles: set[frozenset[int]] = set()
+        self.deadlocks: list[DeadlockReport] = []
 
     # -- lockset maintenance (called by TrackedLock) -------------------------
     def _held_map(self) -> dict[int, int]:
@@ -116,17 +167,91 @@ class LocksetChecker:
             self._held.locks = held
         return held
 
-    def on_acquire(self, lock_id: int) -> None:
+    def _path_exists(self, src: int, dst: int) -> bool:
+        """DFS over the lock-order graph (caller holds ``_meta``)."""
+        stack, seen = [src], {src}
+        while stack:
+            node = stack.pop()
+            if node == dst:
+                return True
+            for nxt in self._order.get(node, ()):
+                if nxt not in seen:
+                    seen.add(nxt)
+                    stack.append(nxt)
+        return False
+
+    def on_acquire(self, lock_id: int, stack: str = "") -> None:
         held = self._held_map()
-        held[lock_id] = held.get(lock_id, 0) + 1
+        n = held.get(lock_id, 0)
+        held[lock_id] = n + 1
+        if n:
+            return  # reentrant re-acquire: holdings and order unchanged
+        tid = threading.get_ident()
+        with self._meta:
+            self._held_by_tid.setdefault(tid, {})[lock_id] = stack
+            for h in held:
+                if h == lock_id or lock_id in self._order.get(h, ()):
+                    continue
+                if self._path_exists(lock_id, h):
+                    # adding h -> lock_id would close a cycle: somewhere an
+                    # earlier thread acquired these locks in the opposite
+                    # order.  Report once per lock pair; keep the graph
+                    # acyclic so later acquires diagnose against it too.
+                    cycle = frozenset((h, lock_id))
+                    if cycle not in self._reported_cycles:
+                        self._reported_cycles.add(cycle)
+                        first = self._edge_stacks.get((lock_id, h)) or next(
+                            (s for (a, _), s in self._edge_stacks.items()
+                             if a == lock_id), "")
+                        self.deadlocks.append(DeadlockReport(
+                            "lock-order",
+                            f"{_lock_name(lock_id)} was acquired while "
+                            f"holding {_lock_name(h)}, but an earlier path "
+                            f"acquired them in the opposite order; threads "
+                            f"interleaving these paths deadlock",
+                            first_stack=first, second_stack=stack))
+                    continue
+                self._order.setdefault(h, set()).add(lock_id)
+                self._edge_stacks.setdefault((h, lock_id), stack)
 
     def on_release(self, lock_id: int) -> None:
         held = self._held_map()
         n = held.get(lock_id, 0)
         if n <= 1:
             held.pop(lock_id, None)
+            tid = threading.get_ident()
+            with self._meta:
+                holdings = self._held_by_tid.get(tid)
+                if holdings is not None:
+                    holdings.pop(lock_id, None)
+                    if not holdings:
+                        self._held_by_tid.pop(tid, None)
         else:
             held[lock_id] = n - 1
+
+    # -- blocked-drain watchdog (called by the engine on drain timeout) ------
+    def report_blocked_drain(self, description: str, threads) -> None:
+        """Record threads stuck past a drain/park timeout together with the
+        tracked locks each still holds (and where it acquired them) — the
+        forensic complement to the static lock-order pass."""
+        parts = []
+        with self._meta:
+            for t in threads:
+                if t is None or t.ident is None:
+                    continue
+                holdings = self._held_by_tid.get(t.ident, {})
+                if holdings:
+                    for lid, stk in holdings.items():
+                        parts.append(
+                            f"thread {t.name!r} holds {_lock_name(lid)}, "
+                            f"acquired at:\n{stk}")
+                else:
+                    parts.append(
+                        f"thread {t.name!r} holds no tracked locks "
+                        f"(blocked on a queue/event, not a lock)")
+            self.deadlocks.append(DeadlockReport(
+                "blocked-drain",
+                description + ("\n" + "".join(parts) if parts else "")))
 
     # -- access events (called by instrumented methods) ----------------------
     def on_access(self, obj: Any, label: str, method: str,
@@ -166,12 +291,24 @@ class LocksetChecker:
         with self._meta:
             self._resources.clear()
             self.reports = []
+            self._order.clear()
+            self._edge_stacks.clear()
+            self._held_by_tid.clear()
+            self._reported_cycles.clear()
+            self.deadlocks = []
 
     def assert_clean(self) -> None:
+        parts = []
         if self.reports:
-            raise AssertionError(
+            parts.append(
                 f"{len(self.reports)} lockset race(s) detected:\n\n"
                 + "\n\n".join(r.format() for r in self.reports))
+        if self.deadlocks:
+            parts.append(
+                f"{len(self.deadlocks)} deadlock finding(s):\n\n"
+                + "\n\n".join(d.format() for d in self.deadlocks))
+        if parts:
+            raise AssertionError("\n\n".join(parts))
 
 
 class TrackedLock:
@@ -187,7 +324,9 @@ class TrackedLock:
     def acquire(self, blocking: bool = True, timeout: float = -1) -> bool:
         ok = self._lock.acquire(blocking, timeout)
         if ok:
-            _checker().on_acquire(id(self))
+            # stack feeds the lock-order graph's edge evidence and the
+            # blocked-drain holdings; reentrant re-acquires discard it
+            _checker().on_acquire(id(self), _capture_stack())
         return ok
 
     def release(self) -> None:

@@ -1,0 +1,396 @@
+"""Runtime invariant sanitizer (``REPRO_SANITIZE=1``).
+
+Where the race detector (analysis/race.py) checks lock *discipline*, this
+layer checks data-plane *invariants* — the conservation and ordering facts
+both backends promise but only assert indirectly through end-to-end
+benchmarks:
+
+* **NS-S001 — channel conservation**: per output buffer, a ledger of
+  appended/taken items and bytes; at every simulator control tick (and at
+  engine ``stop()``) emitted must equal shipped + still-buffered, and a
+  channel may never deliver more items than were shipped (in-flight count
+  stays >= 0).  Nothing is ever dropped by either backend, so the paper's
+  "emitted = delivered + in-flight + dropped" closes with dropped = 0.
+* **NS-S002 — event-time monotonicity**: the simulator core dispatches
+  heap events in non-decreasing time order in *both* event modes (batched
+  runs retire early but their heap boundaries still advance) — the sim
+  clock's ``_now`` is re-classed into a checked property, so every
+  ``clock._now = t`` store in the run loop and every ``advance_to`` is
+  verified.
+* **NS-S003 — key-ownership exclusivity**: after every keyed-state
+  migration (pause-drain-install-swap, core/elastic.py), each key of a
+  stateful stage must reside in exactly the store of its routed owner —
+  no duplicates across stores, no strays on non-owners.
+* **NS-S004 — OutputBuffer fill accounting**: ``used_bytes`` must equal
+  the ledger's appended-minus-taken bytes after every operation, ``take``
+  must reset cleanly, and ``append_run`` callers must honor the
+  ``room_for`` contract (at most the final item of a run crosses
+  capacity).
+
+Violations become structured ``Diagnostic`` records (shared registry,
+analysis/diagnostics.py) with the capture-site stack in ``detail``,
+reported once per call site; they are collected, never raised mid-run —
+inspect ``CHECKER.reports`` or call ``CHECKER.assert_clean()`` after the
+scenario (the sanitizer arm of scripts/ci.sh does exactly that over the
+golden scenarios).
+
+Zero-cost when disabled, exactly like race.py: the flag is read once at
+import, and with it unset the ``instrument_*`` hooks at the bottom of the
+core modules never run — the classes keep their original bytecode (pinned
+by tests/test_analysis_sanitize.py).  Stdlib-only and free of
+``repro.core`` imports: core modules import *us* and pass their classes in.
+"""
+from __future__ import annotations
+
+import os
+import sys
+import threading
+import traceback
+from typing import Any
+
+from .diagnostics import Diagnostic, diag, register
+
+#: read once at import: instrumentation is selected here and never again.
+SANITIZE: bool = os.environ.get("REPRO_SANITIZE", "") == "1"
+
+register("NS-S001", "ERROR", "channel conservation violated",
+         "every item appended to a channel's output buffer must be shipped "
+         "or still buffered, and no channel may deliver more than was "
+         "shipped — a mismatch means the backend lost or duplicated items")
+register("NS-S002", "ERROR", "simulated event time went backwards",
+         "the event core must dispatch heap events in non-decreasing time "
+         "order (both exact and batched modes); a backwards store into the "
+         "sim clock corrupts every latency measurement after it")
+register("NS-S003", "ERROR", "key ownership not exclusive after migration",
+         "the pause-drain-install-swap protocol must leave every key of a "
+         "stateful stage in exactly its routed owner's store (§ keyed-state "
+         "migration); a duplicate or stray key double-counts aggregates")
+register("NS-S004", "ERROR", "output-buffer fill accounting violated",
+         "used_bytes must track appended-minus-taken bytes exactly and "
+         "append_run callers must pre-split runs with room_for (at most "
+         "the final item may cross capacity)")
+
+
+def _capture_stack(skip: int = 2) -> str:
+    frame = sys._getframe(skip)
+    summary = traceback.StackSummary.extract(
+        traceback.walk_stack(frame), limit=10, lookup_lines=False)
+    summary.reverse()
+    return "".join(summary.format())
+
+
+def _site(skip: int = 2) -> str:
+    """file:line of the instrumented call site (dedup key)."""
+    f = sys._getframe(skip)
+    return f"{f.f_code.co_filename}:{f.f_lineno}"
+
+
+class InvariantChecker:
+    """Central sink for sanitizer findings + the per-object ledgers.
+
+    Ledger mutation is meta-locked only on first touch of an object; the
+    per-object dict is then updated by whatever thread legitimately owns
+    the object at that moment (the race detector, not this layer, is the
+    authority on *that* discipline)."""
+
+    def __init__(self) -> None:
+        self._meta = threading.Lock()
+        #: id(obj) -> (obj, ledger) — the instance reference pins ``id``.
+        self._ledgers: dict[int, tuple[Any, dict[str, int]]] = {}
+        #: buffers of channels that were ever chained: chained hand-over
+        #: delivers without shipping, so their delivered<=shipped check is
+        #: inapplicable
+        self._ever_chained: set[int] = set()
+        self._sites: set[tuple[str, str]] = set()
+        #: _SimTask.enqueue nesting depth (the sim core is single-threaded):
+        #: re-homed items (key-ownership forwarding, scale-in stragglers)
+        #: arrive via nested enqueue calls on the same channel id and must
+        #: not count as a second delivery
+        self._enqueue_depth = 0
+        self.reports: list[Diagnostic] = []
+
+    def ledger(self, obj: Any) -> dict[str, int]:
+        entry = self._ledgers.get(id(obj))
+        if entry is None or entry[0] is not obj:
+            with self._meta:
+                entry = self._ledgers.get(id(obj))
+                if entry is None or entry[0] is not obj:
+                    entry = (obj, {"items_in": 0, "items_out": 0,
+                                   "bytes_in": 0, "bytes_out": 0,
+                                   "delivered": 0})
+                    self._ledgers[id(obj)] = entry
+        return entry[1]
+
+    def report(self, rule_id: str, location: str, message: str,
+               skip: int = 3) -> None:
+        site = (rule_id, _site(skip))
+        with self._meta:
+            if site in self._sites:
+                return  # once per capture site
+            self._sites.add(site)
+            d = diag(rule_id, location, message)
+            self.reports.append(Diagnostic(
+                d.rule, d.severity, d.location, d.message, d.hint,
+                detail="capture site:\n" + _capture_stack(skip)))
+
+    def clear(self) -> None:
+        with self._meta:
+            self._ledgers.clear()
+            self._ever_chained.clear()
+            self._sites.clear()
+            self.reports = []
+
+    def assert_clean(self) -> None:
+        if self.reports:
+            raise AssertionError(
+                f"{len(self.reports)} sanitizer violation(s):\n\n"
+                + "\n\n".join(d.format() for d in self.reports))
+
+
+#: the process-wide checker; None when the sanitizer is disabled.
+CHECKER: InvariantChecker | None = InvariantChecker() if SANITIZE else None
+
+
+def _checker() -> InvariantChecker:
+    assert CHECKER is not None
+    return CHECKER
+
+
+# ---------------------------------------------------------------------------
+# NS-S004 / NS-S001 — OutputBuffer ledgers (shared by both backends)
+# ---------------------------------------------------------------------------
+
+
+def _check_buffer(buf: Any, led: dict[str, int], where: str,
+                  skip: int = 4) -> None:
+    ck = _checker()
+    if len(buf.items) != led["items_in"] - led["items_out"]:
+        ck.report(
+            "NS-S004", f"OutputBuffer {buf.channel_id!r}",
+            f"{where}: buffer holds {len(buf.items)} items but the ledger "
+            f"says {led['items_in']} appended - {led['items_out']} taken",
+            skip=skip)
+    elif buf.used_bytes != led["bytes_in"] - led["bytes_out"]:
+        ck.report(
+            "NS-S004", f"OutputBuffer {buf.channel_id!r}",
+            f"{where}: used_bytes={buf.used_bytes} but the ledger says "
+            f"{led['bytes_in']} appended - {led['bytes_out']} taken bytes",
+            skip=skip)
+
+
+def instrument_output_buffer(cls: type) -> None:
+    """Maintain the append/take ledger and verify fill accounting after
+    every operation.  The ledger doubles as the channel-conservation
+    baseline the control-tick sweep (``instrument_simulator``) and engine
+    ``stop()`` sweep check against."""
+    orig_append = cls.append
+    orig_append_run = cls.append_run
+    orig_take = cls.take
+
+    def append(self: Any, item: Any, size_bytes: int, now_ms: float) -> bool:
+        led = _checker().ledger(self)
+        full = orig_append(self, item, size_bytes, now_ms)
+        led["items_in"] += 1
+        led["bytes_in"] += size_bytes
+        _check_buffer(self, led, "append")
+        return full
+
+    def append_run(self: Any, items: list, size_bytes_each: int,
+                   opened_at_ms: float) -> bool:
+        led = _checker().ledger(self)
+        if (len(items) > 1 and size_bytes_each > 0
+                and self.used_bytes + size_bytes_each * (len(items) - 1)
+                >= self.capacity_bytes):
+            _checker().report(
+                "NS-S004", f"OutputBuffer {self.channel_id!r}",
+                f"append_run of {len(items)} x {size_bytes_each}B onto "
+                f"{self.used_bytes}/{self.capacity_bytes}B crosses capacity "
+                f"before the final item — the caller skipped the room_for "
+                f"pre-split")
+        full = orig_append_run(self, items, size_bytes_each, opened_at_ms)
+        led["items_in"] += len(items)
+        led["bytes_in"] += size_bytes_each * len(items)
+        _check_buffer(self, led, "append_run")
+        return full
+
+    def take(self: Any, now_ms: float) -> tuple:
+        led = _checker().ledger(self)
+        out, nbytes, lifetime = orig_take(self, now_ms)
+        led["items_out"] += len(out)
+        led["bytes_out"] += nbytes
+        _check_buffer(self, led, "take")
+        return out, nbytes, lifetime
+
+    for fn in (append, append_run, take):
+        fn.__qualname__ = f"{cls.__name__}.{fn.__name__}"
+    cls.append = append
+    cls.append_run = append_run
+    cls.take = take
+
+
+# ---------------------------------------------------------------------------
+# NS-S002 / NS-S001 — simulator core (checked clock + control-tick sweep)
+# ---------------------------------------------------------------------------
+
+
+def _make_checked_clock(clock_cls: type) -> type:
+    """Subclass whose ``_now`` is a checked property: the run loop's direct
+    ``clock._now = t`` stores (and ``advance_to``) are verified to never go
+    backwards.  Instances are re-classed in place after construction, so
+    every holder of the clock reference sees the checked behavior."""
+
+    class _CheckedSimClock(clock_cls):  # type: ignore[misc, valid-type]
+        @property
+        def _now(self) -> float:
+            return self.__dict__["_sanitize_now"]
+
+        @_now.setter
+        def _now(self, t: float) -> None:
+            old = self.__dict__.get("_sanitize_now")
+            if old is not None and t < old - 1e-9:
+                _checker().report(
+                    "NS-S002", "SimClock",
+                    f"event time went backwards: {t:.6f} < {old:.6f}")
+            self.__dict__["_sanitize_now"] = t
+
+    _CheckedSimClock.__name__ = f"Checked{clock_cls.__name__}"
+    return _CheckedSimClock
+
+
+def _sweep_channels(sim: Any) -> None:
+    """NS-S001 at a control tick: per channel, emitted items == shipped +
+    still-buffered, and (never-chained channels) delivered <= shipped."""
+    ck = _checker()
+    for ch in sim.channels.values():
+        if ch.chained:
+            ck._ever_chained.add(id(ch.buffer))
+    for cid, ch in sim.channels.items():
+        led = ck.ledger(ch.buffer)
+        buffered = len(ch.buffer.items)
+        if led["items_in"] - led["items_out"] != buffered:
+            ck.report(
+                "NS-S001", f"channel {cid!r}",
+                f"conservation broken at control tick: {led['items_in']} "
+                f"emitted != {led['items_out']} shipped + {buffered} "
+                f"buffered")
+        elif (led["delivered"] > led["items_out"]
+                and id(ch.buffer) not in ck._ever_chained):
+            ck.report(
+                "NS-S001", f"channel {cid!r}",
+                f"delivered {led['delivered']} items but only "
+                f"{led['items_out']} were ever shipped (in-flight count "
+                f"went negative)")
+
+
+def instrument_simulator(sim_cls: type, task_cls: type,
+                         clock_cls: type) -> None:
+    checked_clock = _make_checked_clock(clock_cls)
+    orig_init = sim_cls.__init__
+    orig_tick = sim_cls._control_tick
+    orig_chain = sim_cls._apply_chain
+    orig_enqueue = task_cls.enqueue
+
+    def __init__(self: Any, *args: Any, **kwargs: Any) -> None:
+        orig_init(self, *args, **kwargs)
+        clk = self.clock
+        now = clk.__dict__.pop("_now", 0.0)
+        clk.__class__ = checked_clock
+        clk.__dict__["_sanitize_now"] = now
+
+    def _control_tick(self: Any) -> None:
+        _sweep_channels(self)
+        orig_tick(self)
+
+    def _apply_chain(self: Any, req: Any) -> None:
+        orig_chain(self, req)
+        # chained hand-over enqueues without shipping: retire those
+        # channels' delivered<=shipped check for good
+        ck = _checker()
+        for cid in self.chained_channels:
+            ch = self.channels.get(cid)
+            if ch is not None:
+                ck._ever_chained.add(id(ch.buffer))
+
+    def enqueue(self: Any, items: list, channel_id: str,
+                now: float | None = None) -> None:
+        ck = _checker()
+        if ck._enqueue_depth == 0:
+            ch = self.sim.channels.get(channel_id)
+            if ch is not None:
+                ck.ledger(ch.buffer)["delivered"] += len(items)
+        ck._enqueue_depth += 1
+        try:
+            orig_enqueue(self, items, channel_id, now)
+        finally:
+            ck._enqueue_depth -= 1
+
+    __init__.__qualname__ = f"{sim_cls.__name__}.__init__"
+    _control_tick.__qualname__ = f"{sim_cls.__name__}._control_tick"
+    _apply_chain.__qualname__ = f"{sim_cls.__name__}._apply_chain"
+    enqueue.__qualname__ = f"{task_cls.__name__}.enqueue"
+    sim_cls.__init__ = __init__
+    sim_cls._control_tick = _control_tick
+    sim_cls._apply_chain = _apply_chain
+    task_cls.enqueue = enqueue
+
+
+# ---------------------------------------------------------------------------
+# NS-S001 — engine stop() sweep
+# ---------------------------------------------------------------------------
+
+
+def instrument_engine(engine_cls: type) -> None:
+    """Verify every sender's buffer ledger once the engine has drained —
+    the engine's per-operation accounting is already covered by the
+    OutputBuffer wrappers; this closes the run with a whole-channel check."""
+    orig_stop = engine_cls.stop
+
+    def stop(self: Any) -> Any:
+        res = orig_stop(self)
+        ck = _checker()
+        for cid, s in self.senders.items():
+            _check_buffer(s.buffer, ck.ledger(s.buffer),
+                          f"engine stop() sweep of {cid!r}", skip=3)
+        return res
+
+    stop.__qualname__ = f"{engine_cls.__name__}.stop"
+    engine_cls.stop = stop
+
+
+# ---------------------------------------------------------------------------
+# NS-S003 — key-ownership exclusivity after migration
+# ---------------------------------------------------------------------------
+
+
+def instrument_rewirer(rewirer_cls: type) -> None:
+    orig_migrate = rewirer_cls._migrate_keyed_state
+
+    def _migrate_keyed_state(self: Any, job_vertex: str, plan: Any) -> None:
+        orig_migrate(self, job_vertex, plan)
+        jv = self.jg.vertices.get(job_vertex)
+        if jv is None or not jv.stateful:
+            return
+        ck = _checker()
+        router = self.rg.routers[job_vertex]
+        seen: dict[Any, Any] = {}
+        for v in self.rg.tasks_of(job_vertex):
+            store = self._task_state(v)
+            if store is None:
+                continue
+            for key in store.keys():
+                owner = router.owner(key)
+                if key in seen:
+                    ck.report(
+                        "NS-S003", f"migration of {job_vertex!r}",
+                        f"key {key!r} present in both {seen[key]} and "
+                        f"{v.id} after the table swap")
+                elif owner != v.index:
+                    ck.report(
+                        "NS-S003", f"migration of {job_vertex!r}",
+                        f"key {key!r} resides in {v.id} but the routing "
+                        f"table owns it to subtask {owner}")
+                seen[key] = v.id
+
+    _migrate_keyed_state.__qualname__ = \
+        f"{rewirer_cls.__name__}._migrate_keyed_state"
+    rewirer_cls._migrate_keyed_state = _migrate_keyed_state

@@ -146,3 +146,12 @@ from ..analysis import race as _race  # noqa: E402
 
 if _race.RACE_CHECK:  # pragma: no cover - exercised via subprocess tests
     _race.instrument_output_buffer(OutputBuffer)
+
+# -- runtime invariant sanitizer hook (analysis/sanitize.py) -----------------
+# Same zero-cost contract: under REPRO_SANITIZE=1 every buffer keeps an
+# append/take ledger and fill accounting is verified after each operation
+# (NS-S004); the ledgers also feed the channel-conservation sweeps (NS-S001).
+from ..analysis import sanitize as _sanitize  # noqa: E402
+
+if _sanitize.SANITIZE:  # pragma: no cover - exercised via subprocess tests
+    _sanitize.instrument_output_buffer(OutputBuffer)

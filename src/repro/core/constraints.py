@@ -98,6 +98,15 @@ class JobSequence:
     def edges(self) -> list[tuple[str, str]]:
         return [el.edge for el in self.elements if el.kind == "edge"]
 
+    def adjacent_task_pairs(self) -> list[tuple[str, str]]:
+        """Consecutive *task* pairs along the sequence — the candidate
+        §3.5.2 chain pairs.  Shared by the pre-flight chaining
+        pre-computation (analysis/graph_check.py) and the static
+        feasibility pass (analysis/feasibility.py) so both reason about
+        the same pair set."""
+        ts = self.vertices()
+        return list(zip(ts, ts[1:]))
+
     def covered_path(self) -> tuple[str, ...]:
         """The job-vertex path spanned by this sequence, including endpoint
         vertices of boundary edges."""

@@ -601,3 +601,13 @@ def split_constraints(constraints) -> tuple[list, list[ThroughputConstraint]]:
         else:
             latency.append(c)
     return latency, throughput
+
+
+# -- runtime invariant sanitizer hook (analysis/sanitize.py) -----------------
+# Under REPRO_SANITIZE=1 every keyed-state migration is followed by an
+# ownership scan: each key of the stage must reside in exactly the store of
+# its routed owner (NS-S003).
+from ..analysis import sanitize as _sanitize  # noqa: E402
+
+if _sanitize.SANITIZE:  # pragma: no cover - exercised via subprocess tests
+    _sanitize.instrument_rewirer(RuntimeRewirer)

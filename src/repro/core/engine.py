@@ -43,6 +43,7 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable
 
+from ..analysis import race as _race
 from ..analysis.race import make_lock as _make_tracked_lock
 from .buffers import BufferSizingPolicy, OutputBuffer
 from .chaining import ChainRequest, DRAIN_QUEUES
@@ -107,6 +108,9 @@ class EngineResult:
     unchain_log: list = field(default_factory=list)
     #: worker-pool acquire/release audit (core/placement.py PoolEvent)
     pool_events: list = field(default_factory=list)
+    #: pre-flight WARN diagnostics (analysis/graph_check.py) carried onto
+    #: the result so benchmark harnesses can surface them per row
+    preflight_diagnostics: list = field(default_factory=list)
 
     @property
     def mean_latency_ms(self) -> float:
@@ -527,7 +531,7 @@ class StreamEngine(RuntimeRewirer):
                 num_key_ranges=num_key_ranges,
                 initial_buffer_bytes=initial_buffer_bytes,
                 max_buffer_lifetime_ms=max_buffer_lifetime_ms,
-                policy=policy)
+                policy=policy, sources=sources)
         else:
             self.preflight_diagnostics = []
         #: max output-buffer lifetime (§3.5.1 companion): with QoS off and a
@@ -587,10 +591,10 @@ class StreamEngine(RuntimeRewirer):
             self.executors[c.src].senders.setdefault(c.dst.job_vertex, []).append(s)
 
         self._sink_lat: list[float] = []
-        self._sink_lock = threading.Lock()
+        self._sink_lock = _make_tracked_lock()
         self._bytes = 0
         self._buffers = 0
-        self._stats_lock = threading.Lock()
+        self._stats_lock = _make_tracked_lock()
         self._stop = threading.Event()
         self._chained_groups: list[tuple[str, ...]] = []
         self._give_ups: list[GiveUp] = []
@@ -800,6 +804,13 @@ class StreamEngine(RuntimeRewirer):
                     f"timeout on "
                     f"{[t.vertex.id for t in stuck if not t.chained]} after "
                     f"{self.drain_timeout_s}s; chain aborted")
+                if _race.CHECKER is not None:
+                    # blocked-drain watchdog: record what each stuck thread
+                    # still holds (deadlock forensics, analysis/race.py)
+                    _race.CHECKER.report_blocked_drain(
+                        f"apply_chain({[v.id for v in req.tasks]}): tasks "
+                        f"failed to drain within {self.drain_timeout_s}s",
+                        [t.thread for t in stuck if not t.chained])
                 return
             # 4. flip the senders to direct invocation; flush any stragglers
             #    that raced in while draining (delivered synchronously via the
@@ -835,6 +846,12 @@ class StreamEngine(RuntimeRewirer):
                     # running down the chain — restarting member threads now
                     # would run the same task on two threads.  Abort; the
                     # caller surfaces the failure and the rescale stops.
+                    if _race.CHECKER is not None:
+                        _race.CHECKER.report_blocked_drain(
+                            f"_dissolve_chain({[v.id for v in chain]}): "
+                            f"head never parked within "
+                            f"{self.drain_timeout_s}s",
+                            [head.thread])
                     return False
             # 2. give the fused members their threads back FIRST, so the
             #    re-buffered channels have live consumers from the start
@@ -978,6 +995,11 @@ class StreamEngine(RuntimeRewirer):
             if not ex.parked.wait(
                     timeout=max(deadline - time.monotonic(), 0.0)):
                 parked_all = False
+                if _race.CHECKER is not None:
+                    _race.CHECKER.report_blocked_drain(
+                        f"_quiesce_tasks: {v.id} never parked within "
+                        f"{self.drain_timeout_s}s",
+                        [ex.thread])
         return parked_all
 
     def _resume_tasks(self, vs) -> None:
@@ -1076,9 +1098,20 @@ class StreamEngine(RuntimeRewirer):
             drain_failures=list(self.drain_failures),
             unchain_log=list(self.unchain_log),
             pool_events=list(self.rg.pool.events),
+            preflight_diagnostics=list(self.preflight_diagnostics),
         )
 
     def run(self, duration_ms: float) -> EngineResult:
         self.start()
         time.sleep(duration_ms / 1e3)
         return self.stop()
+
+
+# -- runtime invariant sanitizer hook (analysis/sanitize.py) -----------------
+# Per-operation buffer accounting comes from the OutputBuffer wrappers
+# (core/buffers.py hook); this closes each run with a whole-channel ledger
+# sweep at stop() (NS-S001).
+from ..analysis import sanitize as _sanitize  # noqa: E402
+
+if _sanitize.SANITIZE:  # pragma: no cover - exercised via subprocess tests
+    _sanitize.instrument_engine(StreamEngine)

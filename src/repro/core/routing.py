@@ -40,6 +40,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Iterable
 
+from ..analysis import race as _race
+
 #: fixed virtual-partition count shared by routers and state stores; a power
 #: of two well above any realistic parallelism so ranges stay divisible.
 NUM_KEY_RANGES = 128
@@ -267,7 +269,9 @@ class StateStore:
                  locked: bool = True) -> None:
         self.num_ranges = num_ranges
         self._data: dict[Any, Any] = {}
-        self._lock = threading.Lock() if locked else _NULL_LOCK
+        # make_lock IS threading.Lock when the race detector is off
+        # (NS-L006: race-instrumented modules never construct raw locks)
+        self._lock = _race.make_lock() if locked else _NULL_LOCK
 
     # -- per-key access ------------------------------------------------------
     def get(self, key: Any, default: Any = None) -> Any:
@@ -337,8 +341,6 @@ class StateStore:
 # untouched and the hot paths run the exact same bytecode as before this
 # hook existed.  With the flag set, keyed-state accesses and rescale-side
 # router writes feed the per-thread lockset checker.
-from ..analysis import race as _race  # noqa: E402
-
 if _race.RACE_CHECK:  # pragma: no cover - exercised via subprocess tests
     _race.instrument_state_store(StateStore)
     _race.instrument_key_router(KeyRouter)

@@ -715,6 +715,10 @@ class StreamSimulator(RuntimeRewirer):
         preflight: bool = True,
     ) -> None:
         self.jg = jg
+        #: network model — resolved *before* pre-flight so the static
+        #: feasibility pass prices transport with the exact parameters the
+        #: run will use
+        self.net = net or SimNetConfig()
         # pre-flight validation (analysis/graph_check.py): same contract as
         # StreamEngine — ERRORs raise before expansion, WARNs are stored in
         # preflight_diagnostics, preflight=False opts out.  The pass reads
@@ -728,7 +732,7 @@ class StreamSimulator(RuntimeRewirer):
                 num_key_ranges=num_key_ranges,
                 initial_buffer_bytes=initial_buffer_bytes,
                 max_buffer_lifetime_ms=max_buffer_lifetime_ms,
-                policy=policy)
+                policy=policy, sources=sources, net=self.net)
         else:
             self.preflight_diagnostics = []
         #: event-core execution mode — the determinism contract:
@@ -780,7 +784,6 @@ class StreamSimulator(RuntimeRewirer):
         self.rg = RuntimeGraph(jg, num_workers, pool=pool,
                                num_key_ranges=num_key_ranges)
         self.clock = SimClock()
-        self.net = net or SimNetConfig()
         self.enable_qos = enable_qos
         self.enable_chaining = enable_chaining
         self.interval_ms = measurement_interval_ms
@@ -1397,6 +1400,7 @@ class StreamSimulator(RuntimeRewirer):
             drain_failures=list(self.drain_failures),
             unchain_log=list(self.unchain_log),
             pool_events=list(self.rg.pool.events),
+            preflight_diagnostics=list(self.preflight_diagnostics),
         )
 
 
@@ -1421,6 +1425,9 @@ class SimResult:
     #: sink arrivals per item key (per-stream accounting; cross-mode
     #: equivalence compares these between exact and batched runs)
     sink_count_by_key: dict = field(default_factory=dict)
+    #: pre-flight WARN diagnostics (analysis/graph_check.py) carried onto
+    #: the result so benchmark harnesses can surface them per row
+    preflight_diagnostics: list = field(default_factory=list)
 
     def p95_latency_ms(self) -> float:
         """95th percentile of raw sink latencies (shared nearest-rank
@@ -1444,3 +1451,14 @@ class SimResult:
     @property
     def throughput_items_per_s(self) -> float:
         return len(self.sink_latencies_ms) / max(self.duration_ms / 1e3, 1e-9)
+
+
+# -- runtime invariant sanitizer hook (analysis/sanitize.py) -----------------
+# Zero-cost when disabled (the classes above keep their original bytecode);
+# under REPRO_SANITIZE=1 the sim clock becomes a checked property (NS-S002),
+# every control tick sweeps the channel-conservation ledgers (NS-S001), and
+# chained hand-over channels are excluded from the delivered<=shipped check.
+from ..analysis import sanitize as _sanitize  # noqa: E402
+
+if _sanitize.SANITIZE:  # pragma: no cover - exercised via subprocess tests
+    _sanitize.instrument_simulator(StreamSimulator, _SimTask, SimClock)

@@ -199,6 +199,52 @@ def test_heavy_rule_scoped_to_lazy_zones():
     assert ids("import numpy as np\n", "src/repro/accel/kernels.py") == []
 
 
+# -- NS-L006: raw lock construction in race-instrumented modules -------------
+
+
+def test_raw_threading_lock_flagged():
+    src = """
+        import threading
+        class Guarded:
+            __slots__ = ("_lock",)
+            def __init__(self):
+                self._lock = threading.Lock()
+    """
+    assert ids(src, "src/repro/core/buffers.py") == ["NS-L006"]
+
+
+def test_bare_imported_rlock_flagged():
+    src = """
+        from threading import RLock as RL
+        class Guarded:
+            __slots__ = ("_lock",)
+            def __init__(self):
+                self._lock = RL()
+    """
+    assert ids(src, "src/repro/core/engine.py") == ["NS-L006"]
+
+
+def test_make_lock_clean():
+    src = """
+        from ..analysis import race as _race
+        class Guarded:
+            __slots__ = ("_lock",)
+            def __init__(self):
+                self._lock = _race.make_lock()
+    """
+    assert ids(src, "src/repro/core/routing.py") == []
+
+
+def test_raw_lock_rule_scoped_to_race_modules():
+    # modules the race detector does not instrument may lock however they
+    # like (e.g. the manager's control-plane mutex)
+    src = """
+        import threading
+        lock = threading.Lock()
+    """
+    assert ids(src, "src/repro/core/manager.py") == []
+
+
 # -- severity wiring + the repo-clean gate -----------------------------------
 
 

@@ -204,6 +204,152 @@ def test_engine_smoke_clean_under_flag():
     assert "CLEAN" in p.stdout
 
 
+# -- deadlock detection (lock-order graph + blocked-drain watchdog) ----------
+
+
+def test_lock_order_inversion_detected_with_both_stacks():
+    p = run_checked(PREAMBLE + """
+        a, b = make_lock(), make_lock()
+        def t1():
+            with a:
+                with b:
+                    pass
+        def t2():
+            with b:
+                with a:
+                    pass
+        x = threading.Thread(target=t1, name="t1"); x.start(); x.join()
+        y = threading.Thread(target=t2, name="t2"); y.start(); y.join()
+        assert len(CHECKER.deadlocks) == 1, CHECKER.deadlocks
+        d = CHECKER.deadlocks[0]
+        assert d.kind == "lock-order"
+        # GoodLock evidence: the stack that established a->b AND the stack
+        # that closed the cycle with b->a
+        assert "in t1" in d.first_stack, d.first_stack
+        assert "in t2" in d.second_stack, d.second_stack
+        text = d.format()
+        assert "earlier acquisition" in text
+        assert "closed the cycle" in text
+        print("DETECTED")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "DETECTED" in p.stdout
+
+
+def test_lock_order_reported_once_per_pair():
+    p = run_checked(PREAMBLE + """
+        a, b = make_lock(), make_lock()
+        def inverted():
+            with b:
+                with a:
+                    pass
+        with a:
+            with b:
+                pass
+        for i in range(3):  # same inversion three times: one report
+            t = threading.Thread(target=inverted, name=f"inv{i}")
+            t.start(); t.join()
+        assert len(CHECKER.deadlocks) == 1, CHECKER.deadlocks
+        print("ONCE")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "ONCE" in p.stdout
+
+
+def test_consistent_order_and_reentrancy_stay_clean():
+    p = run_checked(PREAMBLE + """
+        a, b = make_lock(), make_lock()
+        def work():
+            for _ in range(50):
+                with a:
+                    with a:      # reentrant re-acquire: no self-edge
+                        with b:  # always a -> b: no inversion
+                            pass
+        hammer(work)
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+def test_blocked_drain_reports_held_locks():
+    p = run_checked(PREAMBLE + """
+        import time
+        held = make_lock()
+        ev = threading.Event()
+        def stuck():
+            with held:
+                ev.wait()
+        t = threading.Thread(target=stuck, name="stuck-task", daemon=True)
+        t.start(); time.sleep(0.1)
+        CHECKER.report_blocked_drain(
+            "apply_chain: tasks failed to drain within 5s", [t])
+        ev.set(); t.join()
+        assert len(CHECKER.deadlocks) == 1
+        d = CHECKER.deadlocks[0]
+        assert d.kind == "blocked-drain"
+        assert "'stuck-task' holds lock#" in d.description
+        assert "in stuck" in d.description  # the acquire stack is included
+        try:
+            CHECKER.assert_clean()
+        except AssertionError as e:
+            assert "deadlock finding" in str(e)
+            print("RAISED")
+        else:
+            raise SystemExit("assert_clean did not raise")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "RAISED" in p.stdout
+
+
+def test_engine_drain_timeout_triggers_watchdog():
+    # a task fn that never returns forces apply_chain's drain wait past
+    # drain_timeout_s: the engine must both record the drain failure AND
+    # hand the stuck thread to the blocked-drain watchdog
+    p = run_checked("""
+        import time
+        from repro.analysis.race import CHECKER
+        assert CHECKER is not None
+        from repro.core import (
+            ALL_TO_ALL, JobConstraint, JobGraph, JobSequence, JobVertex,
+            SourceSpec, StreamEngine)
+        from repro.core.chaining import ChainRequest, DRAIN_QUEUES
+
+        def hang(p, emit, ctx):
+            time.sleep(60.0)
+
+        jg = JobGraph("watchdog")
+        jg.add_vertex(JobVertex("Src", 1, is_source=True))
+        jg.add_vertex(JobVertex("A", 1))
+        jg.add_vertex(JobVertex("B", 1, fn=hang))
+        jg.add_vertex(JobVertex("Sink", 1, is_sink=True))
+        jg.add_edge("Src", "A", ALL_TO_ALL)
+        jg.add_edge("A", "B", ALL_TO_ALL)
+        jg.add_edge("B", "Sink", ALL_TO_ALL)
+        seq = JobSequence.of(("Src", "A"), "A", ("A", "B"), "B",
+                             ("B", "Sink"))
+        eng = StreamEngine(
+            jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")],
+            num_workers=1,
+            sources={"Src": SourceSpec(100.0, lambda s: (b"x" * 32, 32))},
+            initial_buffer_bytes=256, enable_qos=False,
+            enable_chaining=False)
+        eng.drain_timeout_s = 0.5
+        eng.start()
+        time.sleep(0.5)  # let B start hanging on an item
+        tasks = tuple(eng.rg.tasks_of("A")) + tuple(eng.rg.tasks_of("B"))
+        eng.apply_chain(ChainRequest(tasks, worker=0, mode=DRAIN_QUEUES))
+        assert eng.drain_failures, "expected a drain failure"
+        wd = [d for d in CHECKER.deadlocks if d.kind == "blocked-drain"]
+        assert wd, "watchdog did not fire"
+        assert "failed to drain" in wd[0].description
+        print("WATCHDOG", len(wd))
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "WATCHDOG" in p.stdout
+
+
 # -- disabled mode: zero cost, classes untouched (in-process) ----------------
 
 

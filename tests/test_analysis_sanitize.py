@@ -1,0 +1,255 @@
+"""Runtime invariant sanitizer (analysis/sanitize.py, NS-S00x).
+
+Same harness shape as test_analysis_race.py: the flag is read once at
+repro import, so every enabled-mode scenario runs in a subprocess with
+``REPRO_SANITIZE=1``; the disabled-mode zero-cost assertions run
+in-process (this test session never sets the flag).
+
+Covers: each rule catches a seeded violation with a capture-site stack in
+the diagnostic's ``detail``; the golden chain scenario and a keyed
+scale-out run come back clean; and the disabled path leaves the core
+classes untouched.
+"""
+from __future__ import annotations
+
+import os
+import subprocess
+import sys
+import textwrap
+from pathlib import Path
+
+ROOT = Path(__file__).resolve().parent.parent
+
+
+def run_sanitized(body: str, *, flag: str = "1") -> subprocess.CompletedProcess:
+    env = dict(os.environ)
+    env["REPRO_SANITIZE"] = flag
+    env["PYTHONPATH"] = os.pathsep.join(
+        [str(ROOT / "src"), str(ROOT / "tests")])
+    return subprocess.run(
+        [sys.executable, "-c", textwrap.dedent(body)],
+        capture_output=True, text=True, env=env, cwd=ROOT, timeout=180)
+
+
+PREAMBLE = """
+        from repro.analysis.sanitize import CHECKER, SANITIZE
+        assert SANITIZE and CHECKER is not None
+"""
+
+
+def test_append_run_contract_violation_detected():
+    # NS-S004: append_run crossing capacity before the final item (the
+    # caller skipped the room_for pre-split)
+    p = run_sanitized(PREAMBLE + """
+        from repro.core.buffers import OutputBuffer
+        buf = OutputBuffer("c1", capacity_bytes=100)
+        buf.append_run(["x"] * 5, 40, 0.0)
+        s004 = [d for d in CHECKER.reports if d.rule == "NS-S004"]
+        assert s004, CHECKER.reports
+        assert "room_for" in s004[0].message
+        assert "capture site" in s004[0].detail
+        print("DETECTED")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "DETECTED" in p.stdout
+
+
+def test_fill_accounting_violation_detected():
+    # NS-S004: out-of-band mutation desynchronizes used_bytes from the
+    # append/take ledger — the next operation notices
+    p = run_sanitized(PREAMBLE + """
+        from repro.core.buffers import OutputBuffer
+        buf = OutputBuffer("c1", capacity_bytes=4096)
+        buf.append("x", 64, 0.0)
+        buf.used_bytes += 13  # corruption (bypasses the instrumented API)
+        buf.append("y", 64, 1.0)
+        s004 = [d for d in CHECKER.reports if d.rule == "NS-S004"]
+        assert s004 and "used_bytes" in s004[0].message, CHECKER.reports
+        print("DETECTED")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "DETECTED" in p.stdout
+
+
+def test_backwards_event_time_detected():
+    # NS-S002: the checked clock flags a backwards store; reported, never
+    # raised mid-run
+    p = run_sanitized(PREAMBLE + """
+        from repro.analysis.sanitize import _make_checked_clock
+        from repro.core.clock import SimClock
+        clk = SimClock()
+        now = clk.__dict__.pop("_now", 0.0)
+        clk.__class__ = _make_checked_clock(SimClock)
+        clk.__dict__["_sanitize_now"] = now
+        clk._now = 100.0
+        clk._now = 99.5
+        s002 = [d for d in CHECKER.reports if d.rule == "NS-S002"]
+        assert s002, CHECKER.reports
+        assert "went backwards" in s002[0].message
+        assert "capture site" in s002[0].detail
+        assert clk.now() == 99.5  # observation only: the store still lands
+        print("DETECTED")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "DETECTED" in p.stdout
+
+
+def test_ownership_violation_after_migration_detected():
+    # NS-S003: a key planted in the wrong subtask's store survives the
+    # migration's table swap and is flagged by the post-scan
+    p = run_sanitized(PREAMBLE + """
+        from repro.core import (ALL_TO_ALL, JobConstraint, JobGraph,
+                                JobSequence, JobVertex, SimSourceSpec,
+                                StreamSimulator)
+        jg = JobGraph("s003")
+        jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+        jg.add_vertex(JobVertex("Work", 2, sim_cpu_ms=3.0,
+                                sim_item_bytes=256, stateful=True))
+        jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01))
+        jg.add_edge("Src", "Work", ALL_TO_ALL)
+        jg.add_edge("Work", "Sink", ALL_TO_ALL)
+        seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+        sim = StreamSimulator(
+            jg, [JobConstraint(seq, 1e9, 4_000.0, name="mon")],
+            num_workers=2,
+            sources={"Src": SimSourceSpec(120.0, item_bytes=256, keys=48)},
+            initial_buffer_bytes=1024, enable_qos=True,
+            enable_chaining=False, seed=5)
+
+        def corrupt():
+            tasks = sim.rg.tasks_of("Work")
+            router = sim.rg.routers["Work"]
+            s0 = sim._task_state(tasks[0])
+            for k in range(200):
+                if router.owner(k) == 1:  # plant a key subtask 1 owns
+                    s0.put(k, {"planted": True})
+                    break
+
+        sim.schedule(5_000.0, corrupt)
+        sim.schedule(7_000.0, lambda: sim.scale_out("Work", 4))
+        sim.run(12_000.0)
+        s003 = [d for d in CHECKER.reports if d.rule == "NS-S003"]
+        assert s003, CHECKER.reports
+        assert "routing table owns it" in s003[0].message
+        assert "capture site" in s003[0].detail
+        print("DETECTED")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "DETECTED" in p.stdout
+
+
+def test_conservation_violation_detected():
+    # NS-S001: items vanishing from a buffer behind the ledger's back are
+    # caught by the control-tick sweep
+    p = run_sanitized(PREAMBLE + """
+        from test_sim_determinism import chain_sim
+        sim = chain_sim()
+        def steal():
+            for ch in sim.channels.values():
+                if ch.buffer.items:
+                    ch.buffer.items.pop()   # lose one item (no take())
+                    break
+        sim.schedule(10_000.0, steal)
+        sim.run(20_000.0)
+        s001 = [d for d in CHECKER.reports if d.rule == "NS-S001"]
+        assert s001, CHECKER.reports
+        assert "conservation" in s001[0].message
+        print("DETECTED")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "DETECTED" in p.stdout
+
+
+def test_golden_chain_scenario_clean():
+    # the golden single-worker chaining scenario — buffer resizes, a live
+    # chain fusion, flush sweeps — runs with zero sanitizer reports (the
+    # CI arm runs all three goldens; this is the fast in-suite version)
+    p = run_sanitized(PREAMBLE + """
+        from test_sim_determinism import chain_sim
+        chain_sim().run(20_000.0)
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+def test_keyed_scale_out_clean():
+    # keyed stateful migration (the NS-S003 scenario *without* the seeded
+    # corruption) plus an engine stop() sweep stay clean
+    p = run_sanitized(PREAMBLE + """
+        import time
+        from repro.core import (ALL_TO_ALL, JobConstraint, JobGraph,
+                                JobSequence, JobVertex, SimSourceSpec,
+                                SourceSpec, StreamEngine, StreamSimulator)
+        jg = JobGraph("clean")
+        jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+        jg.add_vertex(JobVertex("Work", 2, sim_cpu_ms=3.0,
+                                sim_item_bytes=256, stateful=True))
+        jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01))
+        jg.add_edge("Src", "Work", ALL_TO_ALL)
+        jg.add_edge("Work", "Sink", ALL_TO_ALL)
+        seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+        sim = StreamSimulator(
+            jg, [JobConstraint(seq, 1e9, 4_000.0, name="mon")],
+            num_workers=2,
+            sources={"Src": SimSourceSpec(120.0, item_bytes=256, keys=48)},
+            initial_buffer_bytes=1024, enable_qos=True,
+            enable_chaining=False, seed=5)
+        sim.schedule(5_000.0, lambda: sim.scale_out("Work", 4))
+        sim.run(12_000.0)
+
+        def agg(p, emit, ctx):
+            ctx.state.bump(ctx._current_item.key)
+            emit(p)
+        jge = JobGraph("clean-engine")
+        jge.add_vertex(JobVertex("Src", 2, is_source=True))
+        jge.add_vertex(JobVertex("Agg", 2, fn=agg, stateful=True))
+        jge.add_vertex(JobVertex("Sink", 1, is_sink=True))
+        jge.add_edge("Src", "Agg", ALL_TO_ALL)
+        jge.add_edge("Agg", "Sink", ALL_TO_ALL)
+        sq = JobSequence.of(("Src", "Agg"), "Agg", ("Agg", "Sink"))
+        eng = StreamEngine(
+            jge, [JobConstraint(sq, 1e9, 2_000.0, name="mon")],
+            num_workers=2,
+            sources={"Src": SourceSpec(200.0, lambda s: (b"x" * 64, 64),
+                                       key_of=lambda s: s % 16)},
+            initial_buffer_bytes=512, measurement_interval_ms=400.0,
+            enable_qos=False, enable_chaining=False,
+            max_buffer_lifetime_ms=200.0)
+        eng.start()
+        time.sleep(0.6)
+        eng.scale_out("Agg", 4, reason="sanitize-smoke")
+        time.sleep(0.6)
+        eng.stop()
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+# -- disabled mode: zero cost, classes untouched (in-process) ----------------
+
+
+def test_disabled_mode_is_zero_cost():
+    from repro.analysis import sanitize
+    from repro.core.buffers import OutputBuffer
+    from repro.core.clock import SimClock
+    from repro.core.elastic import RuntimeRewirer
+    from repro.core.engine import StreamEngine
+    from repro.core.simulator import StreamSimulator, _SimTask
+
+    assert sanitize.SANITIZE is False
+    assert sanitize.CHECKER is None
+    # instrumentation never touched the core classes: their methods still
+    # live in their own modules, not in analysis.sanitize wrappers
+    assert OutputBuffer.append.__module__ == "repro.core.buffers"
+    assert OutputBuffer.append_run.__module__ == "repro.core.buffers"
+    assert OutputBuffer.take.__module__ == "repro.core.buffers"
+    assert _SimTask.enqueue.__module__ == "repro.core.simulator"
+    assert StreamSimulator._control_tick.__module__ == "repro.core.simulator"
+    assert StreamEngine.stop.__module__ == "repro.core.engine"
+    assert (RuntimeRewirer._migrate_keyed_state.__module__
+            == "repro.core.elastic")
+    assert SimClock.__name__ == "SimClock"  # no checked-subclass swap

@@ -97,6 +97,10 @@ def test_give_up_reports_on_infeasible_constraint():
         initial_buffer_bytes=omega,
         policy=BufferSizingPolicy(omega_bytes=omega),
         enable_qos=True, enable_chaining=True,
+        # the static feasibility pass (NS-F001) correctly rejects this
+        # deliberately-impossible bound at construction; bypass it — the
+        # point here is the *runtime* give-up path
+        preflight=False,
     )
     res = sim.run(60_000.0)
     assert len(res.give_ups) >= 1
