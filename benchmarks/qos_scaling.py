@@ -189,26 +189,42 @@ def run_keyed_burst(smoke: bool = False):
     with its key ranges, no key lost, duplicated, or split across owners)."""
     rows = []
     keys = 48
+
     # -- simulator ----------------------------------------------------------
-    jg, jcs = _keyed_job(agg_cost_ms=2.0)
-    sim = StreamSimulator(
-        jg, jcs, num_workers=2,
-        sources={"Src": SimSourceSpec(
-            200.0, item_bytes=64, keys=keys,
-            # burst, taper, then silence so the pipeline fully drains
-            rate_fn=lambda t: 200.0 if t < 8_000.0 else (
-                50.0 if t < 12_000.0 else 1e-9))},
-        initial_buffer_bytes=256, enable_qos=False,
-        max_buffer_lifetime_ms=500.0)
-    sim.schedule(3_000.0, lambda: sim.scale_out("Agg", 5))
-    sim.schedule(10_000.0, lambda: sim.scale_in("Agg", 2))
-    t0 = time.perf_counter()
-    res = sim.run(20_000.0)
-    wall = (time.perf_counter() - t0) * 1e6
+    def _sim_arm(scheduler: str):
+        jg, jcs = _keyed_job(agg_cost_ms=2.0)
+        sim = StreamSimulator(
+            jg, jcs, num_workers=2,
+            sources={"Src": SimSourceSpec(
+                200.0, item_bytes=64, keys=keys,
+                # burst, taper, then silence so the pipeline fully drains
+                rate_fn=lambda t: 200.0 if t < 8_000.0 else (
+                    50.0 if t < 12_000.0 else 1e-9))},
+            initial_buffer_bytes=256, enable_qos=False,
+            max_buffer_lifetime_ms=500.0, scheduler=scheduler)
+        sim.schedule(3_000.0, lambda: sim.scale_out("Agg", 5))
+        sim.schedule(10_000.0, lambda: sim.scale_in("Agg", 2))
+        t0 = time.perf_counter()
+        res = sim.run(20_000.0)
+        return sim, res, (time.perf_counter() - t0) * 1e6
+
+    # warm both arms once (allocator/caches), then measure side by side —
+    # same machine, same process, same run (docs/perf.md methodology)
+    for sched in ("calendar", "heap"):
+        _sim_arm(sched)
+    sim, res, wall = _sim_arm("calendar")
+    heap_sim, heap_res, heap_wall = _sim_arm("heap")
+    assert heap_res.events == res.events, (
+        "keyed_burst_sim: schedulers dispatched different event counts "
+        f"({res.events} calendar vs {heap_res.events} heap)")
+    assert heap_res.sink_latencies_ms == res.sink_latencies_ms, (
+        "keyed_burst_sim: schedulers diverged on sink latencies")
     # events/sec over the sim.run wall — the CI perf canary (scripts/ci.sh
-    # reads it from this derived column, warn-only).  PR-4 baseline on the
-    # pre-overhaul event core: ~40k events/s through this same harness.
+    # reads it from this derived column and enforces EVENTS_PER_SEC_FLOOR).
+    # PR-4 baseline on the pre-overhaul event core: ~40k events/s through
+    # this same harness.
     events_per_sec = res.events / (wall / 1e6)
+    heap_events_per_sec = heap_res.events / (heap_wall / 1e6)
     group = sim.rg.tasks_of("Agg")
     agg = _merge_states(lambda v: sim.tasks[v], group)
     truth = dict(sim.tasks[sim.rg.tasks_of("Sink")[0]].state.items())
@@ -225,7 +241,13 @@ def run_keyed_burst(smoke: bool = False):
         f"keys={len(agg)};items={sum(agg.values())};exact=True;"
         f"single_owner=True;final={len(group)};"
         f"rescales={len(res.scale_log)};"
-        f"events={res.events};events_per_sec={events_per_sec:.0f}",
+        f"events={res.events};events_per_sec={events_per_sec:.0f};"
+        f"speedup_vs_heap={events_per_sec / heap_events_per_sec:.2f}x",
+    ))
+    rows.append((
+        "keyed_burst_sim_heap", heap_wall,
+        f"events={heap_res.events};"
+        f"events_per_sec={heap_events_per_sec:.0f};scheduler=heap",
     ))
     # -- threaded engine ----------------------------------------------------
     def agg_fn(p, emit, ctx):

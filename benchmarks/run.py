@@ -2,11 +2,18 @@
 benches.  Prints ``name,us_per_call,derived`` CSV lines.
 
     PYTHONPATH=src python -m benchmarks.run [--full] [--only NAME] [--smoke]
-                                            [--bench-out]
+                                            [--bench-out] [--profile]
 
 ``--smoke``: CI mode — tiny shapes, seconds not minutes, to catch executor
 regressions.  Only modules whose ``run`` accepts a ``smoke`` keyword take
 part (the rest are skipped); failures still exit non-zero.
+
+``--profile``: wrap each module's ``run`` in cProfile and write the raw
+stats to ``BENCH_<module>.prof`` next to the JSON artifact (inspect with
+``python -m pstats BENCH_<module>.prof``) — so perf PRs start from a
+recorded profile instead of guesswork.  Profiling inflates wall times;
+numbers from a profiled run are for attribution, not for the perf
+trajectory.
 
 ``--bench-out``: record the run — every module's rows land in
 ``BENCH_<module>.json`` at the repo root via :func:`write_bench`, the
@@ -74,6 +81,9 @@ def main() -> None:
     ap.add_argument("--bench-out", action="store_true",
                     help="write BENCH_<module>.json rows next to the repo "
                          "root (perf trajectory)")
+    ap.add_argument("--profile", action="store_true",
+                    help="cProfile each module and write BENCH_<module>.prof "
+                         "next to the JSON artifact")
     args = ap.parse_args()
 
     # preflight WARNs (graph_check/feasibility, e.g. NS-F002 "goal only
@@ -96,7 +106,21 @@ def main() -> None:
                 kwargs["smoke"] = True
             rows = []
             warn_mark = graph_check.preflight_warn_count
-            for name, us, derived in mod.run(**kwargs):
+            if args.profile:
+                # profile the module's whole run (modules may return lists
+                # or generators — consume under the profiler either way)
+                import cProfile
+
+                prof = cProfile.Profile()
+                prof.enable()
+                try:
+                    results = list(mod.run(**kwargs))
+                finally:
+                    prof.disable()
+                    prof.dump_stats(BENCH_DIR / f"BENCH_{mod_name}.prof")
+            else:
+                results = mod.run(**kwargs)
+            for name, us, derived in results:
                 warns = graph_check.preflight_warn_count - warn_mark
                 warn_mark = graph_check.preflight_warn_count
                 rows.append({"name": name, "us_per_call": round(us, 1),

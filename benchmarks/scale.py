@@ -15,8 +15,11 @@ benchmarks/run.py):
   event cores — the pair gives the exact-vs-batched events/sec trajectory
   at identical physics,
 * n=200 / m=800 / 3200 streams (~80k items/s offered) — the paper's FULL
-  Fig. 8 grid, batched core (`event_mode="batched"`; the exact core's
-  per-completion events make this grid impractical to record).
+  Fig. 8 grid in BOTH event cores: the calendar-queue scheduler +
+  struct-of-arrays dispatch (core/eventq.py) makes the exact core's
+  per-completion event stream recordable at this scale for the first
+  time (the pre-overhaul heap core managed ~40k events/s; see
+  docs/perf.md).
 
 Latencies are averaged after a 60% settle point so the constraints-on arm
 is measured converged.  Routing uses 1024 virtual key ranges where m
@@ -65,7 +68,8 @@ MODE_LATENCY_RTOL = 0.01
 
 def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
              duration_ms: float, seed: int = 42,
-             event_mode: str = "exact") -> dict:
+             event_mode: str = "exact",
+             scheduler: str = "calendar") -> dict:
     p = MediaJobParams(parallelism=m, num_workers=n, streams=streams,
                       fps=25.0, latency_limit_ms=300.0)
     jg, jcs = build_media_job(p)
@@ -86,6 +90,7 @@ def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
         seed=seed,
         num_key_ranges=key_ranges_for(m),
         event_mode=event_mode,
+        scheduler=scheduler,
     )
     t0 = time.perf_counter()
     res = sim.run(duration_ms)
@@ -94,6 +99,7 @@ def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
     return {
         "constraints": "on" if constraints_on else "off",
         "event_mode": event_mode,
+        "scheduler": scheduler,
         "wall_s": round(wall_s, 3),
         "events": res.events,
         "events_per_sec": round(res.events / wall_s, 1),
@@ -110,11 +116,14 @@ def _run_arm(constraints_on: bool, n: int, m: int, streams: int,
 
 def run_scale(n: int, m: int, streams: int, duration_ms: float,
               record_floor: bool,
-              event_mode: str = "exact") -> tuple[list, dict]:
-    """One constraints-off/on grid in one event mode.  Returns the printable
-    rows and the grid record (for BENCH_scale.json)."""
-    off = _run_arm(False, n, m, streams, duration_ms, event_mode=event_mode)
-    on = _run_arm(True, n, m, streams, duration_ms, event_mode=event_mode)
+              event_mode: str = "exact",
+              scheduler: str = "calendar") -> tuple[list, dict]:
+    """One constraints-off/on grid in one event mode and scheduler.
+    Returns the printable rows and the grid record (for BENCH_scale.json)."""
+    off = _run_arm(False, n, m, streams, duration_ms, event_mode=event_mode,
+                   scheduler=scheduler)
+    on = _run_arm(True, n, m, streams, duration_ms, event_mode=event_mode,
+                  scheduler=scheduler)
     factor = off["mean_latency_ms"] / max(on["mean_latency_ms"], 1e-9)
     matched = (on["throughput_items_per_s"]
                >= THROUGHPUT_MATCH * off["throughput_items_per_s"])
@@ -131,6 +140,7 @@ def run_scale(n: int, m: int, streams: int, duration_ms: float,
         "scenario": "fig8_livestream",
         "workers": n, "parallelism": m, "streams": streams,
         "event_mode": event_mode,
+        "scheduler": scheduler,
         "fps": 25.0, "duration_ms": duration_ms,
         "offered_items_per_s": 25.0 * streams,
         "latency_limit_ms": 300.0, "window_ms": 15_000.0,
@@ -139,6 +149,8 @@ def run_scale(n: int, m: int, streams: int, duration_ms: float,
         "arms": [off, on],
     }
     suffix = "" if event_mode == "exact" else f"_{event_mode}"
+    if scheduler != "calendar":
+        suffix += f"_{scheduler}"
     rows = []
     for arm in (off, on):
         derived = (
@@ -174,12 +186,13 @@ def _assert_mode_equivalence(exact_grid: dict, batched_grid: dict) -> None:
 def run_full_grid(duration_ms: float = 60_000.0,
                   record: bool = True) -> list[tuple[str, float, str]]:
     """The recorded paper-scale run: m=200 in both event modes (the
-    exact-vs-batched perf trajectory) + the FULL Fig. 8 m=800 grid
-    (batched).  Writes BENCH_scale.json when ``record``."""
+    exact-vs-batched perf trajectory) + the FULL Fig. 8 m=800 grid in
+    both cores — the exact-mode m=800 leg exists because of the
+    calendar-queue event core.  Writes BENCH_scale.json when ``record``."""
     rows: list = []
     grids: list[dict] = []
     for m, streams, mode in ((200, 800, "exact"), (200, 800, "batched"),
-                             (800, 3200, "batched")):
+                             (800, 3200, "exact"), (800, 3200, "batched")):
         r, g = run_scale(n=200, m=m, streams=streams,
                          duration_ms=duration_ms, record_floor=True,
                          event_mode=mode)
@@ -196,19 +209,39 @@ def run_full_grid(duration_ms: float = 60_000.0,
     return rows
 
 
+def _assert_scheduler_equivalence(cal_grid: dict, heap_grid: dict) -> None:
+    """The two schedulers are the SAME physics down to the bit (they share
+    one total order), so their arms must agree exactly — not within a
+    tolerance like the cross-mode check."""
+    for gc, gh in zip(cal_grid["arms"], heap_grid["arms"]):
+        for key in ("events", "items_at_sinks", "mean_latency_ms",
+                    "max_latency_ms", "throughput_items_per_s",
+                    "total_buffers", "total_mb", "chains", "give_ups"):
+            assert gc[key] == gh[key], (
+                f"scheduler equivalence: {key} diverged "
+                f"({gc[key]} calendar vs {gh[key]} heap, "
+                f"constraints {gc['constraints']})")
+
+
 def run(quick: bool = True, smoke: bool = False):
     if smoke:
         # seconds-level CI canary: same physics, n=20 cluster, BOTH event
-        # modes, cross-mode equivalence asserted; no artifact
+        # modes AND both schedulers; cross-mode equivalence (1% latency
+        # tolerance) and bit-exact cross-scheduler equivalence asserted
         rows, exact_grid = run_scale(n=20, m=20, streams=80,
                                      duration_ms=30_000.0,
                                      record_floor=False)
+        hrows, heap_grid = run_scale(n=20, m=20, streams=80,
+                                     duration_ms=30_000.0,
+                                     record_floor=False,
+                                     scheduler="heap")
+        _assert_scheduler_equivalence(exact_grid, heap_grid)
         brows, batched_grid = run_scale(n=20, m=20, streams=80,
                                         duration_ms=30_000.0,
                                         record_floor=False,
                                         event_mode="batched")
         _assert_mode_equivalence(exact_grid, batched_grid)
-        return rows + brows
+        return rows + hrows + brows
     # the recorded n=200 grids (BENCH_scale.json), m=800 included
     return run_full_grid()
 

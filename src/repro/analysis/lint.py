@@ -51,6 +51,11 @@ register("NS-L006", ERROR, "raw lock construction in a race-instrumented "
          "threading.Lock when the detector is off); a raw "
          "threading.Lock()/RLock() is invisible to the lockset race "
          "detector and the lock-order deadlock pass")
+register("NS-L007", ERROR, "heapq use outside core/eventq.py",
+         "core/eventq.py is the event core's single ordering authority; "
+         "import the re-exported heappush/heappop from there (or use an "
+         "event queue class) so every priority queue in the tree shares "
+         "one verified total-order contract")
 
 # -- per-rule configuration (paths are repo-relative, POSIX separators) ------
 
@@ -78,6 +83,7 @@ KEY_MOD_EXEMPT = frozenset({
 SLOTS_REQUIRED_MODULES: dict[str, frozenset[str]] = {
     "src/repro/core/routing.py": frozenset(),
     "src/repro/core/buffers.py": frozenset(),
+    "src/repro/core/eventq.py": frozenset(),
     "src/repro/core/simulator.py": frozenset(
         {"StreamSimulator", "SimNetConfig", "SimSourceSpec", "SimResult"}),
 }
@@ -320,6 +326,43 @@ def _check_raw_locks(ctx: LintContext) -> list[Diagnostic]:
 
 
 # ---------------------------------------------------------------------------
+# NS-L007: heapq stays inside core/eventq.py (the ordering authority)
+# ---------------------------------------------------------------------------
+
+
+def _check_heapq(ctx: LintContext) -> list[Diagnostic]:
+    """Flag ``import heapq`` / ``from heapq import ...`` and any
+    ``heapq.xxx(...)`` call outside the event-queue module.  Code that
+    needs heap ops imports the re-exports from core/eventq.py instead,
+    so the event core keeps a single verified ordering contract."""
+    out: list[Diagnostic] = []
+    for node in ast.walk(ctx.tree):
+        if isinstance(node, ast.Import):
+            for alias in node.names:
+                if alias.name.split(".")[0] == "heapq":
+                    out.append(diag("NS-L007", ctx.loc(node),
+                                    "imports heapq outside core/eventq.py"))
+        elif isinstance(node, ast.ImportFrom):
+            if not node.level and node.module == "heapq":
+                out.append(diag("NS-L007", ctx.loc(node),
+                                "imports from heapq outside core/eventq.py"))
+        elif isinstance(node, ast.Call):
+            f = node.func
+            if (isinstance(f, ast.Attribute) and isinstance(f.value, ast.Name)
+                    and f.value.id == "heapq"):
+                out.append(diag("NS-L007", ctx.loc(node),
+                                f"calls heapq.{f.attr}() outside "
+                                f"core/eventq.py"))
+    return out
+
+
+#: the one module allowed to touch heapq
+HEAPQ_EXEMPT = frozenset({
+    "src/repro/core/eventq.py",
+})
+
+
+# ---------------------------------------------------------------------------
 # Registry + runners
 # ---------------------------------------------------------------------------
 
@@ -336,6 +379,8 @@ RULES: list[LintRule] = [
              lambda p: p.startswith(LAZY_IMPORT_ZONES)),
     LintRule("NS-L006", _check_raw_locks,
              lambda p: p in RACE_LOCK_MODULES),
+    LintRule("NS-L007", _check_heapq,
+             lambda p: p.startswith("src/repro/") and p not in HEAPQ_EXEMPT),
 ]
 
 

@@ -137,6 +137,86 @@ class OutputBuffer:
         return True
 
 
+class BufferArena:
+    """Struct-of-arrays twin of :class:`OutputBuffer` for the simulator.
+
+    One arena holds the fill state of *every* simulated channel in five
+    parallel columns indexed by a dense channel id (``chi`` from
+    :meth:`alloc`): pending items, used bytes, open timestamp, byte
+    capacity, and the §3.5.1 update version.  The semantics of each
+    operation mirror ``OutputBuffer`` field for field — same capacity
+    crossing rule, same lifetime accounting, same first-writer-wins
+    version check — so the simulator's decision traces are bit-identical
+    whichever representation backs a channel.  The simulator's inlined
+    dispatch loop reads the columns directly; under instrumentation
+    (``REPRO_SANITIZE=1`` / ``REPRO_RACE_CHECK=1``) the simulator keeps
+    per-channel ``OutputBuffer`` objects instead, because the checkers
+    wrap those methods.
+    """
+
+    __slots__ = ("items", "used", "opened", "cap", "ver")
+
+    def __init__(self) -> None:
+        self.items: list[list[Any]] = []
+        self.used: list[int] = []
+        self.opened: list[float | None] = []
+        self.cap: list[int] = []
+        self.ver: list[int] = []
+
+    def alloc(self, capacity_bytes: int) -> int:
+        """Add one channel; returns its dense column index."""
+        chi = len(self.cap)
+        self.items.append([])
+        self.used.append(0)
+        self.opened.append(None)
+        self.cap.append(capacity_bytes)
+        self.ver.append(0)
+        return chi
+
+    def append(self, chi: int, item: Any, size_bytes: int,
+               now_ms: float) -> bool:
+        if self.opened[chi] is None:
+            self.opened[chi] = now_ms
+        self.items[chi].append(item)
+        used = self.used[chi] + size_bytes
+        self.used[chi] = used
+        return used >= self.cap[chi]
+
+    def room_for(self, chi: int, size_bytes: int) -> int:
+        if size_bytes <= 0:
+            return 1 << 30
+        remaining = self.cap[chi] - self.used[chi]
+        if remaining <= size_bytes:
+            return 1
+        return -(-remaining // size_bytes)  # ceil div
+
+    def append_run(self, chi: int, items: list[Any], size_bytes_each: int,
+                   opened_at_ms: float) -> bool:
+        if self.opened[chi] is None:
+            self.opened[chi] = opened_at_ms
+        self.items[chi].extend(items)
+        used = self.used[chi] + size_bytes_each * len(items)
+        self.used[chi] = used
+        return used >= self.cap[chi]
+
+    def take(self, chi: int, now_ms: float) -> tuple[list[Any], int, float]:
+        opened = self.opened[chi]
+        lifetime = 0.0 if opened is None else now_ms - opened
+        out, nbytes = self.items[chi], self.used[chi]
+        self.items[chi] = []
+        self.used[chi] = 0
+        self.opened[chi] = None
+        return out, nbytes, lifetime
+
+    def try_update_size(self, chi: int, new_size: int,
+                        base_version: int) -> bool:
+        if base_version != self.ver[chi]:
+            return False
+        self.cap[chi] = max(1, int(new_size))
+        self.ver[chi] += 1
+        return True
+
+
 # -- lockset race detector hook (analysis/race.py) ---------------------------
 # Zero-cost when disabled: the class above is untouched unless the process
 # was started with REPRO_RACE_CHECK=1 (the engine guards each buffer with

@@ -142,10 +142,14 @@ class ChannelSender:
     ) -> None:
         self.channel = channel
         self.engine = engine
+        self.cid = channel.id
         self.buffer = OutputBuffer(channel.id, initial_buffer_bytes)
-        self.cross_worker = engine.rg.worker(channel.src) != engine.rg.worker(
-            channel.dst
-        )
+        src_worker = engine.rg.worker(channel.src)
+        self.cross_worker = src_worker != engine.rg.worker(channel.dst)
+        # cached per-sender reference: a vertex's worker never changes and
+        # reporter objects persist per worker id (QoS-scope refreshes mutate
+        # them in place), so the per-send dict chase is pure overhead
+        self.src_reporter = engine.reporters[src_worker]
         self.chained = False
         # the per-sender lock guards the buffer; _make_tracked_lock IS
         # threading.Lock unless REPRO_RACE_CHECK=1 selected the lockset-
@@ -156,11 +160,9 @@ class ChannelSender:
         eng = self.engine
         now = eng.clock.now()
         # tag on exit of sender user code (§3.3), one per interval
-        reporter = eng.reporters[eng.rg.worker(self.channel.src)]
-        if self.channel.id in eng.measured_channels and reporter.should_tag(
-            self.channel.id
-        ):
-            item.tag = Tag(self.channel.id, now)
+        cid = self.cid
+        if cid in eng.measured_channels and self.src_reporter.should_tag(cid):
+            item.tag = Tag(cid, now)
         if self.chained:
             # direct invocation in the caller's thread — no queue, no buffer
             dst = eng.executors[self.channel.dst]
@@ -196,11 +198,9 @@ class ChannelSender:
     def _flush_locked(self, now: float) -> None:
         items, nbytes, lifetime = self.buffer.take(now)
         eng = self.engine
-        src_worker = eng.rg.worker(self.channel.src)
-        reporter = eng.reporters[src_worker]
-        if self.channel.id in eng.measured_channels:
-            reporter.record_output_buffer_lifetime(
-                self.channel.id, lifetime, self.buffer.capacity_bytes,
+        if self.cid in eng.measured_channels:
+            self.src_reporter.record_output_buffer_lifetime(
+                self.cid, lifetime, self.buffer.capacity_bytes,
                 self.buffer.version,
             )
         if self.cross_worker:
@@ -240,7 +240,14 @@ class ChannelSender:
 class TaskExecutor:
     def __init__(self, vertex: RuntimeVertex, engine: "StreamEngine") -> None:
         self.vertex = vertex
+        self.vid = vertex.id
         self.engine = engine
+        # cached per-executor references (same rationale as ChannelSender):
+        # placement is fixed for a vertex's lifetime and the worker's
+        # reporter object persists across QoS-scope refreshes, so the
+        # per-item rg.worker()/reporters[] chase is pure overhead
+        self.worker = engine.rg.worker(vertex)
+        self.reporter = engine.reporters[self.worker]
         jv = engine.jg.vertices[vertex.job_vertex]
         self.fn = jv.fn
         self.batch_mode = jv.batch_fn
@@ -276,9 +283,9 @@ class TaskExecutor:
         eng = self.engine
         now = eng.clock.now()
         if self._pending_task_sample is not None:
-            vid = self.vertex.id
+            vid = self.vid
             if vid in eng.measured_tasks:
-                eng.reporters[eng.rg.worker(self.vertex)].record_task_latency(
+                self.reporter.record_task_latency(
                     vid, now - self._pending_task_sample
                 )
             self._pending_task_sample = None
@@ -343,8 +350,7 @@ class TaskExecutor:
         now = eng.clock.now()
         # evaluate tag just before entering user code (§3.3)
         if item.tag is not None:
-            worker = eng.rg.worker(self.vertex)
-            eng.reporters[worker].record_channel_latency(
+            self.reporter.record_channel_latency(
                 item.tag.channel_id, now - item.tag.created_at_ms
             )
             item.tag = None
@@ -354,11 +360,11 @@ class TaskExecutor:
         # is ever served by two owners
         if self.stateful and self._forward_if_not_owner(item, in_channel_id):
             return
-        vid = self.vertex.id
+        vid = self.vid
         if (
             self._pending_task_sample is None
             and vid in eng.measured_tasks
-            and eng.reporters[eng.rg.worker(self.vertex)].should_sample_task(vid)
+            and self.reporter.should_sample_task(vid)
         ):
             self._pending_task_sample = now
         if self.is_sink:
@@ -417,20 +423,21 @@ class TaskExecutor:
             items = self._split_batch_by_owner(items, in_channel_id)
             if not items:
                 return
+        rep = self.reporter
+        is_sink = self.is_sink
         for item in items:
             if item.tag is not None:
-                worker = eng.rg.worker(self.vertex)
-                eng.reporters[worker].record_channel_latency(
+                rep.record_channel_latency(
                     item.tag.channel_id, now - item.tag.created_at_ms
                 )
                 item.tag = None
-            if self.is_sink:
+            if is_sink:
                 eng.record_sink_latency(now - item.created_at_ms)
-        vid = self.vertex.id
+        vid = self.vid
         if (
             self._pending_task_sample is None
             and vid in eng.measured_tasks
-            and eng.reporters[eng.rg.worker(self.vertex)].should_sample_task(vid)
+            and rep.should_sample_task(vid)
         ):
             self._pending_task_sample = now
         t0 = time.perf_counter()

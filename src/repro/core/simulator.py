@@ -76,17 +76,26 @@ on both backends.
 """
 from __future__ import annotations
 
-import heapq
 import random
+from bisect import insort
 from collections import deque
 from dataclasses import dataclass, field
+from functools import partial
 from typing import Any, Callable
 
-from .buffers import BufferSizingPolicy, OutputBuffer
+from .buffers import BufferArena, BufferSizingPolicy, OutputBuffer
 from .chaining import ChainRequest
 from .clock import SimClock
 from .constraints import JobConstraint
 from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
+from .eventq import (
+    _MAX_T,
+    CalendarEventQueue,
+    HeapEventQueue,
+    heappop as _heappop,
+    heappush as _heappush,
+    make_event_queue,
+)
 from .graphs import JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReporter, Tag, latency_percentile
@@ -94,19 +103,20 @@ from .placement import WorkerPool
 from .routing import StateStore
 from .setup import compute_qos_setup, compute_reporter_setup
 
-# Slotted event kinds (heap records are ``(time, seq, kind, a, b, c)``;
+# Slotted event kinds (scheduler records are ``(time, seq, kind, a, b, c)``;
 # ties break on ``seq``, so ``kind``/payload never reach a comparison).
 _EV_CALL = 0      # a = callable                      (schedule() back-compat)
 _EV_SHIP = 1      # a = dst _SimTask,  b = items, c = channel_id
 _EV_COMPLETE = 2  # a = _SimTask,      b = item,  c = stages
 _EV_SRC_EMIT = 3  # a = last _SimTask, b = source item
-_EV_SOURCE = 4    # a = _SourceState
+_EV_SOURCE = 4    # a = dense source index (StreamSimulator.src_* columns)
 _EV_CONTROL = 5   # QoS control tick
 _EV_FLUSH = 6     # stale-buffer sweep
 _EV_BATCH = 7     # a = _SimTask, b = item, c = stages (batched first completion)
 _EV_BDONE = 8     # a = _SimTask — analytic end of a batched run
 
-_heappush = heapq.heappush
+#: empty latency-timeline cell (shared zero fold state)
+_T0 = (0.0, 0)
 
 
 def analytic_emission_times(start_ms: float, service_ms_seq) -> list[float]:
@@ -170,56 +180,48 @@ class SimSourceSpec:
         return self.rate_items_per_s
 
 
-class _SourceState:
-    """Mutable per-source-subtask record advanced by ``_EV_SOURCE`` events
-    (replaces the closure-per-item source of the pre-overhaul core)."""
-
-    __slots__ = ("task", "spec", "seq", "index")
-
-    def __init__(self, task: "_SimTask", spec: SimSourceSpec) -> None:
-        self.task = task
-        self.spec = spec
-        self.seq = 0
-        self.index = task.vertex.index
-
-
-class _WorkerCPU:
-    """Multi-server CPU model: one per worker node (the paper's testbed ran
-    eight tasks of four types per 8-core node — §4.2).  Unchained tasks each
-    occupy a core for their service time; a chained series occupies ONE core
-    for the summed service time (one thread, §3.5.2).  Ready work queues
-    FIFO when all cores are busy, which models the scheduling delay that
-    task chaining removes.  Completions are slotted ``_EV_COMPLETE`` events;
-    their dispatch frees the core, runs the completion, and drains this
-    ready queue — no helper closures on the heap."""
-
-    __slots__ = ("sim", "cores", "busy", "ready")
-
-    def __init__(self, sim: "StreamSimulator", cores: int) -> None:
-        self.sim = sim
-        self.cores = cores
-        self.busy = 0
-        self.ready: deque[tuple[float, "_SimTask", SimItem, tuple]] = deque()
-
-
-
 class _SimChannel:
     """Sender-side output buffer + transport for one channel.  Worker ids,
     the source-side QoS reporter, and the destination task are fixed for the
-    channel's lifetime and cached at construction."""
+    channel's lifetime and cached at construction.
 
-    __slots__ = ("channel", "cid", "buffer", "sim", "cross_worker",
+    Fill state lives in the simulator's shared :class:`BufferArena` (five
+    flat columns indexed by the dense ``chi`` handed out here) on normal
+    runs; under instrumentation (``sim.arena is None``) each channel keeps
+    a real :class:`OutputBuffer` instead, because the sanitizer/race
+    checkers wrap that class's methods.  Both layouts execute the same
+    arithmetic in the same order, so decision traces are identical."""
+
+    __slots__ = ("channel", "cid", "chi", "buffer", "sim", "cross_worker",
                  "src_reporter", "dst_task", "chained")
 
     def __init__(self, channel, sim: "StreamSimulator", capacity: int) -> None:
         self.channel = channel
         self.cid = channel.id
-        self.buffer = OutputBuffer(channel.id, capacity)
         self.sim = sim
+        arena = sim.arena
+        if arena is None:
+            self.chi = -1
+            self.buffer = OutputBuffer(channel.id, capacity)
+        else:
+            self.chi = arena.alloc(capacity)
+            self.buffer = None
         self.cross_worker = sim.rg.worker(channel.src) != sim.rg.worker(channel.dst)
         self.src_reporter = sim.reporters[sim.rg.worker(channel.src)]
         self.dst_task = sim.tasks[channel.dst]
         self.chained = False  # mirror of sim.chained_channels for this id
+
+    def capacity_bytes(self) -> int:
+        arena = self.sim.arena
+        if arena is None:
+            return self.buffer.capacity_bytes
+        return arena.cap[self.chi]
+
+    def try_update_size(self, new_size: int, base_version: int) -> bool:
+        arena = self.sim.arena
+        if arena is None:
+            return self.buffer.try_update_size(new_size, base_version)
+        return arena.try_update_size(self.chi, new_size, base_version)
 
     def send(self, item: SimItem, now: float) -> None:
         item.emitted_at_ms = now
@@ -228,7 +230,11 @@ class _SimChannel:
         if cid in sim.measured_channels and self.src_reporter.should_tag(
                 cid, now):
             item.tag = Tag(cid, now)
-        if self.buffer.append(item, item.size_bytes, now):
+        arena = sim.arena
+        if arena is None:
+            if self.buffer.append(item, item.size_bytes, now):
+                self.flush(now)
+        elif arena.append(self.chi, item, item.size_bytes, now):
             self.flush(now)
 
     def send_run(self, items: list[SimItem], times: list[float]) -> None:
@@ -250,28 +256,49 @@ class _SimChannel:
         else:
             for item, t in zip(items, times):
                 item.emitted_at_ms = t
-        buf = self.buffer
         size = items[0].size_bytes
         start = 0
         n = len(items)
-        while start < n:
-            end = min(start + buf.room_for(size), n)
-            if buf.append_run(items[start:end], size, times[start]):
-                self.flush(times[end - 1])
-            start = end
+        arena = sim.arena
+        if arena is None:
+            buf = self.buffer
+            while start < n:
+                end = min(start + buf.room_for(size), n)
+                if buf.append_run(items[start:end], size, times[start]):
+                    self.flush(times[end - 1])
+                start = end
+        else:
+            chi = self.chi
+            while start < n:
+                end = min(start + arena.room_for(chi, size), n)
+                if arena.append_run(chi, items[start:end], size,
+                                    times[start]):
+                    self.flush(times[end - 1])
+                start = end
 
     def flush(self, now: float | None = None) -> None:
-        buf = self.buffer
-        if not buf.items:
-            return
         sim = self.sim
-        if now is None:
-            now = sim.clock.now()
-        items, nbytes, lifetime = buf.take(now)
+        arena = sim.arena
+        if arena is None:
+            buf = self.buffer
+            if not buf.items:
+                return
+            if now is None:
+                now = sim.clock.now()
+            items, nbytes, lifetime = buf.take(now)
+            cap, ver = buf.capacity_bytes, buf.version
+        else:
+            chi = self.chi
+            if not arena.items[chi]:
+                return
+            if now is None:
+                now = sim.clock.now()
+            items, nbytes, lifetime = arena.take(chi, now)
+            cap, ver = arena.cap[chi], arena.ver[chi]
         cid = self.cid
         if cid in sim.measured_channels:
             self.src_reporter.record_output_buffer_lifetime(
-                cid, lifetime, buf.capacity_bytes, buf.version,
+                cid, lifetime, cap, ver,
             )
         net = sim.net
         if self.cross_worker:
@@ -285,8 +312,8 @@ class _SimChannel:
         sim.total_bytes += nbytes
         sim.total_buffers += 1
         sim._seq += 1
-        _heappush(sim._heap, (now + delay, sim._seq, _EV_SHIP,
-                              self.dst_task, items, cid))
+        sim._push_rec((now + delay, sim._seq, _EV_SHIP,
+                       self.dst_task, items, cid))
 
 
 class _SimTask:
@@ -295,10 +322,11 @@ class _SimTask:
 
     __slots__ = (
         "vertex", "vid", "sim", "svc_ms", "fan_in", "out_bytes", "stateful",
-        "state", "is_sink", "queue", "busy", "halted", "retired",
+        "state", "is_sink", "queue", "halted", "retired",
         "chained_into", "chain_next", "_fan_count", "_pending_task_sample",
-        "busy_ms_window", "emitted", "busy_ms_total", "out_by_jv",
-        "out_groups", "_inflight_since", "worker", "cpu", "reporter",
+        "emitted", "out_by_jv",
+        "out_groups", "_inflight_since", "worker", "ti", "cpu_i",
+        "index", "router", "reporter",
     )
 
     def __init__(self, vertex: RuntimeVertex, sim: "StreamSimulator") -> None:
@@ -318,16 +346,19 @@ class _SimTask:
             sim.rg.routers[vertex.job_vertex].num_ranges, locked=False)
         self.is_sink = not sim.jg.out_edges(vertex.job_vertex)
         self.queue: deque[SimItem] = deque()
-        self.busy = False
         self.halted = False
         self.retired = False           # elastically scaled in
         self.chained_into: RuntimeVertex | None = None  # member of a chain
         self.chain_next: RuntimeVertex | None = None    # next stage if chained
         self._fan_count = 0
         self._pending_task_sample: float | None = None
-        self.busy_ms_window = 0.0
         self.emitted = 0          # lifetime emissions (elastic telemetry)
-        self.busy_ms_total = 0.0
+        # busy flag and busy-ms accounting live in the simulator's flat
+        # per-task columns (t_busy / t_busy_w / t_busy_t) at this dense id
+        self.ti = len(sim.t_busy)
+        sim.t_busy.append(False)
+        sim.t_busy_w.append(0.0)
+        sim.t_busy_t.append(0.0)
         # emission routing: dst job vertex -> channels sorted by dst index;
         # out_groups is the hot-path projection [(router, channels), ...]
         # rebuilt by _rebuild_out() after every wiring mutation
@@ -335,9 +366,12 @@ class _SimTask:
         self.out_groups: list[tuple[Any, list]] = []
         self._inflight_since: float | None = None
         # fixed for the task's lifetime (workers are only ever added; the
-        # per-worker reporter/CPU objects survive QoS-scope refreshes)
+        # per-worker reporter objects and per-jv router survive QoS-scope
+        # refreshes — routers mutate their tables in place, never swap)
+        self.index = vertex.index
+        self.router = sim.rg.routers[vertex.job_vertex]
         self.worker = sim.rg.worker(vertex)
-        self.cpu = sim.cpus[self.worker]
+        self.cpu_i = sim.cpus[self.worker]
         self.reporter = sim.reporters[self.worker]
 
     def _rebuild_out(self) -> None:
@@ -355,7 +389,7 @@ class _SimTask:
         if not (self.retired or self.stateful):
             # fast path: plain delivery (the overwhelming majority of ships)
             self.queue.extend(items)
-            if not (self.busy or self.halted):
+            if not (self.sim.t_busy[self.ti] or self.halted):
                 self._try_start(now)
             return
         jv = self.vertex.job_vertex
@@ -420,7 +454,7 @@ class _SimTask:
                 if not items:
                     return
         self.queue.extend(items)
-        if not (self.busy or self.halted):
+        if not (self.sim.t_busy[self.ti] or self.halted):
             self._try_start(now)
 
     def halt(self, halted: bool) -> None:
@@ -429,9 +463,10 @@ class _SimTask:
             self._try_start()
 
     def _try_start(self, now: float | None = None) -> None:
-        if self.busy or self.halted or not self.queue:
-            return
         sim = self.sim
+        ti = self.ti
+        if sim.t_busy[ti] or self.halted or not self.queue:
+            return
         item = self.queue.popleft()
         if now is None:
             now = sim.clock.now()
@@ -466,18 +501,17 @@ class _SimTask:
             for t in stages:
                 if t.stateful:
                     t.state.bump(item.key)
-        self.busy = True
-        self.busy_ms_window += svc
-        self.busy_ms_total += svc
-        cpu = self.cpu  # inlined _WorkerCPU submit (per-item hot path)
-        if cpu.busy < cpu.cores:
-            cpu.busy += 1
+        sim.t_busy[ti] = True
+        sim.t_busy_w[ti] += svc
+        sim.t_busy_t[ti] += svc
+        ci = self.cpu_i  # inlined multi-server CPU submit (per-item hot path)
+        if sim.cpu_busy[ci] < sim.cpu_cores[ci]:
+            sim.cpu_busy[ci] += 1
             sim._seq += 1
-            _heappush(sim._heap,
-                      (now + svc, sim._seq, sim._complete_kind,
-                       self, item, stages))
+            sim._push_rec((now + svc, sim._seq, sim._complete_kind,
+                           self, item, stages))
         else:
-            cpu.ready.append((svc, self, item, stages))
+            sim.cpu_ready[ci].append((svc, self, item, stages))
 
     def _chain_service(self, item: SimItem) -> tuple[float, list["_SimTask"]]:
         """Walk the chain from this task; figure out which stages run for this
@@ -544,7 +578,7 @@ class _SimTask:
 
     def _complete(self, item: SimItem, stages: list["_SimTask"],
                   now: float) -> None:
-        self.busy = False
+        self.sim.t_busy[self.ti] = False
         self._finish_item(item, stages, now)
         self._try_start(now)
 
@@ -565,7 +599,8 @@ class _SimTask:
         event — ``_EV_BDONE`` at the analytic end, or the crossing item's
         ``_EV_BATCH`` — was scheduled)."""
         sim = self.sim
-        self.busy = False
+        ti = self.ti
+        sim.t_busy[ti] = False
         self._finish_item(item, stages, now)
         queue = self.queue
         if self.halted or not queue:
@@ -587,7 +622,7 @@ class _SimTask:
         boundary = sim._batch_boundary(now)
         measured_tasks = sim.measured_tasks
         reporter = self.reporter
-        heap = sim._heap
+        push = sim._push_rec
         sink_acc: tuple[list, list] = ([], [])
         tag_lats: dict[str, list[float]] = {}
         hold = False
@@ -620,8 +655,8 @@ class _SimTask:
                 for s in run_stages:
                     if s.stateful:
                         s.state.bump(it.key)
-            self.busy_ms_window += svc
-            self.busy_ms_total += svc
+            sim.t_busy_w[ti] += svc
+            sim.t_busy_t[ti] += svc
             t_next = t + svc
             if t_next >= boundary:
                 # crossing item: it is in service now (started at t, like
@@ -629,10 +664,9 @@ class _SimTask:
                 # boundary — finish it through a real completion event so
                 # its effects order correctly around the observer (a past-
                 # the-cutoff completion is dropped there, also like exact)
-                self.busy = True
+                sim.t_busy[ti] = True
                 sim._seq += 1
-                _heappush(heap, (t_next, sim._seq, _EV_BATCH,
-                                 self, it, run_stages))
+                push((t_next, sim._seq, _EV_BATCH, self, it, run_stages))
                 hold = True
                 break
             t = t_next
@@ -641,9 +675,9 @@ class _SimTask:
             if t > now:
                 # drained to an idle queue: the run owns its core until its
                 # analytic end
-                self.busy = True
+                sim.t_busy[ti] = True
                 sim._seq += 1
-                _heappush(heap, (t, sim._seq, _EV_BDONE, self, None, None))
+                push((t, sim._seq, _EV_BDONE, self, None, None))
                 hold = True
             elif queue:
                 # boundary coincides with ``now`` (e.g. a zero-delay
@@ -712,6 +746,7 @@ class StreamSimulator(RuntimeRewirer):
         num_key_ranges: int | None = None,
         event_mode: str = "exact",
         batch_horizon_ms: float | None = None,
+        scheduler: str = "calendar",
         preflight: bool = True,
     ) -> None:
         self.jg = jg
@@ -758,6 +793,13 @@ class StreamSimulator(RuntimeRewirer):
                 f"event_mode must be 'exact' or 'batched', got {event_mode!r}")
         self.event_mode = event_mode
         self.batched = event_mode == "batched"
+        #: event-scheduler backend (core/eventq.py): ``"calendar"`` (default)
+        #: or ``"heap"`` (the reference).  Both produce the exact total order
+        #: on ``(time, seq)``, so this is a pure performance knob.
+        if scheduler not in ("calendar", "heap"):
+            raise ValueError(
+                f"scheduler must be 'calendar' or 'heap', got {scheduler!r}")
+        self.scheduler = scheduler
         #: max analytic lookahead of one batched run/chunk (caps how far a
         #: batch event's effects can precede the clock); defaults to one
         #: control-tick period so measurement skew stays under a tick
@@ -819,10 +861,37 @@ class StreamSimulator(RuntimeRewirer):
             self.measured_channels |= r.interested_channels()
             self.measured_tasks |= r.interested_tasks()
 
-        self.cpus: dict[int, _WorkerCPU] = {
-            w: _WorkerCPU(self, cores_per_worker)
-            for w in self.rg.worker_ids()
-        }
+        # struct-of-arrays hot state: the dispatch loop indexes flat list
+        # columns through dense ids instead of chasing per-entity objects.
+        #   per task (dense id _SimTask.ti): busy flag, busy-ms window/total
+        self.t_busy: list[bool] = []
+        self.t_busy_w: list[float] = []
+        self.t_busy_t: list[float] = []
+        #   per worker CPU (dense id _SimTask.cpu_i; self.cpus maps worker
+        #   id -> dense id): core count, busy cores, FIFO ready queue
+        self.cpu_cores: list[int] = []
+        self.cpu_busy: list[int] = []
+        self.cpu_ready: list[deque] = []
+        self.cpus: dict[int, int] = {}
+        for w in self.rg.worker_ids():
+            self._alloc_cpu(w)
+        #   per channel (dense id _SimChannel.chi): output-buffer fill state,
+        #   shared BufferArena columns.  Instrumented runs (REPRO_SANITIZE /
+        #   REPRO_RACE_CHECK) keep per-channel OutputBuffer objects instead,
+        #   because the checkers wrap that class's methods.
+        self.arena: BufferArena | None = (
+            None if _INSTRUMENTED else BufferArena())
+        #   per source subtask (dense id, the _EV_SOURCE payload): task,
+        #   emission seq, subtask index, item bytes, key-space shape, pacing
+        self.src_task: list[_SimTask] = []
+        self.src_seq: list[int] = []
+        self.src_index: list[int] = []
+        self.src_bytes: list[int] = []
+        self.src_keys: list[int | None] = []
+        self.src_kpt: list[int | None] = []
+        self.src_rate_fn: list[Callable[[float], float] | None] = []
+        self.src_period: list[float] = []
+        self.src_spec: list[SimSourceSpec] = []
         self.tasks: dict[RuntimeVertex, _SimTask] = {
             v: _SimTask(v, self) for v in self.rg.vertices
         }
@@ -848,8 +917,24 @@ class StreamSimulator(RuntimeRewirer):
         self.total_bytes = 0
         self.total_buffers = 0
 
-        self._heap: list[tuple] = []
         self._seq = 0
+        # event queue: the calendar queue's initial bucket width comes from
+        # the aggregate source rate (~4 events per item per ms: source fire,
+        # emit, ship, complete); the adaptive retune corrects any error
+        agg_rate = sum(
+            spec.rate_items_per_s * len(self.rg.tasks_of(jv_name))
+            for jv_name, spec in self.sources.items()
+        )
+        rate_hint = 4.0 * agg_rate / 1e3
+        self._eq = make_event_queue(
+            scheduler, rate_hint if rate_hint > 0.0 else None)
+        #: push one record preserving total (time, seq) order — bound to the
+        #: C heappush on the heap arm for zero call overhead
+        if scheduler == "heap":
+            self._push_rec: Callable[[tuple], None] = partial(
+                _heappush, self._eq.data)
+        else:
+            self._push_rec = self._eq.push
         #: pending schedule() callback times (min-heap): batched runs treat
         #: the earliest one as an observer boundary, so injected actions
         #: (scale/chain probes, elastic controller ticks) see no analytic
@@ -875,7 +960,24 @@ class StreamSimulator(RuntimeRewirer):
                 f"time went backwards: scheduling at {at_ms} < "
                 f"{self.clock._now}")
         self._seq += 1
-        _heappush(self._heap, (at_ms, self._seq, kind, a, b, c))
+        self._push_rec((at_ms, self._seq, kind, a, b, c))
+
+    def _alloc_cpu(self, w: int) -> int:
+        """Register worker ``w``'s CPU columns (multi-server model: the
+        paper's testbed ran eight tasks of four types per 8-core node —
+        §4.2).  Unchained tasks each occupy a core for their service time; a
+        chained series occupies ONE core for the summed service time (one
+        thread, §3.5.2).  Ready work queues FIFO in ``cpu_ready`` when all
+        cores are busy, which models the scheduling delay that task chaining
+        removes.  Completions are slotted ``_EV_COMPLETE`` events; their
+        dispatch frees the core, runs the completion, and drains the ready
+        queue — no helper closures on the event queue."""
+        ci = len(self.cpu_cores)
+        self.cpus[w] = ci
+        self.cpu_cores.append(self.cores_per_worker)
+        self.cpu_busy.append(0)
+        self.cpu_ready.append(deque())
+        return ci
 
     def schedule(self, at_ms: float, fn: Callable[[], None]) -> None:
         """Back-compat generic event: run ``fn`` at ``at_ms`` (tests and
@@ -928,9 +1030,9 @@ class StreamSimulator(RuntimeRewirer):
 
     # -- QoS control events ---------------------------------------------------------
     def _cpu_utilization(self, v: RuntimeVertex, window_ms: float) -> float:
-        t = self.tasks[v]
-        util = t.busy_ms_window / max(window_ms, 1e-9)
-        t.busy_ms_window = 0.0
+        ti = self.tasks[v].ti
+        util = self.t_busy_w[ti] / max(window_ms, 1e-9)
+        self.t_busy_w[ti] = 0.0
         return min(util, 1.0)
 
     def _control_tick(self) -> None:
@@ -963,18 +1065,29 @@ class StreamSimulator(RuntimeRewirer):
         now = self.clock.now()
         lifetime = self.max_buffer_lifetime_ms
         self._next_flush_ms = now + lifetime / 2.0
-        for ch in list(self.channels.values()):
-            buf = ch.buffer
-            if (buf.items and buf.opened_at_ms is not None
-                    and now - buf.opened_at_ms >= lifetime):
-                ch.flush(now)
+        arena = self.arena
+        if arena is None:
+            for ch in list(self.channels.values()):
+                buf = ch.buffer
+                if (buf.items and buf.opened_at_ms is not None
+                        and now - buf.opened_at_ms >= lifetime):
+                    ch.flush(now)
+        else:
+            items_col = arena.items
+            opened_col = arena.opened
+            for ch in list(self.channels.values()):
+                chi = ch.chi
+                opened = opened_col[chi]
+                if (items_col[chi] and opened is not None
+                        and now - opened >= lifetime):
+                    ch.flush(now)
         self._push(self._next_flush_ms, _EV_FLUSH, None)
 
     def _route_action(self, action: Action) -> None:
         if isinstance(action, BufferSizeUpdate):
             ch = self.channels.get(action.channel_id)
             if ch is not None:
-                ch.buffer.try_update_size(
+                ch.try_update_size(
                     action.new_size_bytes, action.base_version
                 )
         elif isinstance(action, ChainRequest):
@@ -1044,8 +1157,8 @@ class StreamSimulator(RuntimeRewirer):
         return True
 
     def _add_worker(self, w: int) -> None:
-        # pool acquired a worker mid-run: per-worker CPU model + reporter
-        self.cpus[w] = _WorkerCPU(self, self.cores_per_worker)
+        # pool acquired a worker mid-run: per-worker CPU columns + reporter
+        self._alloc_cpu(w)
         self.reporters[w] = QoSReporter(
             w, self.clock, self.interval_ms,
             rng=random.Random(self.seed * 7919 + w))
@@ -1144,7 +1257,7 @@ class StreamSimulator(RuntimeRewirer):
 
     def _task_busy_ms(self, v: RuntimeVertex) -> float:
         t = self.tasks.get(v)
-        return 0.0 if t is None else t.busy_ms_total
+        return 0.0 if t is None else self.t_busy_t[t.ti]
 
     def _schedule_elastic(self, st: dict, period_ms: float) -> None:
         def tick() -> None:
@@ -1163,32 +1276,47 @@ class StreamSimulator(RuntimeRewirer):
             for v in self.rg.tasks_of(jv_name):
                 period = 1e3 / spec.rate_items_per_s
                 offset = self.rng.uniform(0, period)
-                self._push(offset, _EV_SOURCE,
-                           _SourceState(self.tasks[v], spec))
+                si = len(self.src_task)
+                self.src_task.append(self.tasks[v])
+                self.src_seq.append(0)
+                self.src_index.append(v.index)
+                self.src_bytes.append(spec.item_bytes)
+                self.src_keys.append(spec.keys)
+                self.src_kpt.append(spec.keys_per_task)
+                self.src_rate_fn.append(spec.rate_fn)
+                # fixed-rate pacing precomputed (bit-identical to the
+                # per-fire 1e3 / max(rate_at(now), 1e-9) when rate_fn is
+                # None: rate_at then returns the constant rate)
+                self.src_period.append(
+                    1e3 / max(spec.rate_items_per_s, 1e-9))
+                self.src_spec.append(spec)
+                self._push(offset, _EV_SOURCE, si)
 
-    def _fire_source(self, st: _SourceState, now: float) -> None:
-        spec = st.spec
-        seq = st.seq
-        if spec.keys_per_task is not None:
-            key = st.index * spec.keys_per_task + seq % spec.keys_per_task
-        elif spec.keys:
-            key = seq % spec.keys
+    def _fire_source(self, si: int, now: float) -> None:
+        seq = self.src_seq[si]
+        kpt = self.src_kpt[si]
+        if kpt is not None:
+            key = self.src_index[si] * kpt + seq % kpt
+        elif self.src_keys[si]:
+            key = seq % self.src_keys[si]
         else:
             key = seq
-        item = SimItem(now, spec.item_bytes, key)
-        task = st.task
+        item = SimItem(now, self.src_bytes[si], key)
+        task = self.src_task[si]
         # a source "processes" the item (its cpu cost) then routes it
         svc, stages = task._chain_service(item)
         for t in stages:  # stateful chained stages count at start too
             if t.stateful:
                 t.state.bump(item.key)
-        task.busy_ms_window += svc
+        self.t_busy_w[task.ti] += svc
         self._push(now + svc, _EV_SRC_EMIT, stages[-1], item)
-        period = 1e3 / max(spec.rate_at(now), 1e-9)
-        st.seq = seq + 1
-        self._push(now + period, _EV_SOURCE, st)
+        rf = self.src_rate_fn[si]
+        period = (self.src_period[si] if rf is None
+                  else 1e3 / max(rf(now), 1e-9))
+        self.src_seq[si] = seq + 1
+        self._push(now + period, _EV_SOURCE, si)
 
-    def _fire_source_batched(self, st: _SourceState, now: float) -> None:
+    def _fire_source_batched(self, si: int, now: float) -> None:
         """Batched sources: one ``_EV_SOURCE`` event emits a chunk of items
         at their exact analytic pacing instants (``rate_at`` is sampled at
         every per-item emission time, so bursty ``rate_fn`` pacing matches
@@ -1198,8 +1326,8 @@ class StreamSimulator(RuntimeRewirer):
         Boundary-safe emissions toward a single consumer group are grouped
         per resolved channel and shipped through the batch-aware buffer
         path (``_SimChannel.send_run``)."""
-        spec = st.spec
-        task = st.task
+        spec = self.src_spec[si]
+        task = self.src_task[si]
         # fan-gated chains: the exact core evaluates a fan-in gate at
         # EMISSION time — after any bumps by items fired in between —
         # while a chunk would evaluate it at creation time.  A source
@@ -1210,7 +1338,7 @@ class StreamSimulator(RuntimeRewirer):
         stage = task
         while True:
             if stage.fan_in != 1:
-                self._fire_source(st, now)
+                self._fire_source(si, now)
                 return
             if stage.chain_next is None:
                 break
@@ -1219,8 +1347,8 @@ class StreamSimulator(RuntimeRewirer):
         boundary = self._batch_boundary(now)
         keys_per_task = spec.keys_per_task
         nkeys = spec.keys
-        index = st.index
-        seq = st.seq
+        index = self.src_index[si]
+        seq = self.src_seq[si]
         t = now
         # (channel -> (items, times)) per-chunk runs; per-channel emission
         # order is the exact core's (analytic times are increasing)
@@ -1237,7 +1365,7 @@ class StreamSimulator(RuntimeRewirer):
             for s in stages:  # stateful chained stages count at start too
                 if s.stateful:
                     s.state.bump(item.key)
-            task.busy_ms_window += svc
+            self.t_busy_w[task.ti] += svc
             emit_at = t + svc
             last = stages[-1]
             if emit_at >= boundary:
@@ -1246,8 +1374,8 @@ class StreamSimulator(RuntimeRewirer):
                 # observer (dropped there if past the run cutoff), and end
                 # the chunk — its fan-in gate must not see later bumps
                 self._seq += 1
-                _heappush(self._heap, (emit_at, self._seq, _EV_SRC_EMIT,
-                                       last, item, None))
+                self._push_rec((emit_at, self._seq, _EV_SRC_EMIT,
+                                last, item, None))
                 seq += 1
                 period = 1e3 / max(spec.rate_at(t), 1e-9)
                 t += period
@@ -1286,11 +1414,11 @@ class StreamSimulator(RuntimeRewirer):
             t += period
             if t >= boundary or t > limit:
                 break
-        st.seq = seq
+        self.src_seq[si] = seq
         for ch, (items, times) in runs.items():
             ch.send_run(items, times)
         self._seq += 1
-        _heappush(self._heap, (t, self._seq, _EV_SOURCE, st, None, None))
+        self._push_rec((t, self._seq, _EV_SOURCE, si, None, None))
 
     # -- run ---------------------------------------------------------------------------
     def run(self, duration_ms: float, max_events: int | None = None) -> "SimResult":
@@ -1301,81 +1429,12 @@ class StreamSimulator(RuntimeRewirer):
         if self.max_buffer_lifetime_ms is not None:
             self._next_flush_ms = self.max_buffer_lifetime_ms / 2.0
             self._push(self._next_flush_ms, _EV_FLUSH, None)
-        n_events = 0
-        heap = self._heap
-        pop = heapq.heappop
-        clock = self.clock
-        batched = self.batched
-        while heap:
-            t, _, kind, a, b, c = pop(heap)
-            if t > duration_ms:
-                break
-            # heap pops are time-ordered; assign directly (advance_to's
-            # monotonicity check is a per-event cost the order guarantees)
-            clock._now = t
-            if kind == _EV_COMPLETE:
-                # free the core, run the completion (which starts the task's
-                # next item), then drain the CPU ready queue — one dispatch,
-                # no helper events
-                cpu = a.cpu
-                cpu.busy -= 1
-                a._complete(b, c, t)
-                ready = cpu.ready
-                while ready and cpu.busy < cpu.cores:
-                    svc, t2, it2, st2 = ready.popleft()
-                    cpu.busy += 1
-                    self._seq += 1
-                    _heappush(heap, (t + svc, self._seq, _EV_COMPLETE,
-                                     t2, it2, st2))
-            elif kind == _EV_BATCH:
-                # batched completion: retire the task's queued run in this
-                # one event; a continued run re-claims the core until its
-                # next scheduled event (_EV_BDONE / crossing _EV_BATCH)
-                cpu = a.cpu
-                cpu.busy -= 1
-                if a._complete_batch(b, c, t):
-                    cpu.busy += 1
-                else:
-                    ready = cpu.ready
-                    while ready and cpu.busy < cpu.cores:
-                        svc, t2, it2, st2 = ready.popleft()
-                        cpu.busy += 1
-                        self._seq += 1
-                        _heappush(heap, (t + svc, self._seq, _EV_BATCH,
-                                         t2, it2, st2))
-            elif kind == _EV_BDONE:
-                cpu = a.cpu
-                cpu.busy -= 1
-                a.busy = False
-                a._try_start(t)
-                ready = cpu.ready
-                while ready and cpu.busy < cpu.cores:
-                    svc, t2, it2, st2 = ready.popleft()
-                    cpu.busy += 1
-                    self._seq += 1
-                    _heappush(heap, (t + svc, self._seq, _EV_BATCH,
-                                     t2, it2, st2))
-            elif kind == _EV_SHIP:
-                a.enqueue(b, c, t)
-            elif kind == _EV_SRC_EMIT:
-                if a._fan_count % a.fan_in == 0:
-                    out = SimItem(b.created_at_ms, a.out_bytes, b.key)
-                    a.route(out, t)
-            elif kind == _EV_SOURCE:
-                if batched:
-                    self._fire_source_batched(a, t)
-                else:
-                    self._fire_source(a, t)
-            elif kind == _EV_CALL:
-                heapq.heappop(self._call_times)
-                a()
-            elif kind == _EV_CONTROL:
-                self._control_tick()
-            else:  # _EV_FLUSH
-                self._flush_stale_tick()
-            n_events += 1
-            if max_events is not None and n_events >= max_events:
-                break
+        max_ev = max_events if max_events is not None else (1 << 62)
+        if (self.arena is not None and not self.batched
+                and type(self._eq) is CalendarEventQueue):
+            n_events = self._run_fast(duration_ms, max_ev)
+        else:
+            n_events = self._run_reference(duration_ms, max_ev)
         history = list(self._manager_history_archive)
         for mgr in self.managers.values():
             history.extend(mgr.history)
@@ -1389,7 +1448,7 @@ class StreamSimulator(RuntimeRewirer):
             sink_count_by_key=dict(self.sink_count_by_key),
             latency_timeline=timeline,
             final_buffer_sizes={
-                cid: ch.buffer.capacity_bytes for cid, ch in self.channels.items()
+                cid: ch.capacity_bytes() for cid, ch in self.channels.items()
             },
             chained_groups=self.chained_groups,
             give_ups=self.give_ups,
@@ -1402,6 +1461,747 @@ class StreamSimulator(RuntimeRewirer):
             pool_events=list(self.rg.pool.events),
             preflight_diagnostics=list(self.preflight_diagnostics),
         )
+
+    def _run_reference(self, duration_ms: float, max_ev: int) -> int:
+        """Reference dispatch loop: one method call per event effect.  Used
+        by the heap scheduler (whose heap list is popped directly at C
+        speed), batched mode, and instrumented runs; the semantics every
+        inlined fast-path claim is verified against."""
+        n_events = 0
+        eq = self._eq
+        push = self._push_rec
+        clock = self.clock
+        batched = self.batched
+        cpu_cores = self.cpu_cores
+        cpu_busy = self.cpu_busy
+        cpu_ready = self.cpu_ready
+        heap = eq.data if type(eq) is HeapEventQueue else None
+        pop = _heappop
+        eq_pop = eq.pop
+        while True:
+            if heap is not None:
+                if not heap:
+                    break
+                rec = pop(heap)
+            else:
+                rec = eq_pop()
+                if rec is None:
+                    break
+            t, _, kind, a, b, c = rec
+            if t > duration_ms:
+                break
+            # pops are time-ordered; assign directly (advance_to's
+            # monotonicity check is a per-event cost the order guarantees)
+            clock._now = t
+            if kind == _EV_COMPLETE:
+                # free the core, run the completion (which starts the task's
+                # next item), then drain the CPU ready queue — one dispatch,
+                # no helper events
+                ci = a.cpu_i
+                cpu_busy[ci] -= 1
+                a._complete(b, c, t)
+                ready = cpu_ready[ci]
+                while ready and cpu_busy[ci] < cpu_cores[ci]:
+                    svc, t2, it2, st2 = ready.popleft()
+                    cpu_busy[ci] += 1
+                    self._seq += 1
+                    push((t + svc, self._seq, _EV_COMPLETE, t2, it2, st2))
+            elif kind == _EV_BATCH:
+                # batched completion: retire the task's queued run in this
+                # one event; a continued run re-claims the core until its
+                # next scheduled event (_EV_BDONE / crossing _EV_BATCH)
+                ci = a.cpu_i
+                cpu_busy[ci] -= 1
+                if a._complete_batch(b, c, t):
+                    cpu_busy[ci] += 1
+                else:
+                    ready = cpu_ready[ci]
+                    while ready and cpu_busy[ci] < cpu_cores[ci]:
+                        svc, t2, it2, st2 = ready.popleft()
+                        cpu_busy[ci] += 1
+                        self._seq += 1
+                        push((t + svc, self._seq, _EV_BATCH, t2, it2, st2))
+            elif kind == _EV_BDONE:
+                ci = a.cpu_i
+                cpu_busy[ci] -= 1
+                self.t_busy[a.ti] = False
+                a._try_start(t)
+                ready = cpu_ready[ci]
+                while ready and cpu_busy[ci] < cpu_cores[ci]:
+                    svc, t2, it2, st2 = ready.popleft()
+                    cpu_busy[ci] += 1
+                    self._seq += 1
+                    push((t + svc, self._seq, _EV_BATCH, t2, it2, st2))
+            elif kind == _EV_SHIP:
+                a.enqueue(b, c, t)
+            elif kind == _EV_SRC_EMIT:
+                if a._fan_count % a.fan_in == 0:
+                    out = SimItem(b.created_at_ms, a.out_bytes, b.key)
+                    a.route(out, t)
+            elif kind == _EV_SOURCE:
+                if batched:
+                    self._fire_source_batched(a, t)
+                else:
+                    self._fire_source(a, t)
+            elif kind == _EV_CALL:
+                _heappop(self._call_times)
+                a()
+            elif kind == _EV_CONTROL:
+                self._control_tick()
+            else:  # _EV_FLUSH
+                self._flush_stale_tick()
+            n_events += 1
+            if n_events >= max_ev:
+                break
+        return n_events
+
+    def _run_fast(self, duration_ms: float, max_ev: int) -> int:
+        """Inlined dispatch for the exact core on the calendar queue with
+        arena-backed channels (uninstrumented runs only — ``run`` picks the
+        reference loop otherwise).
+
+        Replays the reference loop's per-event effects with the same float
+        operations in the same order and the same seq allocation, but with
+        the hot handlers (COMPLETE / SRC_EMIT / SOURCE / SHIP) and the
+        queue's bucket fast path expanded inline over the flat columns.
+        Anything off the hot path — chained or fan-gated tasks, retired
+        senders, multi-group routing, control-plane events — escapes to the
+        exact reference method with the queue state synced around the call:
+
+        * before an escape: ``eq.ci``/``eq.ring_count`` (a push during the
+          escape insorts into the serving bucket at ``lo=eq.ci``) and
+          ``self._seq`` are stored back;
+        * after: ``ring_count``/``seq`` are re-read (pushes may have
+          happened), plus the measured sets after control-plane escapes (a
+          QoS-scope refresh rebuilds them as new objects).  ``eq.cur`` and
+          the ring/spill structures are identity-stable across pushes —
+          only ``eq.pop`` (called at bucket boundaries, where it may
+          retune) replaces them, and escapes never pop.
+        """
+        eq = self._eq
+        n_events = 0
+        clock = self.clock
+        # calendar-queue serving state, maintained in locals
+        cur = eq.cur
+        ci = eq.ci
+        cur_b = eq.cur_b
+        ring_count = eq.ring_count
+        ring = eq.ring
+        mask = eq.mask
+        nb = eq.nb
+        inv_w = eq.inv_w
+        spill = eq.spill
+        eq_pop = eq.pop
+        seq = self._seq
+        # flat state columns (identity-stable lists: construction/refresh
+        # appends in place, never reassigns)
+        t_busy = self.t_busy
+        t_busy_w = self.t_busy_w
+        t_busy_t = self.t_busy_t
+        cpu_cores = self.cpu_cores
+        cpu_busy = self.cpu_busy
+        cpu_ready = self.cpu_ready
+        arena = self.arena
+        ar_items = arena.items
+        ar_used = arena.used
+        ar_open = arena.opened
+        ar_cap = arena.cap
+        ar_ver = arena.ver
+        src_task = self.src_task
+        src_seq = self.src_seq
+        src_index = self.src_index
+        src_bytes = self.src_bytes
+        src_keys = self.src_keys
+        src_kpt = self.src_kpt
+        src_rate_fn = self.src_rate_fn
+        src_period = self.src_period
+        # rebuilt as new sets on QoS-scope refresh: re-read after escapes
+        # that can trigger one (control ticks, injected callbacks)
+        measured_tasks = self.measured_tasks
+        measured_channels = self.measured_channels
+        sink_counts = self.sink_count_by_key
+        sink_lats = self.sink_latencies
+        timeline = self.latency_timeline
+        bucket_ms = self.latency_bucket_ms
+        net = self.net
+        net_over = net.per_buffer_overhead_ms
+        net_bw = net.bandwidth_bytes_per_ms
+        net_prop = net.propagation_ms
+        net_same = net.same_worker_overhead_ms
+        call_times = self._call_times
+        new = object.__new__
+        max_t = _MAX_T
+        interval = self.interval_ms
+        # the clock is only stored before escapes into reference code (and
+        # once after the loop): every inlined effect threads ``t``
+        # explicitly, so the per-event attribute store is pure overhead
+        tprev = clock._now
+        while True:
+            # ---- CalendarEventQueue.pop, fast path inline
+            if ci < len(cur):
+                rec = cur[ci]
+                ci += 1
+                ring_count -= 1
+            else:
+                # bucket exhausted: advance (and maybe retune) via the
+                # queue's own method — rare (~1/TARGET_OCCUPANCY pops)
+                eq.ci = ci
+                eq.ring_count = ring_count
+                eq.pops = n_events
+                rec = eq_pop()
+                if rec is None:
+                    break
+                cur = eq.cur
+                ci = eq.ci
+                cur_b = eq.cur_b
+                ring_count = eq.ring_count
+                ring = eq.ring
+                mask = eq.mask
+                nb = eq.nb
+                inv_w = eq.inv_w
+                spill = eq.spill
+            t, _, kind, a, b, c = rec
+            if t > duration_ms:
+                break
+            # ---- dispatch, hottest kinds first
+            if kind == _EV_COMPLETE:
+                stages = c
+                cj = a.cpu_i
+                nbusy = cpu_busy[cj] - 1
+                # written back immediately: the completion below can route
+                # into a chained enqueue whose sibling start touches the
+                # SAME cpu column
+                cpu_busy[cj] = nbusy
+                if len(stages) == 1 and a.fan_in == 1 and not a.retired:
+                    # inline a._complete(...) for the plain unchained case
+                    t_busy[a.ti] = False
+                    # _finish_item (fan gate passes: fan_in == 1)
+                    pend = a._pending_task_sample
+                    if pend is not None:
+                        vid = a.vid
+                        if vid in measured_tasks:
+                            d3 = a.reporter._task_lat
+                            s3, c3 = d3.get(vid, _T0)
+                            d3[vid] = (s3 + (t - pend), c3 + 1)
+                        a._pending_task_sample = None
+                    a.emitted += 1
+                    item = b
+                    if a.is_sink:
+                        key = item.key
+                        sink_counts[key] = sink_counts.get(key, 0) + 1
+                        lat = t - item.created_at_ms
+                        sink_lats.append(lat)
+                        bk = int(t // bucket_ms)
+                        s_, c_ = timeline.get(bk, _T0)
+                        timeline[bk] = (s_ + lat, c_ + 1)
+                    else:
+                        out = new(SimItem)
+                        out.created_at_ms = item.created_at_ms
+                        out.size_bytes = a.out_bytes
+                        out.key = item.key
+                        out.tag = None
+                        out.emitted_at_ms = 0.0
+                        # ---- a.route(out, t) inline (single consumer
+                        # group, live sender)
+                        groups = a.out_groups
+                        if len(groups) == 1 and not a.retired:
+                            router, chans = groups[0]
+                            if len(chans) == 1:
+                                ch = chans[0]
+                            else:
+                                mk = router.mask
+                                k = out.key
+                                if mk is not None and isinstance(k, int):
+                                    idx = router.table[k & mk]
+                                else:
+                                    idx = router.owner(k)
+                                nch = len(chans)
+                                if idx >= nch:
+                                    idx = nch - 1
+                                ch = chans[idx]
+                            if ch.chained:
+                                eq.ci = ci
+                                eq.ring_count = ring_count
+                                self._seq = seq
+                                a.route(out, t)
+                                ring_count = eq.ring_count
+                                seq = self._seq
+                            else:
+                                # ---- ch.send(out, t) inline on the arena
+                                out.emitted_at_ms = t
+                                cid = ch.cid
+                                if cid in measured_channels:
+                                    # should_tag inline: one tag per
+                                    # channel per interval (§3.3)
+                                    lt = ch.src_reporter._last_tagged
+                                    last = lt.get(cid)
+                                    if last is None or t - last >= interval:
+                                        lt[cid] = t
+                                        out.tag = Tag(cid, t)
+                                chj = ch.chi
+                                if ar_open[chj] is None:
+                                    ar_open[chj] = t
+                                ar_items[chj].append(out)
+                                u = ar_used[chj] + out.size_bytes
+                                ar_used[chj] = u
+                                if u >= ar_cap[chj]:
+                                    # ---- ch.flush(t) inline
+                                    items2 = ar_items[chj]
+                                    opened = ar_open[chj]
+                                    lifetime = (0.0 if opened is None
+                                                else t - opened)
+                                    ar_items[chj] = []
+                                    ar_used[chj] = 0
+                                    ar_open[chj] = None
+                                    if cid in measured_channels:
+                                        rep = ch.src_reporter
+                                        d3 = rep._chan_oblt
+                                        s3, c3 = d3.get(cid, _T0)
+                                        d3[cid] = (s3 + lifetime, c3 + 1)
+                                        rep._chan_buf[cid] = (
+                                            ar_cap[chj], ar_ver[chj])
+                                    if ch.cross_worker:
+                                        delay = (net_over + u / net_bw
+                                                 + net_prop)
+                                    else:
+                                        delay = net_same
+                                    self.total_bytes += u
+                                    self.total_buffers += 1
+                                    seq += 1
+                                    tt = t + delay
+                                    rec2 = (tt, seq, _EV_SHIP,
+                                            ch.dst_task, items2, cid)
+                                    if tt < max_t:
+                                        bq = int(tt * inv_w)
+                                        db = bq - cur_b
+                                        if 0 < db < nb:
+                                            ring[bq & mask].append(rec2)
+                                            ring_count += 1
+                                        elif db <= 0:
+                                            insort(cur, rec2, ci)
+                                            ring_count += 1
+                                        else:
+                                            _heappush(spill, rec2)
+                                    else:
+                                        _heappush(spill, rec2)
+                        else:
+                            eq.ci = ci
+                            eq.ring_count = ring_count
+                            self._seq = seq
+                            a.route(out, t)
+                            ring_count = eq.ring_count
+                            seq = self._seq
+                    # ---- a._try_start(t) inline
+                    q = a.queue
+                    aj = a.ti
+                    if q and not t_busy[aj] and not a.halted:
+                        if a.chain_next is None and a.fan_in == 1:
+                            it2 = q.popleft()
+                            tg = it2.tag
+                            if tg is not None:
+                                # record_channel_latency inline
+                                d3 = a.reporter._chan_lat
+                                cd = tg.channel_id
+                                s3, c3 = d3.get(cd, _T0)
+                                d3[cd] = (
+                                    s3 + (t - tg.created_at_ms), c3 + 1)
+                                it2.tag = None
+                            vid = a.vid
+                            if (a._pending_task_sample is None
+                                    and vid in measured_tasks):
+                                # should_sample_task inline (mutating
+                                # decision, gated exactly like reference)
+                                d3 = a.reporter._last_task_sample
+                                last = d3.get(vid)
+                                if last is None or t - last >= interval:
+                                    d3[vid] = t
+                                    a._pending_task_sample = t
+                            a._fan_count += 1
+                            svc = a.svc_ms
+                            if a.stateful:
+                                d2 = a.state._data
+                                k2 = it2.key
+                                d2[k2] = d2.get(k2, 0) + 1
+                            t_busy[aj] = True
+                            t_busy_w[aj] += svc
+                            t_busy_t[aj] += svc
+                            ck = a.cpu_i
+                            nb2 = cpu_busy[ck]
+                            if nb2 < cpu_cores[ck]:
+                                cpu_busy[ck] = nb2 + 1
+                                seq += 1
+                                tt = t + svc
+                                rec2 = (tt, seq, _EV_COMPLETE,
+                                        a, it2, [a])
+                                if tt < max_t:
+                                    bq = int(tt * inv_w)
+                                    db = bq - cur_b
+                                    if 0 < db < nb:
+                                        ring[bq & mask].append(rec2)
+                                        ring_count += 1
+                                    elif db <= 0:
+                                        insort(cur, rec2, ci)
+                                        ring_count += 1
+                                    else:
+                                        _heappush(spill, rec2)
+                                else:
+                                    _heappush(spill, rec2)
+                            else:
+                                cpu_ready[ck].append((svc, a, it2, [a]))
+                        else:
+                            eq.ci = ci
+                            eq.ring_count = ring_count
+                            self._seq = seq
+                            a._try_start(t)
+                            ring_count = eq.ring_count
+                            seq = self._seq
+                else:
+                    # chained / fan-gated / retired: reference completion
+                    eq.ci = ci
+                    eq.ring_count = ring_count
+                    self._seq = seq
+                    a._complete(rec[4], stages, t)
+                    ring_count = eq.ring_count
+                    seq = self._seq
+                # ---- ready-queue drain (re-read: the completion above may
+                # have claimed or freed cores on this cpu)
+                ready = cpu_ready[cj]
+                if ready:
+                    nbusy = cpu_busy[cj]
+                    cores = cpu_cores[cj]
+                    while ready and nbusy < cores:
+                        svc2, t2, it2, st2 = ready.popleft()
+                        nbusy += 1
+                        seq += 1
+                        tt = t + svc2
+                        rec2 = (tt, seq, _EV_COMPLETE, t2, it2, st2)
+                        if tt < max_t:
+                            bq = int(tt * inv_w)
+                            db = bq - cur_b
+                            if 0 < db < nb:
+                                ring[bq & mask].append(rec2)
+                                ring_count += 1
+                            elif db <= 0:
+                                insort(cur, rec2, ci)
+                                ring_count += 1
+                            else:
+                                _heappush(spill, rec2)
+                        else:
+                            _heappush(spill, rec2)
+                    cpu_busy[cj] = nbusy
+            elif kind == _EV_SRC_EMIT:
+                a = rec[3]
+                fi = a.fan_in
+                if fi == 1 or a._fan_count % fi == 0:
+                    b = rec[4]
+                    out = new(SimItem)
+                    out.created_at_ms = b.created_at_ms
+                    out.size_bytes = a.out_bytes
+                    out.key = b.key
+                    out.tag = None
+                    out.emitted_at_ms = 0.0
+                    # ---- a.route(out, t) inline (sources with no outputs
+                    # or multiple consumer groups take the fallback)
+                    groups = a.out_groups
+                    if len(groups) == 1 and not a.retired:
+                        router, chans = groups[0]
+                        if len(chans) == 1:
+                            ch = chans[0]
+                        else:
+                            mk = router.mask
+                            k = out.key
+                            if mk is not None and isinstance(k, int):
+                                idx = router.table[k & mk]
+                            else:
+                                idx = router.owner(k)
+                            nch = len(chans)
+                            if idx >= nch:
+                                idx = nch - 1
+                            ch = chans[idx]
+                        if ch.chained:
+                            eq.ci = ci
+                            eq.ring_count = ring_count
+                            self._seq = seq
+                            a.route(out, t)
+                            ring_count = eq.ring_count
+                            seq = self._seq
+                        else:
+                            out.emitted_at_ms = t
+                            cid = ch.cid
+                            if cid in measured_channels:
+                                # should_tag inline: one tag per channel
+                                # per interval (§3.3)
+                                lt = ch.src_reporter._last_tagged
+                                last = lt.get(cid)
+                                if last is None or t - last >= interval:
+                                    lt[cid] = t
+                                    out.tag = Tag(cid, t)
+                            chj = ch.chi
+                            if ar_open[chj] is None:
+                                ar_open[chj] = t
+                            ar_items[chj].append(out)
+                            u = ar_used[chj] + out.size_bytes
+                            ar_used[chj] = u
+                            if u >= ar_cap[chj]:
+                                items2 = ar_items[chj]
+                                opened = ar_open[chj]
+                                lifetime = (0.0 if opened is None
+                                            else t - opened)
+                                ar_items[chj] = []
+                                ar_used[chj] = 0
+                                ar_open[chj] = None
+                                if cid in measured_channels:
+                                    rep = ch.src_reporter
+                                    d3 = rep._chan_oblt
+                                    s3, c3 = d3.get(cid, _T0)
+                                    d3[cid] = (s3 + lifetime, c3 + 1)
+                                    rep._chan_buf[cid] = (
+                                        ar_cap[chj], ar_ver[chj])
+                                if ch.cross_worker:
+                                    delay = (net_over + u / net_bw
+                                             + net_prop)
+                                else:
+                                    delay = net_same
+                                self.total_bytes += u
+                                self.total_buffers += 1
+                                seq += 1
+                                tt = t + delay
+                                rec2 = (tt, seq, _EV_SHIP,
+                                        ch.dst_task, items2, cid)
+                                if tt < max_t:
+                                    bq = int(tt * inv_w)
+                                    db = bq - cur_b
+                                    if 0 < db < nb:
+                                        ring[bq & mask].append(rec2)
+                                        ring_count += 1
+                                    elif db <= 0:
+                                        insort(cur, rec2, ci)
+                                        ring_count += 1
+                                    else:
+                                        _heappush(spill, rec2)
+                                else:
+                                    _heappush(spill, rec2)
+                    else:
+                        eq.ci = ci
+                        eq.ring_count = ring_count
+                        self._seq = seq
+                        a.route(out, t)
+                        ring_count = eq.ring_count
+                        seq = self._seq
+            elif kind == _EV_SOURCE:
+                si = rec[3]
+                task = src_task[si]
+                if task.chain_next is None and task.fan_in == 1:
+                    # ---- _fire_source(si, t) inline (unchained source)
+                    sq = src_seq[si]
+                    kpt = src_kpt[si]
+                    if kpt is not None:
+                        key = src_index[si] * kpt + sq % kpt
+                    else:
+                        nk = src_keys[si]
+                        key = sq % nk if nk else sq
+                    item = new(SimItem)
+                    item.created_at_ms = t
+                    item.size_bytes = src_bytes[si]
+                    item.key = key
+                    item.tag = None
+                    item.emitted_at_ms = 0.0
+                    task._fan_count += 1
+                    svc = task.svc_ms
+                    if task.stateful:
+                        d2 = task.state._data
+                        d2[key] = d2.get(key, 0) + 1
+                    t_busy_w[task.ti] += svc
+                    seq += 1
+                    tt = t + svc
+                    rec2 = (tt, seq, _EV_SRC_EMIT, task, item, None)
+                    if tt < max_t:
+                        bq = int(tt * inv_w)
+                        db = bq - cur_b
+                        if 0 < db < nb:
+                            ring[bq & mask].append(rec2)
+                            ring_count += 1
+                        elif db <= 0:
+                            insort(cur, rec2, ci)
+                            ring_count += 1
+                        else:
+                            _heappush(spill, rec2)
+                    else:
+                        _heappush(spill, rec2)
+                    rf = src_rate_fn[si]
+                    period = (src_period[si] if rf is None
+                              else 1e3 / max(rf(t), 1e-9))
+                    src_seq[si] = sq + 1
+                    seq += 1
+                    tt = t + period
+                    rec2 = (tt, seq, _EV_SOURCE, si, None, None)
+                    if tt < max_t:
+                        bq = int(tt * inv_w)
+                        db = bq - cur_b
+                        if 0 < db < nb:
+                            ring[bq & mask].append(rec2)
+                            ring_count += 1
+                        elif db <= 0:
+                            insort(cur, rec2, ci)
+                            ring_count += 1
+                        else:
+                            _heappush(spill, rec2)
+                    else:
+                        _heappush(spill, rec2)
+                else:
+                    eq.ci = ci
+                    eq.ring_count = ring_count
+                    self._seq = seq
+                    self._fire_source(si, t)
+                    ring_count = eq.ring_count
+                    seq = self._seq
+            elif kind == _EV_SHIP:
+                a = rec[3]
+                items = rec[4]
+                start = False
+                if not (a.retired or a.stateful):
+                    a.queue.extend(items)
+                    start = True
+                elif a.stateful and not a.retired:
+                    # inline key-ownership check: all-mine ships (the
+                    # overwhelming majority) skip the re-home machinery
+                    rt2 = a.router
+                    mk = rt2.mask
+                    all_mine = mk is not None
+                    if all_mine:
+                        tbl = rt2.table
+                        ai = a.index
+                        try:
+                            for it3 in items:
+                                if tbl[it3.key & mk] != ai:
+                                    all_mine = False
+                                    break
+                        except TypeError:
+                            all_mine = False
+                    if all_mine:
+                        a.queue.extend(items)
+                        start = True
+                    else:
+                        eq.ci = ci
+                        eq.ring_count = ring_count
+                        self._seq = seq
+                        a.enqueue(items, rec[5], t)
+                        ring_count = eq.ring_count
+                        seq = self._seq
+                else:
+                    eq.ci = ci
+                    eq.ring_count = ring_count
+                    self._seq = seq
+                    a.enqueue(items, rec[5], t)
+                    ring_count = eq.ring_count
+                    seq = self._seq
+                if start:
+                    # ---- a._try_start(t) inline (busy/halted checked here)
+                    q = a.queue
+                    aj = a.ti
+                    if q and not t_busy[aj] and not a.halted:
+                        if a.chain_next is None and a.fan_in == 1:
+                            it2 = q.popleft()
+                            tg = it2.tag
+                            if tg is not None:
+                                # record_channel_latency inline
+                                d3 = a.reporter._chan_lat
+                                cd = tg.channel_id
+                                s3, c3 = d3.get(cd, _T0)
+                                d3[cd] = (
+                                    s3 + (t - tg.created_at_ms), c3 + 1)
+                                it2.tag = None
+                            vid = a.vid
+                            if (a._pending_task_sample is None
+                                    and vid in measured_tasks):
+                                # should_sample_task inline (mutating
+                                # decision, gated exactly like reference)
+                                d3 = a.reporter._last_task_sample
+                                last = d3.get(vid)
+                                if last is None or t - last >= interval:
+                                    d3[vid] = t
+                                    a._pending_task_sample = t
+                            a._fan_count += 1
+                            svc = a.svc_ms
+                            if a.stateful:
+                                d2 = a.state._data
+                                k2 = it2.key
+                                d2[k2] = d2.get(k2, 0) + 1
+                            t_busy[aj] = True
+                            t_busy_w[aj] += svc
+                            t_busy_t[aj] += svc
+                            ck = a.cpu_i
+                            nb2 = cpu_busy[ck]
+                            if nb2 < cpu_cores[ck]:
+                                cpu_busy[ck] = nb2 + 1
+                                seq += 1
+                                tt = t + svc
+                                rec2 = (tt, seq, _EV_COMPLETE,
+                                        a, it2, [a])
+                                if tt < max_t:
+                                    bq = int(tt * inv_w)
+                                    db = bq - cur_b
+                                    if 0 < db < nb:
+                                        ring[bq & mask].append(rec2)
+                                        ring_count += 1
+                                    elif db <= 0:
+                                        insort(cur, rec2, ci)
+                                        ring_count += 1
+                                    else:
+                                        _heappush(spill, rec2)
+                                else:
+                                    _heappush(spill, rec2)
+                            else:
+                                cpu_ready[ck].append((svc, a, it2, [a]))
+                        else:
+                            eq.ci = ci
+                            eq.ring_count = ring_count
+                            self._seq = seq
+                            a._try_start(t)
+                            ring_count = eq.ring_count
+                            seq = self._seq
+            elif kind == _EV_CALL:
+                # injected callbacks read clock.now(): sync it first
+                clock._now = t
+                eq.ci = ci
+                eq.ring_count = ring_count
+                self._seq = seq
+                _heappop(call_times)
+                rec[3]()
+                ring_count = eq.ring_count
+                seq = self._seq
+                measured_tasks = self.measured_tasks
+                measured_channels = self.measured_channels
+            elif kind == _EV_CONTROL:
+                clock._now = t
+                eq.ci = ci
+                eq.ring_count = ring_count
+                self._seq = seq
+                self._control_tick()
+                ring_count = eq.ring_count
+                seq = self._seq
+                measured_tasks = self.measured_tasks
+                measured_channels = self.measured_channels
+            else:  # _EV_FLUSH
+                clock._now = t
+                eq.ci = ci
+                eq.ring_count = ring_count
+                self._seq = seq
+                self._flush_stale_tick()
+                ring_count = eq.ring_count
+                seq = self._seq
+            tprev = t
+            n_events += 1
+            if n_events >= max_ev:
+                break
+        # leave the clock where the reference loop would: at the last
+        # *dispatched* event's time (a past-horizon pop never assigns it)
+        clock._now = tprev
+        eq.ci = ci
+        eq.ring_count = ring_count
+        eq.pops = n_events
+        self._seq = seq
+        return n_events
 
 
 @dataclass
@@ -1458,7 +2258,15 @@ class SimResult:
 # under REPRO_SANITIZE=1 the sim clock becomes a checked property (NS-S002),
 # every control tick sweeps the channel-conservation ledgers (NS-S001), and
 # chained hand-over channels are excluded from the delivered<=shipped check.
+from ..analysis import race as _race  # noqa: E402
 from ..analysis import sanitize as _sanitize  # noqa: E402
+
+#: instrumented runs force the object-per-entity layout: channels keep real
+#: OutputBuffer objects (the checkers wrap that class's methods) and the
+#: dispatch stays on the reference loop so every wrapped method is actually
+#: called.  Evaluated at construction time, so flag changes via env vars
+#: are picked up per process like the other instrumentation hooks.
+_INSTRUMENTED = _sanitize.SANITIZE or _race.RACE_CHECK
 
 if _sanitize.SANITIZE:  # pragma: no cover - exercised via subprocess tests
     _sanitize.instrument_simulator(StreamSimulator, _SimTask, SimClock)

@@ -245,6 +245,54 @@ def test_raw_lock_rule_scoped_to_race_modules():
     assert ids(src, "src/repro/core/manager.py") == []
 
 
+# -- NS-L007: heapq stays inside core/eventq.py ------------------------------
+
+
+def test_heapq_import_flagged_outside_eventq():
+    assert ids("import heapq\n", SIM) == ["NS-L007"]
+
+
+def test_heapq_from_import_flagged_outside_eventq():
+    assert ids("from heapq import heappush, heappop\n",
+               "src/repro/core/manager.py") == ["NS-L007"]
+
+
+def test_heapq_attribute_call_flagged_outside_eventq():
+    src = """
+        import heapq
+        def push(h, rec):
+            heapq.heappush(h, rec)
+    """
+    # one finding for the import, one for the call
+    assert ids(src, "src/repro/core/placement.py") == ["NS-L007", "NS-L007"]
+
+
+def test_heapq_allowed_in_eventq():
+    src = """
+        from heapq import heappop, heappush
+        import heapq
+        def push(h, rec):
+            heapq.heappush(h, rec)
+    """
+    assert ids(src, "src/repro/core/eventq.py") == []
+
+
+def test_eventq_reexport_use_clean():
+    # the sanctioned pattern: heap ops via the ordering authority
+    src = """
+        from .eventq import heappop as _heappop, heappush as _heappush
+        def push(h, rec):
+            _heappush(h, rec)
+    """
+    assert ids(src, SIM) == []
+
+
+def test_heapq_rule_scoped_to_src_repro():
+    # benchmarks/tests/scripts may use heapq directly
+    assert ids("import heapq\n", "benchmarks/scale.py") == []
+    assert ids("import heapq\n", "tests/test_eventq.py") == []
+
+
 # -- severity wiring + the repo-clean gate -----------------------------------
 
 

@@ -1,0 +1,238 @@
+"""Order-equivalence contract of core/eventq.py.
+
+The calendar queue must reproduce the reference heap's **exact total
+order on ``(time, seq)``** under every push/pop interleaving the
+simulator can produce: equal-time ties (bursts landing on one instant),
+far-future spills (control ticks scheduled a horizon away, +inf
+sentinels), epoch rollovers (the serving window wrapping the ring many
+times), and pushes landing in the bucket currently being served.  A
+seeded random property pins this in every environment; a hypothesis
+variant widens the search when the optional extra is installed.
+"""
+from __future__ import annotations
+
+import random
+
+import pytest
+
+from repro.core.eventq import (
+    SCHEDULERS,
+    TARGET_OCCUPANCY,
+    CalendarEventQueue,
+    HeapEventQueue,
+    make_event_queue,
+)
+
+
+def drain_interleaved(queues, ops):
+    """Apply one (push/pop) op stream to every queue; return per-queue pop
+    sequences.  ``ops`` is a list of records to push or None for a pop."""
+    out = [[] for _ in queues]
+    for op in ops:
+        for q, popped in zip(queues, out):
+            if op is None:
+                popped.append(q.pop())
+            else:
+                q.push(op)
+    # drain what's left
+    for q, popped in zip(queues, out):
+        while True:
+            rec = q.pop()
+            if rec is None:
+                break
+            popped.append(rec)
+    return out
+
+
+def make_ops(rng: random.Random, n: int, width_ms: float) -> list:
+    """An adversarial op stream: monotone-nondecreasing event times (the
+    simulator never schedules into the past) with heavy tie mass, pushes
+    from the served instant out to far beyond the ring horizon (spills),
+    occasional +inf records, and interleaved pops."""
+    ops: list = []
+    t = 0.0
+    seq = 0
+    horizon = width_ms * 512  # one full ring of default-size buckets
+    for _ in range(n):
+        r = rng.random()
+        if r < 0.35:
+            ops.append(None)  # pop
+            continue
+        seq += 1
+        if r < 0.45:
+            dt = 0.0  # tie: same instant as the last push
+        elif r < 0.80:
+            dt = rng.random() * width_ms * 4  # near the serving window
+        elif r < 0.95:
+            dt = rng.random() * horizon * 3  # far-future: spill heap
+        else:
+            dt = float("inf") if rng.random() < 0.3 else 1e18
+        ops.append((t + dt if dt != float("inf") else float("inf"),
+                    seq, seq % 7, None, None, None))
+        if rng.random() < 0.5 and dt not in (float("inf"), 1e18):
+            t += rng.random() * width_ms  # advance the time base
+    return ops
+
+
+@pytest.mark.parametrize("seed", range(12))
+def test_random_streams_pop_identically(seed):
+    rng = random.Random(seed)
+    width = rng.choice([0.05, 1.0, 20.0])
+    heap = HeapEventQueue()
+    cal = CalendarEventQueue(width_ms=width)
+    h, c = drain_interleaved([heap, cal], make_ops(rng, 800, width))
+    assert h == c
+    assert len(heap) == len(cal) == 0
+
+
+def test_epoch_rollover_many_ring_wraps():
+    """Serving window wraps the 512-bucket ring repeatedly; order holds."""
+    heap, cal = HeapEventQueue(), CalendarEventQueue(width_ms=1.0, nbuckets=8)
+    seq = 0
+    recs = []
+    for epoch in range(50):  # 50 * 8-bucket epochs
+        for j in range(5):
+            seq += 1
+            recs.append((epoch * 8.0 + (seq % 16) * 0.7, seq, 0, None, None,
+                         None))
+    for r in recs:
+        heap.push(r)
+        cal.push(r)
+    got_h = [heap.pop() for _ in range(len(recs))]
+    got_c = [cal.pop() for _ in range(len(recs))]
+    assert got_h == got_c == sorted(recs, key=lambda r: (r[0], r[1]))
+
+
+def test_ties_break_on_seq():
+    heap, cal = HeapEventQueue(), CalendarEventQueue()
+    for s in (5, 3, 9, 1):
+        for q in (heap, cal):
+            q.push((7.25, s, 0, None, None, None))
+    assert ([heap.pop()[1] for _ in range(4)]
+            == [cal.pop()[1] for _ in range(4)] == [1, 3, 5, 9])
+
+
+def test_push_into_serving_bucket_keeps_sorted_tail():
+    """A push at/after the serving position lands in sorted order even when
+    the current bucket is mid-drain (the insort-at-ci path)."""
+    cal = CalendarEventQueue(width_ms=10.0)
+    for s, t in enumerate([1.0, 2.0, 9.0], start=1):
+        cal.push((t, s, 0, None, None, None))
+    assert cal.pop()[0] == 1.0
+    cal.push((1.5, 9, 0, None, None, None))  # same bucket, behind 2.0
+    cal.push((2.0, 0, 0, None, None, None))  # tie with rec 2, earlier seq
+    assert [r[0:2] for r in (cal.pop(), cal.pop(), cal.pop(), cal.pop())] == [
+        (1.5, 9), (2.0, 0), (2.0, 2), (9.0, 3)]
+
+
+def test_peek_does_not_disturb_order():
+    cal = CalendarEventQueue(width_ms=1.0)
+    recs = [(t, s, 0, None, None, None)
+            for s, t in enumerate([4.0, 0.5, 700.0, 0.5])]
+    for r in recs:
+        cal.push(r)
+    want = sorted(recs, key=lambda r: (r[0], r[1]))
+    got = []
+    for _ in recs:
+        assert cal.peek() == cal.peek()
+        nxt = cal.peek()
+        assert cal.pop() == nxt
+        got.append(nxt)
+    assert got == want and cal.pop() is None and cal.peek() is None
+
+
+def test_retune_preserves_order():
+    """Drive enough pops through a badly-sized queue to trigger at least one
+    retune/rebucket; the pop order must still be the total order."""
+    cal = CalendarEventQueue(width_ms=0.001)  # ~1000x too narrow: advances
+    heap = HeapEventQueue()                   # every pop, retunes wider
+    rng = random.Random(99)
+    t, seq = 0.0, 0
+    got_c, got_h = [], []
+    for _ in range(30_000):
+        seq += 1
+        t += rng.random() * 0.05
+        rec = (t, seq, 0, None, None, None)
+        cal.push(rec)
+        heap.push(rec)
+        if seq % 2 == 0:
+            got_c.append(cal.pop())
+            got_h.append(heap.pop())
+    while True:
+        rec = cal.pop()
+        if rec is None:
+            break
+        got_c.append(rec)
+        got_h.append(heap.pop())
+    assert got_c == got_h
+    assert cal.w != 0.001  # the retune actually fired
+
+
+def test_len_tracks_ring_plus_spill():
+    cal = CalendarEventQueue(width_ms=1.0)
+    cal.push((0.5, 1, 0, None, None, None))      # serving bucket
+    cal.push((100.0, 2, 0, None, None, None))    # ring
+    cal.push((1e6, 3, 0, None, None, None))      # spill
+    cal.push((float("inf"), 4, 0, None, None, None))  # spill (non-finite)
+    assert len(cal) == 4
+    for want_seq in (1, 2, 3, 4):
+        assert cal.pop()[1] == want_seq
+    assert len(cal) == 0
+
+
+def test_make_event_queue_names_and_width_seeding():
+    assert set(SCHEDULERS) == {"calendar", "heap"}
+    assert type(make_event_queue("heap")) is HeapEventQueue
+    q = make_event_queue("calendar", rate_hint_events_per_ms=16.0)
+    assert type(q) is CalendarEventQueue
+    assert q.w == pytest.approx(TARGET_OCCUPANCY / 16.0)
+    # clamped at both extremes
+    assert make_event_queue("calendar", 1e12).w == pytest.approx(1e-4)
+    assert make_event_queue("calendar", 1e-12).w == pytest.approx(1e3)
+    with pytest.raises(ValueError):
+        make_event_queue("fifo")
+
+
+def test_bad_construction_rejected():
+    with pytest.raises(ValueError):
+        CalendarEventQueue(nbuckets=100)  # not a power of two
+    with pytest.raises(ValueError):
+        CalendarEventQueue(width_ms=0.0)
+
+
+# -- hypothesis widening (optional test extra) -------------------------------
+
+
+def test_hypothesis_order_equivalence():
+    hyp = pytest.importorskip("hypothesis")
+    st = pytest.importorskip("hypothesis.strategies")
+
+    @hyp.given(
+        st.lists(
+            st.one_of(
+                st.none(),
+                st.tuples(
+                    st.floats(min_value=0.0, max_value=1e4),
+                    st.integers(min_value=0, max_value=1 << 30)),
+            ),
+            max_size=200),
+        st.sampled_from([0.01, 1.0, 50.0]),
+    )
+    @hyp.settings(deadline=None, max_examples=200)
+    def prop(raw_ops, width):
+        seq = 0
+        ops = []
+        last_t = 0.0
+        for op in raw_ops:
+            if op is None:
+                ops.append(None)
+                continue
+            dt, s = op
+            seq += 1
+            last_t = max(last_t, dt)  # nondecreasing base
+            ops.append((last_t, (s, seq), 0, None, None, None))
+        h, c = drain_interleaved([HeapEventQueue(), CalendarEventQueue(
+            width_ms=width)], ops)
+        assert h == c
+
+    prop()

@@ -64,7 +64,8 @@ def _trace(res) -> dict:
     }
 
 
-def media_sim(event_mode: str = "exact") -> StreamSimulator:
+def media_sim(event_mode: str = "exact",
+              scheduler: str = "calendar") -> StreamSimulator:
     """Fig. 7/8 media pipeline, adaptive buffers + chaining armed, seed 7:
     exercises BufferSizeUpdate streams on a multi-worker pipeline."""
     p = MediaJobParams(parallelism=4, num_workers=2, streams=32, fps=25.0,
@@ -78,14 +79,16 @@ def media_sim(event_mode: str = "exact") -> StreamSimulator:
             item_bytes=350, keys_per_task=gpp)},
         initial_buffer_bytes=32 * 1024, measurement_interval_ms=1_000.0,
         enable_qos=True, enable_chaining=True, seed=7,
-        event_mode=event_mode)
+        event_mode=event_mode, scheduler=scheduler)
 
 
-def media_trace(event_mode: str = "exact") -> dict:
-    return _trace(media_sim(event_mode).run(60_000.0))
+def media_trace(event_mode: str = "exact",
+                scheduler: str = "calendar") -> dict:
+    return _trace(media_sim(event_mode, scheduler).run(60_000.0))
 
 
-def scale_sim(event_mode: str = "exact") -> StreamSimulator:
+def scale_sim(event_mode: str = "exact",
+              scheduler: str = "calendar") -> StreamSimulator:
     """Overloaded stage under a latency constraint + throughput constraint:
     the manager walks buffers -> ScaleRequest (live scale-out through the
     rewirer) -> GiveUp, seed 11."""
@@ -103,14 +106,16 @@ def scale_sim(event_mode: str = "exact") -> StreamSimulator:
         jg, jcs, num_workers=2,
         sources={"Src": SimSourceSpec(160.0, item_bytes=256, keys=64)},
         initial_buffer_bytes=1024, enable_qos=True, enable_chaining=True,
-        seed=11, event_mode=event_mode)
+        seed=11, event_mode=event_mode, scheduler=scheduler)
 
 
-def scale_trace(event_mode: str = "exact") -> dict:
-    return _trace(scale_sim(event_mode).run(45_000.0))
+def scale_trace(event_mode: str = "exact",
+                scheduler: str = "calendar") -> dict:
+    return _trace(scale_sim(event_mode, scheduler).run(45_000.0))
 
 
-def chain_sim(event_mode: str = "exact") -> StreamSimulator:
+def chain_sim(event_mode: str = "exact",
+              scheduler: str = "calendar") -> StreamSimulator:
     """Single-worker linear pipeline with an unreachable 8 ms SLO: buffers
     converge, then the manager fuses A->B (ChainRequest), then gives up,
     seed 3."""
@@ -128,11 +133,12 @@ def chain_sim(event_mode: str = "exact") -> StreamSimulator:
         jg, jcs, num_workers=1,
         sources={"Src": SimSourceSpec(150.0, item_bytes=512, keys=16)},
         initial_buffer_bytes=4096, enable_qos=True, enable_chaining=True,
-        seed=3, event_mode=event_mode)
+        seed=3, event_mode=event_mode, scheduler=scheduler)
 
 
-def chain_trace(event_mode: str = "exact") -> dict:
-    return _trace(chain_sim(event_mode).run(60_000.0))
+def chain_trace(event_mode: str = "exact",
+                scheduler: str = "calendar") -> dict:
+    return _trace(chain_sim(event_mode, scheduler).run(60_000.0))
 
 
 TRACES = {
@@ -167,6 +173,16 @@ def test_qos_decisions_bit_identical_to_golden():
     golden = json.loads(GOLDEN.read_text())
     for name, fn in TRACES.items():
         _assert_trace_equal(name, fn(), golden[name])
+
+
+def test_heap_scheduler_matches_golden():
+    """The reference binary heap and the calendar queue are
+    interchangeable orderings: the SAME golden traces must come out of
+    the heap-scheduler arm, bit for bit (core/eventq.py contract)."""
+    golden = json.loads(GOLDEN.read_text())
+    for name, fn in TRACES.items():
+        _assert_trace_equal(f"{name}[heap]", fn(scheduler="heap"),
+                            golden[name])
 
 
 def test_same_seed_same_trace():

@@ -67,14 +67,38 @@ SCENARIOS = tuple(SIMS)
 
 @pytest.fixture(scope="module")
 def mode_results():
-    """Each golden scenario run once per event mode (full SimResults)."""
+    """Each golden scenario run once per event mode (full SimResults), plus
+    the exact core on the reference heap scheduler (core/eventq.py)."""
     out = {}
     for name, build in SIMS.items():
         out[name] = {
             mode: build(event_mode=mode).run(DURATIONS_MS[name])
             for mode in ("exact", "batched")
         }
+        out[name]["heap"] = build(
+            event_mode="exact", scheduler="heap").run(DURATIONS_MS[name])
     return out
+
+
+@pytest.mark.parametrize("name", SCENARIOS)
+def test_schedulers_bit_equal_on_golden_scenarios(mode_results, name):
+    """Calendar queue vs reference heap on the exact core: not just the
+    decision trace (test_sim_determinism pins that) — the FULL results are
+    bit-equal, because the two schedulers produce the identical total order
+    on (time, seq) and the fast/reference dispatch loops replay identical
+    float operations."""
+    cal, heap = mode_results[name]["exact"], mode_results[name]["heap"]
+    assert heap.events == cal.events
+    assert heap.sink_latencies_ms == cal.sink_latencies_ms  # bit-equal
+    assert heap.sink_count_by_key == cal.sink_count_by_key
+    assert heap.latency_timeline == cal.latency_timeline
+    assert heap.final_buffer_sizes == cal.final_buffer_sizes
+    assert _decision_multiset(heap) == _decision_multiset(cal)
+    assert heap.chained_groups == cal.chained_groups
+    assert [repr(d) for d in heap.scale_log] == \
+        [repr(d) for d in cal.scale_log]
+    assert (heap.total_bytes, heap.total_buffers) == \
+        (cal.total_bytes, cal.total_buffers)
 
 
 def _decision_multiset(res) -> list[str]:
@@ -398,6 +422,9 @@ def test_recorded_full_fig8_grid_artifact():
     for g in full:
         assert g["latency_factor"] >= 13.0
         assert g["throughput_matched"] is True
+    # the full grid is recorded through BOTH event cores — the exact-mode
+    # m=800 leg is the calendar-queue event core's acceptance criterion
+    assert {g["event_mode"] for g in full} == {"exact", "batched"}
     # the m=200 grid pair stays recorded alongside (exact + batched)
     modes = {g["event_mode"] for g in grids if g["parallelism"] == 200}
     assert modes == {"exact", "batched"}
