@@ -1,0 +1,185 @@
+"""Crash-under-load: fault injection + checkpoint recovery on BOTH backends.
+
+The robustness benchmark (docs/robustness.md): a keyed, stateful job runs
+under a flash-crowd rate trace (benchmarks/workloads.py); mid-spike a
+seeded :class:`FaultPlan` kills the worker owning ``Agg[0]``.  The
+heartbeat monitor declares the worker dead, recovery respawns the lost
+subtasks on a replacement, restores keyed state from the last periodic
+checkpoint, rolls the sources back to the checkpointed offsets and replays.
+Reported per backend:
+
+* ``time_to_detect_ms``   — crash -> heartbeat-timeout declaration,
+* ``time_to_recover_ms``  — crash -> respawn + state restore + replay done,
+* ``time_to_slo_recovery_ms`` — crash -> first control tick where every
+  latency constraint is evaluable and satisfied again,
+
+plus the per-key conservation ledger, asserted EXACT on both backends:
+``emitted[k] == sunk[k] + dropped[k]`` for every key (emitted counts replay
+fires, so duplicates at the sinks are bounded by the recorded replay
+window).  Results land in ``BENCH_faults.json``.
+"""
+from __future__ import annotations
+
+import sys
+import tempfile
+import time
+
+sys.path.insert(0, "src")
+
+from repro.checkpoint.checkpointer import Checkpointer  # noqa: E402
+from repro.core import (  # noqa: E402
+    ALL_TO_ALL,
+    FaultPlan,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    SimSourceSpec,
+    SourceSpec,
+    StreamEngine,
+    StreamSimulator,
+)
+
+from benchmarks.workloads import flash_crowd  # noqa: E402
+
+KEYS = 32
+
+
+def _crash_job(agg_fn=None, sink_fn=None, agg_cost_ms: float = 1.0):
+    """One keyed, stateful job description for BOTH backends (the simulator
+    reads sim_cpu_ms; the engine runs the fns)."""
+    jg = JobGraph("crash-under-load")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Agg", 2, fn=agg_fn, sim_cpu_ms=agg_cost_ms,
+                            sim_item_bytes=64, stateful=True))
+    jg.add_vertex(JobVertex("Sink", 1, fn=sink_fn, is_sink=True,
+                            sim_cpu_ms=0.01, stateful=True))
+    jg.add_edge("Src", "Agg", ALL_TO_ALL)
+    jg.add_edge("Agg", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Agg"), "Agg", ("Agg", "Sink"))
+    return jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+
+
+def _check_conservation(name: str, res) -> None:
+    em, sk, dr = res.emitted_by_key, res.sink_count_by_key, res.dropped_by_key
+    bad = {k: (em.get(k, 0), sk.get(k, 0), dr.get(k, 0))
+           for k in set(em) | set(sk) | set(dr)
+           if em.get(k, 0) != sk.get(k, 0) + dr.get(k, 0)}
+    assert not bad, f"{name}: per-key conservation violated: {bad}"
+    assert res.time_to_detect_ms is not None, f"{name}: crash never detected"
+    assert res.time_to_recover_ms is not None, f"{name}: never recovered"
+    assert res.recovery_events, f"{name}: no RecoveryEvent"
+
+
+def _derived(res) -> str:
+    ev = res.recovery_events[0]
+    slo = res.time_to_slo_recovery_ms
+    return (
+        f"detect_ms={res.time_to_detect_ms:.0f};"
+        f"recover_ms={res.time_to_recover_ms:.0f};"
+        f"slo_recovery_ms={(-1.0 if slo is None else slo):.0f};"
+        f"emitted={sum(res.emitted_by_key.values())};"
+        f"sunk={sum(res.sink_count_by_key.values())};"
+        f"dropped={sum(res.dropped_by_key.values())};"
+        f"replayed={sum(res.replayed_by_key.values())};"
+        f"lost_tasks={len(ev.lost_vertices)};"
+        f"restored_keys={ev.restored_keys};exact=True"
+    )
+
+
+def _metrics(res) -> dict:
+    return {
+        "time_to_detect_ms": res.time_to_detect_ms,
+        "time_to_recover_ms": res.time_to_recover_ms,
+        "time_to_slo_recovery_ms": res.time_to_slo_recovery_ms,
+        "emitted": sum(res.emitted_by_key.values()),
+        "sunk": sum(res.sink_count_by_key.values()),
+        "dropped": sum(res.dropped_by_key.values()),
+        "replayed": sum(res.replayed_by_key.values()),
+        "recoveries": len(res.recovery_events),
+        "fault_log": [f"{f.at_ms:.0f}ms {f.kind}: {f.detail}"
+                      for f in res.fault_log],
+    }
+
+
+def run_crash_recovery_sim(smoke: bool = False):
+    """Simulator arm: deterministic virtual time — detection latency is an
+    exact multiple of the control tick."""
+    rate = flash_crowd(base=100.0, spike=3.0, at_ms=6_000.0,
+                       ramp_ms=1_000.0, hold_ms=3_000.0, decay_ms=3_000.0,
+                       seed=11, stop_ms=22_000.0)
+    jg, jcs = _crash_job(agg_cost_ms=1.0)
+    plan = FaultPlan(seed=3).kill_owner_of(8_000.0, "Agg", index=0)
+    with tempfile.TemporaryDirectory() as ckdir:
+        sim = StreamSimulator(
+            jg, jcs, num_workers=4,
+            sources={"Src": SimSourceSpec(100.0, item_bytes=64, keys=KEYS,
+                                          rate_fn=rate)},
+            initial_buffer_bytes=256, max_buffer_lifetime_ms=500.0,
+            fault_plan=plan,
+            checkpointer=Checkpointer(ckdir, keep=3,
+                                      checkpoint_interval_ms=2_000.0),
+            heartbeat_timeout_ms=1_000.0)
+        t0 = time.perf_counter()
+        res = sim.run(32_000.0)
+        wall = (time.perf_counter() - t0) * 1e6
+    _check_conservation("crash_recovery_sim", res)
+    return [("crash_recovery_sim", wall, _derived(res))], res
+
+
+def run_crash_recovery_engine(smoke: bool = False):
+    """Engine arm: real threads, a real heartbeat timeout, a task-thread
+    abort that drops in-flight state exactly like a process crash."""
+    scale = 1.0 if smoke else 1.6
+    stop_ms = 6_000.0 * scale
+    rate = flash_crowd(base=120.0, spike=2.5, at_ms=1_500.0 * scale,
+                       ramp_ms=600.0, hold_ms=1_500.0 * scale,
+                       decay_ms=1_500.0, seed=11, stop_ms=stop_ms)
+
+    def agg_fn(p, emit, ctx):
+        ctx.state.bump(ctx._current_item.key)
+        emit(p)
+
+    def sink_fn(p, emit, ctx):
+        ctx.state.bump(ctx._current_item.key)
+
+    jg, jcs = _crash_job(agg_fn=agg_fn, sink_fn=sink_fn)
+    plan = FaultPlan(seed=3).kill_owner_of(2_500.0 * scale, "Agg", index=0)
+    with tempfile.TemporaryDirectory() as ckdir:
+        eng = StreamEngine(
+            jg, jcs, num_workers=4,
+            sources={"Src": SourceSpec(
+                120.0, lambda s: (b"x" * 64, 64),
+                key_of=lambda s: s % KEYS, rate_fn=rate)},
+            initial_buffer_bytes=512, measurement_interval_ms=400.0,
+            enable_chaining=False, max_buffer_lifetime_ms=200.0,
+            fault_plan=plan,
+            checkpointer=Checkpointer(ckdir, keep=3,
+                                      checkpoint_interval_ms=1_000.0),
+            heartbeat_timeout_ms=800.0)
+        t0 = time.perf_counter()
+        res = eng.run(stop_ms + 2_500.0)
+        wall = (time.perf_counter() - t0) * 1e6
+    _check_conservation("crash_recovery_engine", res)
+    return [("crash_recovery_engine", wall, _derived(res))], res
+
+
+def run(quick: bool = True, smoke: bool = False):
+    rows_sim, res_sim = run_crash_recovery_sim(smoke=smoke)
+    rows_eng, res_eng = run_crash_recovery_engine(smoke=smoke)
+    rows = rows_sim + rows_eng
+    from benchmarks.run import BENCH_DIR, write_bench
+    if not smoke or not (BENCH_DIR / "BENCH_faults.json").exists():
+        write_bench("faults", {
+            "smoke": smoke,
+            "sim": _metrics(res_sim),
+            "engine": _metrics(res_eng),
+            "rows": [{"name": n, "us_per_call": round(us, 1), "derived": d}
+                     for n, us, d in rows],
+        })
+    return rows
+
+
+if __name__ == "__main__":
+    for name, us, derived in run(smoke=True):
+        print(f"{name},{us:.1f},{derived}")

@@ -49,6 +49,8 @@ MODULES = [
     ("scale", "Fig. 8 at n=200 up to m=800: constraints on/off, exact + "
               "batched event cores, >=13x latency factor"),
     ("serving_qos", "serving-plane QoS: adaptive batching + chaining"),
+    ("faults", "crash-under-load: fault injection + checkpoint recovery, "
+               "time-to-detect/recover/SLO-recovery on both backends"),
     ("kernels", "Pallas kernel validation vs oracles"),
     ("roofline", "dry-run roofline terms per (arch x shape)"),
 ]

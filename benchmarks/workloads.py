@@ -1,0 +1,114 @@
+"""Seeded workload-trace generators shared by the benchmark scenarios.
+
+Every generator returns a PURE function of elapsed time (``rate_fn``:
+elapsed_ms -> items/s, the shared contract of ``SimSourceSpec.rate_fn`` and
+``SourceSpec.rate_fn``) or of the source sequence number (``key_of``:
+seq -> key, engine ``SourceSpec.key_of``), so the same trace drives the
+discrete-event simulator and the threaded engine bit-for-bit.  All
+randomness is drawn up front from ``random.Random(seed)`` (or derived
+deterministically from the seed and the cycle index), never at call time —
+a trace is replayable and two backends given the same seed see the same
+workload.
+
+Three families, after the usual stream-benchmark suspects:
+
+* :func:`diurnal` — a day/night sinusoid between ``base`` and ``peak`` with
+  a small seeded per-cycle amplitude jitter;
+* :func:`flash_crowd` — steady ``base`` until ``at_ms``, then a linear ramp
+  to ``spike`` x base, a hold, and an exponential decay back (the classic
+  crash-under-load backdrop: benchmarks/faults.py kills a worker mid-spike);
+* :func:`adversarial_key_skew` — a Zipf-like key chooser where a small
+  seeded hot set absorbs most traffic and (optionally) rotates, the worst
+  case for key-range routing and recovery-time state restore.
+"""
+from __future__ import annotations
+
+import math
+import random
+from typing import Callable
+
+__all__ = ["diurnal", "flash_crowd", "adversarial_key_skew"]
+
+
+def diurnal(base: float, peak: float, period_ms: float = 20_000.0,
+            seed: int = 0, jitter: float = 0.1) -> Callable[[float], float]:
+    """Sinusoidal day/night pacing between ``base`` and ``peak`` items/s.
+
+    Each full period gets one seeded amplitude factor in
+    ``[1 - jitter, 1 + jitter]`` (derived from ``seed`` and the cycle index,
+    so the trace is a pure function of elapsed time)."""
+    if peak < base:
+        raise ValueError(f"peak {peak} < base {base}")
+    mid = (base + peak) / 2.0
+    amp = (peak - base) / 2.0
+
+    def rate_fn(elapsed_ms: float) -> float:
+        cycle = int(elapsed_ms // period_ms)
+        wob = 1.0 + jitter * (
+            2.0 * random.Random(seed * 1_000_003 + cycle).random() - 1.0)
+        phase = 2.0 * math.pi * (elapsed_ms % period_ms) / period_ms
+        # start at the trough: a freshly started job warms up, not slams
+        return max(mid - amp * math.cos(phase) * wob, 0.0)
+
+    return rate_fn
+
+
+def flash_crowd(base: float, spike: float, at_ms: float,
+                ramp_ms: float = 2_000.0, hold_ms: float = 4_000.0,
+                decay_ms: float = 4_000.0, seed: int = 0,
+                stop_ms: float | None = None) -> Callable[[float], float]:
+    """Flash-crowd trace: ``base`` items/s, then at ``at_ms`` a linear ramp
+    over ``ramp_ms`` to ``spike * base``, held for ``hold_ms``, decaying
+    exponentially back to ``base`` over ``decay_ms``.
+
+    ``seed`` jitters the realized spike magnitude by up to +/-10% (seeded
+    once, not per call).  ``stop_ms`` optionally silences the source after
+    that instant so a bounded benchmark run can fully drain — required for
+    the exact per-key conservation checks in benchmarks/faults.py."""
+    mag = spike * base * (0.9 + 0.2 * random.Random(seed).random())
+    t_ramp_end = at_ms + ramp_ms
+    t_hold_end = t_ramp_end + hold_ms
+
+    def rate_fn(elapsed_ms: float) -> float:
+        if stop_ms is not None and elapsed_ms >= stop_ms:
+            return 0.0
+        if elapsed_ms < at_ms:
+            return base
+        if elapsed_ms < t_ramp_end:
+            return base + (mag - base) * (elapsed_ms - at_ms) / ramp_ms
+        if elapsed_ms < t_hold_end:
+            return mag
+        # exponential decay with time constant decay_ms / 3 (~95% settled
+        # after decay_ms)
+        dt = elapsed_ms - t_hold_end
+        return base + (mag - base) * math.exp(-3.0 * dt / decay_ms)
+
+    return rate_fn
+
+
+def adversarial_key_skew(keys: int, hot_fraction: float = 0.1,
+                         hot_weight: float = 0.9, seed: int = 0,
+                         rotate_every: int | None = None
+                         ) -> Callable[[int], int]:
+    """Adversarial key chooser for ``SourceSpec.key_of``: a seeded hot set
+    of ``ceil(keys * hot_fraction)`` keys absorbs ``hot_weight`` of all
+    traffic; with ``rotate_every`` set, the hot set rotates through the key
+    space every that many items — the worst case for key-range routing
+    (one owner melts) and for recovery (the restored ranges are the loaded
+    ones).  Pure function of ``seq``: the per-item choice is derived from
+    ``seed`` and ``seq``, so replay after a crash regenerates the identical
+    key sequence (docs/robustness.md replay-window semantics)."""
+    if not 0 < hot_fraction <= 1:
+        raise ValueError(f"hot_fraction {hot_fraction} outside (0, 1]")
+    n_hot = max(1, math.ceil(keys * hot_fraction))
+    perm = list(range(keys))
+    random.Random(seed).shuffle(perm)
+
+    def key_of(seq: int) -> int:
+        r = random.Random(seed * 2_000_003 + seq)
+        shift = 0 if rotate_every is None else (seq // rotate_every) * n_hot
+        if r.random() < hot_weight:
+            return perm[(shift + r.randrange(n_hot)) % keys]
+        return perm[(shift + n_hot + r.randrange(keys - n_hot)) % keys]
+
+    return key_of

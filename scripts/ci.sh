@@ -139,4 +139,34 @@ CHECKER.assert_clean()
 print("sanitizer clean: media + scale + chain goldens, keyed_burst")
 PY
 
+# -- crash-recovery smoke under both dynamic checkers ------------------------
+# The robustness path (docs/robustness.md): fault injection -> heartbeat
+# detection -> respawn on a replacement -> checkpoint state restore -> offset
+# replay, on BOTH backends.  Each arm asserts the exact per-key conservation
+# ledger (inside run_crash_recovery_*) AND zero reports from the instrumented
+# checker — recovery must not race the engine's shared state (lockset
+# detector) nor leave a key in two stores / corrupt buffer accounting
+# (sanitizer NS-S005, NS-S001/4).  Own process per arm: read-once flags.
+echo "== crash recovery smoke (race detector, both backends) =="
+REPRO_RACE_CHECK=1 python - <<'PY'
+from repro.analysis.race import CHECKER, RACE_CHECK
+assert RACE_CHECK and CHECKER is not None
+from benchmarks.faults import run_crash_recovery_engine, run_crash_recovery_sim
+run_crash_recovery_sim(smoke=True)
+run_crash_recovery_engine(smoke=True)
+CHECKER.assert_clean()
+print("race check clean: crash recovery (sim + engine)")
+PY
+
+echo "== crash recovery smoke (invariant sanitizer, both backends) =="
+REPRO_SANITIZE=1 python - <<'PY'
+from repro.analysis.sanitize import CHECKER, SANITIZE
+assert SANITIZE and CHECKER is not None
+from benchmarks.faults import run_crash_recovery_engine, run_crash_recovery_sim
+run_crash_recovery_sim(smoke=True)
+run_crash_recovery_engine(smoke=True)
+CHECKER.assert_clean()
+print("sanitizer clean: crash recovery (sim + engine)")
+PY
+
 echo "CI OK"

@@ -137,6 +137,10 @@ register("NS-G006", ERROR, "sink unreachable from any source",
          "item can ever arrive there")
 register("NS-G007", WARN, "vertex unreachable from any source",
          "tasks of this vertex will never receive an item")
+register("NS-G008", ERROR, "respawn targets a dead worker",
+         "crash recovery must place lost subtasks on the replacement "
+         "acquired via WorkerPool.acquire_replacement(); a worker marked "
+         "dead is quarantined forever (core/faults.py, docs/robustness.md)")
 
 register("NS-C001", ERROR, "constraint references unknown job vertex",
          "every vertex/edge element of a JobSequence must exist in the "

@@ -26,6 +26,13 @@ benchmarks:
   must reset cleanly, and ``append_run`` callers must honor the
   ``room_for`` contract (at most the final item of a run crosses
   capacity).
+* **NS-S005 — post-recovery key ownership**: after every crash-recovery
+  cycle (``recover_worker``, core/elastic.py) the same exclusivity scan as
+  NS-S003 runs over every stateful stage the crash touched — the
+  checkpoint restore + replay must never leave a key served by two owners.
+  Buffers destroyed by an *injected* crash are exempted from the NS-S001
+  zero-drop ledger via ``note_crashed`` (their losses are accounted per
+  key by the fault machinery instead).
 
 Violations become structured ``Diagnostic`` records (shared registry,
 analysis/diagnostics.py) with the capture-site stack in ``detail``,
@@ -69,6 +76,11 @@ register("NS-S004", "ERROR", "output-buffer fill accounting violated",
          "used_bytes must track appended-minus-taken bytes exactly and "
          "append_run callers must pre-split runs with room_for (at most "
          "the final item may cross capacity)")
+register("NS-S005", "ERROR", "key ownership not exclusive after recovery",
+         "crash recovery (recover_worker) must leave every key of every "
+         "affected stateful stage in exactly its routed owner's store — a "
+         "key served by two owners double-counts aggregates after the "
+         "checkpoint restore + replay (docs/robustness.md)")
 
 
 def _capture_stack(skip: int = 2) -> str:
@@ -101,6 +113,11 @@ class InvariantChecker:
         #: delivers without shipping, so their delivered<=shipped check is
         #: inapplicable
         self._ever_chained: set[int] = set()
+        #: buffers hit by an injected crash (core/faults.py): their contents
+        #: were dropped BY DESIGN with explicit per-key drop accounting in
+        #: the executor, so the zero-drop conservation ledger is
+        #: inapplicable to them (and only to them)
+        self._crashed_buffers: set[int] = set()
         self._sites: set[tuple[str, str]] = set()
         #: _SimTask.enqueue nesting depth (the sim core is single-threaded):
         #: re-homed items (key-ownership forwarding, scale-in stragglers)
@@ -133,10 +150,18 @@ class InvariantChecker:
                 d.rule, d.severity, d.location, d.message, d.hint,
                 detail="capture site:\n" + _capture_stack(skip)))
 
+    def note_crashed(self, buf: Any) -> None:
+        """Exempt a buffer whose contents an injected crash destroyed from
+        the zero-drop conservation sweeps (the executor accounts the drops
+        per key instead)."""
+        with self._meta:
+            self._crashed_buffers.add(id(buf))
+
     def clear(self) -> None:
         with self._meta:
             self._ledgers.clear()
             self._ever_chained.clear()
+            self._crashed_buffers.clear()
             self._sites.clear()
             self.reports = []
 
@@ -265,6 +290,8 @@ def _sweep_channels(sim: Any) -> None:
         if ch.chained:
             ck._ever_chained.add(id(ch.buffer))
     for cid, ch in sim.channels.items():
+        if id(ch.buffer) in ck._crashed_buffers:
+            continue  # crash-dropped by design; drops accounted per key
         led = ck.ledger(ch.buffer)
         buffered = len(ch.buffer.items)
         if led["items_in"] - led["items_out"] != buffered:
@@ -349,6 +376,8 @@ def instrument_engine(engine_cls: type) -> None:
         res = orig_stop(self)
         ck = _checker()
         for cid, s in self.senders.items():
+            if id(s.buffer) in ck._crashed_buffers:
+                continue  # crash-dropped by design (see note_crashed)
             _check_buffer(s.buffer, ck.ledger(s.buffer),
                           f"engine stop() sweep of {cid!r}", skip=3)
         return res
@@ -362,35 +391,54 @@ def instrument_engine(engine_cls: type) -> None:
 # ---------------------------------------------------------------------------
 
 
+def _scan_group_ownership(rewirer: Any, job_vertex: str, rule_id: str,
+                          where: str) -> None:
+    """Shared NS-S003/NS-S005 scan: every key of a stateful stage must live
+    in exactly the store of its routed owner."""
+    jv = rewirer.jg.vertices.get(job_vertex)
+    if jv is None or not jv.stateful:
+        return
+    ck = _checker()
+    router = rewirer.rg.routers[job_vertex]
+    seen: dict[Any, Any] = {}
+    for v in rewirer.rg.tasks_of(job_vertex):
+        store = rewirer._task_state(v)
+        if store is None:
+            continue
+        for key in store.keys():
+            owner = router.owner(key)
+            if key in seen:
+                ck.report(
+                    rule_id, where,
+                    f"key {key!r} present in both {seen[key]} and "
+                    f"{v.id}", skip=4)
+            elif owner != v.index:
+                ck.report(
+                    rule_id, where,
+                    f"key {key!r} resides in {v.id} but the routing "
+                    f"table owns it to subtask {owner}", skip=4)
+            seen[key] = v.id
+
+
 def instrument_rewirer(rewirer_cls: type) -> None:
     orig_migrate = rewirer_cls._migrate_keyed_state
+    orig_recover = rewirer_cls.recover_worker
 
     def _migrate_keyed_state(self: Any, job_vertex: str, plan: Any) -> None:
         orig_migrate(self, job_vertex, plan)
-        jv = self.jg.vertices.get(job_vertex)
-        if jv is None or not jv.stateful:
-            return
-        ck = _checker()
-        router = self.rg.routers[job_vertex]
-        seen: dict[Any, Any] = {}
-        for v in self.rg.tasks_of(job_vertex):
-            store = self._task_state(v)
-            if store is None:
-                continue
-            for key in store.keys():
-                owner = router.owner(key)
-                if key in seen:
-                    ck.report(
-                        "NS-S003", f"migration of {job_vertex!r}",
-                        f"key {key!r} present in both {seen[key]} and "
-                        f"{v.id} after the table swap")
-                elif owner != v.index:
-                    ck.report(
-                        "NS-S003", f"migration of {job_vertex!r}",
-                        f"key {key!r} resides in {v.id} but the routing "
-                        f"table owns it to subtask {owner}")
-                seen[key] = v.id
+        _scan_group_ownership(self, job_vertex, "NS-S003",
+                              f"migration of {job_vertex!r}")
+
+    def recover_worker(self: Any, dead: int, now: float) -> Any:
+        ev = orig_recover(self, dead, now)
+        # NS-S005: ownership exclusivity over every stage the crash touched
+        for jv in sorted({v.job_vertex for v in ev.lost_vertices}):
+            _scan_group_ownership(self, jv, "NS-S005",
+                                  f"recovery of worker {dead} ({jv!r})")
+        return ev
 
     _migrate_keyed_state.__qualname__ = \
         f"{rewirer_cls.__name__}._migrate_keyed_state"
+    recover_worker.__qualname__ = f"{rewirer_cls.__name__}.recover_worker"
     rewirer_cls._migrate_keyed_state = _migrate_keyed_state
+    rewirer_cls.recover_worker = recover_worker

@@ -54,16 +54,77 @@ def _flatten(tree):
 
 
 class Checkpointer:
-    def __init__(self, directory: str | Path, keep: int = 3) -> None:
+    def __init__(self, directory: str | Path, keep: int = 3,
+                 checkpoint_interval_ms: float | None = None) -> None:
         self.dir = Path(directory)
         self.dir.mkdir(parents=True, exist_ok=True)
         self.keep = keep
+        #: periodic-checkpoint cadence for the streaming backends; None
+        #: keeps the historical behaviour (checkpoints only at explicit
+        #: rescale/recovery points).  Both executors poll ``due(now_ms)``
+        #: from their control tick.
+        self.interval_ms = checkpoint_interval_ms
+        self._next_due_ms: float | None = None
+        self._stream_lock = threading.Lock()
         self._thread: threading.Thread | None = None
         # a crash mid-save leaves a step_<n>.tmp staging dir behind; it holds
         # no complete checkpoint, so it is safe (and required) to discard
         for p in self.dir.glob("step_*.tmp"):
             if p.is_dir():
                 shutil.rmtree(p, ignore_errors=True)
+        for p in self.dir.glob("stream_*.tmp"):
+            p.unlink(missing_ok=True)
+
+    # -- streaming checkpoints (stdlib-only; both stream backends) ------------
+    # The streaming runtime's periodic snapshot is a single pickled payload
+    # (source offsets + per-stage packed keyed state, built by
+    # RuntimeRewirer._stream_checkpoint_payload).  Kept deliberately apart
+    # from the jax ``save``/``restore`` path: taking one must never import
+    # the accelerator stack, and a training step dir must never be confused
+    # with a stream snapshot.  Retention is keep-last-k, same as steps.
+
+    def due(self, now_ms: float) -> bool:
+        """True when the periodic cadence says a stream checkpoint should be
+        taken at ``now_ms`` (first one lands one full interval in, so a
+        freshly started job is never checkpointed empty)."""
+        if self.interval_ms is None:
+            return False
+        if self._next_due_ms is None:
+            self._next_due_ms = now_ms + self.interval_ms
+            return False
+        return now_ms >= self._next_due_ms
+
+    def save_stream(self, at_ms: float, payload: dict) -> Path:
+        """Persist one streaming snapshot atomically (tmp + rename) and GC
+        to the last ``keep`` snapshots.  Synchronous on purpose: payloads
+        are small (packed keyed state + offsets) and the recovery path must
+        never race a half-written latest snapshot."""
+        with self._stream_lock:
+            n = (max(self.stream_ids()) + 1) if self.stream_ids() else 1
+            tmp = self.dir / f"stream_{n:08d}.tmp"
+            final = self.dir / f"stream_{n:08d}.pkl"
+            tmp.write_bytes(pickle.dumps({"at_ms": at_ms, **payload}))
+            tmp.rename(final)
+            self._next_due_ms = at_ms + (self.interval_ms or 0.0)
+            for old in self.stream_ids()[: -self.keep]:
+                (self.dir / f"stream_{old:08d}.pkl").unlink(missing_ok=True)
+            return final
+
+    def stream_ids(self) -> list[int]:
+        out = []
+        for p in self.dir.glob("stream_*.pkl"):
+            suffix = p.name[len("stream_"):-len(".pkl")]
+            if suffix.isdigit():
+                out.append(int(suffix))
+        return sorted(out)
+
+    def latest_stream(self) -> dict | None:
+        """The most recent complete streaming snapshot, or None."""
+        ids = self.stream_ids()
+        if not ids:
+            return None
+        raw = (self.dir / f"stream_{ids[-1]:08d}.pkl").read_bytes()
+        return pickle.loads(raw)
 
     # -- save -----------------------------------------------------------------
     def save(self, step: int, state: dict, extra: dict | None = None,

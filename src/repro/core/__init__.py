@@ -50,6 +50,16 @@ from .constraints import (
     sequence_latency,
 )
 from .engine import EngineResult, SourceSpec, StreamEngine, StreamItem
+from .faults import (
+    ChannelBlackhole,
+    DelaySpike,
+    FaultPlan,
+    FaultRecord,
+    KillOwnerOf,
+    KillWorker,
+    RecoveryEvent,
+)
+from .liveness import HeartbeatMonitor
 from .graphs import (
     ALL_TO_ALL,
     POINTWISE,

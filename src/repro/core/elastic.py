@@ -193,6 +193,22 @@ class RuntimeRewirer:
         self.unchain_log: list[tuple[tuple[str, ...], str]] = []
         #: workers released back to the pool by scale_in, in order
         self.released_workers: list[int] = []
+        # -- crash recovery (core/faults.py + core/liveness.py) --------------
+        #: streaming Checkpointer driving periodic snapshots + restore
+        self._checkpointer = None
+        #: HeartbeatMonitor declaring workers dead; None = detection off
+        self._monitor = None
+        #: completed recovery cycles (RecoveryEvent), in order
+        self.recovery_log: list = []
+        #: workers known crashed (stop being beaten) -> injection timestamp
+        self._crash_time_ms: dict[int, float] = {}
+        self._crashed_workers: set[int] = set()
+        #: first-crash recovery metrics, surfaced on SimResult/EngineResult
+        self.time_to_detect_ms: float | None = None
+        self.time_to_recover_ms: float | None = None
+        self.time_to_slo_recovery_ms: float | None = None
+        #: crash time of the oldest crash whose SLOs have not re-converged
+        self._slo_pending_since: float | None = None
 
     # -- public mutation API -------------------------------------------------
     def apply_scale_decision(self, d: ScaleDecision) -> bool:
@@ -371,6 +387,195 @@ class RuntimeRewirer:
             if w not in self.reporters:
                 self._add_worker(w)
 
+    # -- crash detection + recovery (unplanned elasticity, §3.6) -------------
+    def attach_recovery(self, checkpointer=None,
+                        heartbeat_timeout_ms: float = 1_500.0) -> None:
+        """Arm failure detection (and, with a ``Checkpointer``, periodic
+        snapshots + checkpoint-based restore).  The monitor runs on the
+        backend's OWN clock — simulated milliseconds in the simulator, so
+        detection latency is deterministic there."""
+        from .liveness import HeartbeatMonitor
+
+        self._checkpointer = checkpointer
+        self._monitor = HeartbeatMonitor(
+            self.rg.pool.worker_ids(), timeout_ms=heartbeat_timeout_ms,
+            clock=self.clock.now)
+
+    def note_crash(self, worker: int, at_ms: float) -> None:
+        """Record an injected crash: the worker stops being beaten (the
+        monitor will time it out) and the injection instant anchors the
+        time-to-detect metric."""
+        self._crashed_workers.add(worker)
+        self._crash_time_ms.setdefault(worker, at_ms)
+
+    def _maybe_checkpoint(self, now: float) -> None:
+        """Take the periodic streaming snapshot when the cadence says so
+        (called from both backends' control ticks; no-op without an armed
+        ``Checkpointer`` or with ``checkpoint_interval_ms=None``)."""
+        ck = self._checkpointer
+        if ck is not None and ck.due(now):
+            ck.save_stream(now, self._stream_checkpoint_payload())
+
+    def _stream_checkpoint_payload(self) -> dict:
+        """One consistent streaming snapshot: per-source replay offsets plus
+        per-stage packed keyed state (merged across subtasks — ownership is
+        exclusive, so the merge is collision-free and restore can re-slice
+        by whatever routing table rules at recovery time)."""
+        from ..checkpoint.state_codec import pack_keyed_state
+
+        state: dict[str, bytes] = {}
+        for name, jv in self.jg.vertices.items():
+            if not getattr(jv, "stateful", False):
+                continue
+            merged: dict = {}
+            router = self.rg.routers.get(name)
+            for v in self.rg.tasks_of(name):
+                store = self._task_state(v)
+                if store is None:
+                    continue
+                if router is not None:
+                    merged.update(store.snapshot(
+                        router.ranges_of(v.index), evict=False))
+                else:
+                    merged.update(store.snapshot(None, evict=False))
+            state[name] = pack_keyed_state(
+                merged, meta={"job_vertex": name})
+        return {"offsets": self._source_offsets(), "state": state}
+
+    def _liveness_tick(self, now: float) -> list:
+        """One detection cycle: beat every live worker, declare the silent
+        ones dead, and run the full recovery protocol for each.  Returns the
+        completed ``RecoveryEvent``s (empty without an armed monitor)."""
+        mon = self._monitor
+        if mon is None:
+            return []
+        for w in self.rg.pool.worker_ids():
+            if w not in self._crashed_workers:
+                mon.beat(w)
+        events = []
+        for w in mon.dead_workers():
+            if self.time_to_detect_ms is None:
+                self.time_to_detect_ms = now - self._crash_time_ms.get(
+                    w, now - mon.timeout_ms)
+            ev = self.recover_worker(w, now)
+            events.append(ev)
+            if self.time_to_recover_ms is None:
+                self.time_to_recover_ms = ev.recovered_at_ms - ev.crash_at_ms
+            if self._slo_pending_since is None:
+                self._slo_pending_since = ev.crash_at_ms
+        return events
+
+    def _slo_recovery_check(self, now: float) -> None:
+        """Post-crash SLO watch: the first control tick at which every
+        latency constraint's scope analysis is satisfied again (estimate
+        within its limit, with at least one scope evaluable) stamps
+        ``time_to_slo_recovery_ms`` (measured from the crash instant)."""
+        if self._slo_pending_since is None or not self.managers:
+            return
+        evaluable = False
+        for mgr in self.managers.values():
+            for scope in mgr.allocation.scopes:
+                res = mgr.analyze(scope)
+                if res is None:
+                    continue
+                evaluable = True
+                if res.worst_estimate_ms > scope.constraint.latency_limit_ms:
+                    return
+        if evaluable:
+            self.time_to_slo_recovery_ms = now - self._slo_pending_since
+            self._slo_pending_since = None
+
+    def recover_worker(self, dead: int, now: float):
+        """The full unplanned-elasticity protocol for one dead worker:
+
+        1. every chain containing a dead member dissolves (bookkeeping +
+           backend mechanics — the members share the worker, so the whole
+           fused series died with it),
+        2. the pool quarantines the dead id (``mark_dead``; NS-G008 makes
+           any later placement onto it an error) and hands out a
+           replacement (``acquire_replacement`` restores fleet size, it
+           does not grow it),
+        3. the lost subtasks respawn on the replacement — same
+           ``RuntimeVertex`` identities, so the routing table, constraints
+           and channel structure survive unchanged,
+        4. their key ranges are restored from the last periodic streaming
+           checkpoint, re-sliced by the CURRENT routing table (correct even
+           if ranges migrated between snapshot and crash),
+        5. every source rolls back to its recorded offset (log-based
+           replay: at-least-once within the replay window, exactly-once
+           outside it),
+        6. ``_refresh_qos_scopes`` makes the QoS plane re-cover the rebuilt
+           subgraph immediately.
+
+        Returns the ``RecoveryEvent`` (also appended to ``recovery_log``).
+        """
+        from .faults import RecoveryEvent
+
+        rg = self.rg
+        lost = sorted(rg.vertices_on_worker(dead),
+                      key=lambda v: (v.job_vertex, v.index))
+        lost_set = set(lost)
+        self._crashed_workers.add(dead)
+        # 1. chains with a dead member dissolve before recovery
+        for chain in [c for c in list(self.active_chains)
+                      if lost_set.intersection(c)]:
+            self._crash_dissolve_chain(chain)
+            self.active_chains.remove(chain)
+            self.unchain_log.append(
+                (tuple(v.id for v in chain), f"crash of worker {dead}"))
+        # 2. quarantine + replacement
+        rg.pool.mark_dead(dead, reason="crash")
+        if self._monitor is not None:
+            self._monitor.remove(dead)
+        self._drop_worker_plumbing(dead)
+        new_w = rg.pool.acquire_replacement(
+            dead, reason=f"recover worker {dead}").id
+        self._sync_new_workers()
+        if self._monitor is not None:
+            self._monitor.add(new_w)
+        # 3. respawn the lost subtasks on the replacement (NS-G008 is
+        #    enforced inside pool.assign: a dead target raises)
+        for v in lost:
+            rg.pool.assign(v, new_w)
+            rg._worker[v] = new_w
+            self._respawn_task(v)
+            for c in rg.out_channels(v):
+                self._open_channel(c)
+            self._repoint_in_channels(v)
+        # 4. restore lost key ranges from the last periodic checkpoint
+        snap = (self._checkpointer.latest_stream()
+                if self._checkpointer is not None else None)
+        restored = 0
+        if snap is not None:
+            from ..checkpoint.state_codec import unpack_keyed_state
+
+            unpacked = {jv: unpack_keyed_state(blob)
+                        for jv, blob in snap.get("state", {}).items()}
+            for v in lost:
+                store = self._task_state(v)
+                entries = unpacked.get(v.job_vertex)
+                if store is None or not entries:
+                    continue
+                router = rg.routers.get(v.job_vertex)
+                mine = (dict(entries) if router is None else
+                        {k: val for k, val in entries.items()
+                         if router.owner(k) == v.index})
+                if mine:
+                    store.restore(mine)
+                    restored += len(mine)
+        # 5. replay from recorded source offsets
+        replayed = self._replay_sources(
+            snap.get("offsets") if snap is not None else None, now)
+        # 6. the QoS plane re-covers the rebuilt subgraph
+        self._refresh_qos_scopes()
+        crash_at = self._crash_time_ms.get(
+            dead, now - (self._monitor.timeout_ms
+                         if self._monitor is not None else 0.0))
+        ev = RecoveryEvent(dead, new_w, crash_at, now, self.clock.now(),
+                           tuple(lost), restored, replayed)
+        self.recovery_log.append(ev)
+        return ev
+
     # -- keyed-state migration (core/routing.py + checkpoint handoff) --------
     def _migrate_keyed_state(self, job_vertex: str, plan) -> None:
         """Pause-drain-snapshot-install-swap for one ``MigrationPlan``:
@@ -468,12 +673,22 @@ class RuntimeRewirer:
         self.reporter_setup = compute_reporter_setup(self.allocations, self.rg)
         for rep in self.reporters.values():
             rep.reset_assignments()
+        # a crashed worker may still hold placements until the heartbeat
+        # monitor declares it and recovery re-homes them — its reporter
+        # plumbing is already gone, so skip it; recovery triggers another
+        # refresh once the subgraph is rebuilt
         for w, routes in self.reporter_setup.task_routes.items():
+            rep = self.reporters.get(w)
+            if rep is None:
+                continue
             for mgr, tasks in routes.items():
-                self.reporters[w].assign_manager(mgr, (), tasks)
+                rep.assign_manager(mgr, (), tasks)
         for w, routes in self.reporter_setup.channel_routes.items():
+            rep = self.reporters.get(w)
+            if rep is None:
+                continue
             for mgr, chans in routes.items():
-                self.reporters[w].assign_manager(mgr, chans, ())
+                rep.assign_manager(mgr, chans, ())
         self.managers = {
             w: QoSManager(alloc, self.rg, self.clock, policy=self.policy,
                           throughput_constraints=self.throughput_constraints)
@@ -589,6 +804,46 @@ class RuntimeRewirer:
         """After a routing-table commit: re-home items of moved key ranges
         still queued at their old owners (backends that enforce ownership at
         processing time may leave this a no-op)."""
+
+    # -- crash-recovery hooks (defaults keep fault-free backends inert) ------
+    def _respawn_task(self, v) -> None:
+        """Re-create the execution of a crashed subtask on its (already
+        re-assigned) replacement worker.  Unlike ``_spawn_task`` for a
+        grown vertex, the RuntimeVertex identity is *reused* — routing
+        table, constraints and channel structure survive unchanged."""
+        self._spawn_task(v)
+
+    def _repoint_in_channels(self, v) -> None:
+        """Re-aim the existing inbound channels of a respawned subtask at
+        its new execution (backends whose delivery indirects through the
+        RuntimeVertex may leave this a no-op)."""
+
+    def _replay_sources(self, offsets, now: float) -> int:
+        """Roll every source back to its checkpointed offset (``offsets``:
+        ``(job_vertex, index) -> seq`` or None when no snapshot exists) and
+        make crashed sources emit again.  Returns the number of items that
+        will be re-emitted (the replay window)."""
+        return 0
+
+    def _source_offsets(self) -> dict:
+        """Current per-source replay offsets, ``(job_vertex, index) -> seq``
+        (recorded into every periodic checkpoint)."""
+        return {}
+
+    def _crash_dissolve_chain(self, chain) -> None:
+        """Tear down a chain one of whose members died.  Unlike
+        ``_dissolve_chain`` this must not touch the dead member's execution
+        (it is gone) and must never fail — the chain *is* dissolved, the
+        only question is cleaning up the survivors' wiring."""
+
+    def _drop_worker_plumbing(self, w: int) -> None:
+        """Discard per-worker plumbing (QoS reporter, CPU model) of a dead
+        worker so no stale handle outlives the crash."""
+        if w in self.reporters:
+            # rebind-without-w: readers holding the old dict see a
+            # consistent snapshot (same idiom as _add_worker's insert)
+            self.reporters = {k: r for k, r in self.reporters.items()
+                              if k != w}
 
 
 def split_constraints(constraints) -> tuple[list, list[ThroughputConstraint]]:

@@ -50,6 +50,8 @@ from .chaining import ChainRequest, DRAIN_QUEUES
 from .clock import Clock, RealClock
 from .constraints import JobConstraint
 from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
+from .faults import (
+    ChannelBlackhole, DelaySpike, FaultPlan, KillOwnerOf, KillWorker)
 from .graphs import ALL_TO_ALL, Channel, JobGraph, RuntimeGraph, RuntimeVertex
 from .manager import Action, BufferSizeUpdate, GiveUp, QoSManager
 from .measurement import QoSReporter, Tag, latency_percentile
@@ -111,6 +113,20 @@ class EngineResult:
     #: pre-flight WARN diagnostics (analysis/graph_check.py) carried onto
     #: the result so benchmark harnesses can surface them per row
     preflight_diagnostics: list = field(default_factory=list)
+    #: crash-recovery metrics (docs/robustness.md): None on fault-free runs
+    time_to_detect_ms: float | None = None
+    time_to_recover_ms: float | None = None
+    time_to_slo_recovery_ms: float | None = None
+    #: core/faults.py RecoveryEvent / FaultRecord audit trails
+    recovery_events: list = field(default_factory=list)
+    fault_log: list = field(default_factory=list)
+    #: per-key conservation ledger (fault runs only):
+    #: emitted[k] == sink_count[k] + dropped[k], with duplicates at the
+    #: sinks bounded by the replay window recorded in replayed_by_key
+    emitted_by_key: dict = field(default_factory=dict)
+    dropped_by_key: dict = field(default_factory=dict)
+    replayed_by_key: dict = field(default_factory=dict)
+    sink_count_by_key: dict = field(default_factory=dict)
 
     @property
     def mean_latency_ms(self) -> float:
@@ -151,6 +167,14 @@ class ChannelSender:
         # them in place), so the per-send dict chase is pure overhead
         self.src_reporter = engine.reporters[src_worker]
         self.chained = False
+        #: set when the src task's worker was crash-killed (core/faults.py):
+        #: the process that owned this buffer is gone, so subsequent emits
+        #: into the channel are swallowed and counted as crash drops
+        self.dead = False
+        #: ChannelBlackhole fault: while now < blackhole_until flushes are
+        #: withheld — items keep buffering exactly like a network partition
+        #: and ship when it heals (stale sweep / next full-buffer flush)
+        self.blackhole_until = 0.0
         # the per-sender lock guards the buffer; _make_tracked_lock IS
         # threading.Lock unless REPRO_RACE_CHECK=1 selected the lockset-
         # tracked variant at import (analysis/race.py)
@@ -158,6 +182,9 @@ class ChannelSender:
 
     def send(self, item: StreamItem) -> None:
         eng = self.engine
+        if self.dead:
+            eng._count_drop(item.key)
+            return
         now = eng.clock.now()
         # tag on exit of sender user code (§3.3), one per interval
         cid = self.cid
@@ -172,6 +199,12 @@ class ChannelSender:
                 dst.process(item, self.channel.id)
             return
         with self._lock:
+            if self.dead:
+                # re-check under the lock: the crash wipe (dead set, then
+                # buffer emptied under this lock) may have raced the check
+                # above — appending now would strand the item forever
+                eng._count_drop(item.key)
+                return
             full = self.buffer.append(item, item.size_bytes, now)
             if full:
                 self._flush_locked(now)
@@ -196,8 +229,10 @@ class ChannelSender:
             return True
 
     def _flush_locked(self, now: float) -> None:
-        items, nbytes, lifetime = self.buffer.take(now)
         eng = self.engine
+        if now < self.blackhole_until and not eng._stop.is_set():
+            return  # partitioned: hold the buffer until the blackhole heals
+        items, nbytes, lifetime = self.buffer.take(now)
         if self.cid in eng.measured_channels:
             self.src_reporter.record_output_buffer_lifetime(
                 self.cid, lifetime, self.buffer.capacity_bytes,
@@ -263,6 +298,10 @@ class TaskExecutor:
         self._rr: dict[str, int] = {}
         self.chained = False          # this task was pulled into another thread
         self.retired = False          # elastically scaled in (thread stopped)
+        #: worker crash-killed this task (implies retired, core/faults.py):
+        #: its thread aborts WITHOUT draining; queued and in-flight items are
+        #: destroyed and counted per key by the crash machinery
+        self.crashed = False
         self.paused = threading.Event()
         self.paused.set()             # set == running
         self.parked = threading.Event()  # thread is waiting at the pause gate
@@ -276,6 +315,16 @@ class TaskExecutor:
         self.emitted = 0              # lifetime emissions (elastic telemetry)
         self._window_start = engine.clock.now()
         self.thread: threading.Thread | None = None
+        #: source replay machinery (docs/robustness.md): the pacing loop
+        #: mirrors its next sequence number here (checkpoint offsets read
+        #: it), and recovery posts a rollback target that the loop applies
+        #: at its next iteration
+        self.src_seq = 0
+        self.rollback_to: int | None = None
+        #: DelaySpike fault: extra per-item service sleep active while
+        #: clock.now() < spike_until
+        self.spike_until = 0.0
+        self.spike_sleep_s = 0.0
 
     # -- emit routing ------------------------------------------------------------
     def emit(self, payload: Any, size_bytes: int | None = None,
@@ -336,6 +385,13 @@ class TaskExecutor:
             return False
         target = eng.executors.get(
             RuntimeVertex(self.vertex.job_vertex, owner))
+        if target is not None and target.crashed:
+            # the owner died with its keyed state: the item is lost with it
+            # (counted; source replay regenerates it post-recovery).
+            # Processing it here would put the key in a second store
+            # (NS-S005 ownership exclusivity).
+            eng._count_drop(item.key)
+            return True
         if target is None or target is self or target.retired:
             return False  # owner unreachable: process here rather than drop
         if target.chained:
@@ -347,6 +403,11 @@ class TaskExecutor:
     # -- item processing -----------------------------------------------------------
     def process(self, item: StreamItem, in_channel_id: str) -> None:
         eng = self.engine
+        if self.crashed:
+            # a real crash kills the process mid-item: anything still routed
+            # here is lost with it (counted; source replay makes up the gap)
+            eng._count_drop(item.key)
+            return
         now = eng.clock.now()
         # evaluate tag just before entering user code (§3.3)
         if item.tag is not None:
@@ -368,10 +429,12 @@ class TaskExecutor:
         ):
             self._pending_task_sample = now
         if self.is_sink:
-            eng.record_sink_latency(now - item.created_at_ms)
+            eng.record_sink_latency(now - item.created_at_ms, item.key)
         t0 = time.perf_counter()
         self._current_item = item
         try:
+            if self.spike_until and now < self.spike_until:
+                time.sleep(self.spike_sleep_s)  # injected service-time spike
             if self.fn is not None:
                 self.fn(item.payload, self.emit, self)
             elif not self.is_sink:
@@ -406,7 +469,12 @@ class TaskExecutor:
         for owner, batch in foreign.items():
             target = eng.executors.get(
                 RuntimeVertex(self.vertex.job_vertex, owner))
-            if target is None or target is self or target.retired:
+            if target is not None and target.crashed:
+                # owner died with its state: lost + counted, never processed
+                # by a second store (see _forward_if_not_owner)
+                for it in batch:
+                    eng._count_drop(it.key)
+            elif target is None or target is self or target.retired:
                 mine.extend(batch)  # owner unreachable: keep, never drop
             elif target.chained:
                 target.process_batch(batch, in_channel_id)
@@ -418,6 +486,10 @@ class TaskExecutor:
         """Batch mode: one fn call per delivered output buffer — the buffer
         size IS the batch size (the serving-plane reading of §2.2.1)."""
         eng = self.engine
+        if self.crashed:
+            for it in items:
+                eng._count_drop(it.key)
+            return
         now = eng.clock.now()
         if self.stateful:
             items = self._split_batch_by_owner(items, in_channel_id)
@@ -432,7 +504,7 @@ class TaskExecutor:
                 )
                 item.tag = None
             if is_sink:
-                eng.record_sink_latency(now - item.created_at_ms)
+                eng.record_sink_latency(now - item.created_at_ms, item.key)
         vid = self.vid
         if (
             self._pending_task_sample is None
@@ -443,6 +515,8 @@ class TaskExecutor:
         t0 = time.perf_counter()
         self._current_item = items[0] if items else None
         try:
+            if self.spike_until and now < self.spike_until:
+                time.sleep(self.spike_sleep_s)  # injected service-time spike
             if self.fn is not None:
                 self.fn([it.payload for it in items], self.emit, self)
         finally:
@@ -477,7 +551,10 @@ class TaskExecutor:
                 for it in items:
                     self.process(it, ch_id)
             self.idle.set()
-        # drain remaining work before exiting (chaining handshake)
+        # drain remaining work before exiting (chaining handshake).  A
+        # CRASHED task must NOT drain: its in-flight state dies with the
+        # process; this exit sweep counts any delivery that raced past the
+        # injector's inbox wipe so per-key conservation still closes.
         while True:
             try:
                 got = self.inbox.get_nowait()
@@ -486,7 +563,10 @@ class TaskExecutor:
             if got is None:
                 continue
             ch_id, items = got
-            if self.batch_mode:
+            if self.crashed:
+                for it in items:
+                    eng._count_drop(it.key)
+            elif self.batch_mode:
                 self.process_batch(items, ch_id)
             else:
                 for it in items:
@@ -524,6 +604,9 @@ class StreamEngine(RuntimeRewirer):
         pool: WorkerPool | None = None,
         num_key_ranges: int | None = None,
         preflight: bool = True,
+        fault_plan: FaultPlan | None = None,
+        checkpointer=None,
+        heartbeat_timeout_ms: float = 1_500.0,
     ) -> None:
         self.jg = jg
         # pre-flight validation (analysis/graph_check.py): structured
@@ -612,10 +695,40 @@ class StreamEngine(RuntimeRewirer):
         self._t0 = 0.0
         self._init_rewirer()
 
+        # fault injection + crash recovery (core/faults.py,
+        # docs/robustness.md).  The conservation ledgers are only populated
+        # on fault runs (_fault_acct) — fault-free behaviour is unchanged.
+        self.fault_plan = fault_plan
+        self._fault_acct = fault_plan is not None
+        self.emitted_by_key: dict = {}
+        self.dropped_by_key: dict = {}
+        self.replayed_by_key: dict = {}
+        self.sink_count_by_key: dict = {}
+        self._acct_lock = _make_tracked_lock()
+        self._injector: threading.Thread | None = None
+        #: executors respawned by crash recovery, held at the pause gate
+        #: until _replay_sources releases them (control thread only)
+        self._respawn_held: list[TaskExecutor] = []
+        if fault_plan is not None or checkpointer is not None:
+            self.attach_recovery(checkpointer, heartbeat_timeout_ms)
+
     # -- stats ---------------------------------------------------------------------
-    def record_sink_latency(self, lat_ms: float) -> None:
+    def record_sink_latency(self, lat_ms: float, key: int | None = None) -> None:
         with self._sink_lock:
             self._sink_lat.append(lat_ms)
+            if key is not None:
+                c = self.sink_count_by_key
+                c[key] = c.get(key, 0) + 1
+
+    def _count_drop(self, key, n: int = 1) -> None:
+        """Per-key crash-drop accounting (fault runs only): every item an
+        injected fault destroys is counted here, closing the conservation
+        ledger emitted == sunk + dropped (modulo replay)."""
+        if not self._fault_acct:
+            return
+        with self._acct_lock:
+            d = self.dropped_by_key
+            d[key] = d.get(key, 0) + n
 
     def stats_lock_inc(self, nbytes: int, nitems: int) -> None:
         with self._stats_lock:
@@ -625,6 +738,12 @@ class StreamEngine(RuntimeRewirer):
     # -- delivery ---------------------------------------------------------------------
     def deliver(self, channel: Channel, items: list[StreamItem]) -> None:
         dst = self.executors[channel.dst]
+        if dst.crashed:
+            # destination's worker crash-killed: the delivery hits a dead
+            # socket and is lost (counted; source replay makes up the gap)
+            for it in items:
+                self._count_drop(it.key)
+            return
         if dst.retired:
             # straggler delivery to an elastically retired task: hand each
             # item to its key range's surviving owner so nothing is lost and
@@ -647,6 +766,9 @@ class StreamEngine(RuntimeRewirer):
                          and not ex.retired), None)
                 if sibling is not None:
                     self._hand_to(sibling, channel.id, [it])
+                else:
+                    # whole group gone (crash window): lost, but counted
+                    self._count_drop(it.key)
             return
         self._hand_to(dst, channel.id, items)
 
@@ -666,18 +788,31 @@ class StreamEngine(RuntimeRewirer):
     # -- source pacing ------------------------------------------------------------------
     def _source_body(self, v: RuntimeVertex, spec: SourceSpec) -> None:
         ex = self.executors[v]
-        seq = 0
         next_t = time.monotonic()
-        while not self._stop.is_set():
+        while not self._stop.is_set() and not ex.crashed:
             ex.paused.wait()
+            if ex.crashed or self._stop.is_set():
+                break
+            rb = ex.rollback_to
+            if rb is not None:
+                # recovery posted a replay offset: rewind to the checkpoint
+                # (or fast-forward a respawned source past its checkpointed
+                # prefix) — docs/robustness.md, replay-window semantics
+                ex.rollback_to = None
+                ex.src_seq = rb
             now = time.monotonic()
             if now < next_t:
                 time.sleep(min(next_t - now, 0.05))
                 continue
+            seq = ex.src_seq
             rate = spec.rate_at(self.clock.now() - self._t0)
             next_t += 1.0 / max(rate, 1e-9)
             payload, size = spec.make_payload(seq)
             item = StreamItem(payload, size, self.clock.now(), key=spec.key_of(seq))
+            if self._fault_acct:
+                with self._acct_lock:
+                    e = self.emitted_by_key
+                    e[item.key] = e.get(item.key, 0) + 1
             t0 = time.perf_counter()
             ex._current_item = item
             try:
@@ -690,7 +825,7 @@ class StreamEngine(RuntimeRewirer):
                 dt = (time.perf_counter() - t0) * 1e3
                 ex._busy_ms += dt
                 ex.busy_ms_total += dt
-            seq += 1
+            ex.src_seq = seq + 1
 
     # -- QoS control loop ------------------------------------------------------------------
     def _control_body(self) -> None:
@@ -703,14 +838,23 @@ class StreamEngine(RuntimeRewirer):
                 now = self.clock.now()
                 for s in list(self.senders.values()):
                     s.flush_if_stale(now, self.max_buffer_lifetime_ms)
+            # crash detection -> recovery (core/faults.py): the monitor's
+            # clock is the engine clock, so detection latency is wall time;
+            # periodic checkpoints ride the same tick
+            if self._monitor is not None:
+                self._liveness_tick(self.clock.now())
+            self._maybe_checkpoint(self.clock.now())
             # cpu utilization sampling feeds the chaining precondition
-            # (snapshot: elastic re-wiring swaps these dicts live)
+            # (snapshot: elastic re-wiring swaps these dicts live; a dead
+            # worker's reporter is gone — skip, don't resurrect)
             measured = self.measured_tasks
             for v, ex in list(self.executors.items()):
                 if v.id in measured and not ex.retired:
-                    self.reporters[self.rg.worker(v)].record_task_cpu(
-                        v.id, ex.cpu_utilization(), ex.chained
-                    )
+                    rep = self.reporters.get(self.rg.worker(v))
+                    if rep is not None:
+                        rep.record_task_cpu(
+                            v.id, ex.cpu_utilization(), ex.chained
+                        )
             # reporters -> managers
             managers = self.managers
             for rep in list(self.reporters.values()):
@@ -723,6 +867,10 @@ class StreamEngine(RuntimeRewirer):
                 if self.clock.now() >= st.get("next_ms", 0.0):
                     st["next_ms"] = self.clock.now() + st["period_ms"]
                     self.elastic_check(st)
+            # time-to-SLO-recovery: first tick after a crash where every
+            # latency constraint is evaluable and satisfied again
+            if self._slo_pending_since is not None:
+                self._slo_recovery_check(self.clock.now())
             if not self.enable_qos:
                 continue
             # managers act
@@ -751,6 +899,112 @@ class StreamEngine(RuntimeRewirer):
                 pass
         elif isinstance(action, GiveUp):
             self._give_ups.append(action)
+
+    # -- fault injection (core/faults.py; docs/robustness.md) ----------------------------
+    def _injector_body(self) -> None:
+        """Dedicated thread that fires each planned fault at its wall-clock
+        offset from ``start()`` — the engine-side analogue of the
+        simulator's scheduled ``_inject_fault`` events."""
+        for f in self.fault_plan.ordered():
+            while not self._stop.is_set():
+                dt_s = (self._t0 + f.at_ms - self.clock.now()) / 1e3
+                if dt_s <= 0:
+                    break
+                time.sleep(min(dt_s, 0.05))
+            if self._stop.is_set():
+                return
+            self._inject_fault(f)
+
+    def _inject_fault(self, fault) -> None:
+        now = self.clock.now()
+        rel = now - self._t0
+        plan = self.fault_plan
+        if isinstance(fault, KillWorker):
+            w = fault.worker
+            if w is None:
+                live = [x for x in self.rg.pool.worker_ids()
+                        if x not in self._crashed_workers]
+                w = plan.pick_worker(live)
+            if w is not None and w not in self._crashed_workers:
+                self._crash_worker(w, now, rel)
+        elif isinstance(fault, KillOwnerOf):
+            group = self.rg.tasks_of(fault.job_vertex)
+            target = next((v for v in group if v.index == fault.index),
+                          group[-1] if group else None)
+            if target is not None:
+                w = self.rg.worker(target)
+                if w not in self._crashed_workers:
+                    plan.record(rel, "kill_owner_of",
+                                f"{target.id} on worker {w}")
+                    self._crash_worker(w, now, rel)
+        elif isinstance(fault, ChannelBlackhole):
+            until = now + fault.duration_ms
+            n = 0
+            for s in list(self.senders.values()):
+                c = s.channel
+                if (c.src.job_vertex == fault.src_vertex
+                        and c.dst.job_vertex == fault.dst_vertex):
+                    s.blackhole_until = until
+                    n += 1
+            plan.record(rel, "blackhole",
+                        f"{fault.src_vertex}->{fault.dst_vertex} "
+                        f"({n} channels, {fault.duration_ms:g}ms)")
+        elif isinstance(fault, DelaySpike):
+            until = now + fault.duration_ms
+            # the engine has no synthetic service time; the spike sleeps
+            # (factor - 1) x the vertex's nominal sim_cpu_ms per item, so
+            # shared scenarios stress both backends comparably
+            extra_s = (max(fault.factor - 1.0, 0.0)
+                       * self.jg.vertices[fault.job_vertex].sim_cpu_ms / 1e3)
+            n = 0
+            for v in self.rg.tasks_of(fault.job_vertex):
+                ex = self.executors.get(v)
+                if ex is not None and not ex.crashed:
+                    ex.spike_sleep_s = extra_s
+                    ex.spike_until = until
+                    n += 1
+            plan.record(rel, "delay_spike",
+                        f"{fault.job_vertex} x{fault.factor:g} "
+                        f"for {fault.duration_ms:g}ms ({n} tasks)")
+
+    def _crash_worker(self, w: int, now: float, rel_ms: float) -> None:
+        """Kill every task resident on worker ``w`` the way a process crash
+        would: threads abort without draining, queued items and un-shipped
+        output buffers are destroyed (counted per key), in-flight emissions
+        are swallowed, and the worker stops heartbeating.  Detection and
+        recovery follow in the control loop (``_liveness_tick``)."""
+        if self.fault_plan is not None:
+            self.fault_plan.record(rel_ms, "kill_worker", f"worker {w}")
+        self.note_crash(w, now)
+        for v, ex in list(self.executors.items()):
+            if ex.crashed or ex.retired or self.rg.worker(v) != w:
+                continue
+            ex.crashed = True
+            ex.retired = True
+            ex.stop_flag = True
+            ex.paused.set()        # free a parked thread so it can exit
+            # queued-but-unprocessed items die with the process
+            while True:
+                try:
+                    got = ex.inbox.get_nowait()
+                except queue.Empty:
+                    break
+                if got is not None:
+                    for it in got[1]:
+                        self._count_drop(it.key)
+            ex.inbox.put(None)     # wake a blocked get()
+            # un-shipped output buffers die with the process; later emits
+            # into these channels are swallowed at the sender (dead flag)
+            for senders_list in list(ex.senders.values()):
+                for s in list(senders_list):
+                    s.dead = True
+                    with s._lock:
+                        items, _, _ = s.buffer.take(now)
+                    if items:
+                        if _sanitize.SANITIZE:
+                            _sanitize.CHECKER.note_crashed(s.buffer)
+                        for it in items:
+                            self._count_drop(it.key)
 
     # -- dynamic task chaining (§3.5.2) --------------------------------------------------
     def apply_chain(self, req: ChainRequest) -> None:
@@ -1035,6 +1289,82 @@ class StreamEngine(RuntimeRewirer):
         ex = self.executors.get(v)
         return 0.0 if ex is None else ex.busy_ms_total
 
+    # -- crash-recovery hooks (RuntimeRewirer.recover_worker) -----------------------------
+    def _respawn_task(self, v: RuntimeVertex) -> None:
+        # like _spawn_task, but the fresh executor starts HELD at the pause
+        # gate: its out-channels are only opened (and its state restored)
+        # after this returns, so an early item/fire would emit into an empty
+        # sender table and vanish.  _replay_sources releases the holds once
+        # the whole recovery (channels + state + offsets) is wired.
+        ex = TaskExecutor(v, self)
+        ex.paused.clear()
+        self._respawn_held.append(ex)
+        executors = dict(self.executors)
+        executors[v] = ex
+        self.executors = executors
+        if self._running:
+            self._start_task_thread(v, ex)
+
+    # _repoint_in_channels: inherited no-op — deliver() resolves
+    # executors[channel.dst] per call, so in-channels re-point the moment
+    # _spawn_task swaps the fresh executor in.
+
+    def _source_offsets(self) -> dict:
+        out = {}
+        for jv_name in self.sources:
+            for v in self.rg.tasks_of(jv_name):
+                ex = self.executors.get(v)
+                if ex is not None:
+                    out[(jv_name, v.index)] = ex.src_seq
+        return out
+
+    def _replay_sources(self, offsets, now: float) -> int:
+        """Roll every source back to its checkpointed offset (None = no
+        checkpoint: respawned sources restart from 0).  The rollback is a
+        posted target the pacing thread applies at its next iteration; a
+        source held by _respawn_task is released here."""
+        replayed = 0
+        for jv_name, spec in self.sources.items():
+            for v in self.rg.tasks_of(jv_name):
+                ex = self.executors.get(v)
+                if ex is None or ex.retired:
+                    continue
+                target = (0 if offsets is None
+                          else offsets.get((jv_name, v.index), 0))
+                cur = ex.src_seq
+                if cur != target:
+                    ex.rollback_to = target
+                if cur > target:
+                    replayed += cur - target
+                    if self._fault_acct:
+                        with self._acct_lock:
+                            r = self.replayed_by_key
+                            for sq in range(target, cur):
+                                k = spec.key_of(sq)
+                                r[k] = r.get(k, 0) + 1
+        # recovery fully wired (channels, state, offsets): release every
+        # executor _respawn_task held at the pause gate
+        for ex in self._respawn_held:
+            ex.paused.set()
+        self._respawn_held = []
+        return replayed
+
+    def _crash_dissolve_chain(self, chain) -> None:
+        # every member of a chain is co-located (§3.5.2 condition 1), so a
+        # crash that hit one member killed them all — their threads are gone
+        # and recover_worker respawns fresh executors.  Just unfuse the
+        # flags so the respawned group starts unchained.
+        for v in chain[1:]:
+            ex = self.executors.get(v)
+            if ex is not None:
+                ex.chained = False
+        for a, b in zip(chain, chain[1:]):
+            for c in self.rg.out_channels(a):
+                if c.dst == b:
+                    s = self.senders.get(c.id)
+                    if s is not None:
+                        s.chained = False
+
     def _schedule_elastic(self, st: dict, period_ms: float) -> None:
         # the QoS control thread polls attached controllers on their cadence
         st["period_ms"] = period_ms
@@ -1053,6 +1383,11 @@ class StreamEngine(RuntimeRewirer):
         self._ctrl = threading.Thread(
             target=self._control_body, daemon=True, name="qos-ctrl")
         self._ctrl.start()
+        if self.fault_plan is not None and self.fault_plan.faults:
+            self._injector = threading.Thread(
+                target=self._injector_body, daemon=True,
+                name="fault-injector")
+            self._injector.start()
 
     def stop(self) -> EngineResult:
         """Stop sources, then drain layer by layer in topological order so
@@ -1084,6 +1419,8 @@ class StreamEngine(RuntimeRewirer):
                     s.flush()  # scale-in stragglers; deliver() reroutes
         if self._ctrl is not None:
             self._ctrl.join(timeout=2.0)
+        if self._injector is not None:
+            self._injector.join(timeout=2.0)
         self._running = False
         dur = self.clock.now() - self._t0
         history = list(self._manager_history_archive)
@@ -1106,6 +1443,16 @@ class StreamEngine(RuntimeRewirer):
             unchain_log=list(self.unchain_log),
             pool_events=list(self.rg.pool.events),
             preflight_diagnostics=list(self.preflight_diagnostics),
+            time_to_detect_ms=self.time_to_detect_ms,
+            time_to_recover_ms=self.time_to_recover_ms,
+            time_to_slo_recovery_ms=self.time_to_slo_recovery_ms,
+            recovery_events=list(self.recovery_log),
+            fault_log=(list(self.fault_plan.log)
+                       if self.fault_plan is not None else []),
+            emitted_by_key=dict(self.emitted_by_key),
+            dropped_by_key=dict(self.dropped_by_key),
+            replayed_by_key=dict(self.replayed_by_key),
+            sink_count_by_key=dict(self.sink_count_by_key),
         )
 
     def run(self, duration_ms: float) -> EngineResult:

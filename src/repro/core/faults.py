@@ -1,0 +1,170 @@
+"""Deterministic fault injection for both execution backends (§3.6).
+
+The paper argues the QoS machinery must coexist with log-based
+rollback-recovery; this module supplies the *unplanned* half of that story:
+a declarative, seedable schedule of faults that either backend replays
+exactly.
+
+* ``FaultPlan`` — a builder for a time-ordered fault schedule.  The plan is
+  pure data plus one private ``random.Random(seed)``; it never touches the
+  executor's RNG, so a run WITHOUT a plan is bit-identical to a run of the
+  same job before this module existed, and a run WITH a plan is
+  reproducible from ``(job, seed, schedule)`` alone.
+* fault kinds (one frozen dataclass each):
+    - ``KillWorker``       — the worker vanishes at ``at_ms``: queued and
+      in-service items are dropped, buffered output is lost, its sources
+      stop emitting.  Exactly what a machine loss looks like from the
+      master.
+    - ``KillOwnerOf``      — kill whichever worker owns subtask
+      ``(job_vertex, index)`` *at fire time* — the owner is resolved late,
+      so a plan can target "the worker holding the migrating state" without
+      knowing placement in advance.
+    - ``ChannelBlackhole`` — every runtime channel of a job edge stops
+      delivering for ``duration_ms`` (a network partition that heals);
+      held items deliver when the partition lifts, not before.
+    - ``DelaySpike``       — a stage's service time is multiplied by
+      ``factor`` for ``duration_ms`` (GC pause / noisy neighbour).
+* ``RecoveryEvent`` — one completed crash -> detect -> respawn -> restore ->
+  replay cycle, appended to the re-wiring layer's ``recovery_log`` and
+  surfaced on ``SimResult``/``EngineResult``.
+
+Injection seams (see docs/robustness.md):
+
+* ``StreamSimulator(fault_plan=...)`` schedules each fault as an ordinary
+  simulator event; a plan forces the reference event loop so every drop is
+  an explicit, accounted branch (the inlined fast loop stays fault-free and
+  keeps its perf-canary bytecode).
+* ``StreamEngine(fault_plan=...)`` runs an injector thread that aborts the
+  victim task threads: the flag flip makes the thread exit WITHOUT its
+  drain-on-exit sweep, pending inbox items are discarded, and in-flight
+  emissions are swallowed — the observable footprint of a real crash.
+"""
+from __future__ import annotations
+
+import random
+from dataclasses import dataclass, field
+
+
+@dataclass(frozen=True)
+class KillWorker:
+    at_ms: float
+    worker: int | None = None  # None: the plan RNG picks a live worker
+
+
+@dataclass(frozen=True)
+class KillOwnerOf:
+    """Kill the worker that owns subtask ``(job_vertex, index)`` when the
+    fault fires (late-bound, so it composes with migrations in flight)."""
+
+    at_ms: float
+    job_vertex: str
+    index: int = 0
+
+
+@dataclass(frozen=True)
+class ChannelBlackhole:
+    at_ms: float
+    src_vertex: str
+    dst_vertex: str
+    duration_ms: float
+
+
+@dataclass(frozen=True)
+class DelaySpike:
+    at_ms: float
+    job_vertex: str
+    duration_ms: float
+    factor: float = 8.0
+
+
+Fault = KillWorker | KillOwnerOf | ChannelBlackhole | DelaySpike
+
+
+@dataclass(frozen=True)
+class FaultRecord:
+    """One fault as it actually fired (late-bound targets resolved)."""
+
+    at_ms: float
+    kind: str
+    detail: str
+
+
+@dataclass(frozen=True)
+class RecoveryEvent:
+    """One completed recovery cycle (core/elastic.py ``recover_worker``)."""
+
+    dead_worker: int
+    replacement: int
+    crash_at_ms: float
+    detected_at_ms: float
+    recovered_at_ms: float
+    lost_vertices: tuple = ()
+    restored_keys: int = 0
+    replayed_items: int = 0
+
+    @property
+    def time_to_detect_ms(self) -> float:
+        return self.detected_at_ms - self.crash_at_ms
+
+    @property
+    def time_to_recover_ms(self) -> float:
+        return self.recovered_at_ms - self.crash_at_ms
+
+
+@dataclass
+class FaultPlan:
+    """Seedable, deterministic fault schedule for one run.
+
+    Builder methods return ``self`` so schedules read as one chain::
+
+        plan = (FaultPlan(seed=7)
+                .kill_worker(5_000.0, worker=1)
+                .blackhole(8_000.0, "Src", "Agg", duration_ms=400.0))
+
+    ``log`` records every fault as fired with its late-bound target — the
+    run's ground truth for tests and BENCH rows.
+    """
+
+    seed: int = 0
+    faults: list[Fault] = field(default_factory=list)
+    log: list[FaultRecord] = field(default_factory=list)
+
+    def __post_init__(self) -> None:
+        self.rng = random.Random(self.seed ^ 0x5EEDFA17)
+
+    # -- builders ------------------------------------------------------------
+    def kill_worker(self, at_ms: float,
+                    worker: int | None = None) -> "FaultPlan":
+        self.faults.append(KillWorker(at_ms, worker))
+        return self
+
+    def kill_owner_of(self, at_ms: float, job_vertex: str,
+                      index: int = 0) -> "FaultPlan":
+        self.faults.append(KillOwnerOf(at_ms, job_vertex, index))
+        return self
+
+    def blackhole(self, at_ms: float, src_vertex: str, dst_vertex: str,
+                  duration_ms: float) -> "FaultPlan":
+        self.faults.append(
+            ChannelBlackhole(at_ms, src_vertex, dst_vertex, duration_ms))
+        return self
+
+    def delay_spike(self, at_ms: float, job_vertex: str, duration_ms: float,
+                    factor: float = 8.0) -> "FaultPlan":
+        self.faults.append(DelaySpike(at_ms, job_vertex, duration_ms, factor))
+        return self
+
+    # -- firing support ------------------------------------------------------
+    def ordered(self) -> list[Fault]:
+        """Schedule in firing order (stable for equal timestamps)."""
+        return sorted(self.faults, key=lambda f: f.at_ms)
+
+    def pick_worker(self, live: list[int]) -> int:
+        """Resolve a ``KillWorker(worker=None)`` target from the plan's own
+        RNG (never the executor's — fault-free determinism)."""
+        if not live:
+            raise ValueError("no live worker to kill")
+        return self.rng.choice(sorted(live))
+
+    def record(self, at_ms: float, kind: str, detail: str) -> None:
+        self.log.append(FaultRecord(at_ms, kind, detail))

@@ -1,0 +1,64 @@
+"""Worker liveness: timeout-based failure detection shared by every plane.
+
+Promoted out of ``runtime/fault_tolerance.py`` so the streaming backends and
+the training supervisor run the SAME detector (the paper's §3.6 coexistence
+argument cuts both ways: the QoS plane must notice dead workers, and the
+recovery plane must reuse the QoS plane's clock discipline).  Two fixes over
+the training-plane original:
+
+* the clock default is ``is None``-checked (not truthiness), and both
+  executors pass their own ``clock.now`` — so a ``SimClock`` drives
+  detection in simulated milliseconds and runs stay deterministic;
+* the lock comes from ``analysis.race.make_lock`` (NS-L006): liveness sits
+  on the engine's control-thread hot loop and its discipline is observed
+  under ``REPRO_RACE_CHECK=1``.
+"""
+from __future__ import annotations
+
+import time
+from typing import Callable, Iterable
+
+from ..analysis import race as _race
+
+
+class HeartbeatMonitor:
+    """Per-worker liveness with timeout-based failure detection.
+
+    Workers (or the executor acting for them) call ``beat(w)``; the control
+    loop polls ``dead_workers()`` and hands the result to the recovery path.
+    A worker is dead once its last beat is more than ``timeout_ms`` ago on
+    the injected ``clock`` (milliseconds; wall monotonic by default, the
+    executor's sim/real clock in the streaming backends).
+    """
+
+    def __init__(self, workers: Iterable[int], timeout_ms: float = 10_000.0,
+                 clock: Callable[[], float] | None = None) -> None:
+        self.timeout_ms = timeout_ms
+        self._clock = (clock if clock is not None
+                       else (lambda: time.monotonic() * 1e3))
+        now = self._clock()
+        self._last: dict[int, float] = {w: now for w in workers}
+        self._lock = _race.make_lock()
+
+    def beat(self, worker: int) -> None:
+        with self._lock:
+            self._last[worker] = self._clock()
+
+    def add(self, worker: int) -> None:
+        """Start tracking a newly acquired worker (fresh grace period)."""
+        with self._lock:
+            self._last[worker] = self._clock()
+
+    def dead_workers(self) -> list[int]:
+        now = self._clock()
+        with self._lock:
+            return [w for w, t in self._last.items()
+                    if now - t > self.timeout_ms]
+
+    def remove(self, worker: int) -> None:
+        with self._lock:
+            self._last.pop(worker, None)
+
+    def tracked(self) -> list[int]:
+        with self._lock:
+            return sorted(self._last)

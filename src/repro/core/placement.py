@@ -54,6 +54,8 @@ import threading
 from dataclasses import dataclass, field
 from typing import TYPE_CHECKING, Iterable, Mapping
 
+from ..analysis import diagnostics as _diagnostics
+
 if TYPE_CHECKING:  # pragma: no cover - import cycle guard (graphs -> placement)
     from .graphs import RuntimeVertex
 
@@ -80,10 +82,10 @@ class Worker:
 
 @dataclass(frozen=True)
 class PoolEvent:
-    """Acquire/release audit record (the pool has no clock; the re-wiring
-    layer stamps its ScaleDecision log instead)."""
+    """Acquire/release/death audit record (the pool has no clock; the
+    re-wiring layer stamps its ScaleDecision / recovery logs instead)."""
 
-    kind: str  # "acquire" | "release"
+    kind: str  # "acquire" | "release" | "dead"
     worker: int
     reason: str = ""
 
@@ -138,6 +140,13 @@ class WorkerPool:
         }
         #: task id -> worker (reverse index; authoritative load bookkeeping)
         self._task_worker: dict[str, int] = {}
+        #: workers declared dead by the recovery path; their ids are
+        #: quarantined forever (never placement candidates, never reused)
+        self._dead: set[int] = set()
+        #: dead worker -> the replacement acquired for it, so the MODULO
+        #: policy's ``index % initial_fleet`` arithmetic keeps resolving
+        #: after a member of the initial fleet dies
+        self._reincarnation: dict[int, int] = {}
         self.events: list[PoolEvent] = []
 
     # -- queries -------------------------------------------------------------
@@ -180,7 +189,10 @@ class WorkerPool:
 
     def _choose_locked(self, v: "RuntimeVertex") -> int:
         if self.policy == MODULO:
-            return v.index % self.initial_workers
+            w = v.index % self.initial_workers
+            while w in self._reincarnation:  # dead fleet member: its heir
+                w = self._reincarnation[w]
+            return w
         need = self.affinity.get(v.job_vertex, frozenset())
         cands = [w for w, wk in self.workers.items() if need <= wk.tags]
         cap = self.slots_per_worker
@@ -253,10 +265,54 @@ class WorkerPool:
             self.events.append(PoolEvent("release", worker, reason))
             return True
 
+    # -- failure quarantine (crash recovery, core/elastic.py) ----------------
+    def mark_dead(self, worker: int, reason: str = "crash") -> None:
+        """Quarantine a crashed worker: it leaves the live set immediately
+        (so capacity accounting and placement never see it again), its slot
+        bookkeeping is wiped (the re-wiring layer reassigns the lost tasks
+        to a replacement), and its id is remembered as dead forever —
+        ``assign`` to it is an NS-G008 violation, not a silent respawn onto
+        a ghost."""
+        with self._lock:
+            if worker in self._dead:
+                return
+            self._dead.add(worker)
+            self.workers.pop(worker, None)
+            for t in self._assigned.pop(worker, set()):
+                self._task_worker.pop(t, None)
+            self.events.append(PoolEvent("dead", worker, reason))
+
+    def acquire_replacement(self, for_worker: int, tags: Iterable[str] = (),
+                            reason: str = "recovery") -> Worker:
+        """Acquire the replacement for a dead worker.  Bypasses the
+        ``max_workers`` gate on purpose: a replacement restores the fleet to
+        its pre-crash size, it does not grow it.  Records the dead ->
+        replacement lineage so MODULO placement arithmetic keeps working."""
+        with self._lock:
+            if for_worker not in self._dead:
+                raise ValueError(
+                    f"worker {for_worker} is not dead; use acquire()")
+            w = self._acquire_locked(frozenset(tags), reason)
+            self._reincarnation[for_worker] = w.id
+            return w
+
+    def is_dead(self, worker: int) -> bool:
+        with self._lock:
+            return worker in self._dead
+
+    def dead_ids(self) -> list[int]:
+        with self._lock:
+            return sorted(self._dead)
+
     # -- assignment bookkeeping ----------------------------------------------
     def assign(self, v: "RuntimeVertex", worker: int) -> None:
         """Record an externally decided placement (custom allocators)."""
         with self._lock:
+            if worker in self._dead:
+                _diagnostics.fail(
+                    "NS-G008", f"worker {worker}",
+                    f"respawn/assign of {v.id} targets dead worker "
+                    f"{worker}")
             if worker not in self.workers:
                 raise KeyError(f"unknown worker {worker}")
             self._assigned[worker].add(v.id)
@@ -278,5 +334,6 @@ class WorkerPool:
                                 if e.kind == "acquire"),
                 "released": sum(1 for e in self.events
                                 if e.kind == "release"),
+                "dead": len(self._dead),
                 "tasks": len(self._task_worker),
             }

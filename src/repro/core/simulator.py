@@ -193,12 +193,13 @@ class _SimChannel:
     arithmetic in the same order, so decision traces are identical."""
 
     __slots__ = ("channel", "cid", "chi", "buffer", "sim", "cross_worker",
-                 "src_reporter", "dst_task", "chained")
+                 "src_reporter", "dst_task", "chained", "blackhole_until")
 
     def __init__(self, channel, sim: "StreamSimulator", capacity: int) -> None:
         self.channel = channel
         self.cid = channel.id
         self.sim = sim
+        self.blackhole_until = 0.0  # ChannelBlackhole fault: ship no earlier
         arena = sim.arena
         if arena is None:
             self.chi = -1
@@ -311,8 +312,11 @@ class _SimChannel:
             delay = net.same_worker_overhead_ms
         sim.total_bytes += nbytes
         sim.total_buffers += 1
+        # ChannelBlackhole fault: a partitioned link holds the shipment
+        # until the partition heals (departure deferred, not dropped)
+        depart = now if now >= self.blackhole_until else self.blackhole_until
         sim._seq += 1
-        sim._push_rec((now + delay, sim._seq, _EV_SHIP,
+        sim._push_rec((depart + delay, sim._seq, _EV_SHIP,
                        self.dst_task, items, cid))
 
 
@@ -322,7 +326,7 @@ class _SimTask:
 
     __slots__ = (
         "vertex", "vid", "sim", "svc_ms", "fan_in", "out_bytes", "stateful",
-        "state", "is_sink", "queue", "halted", "retired",
+        "state", "is_sink", "queue", "halted", "retired", "crashed",
         "chained_into", "chain_next", "_fan_count", "_pending_task_sample",
         "emitted", "out_by_jv",
         "out_groups", "_inflight_since", "worker", "ti", "cpu_i",
@@ -348,6 +352,7 @@ class _SimTask:
         self.queue: deque[SimItem] = deque()
         self.halted = False
         self.retired = False           # elastically scaled in
+        self.crashed = False           # worker died (implies retired)
         self.chained_into: RuntimeVertex | None = None  # member of a chain
         self.chain_next: RuntimeVertex | None = None    # next stage if chained
         self._fan_count = 0
@@ -394,6 +399,14 @@ class _SimTask:
             return
         jv = self.vertex.job_vertex
         if self.retired:
+            if self.crashed:
+                # delivery to a crashed task: the process is gone, the items
+                # are lost with it — counted as dropped, recovered by replay
+                sim = self.sim
+                if sim._fault_acct:
+                    for it in items:
+                        sim._count_drop(it.key)
+                return
             # straggler delivery after scale-in: hand each item to its key
             # range's surviving owner so nothing is lost and keyed state
             # stays with its one owner
@@ -578,6 +591,13 @@ class _SimTask:
 
     def _complete(self, item: SimItem, stages: list["_SimTask"],
                   now: float) -> None:
+        if self.crashed:
+            # in-service item at crash time: lost with the process (chains
+            # are co-located, so one flag covers every stage of this item)
+            sim = self.sim
+            if sim._fault_acct:
+                sim._count_drop(item.key)
+            return
         self.sim.t_busy[self.ti] = False
         self._finish_item(item, stages, now)
         self._try_start(now)
@@ -748,6 +768,9 @@ class StreamSimulator(RuntimeRewirer):
         batch_horizon_ms: float | None = None,
         scheduler: str = "calendar",
         preflight: bool = True,
+        fault_plan=None,
+        checkpointer=None,
+        heartbeat_timeout_ms: float = 1_500.0,
     ) -> None:
         self.jg = jg
         #: network model — resolved *before* pre-flight so the static
@@ -793,6 +816,24 @@ class StreamSimulator(RuntimeRewirer):
                 f"event_mode must be 'exact' or 'batched', got {event_mode!r}")
         self.event_mode = event_mode
         self.batched = event_mode == "batched"
+        #: injected failure schedule (core/faults.py) — None keeps the run
+        #: bit-exact fault-free (no extra events, state, or RNG draws).
+        #: Faults need per-object channel buffers and the reference loop
+        #: (a crash must be able to wipe a specific channel's fill state),
+        #: and the batched core's analytic lookahead cannot be torn at an
+        #: arbitrary crash instant — so faulted runs run exact/reference.
+        if fault_plan is not None and self.batched:
+            raise ValueError(
+                "fault injection requires event_mode='exact' (a batched "
+                "run's analytic lookahead cannot be cut at a crash instant)")
+        self.fault_plan = fault_plan
+        #: fault accounting toggle: per-key emitted/dropped/replayed ledgers
+        #: (the conservation-modulo-replay invariant) are maintained only
+        #: when a fault plan is present
+        self._fault_acct = fault_plan is not None
+        self.emitted_by_key: dict = {}
+        self.dropped_by_key: dict = {}
+        self.replayed_by_key: dict = {}
         #: event-scheduler backend (core/eventq.py): ``"calendar"`` (default)
         #: or ``"heap"`` (the reference).  Both produce the exact total order
         #: on ``(time, seq)``, so this is a pure performance knob.
@@ -880,7 +921,8 @@ class StreamSimulator(RuntimeRewirer):
         #   REPRO_RACE_CHECK) keep per-channel OutputBuffer objects instead,
         #   because the checkers wrap that class's methods.
         self.arena: BufferArena | None = (
-            None if _INSTRUMENTED else BufferArena())
+            None if (_INSTRUMENTED or fault_plan is not None)
+            else BufferArena())
         #   per source subtask (dense id, the _EV_SOURCE payload): task,
         #   emission seq, subtask index, item bytes, key-space shape, pacing
         self.src_task: list[_SimTask] = []
@@ -892,6 +934,9 @@ class StreamSimulator(RuntimeRewirer):
         self.src_rate_fn: list[Callable[[float], float] | None] = []
         self.src_period: list[float] = []
         self.src_spec: list[SimSourceSpec] = []
+        #: False once a source's pending _EV_SOURCE chain died with its
+        #: crashed task (recovery then restarts the chain exactly once)
+        self.src_live: list[bool] = []
         self.tasks: dict[RuntimeVertex, _SimTask] = {
             v: _SimTask(v, self) for v in self.rg.vertices
         }
@@ -946,6 +991,14 @@ class StreamSimulator(RuntimeRewirer):
         #: when repeated float addition drifts off the nominal period)
         self._next_control_ms = float("inf")
         self._next_flush_ms = float("inf")
+
+        # failure detection / recovery plane: armed only when asked for —
+        # a plain construction adds zero events and zero state changes
+        if fault_plan is not None or checkpointer is not None:
+            self.attach_recovery(checkpointer, heartbeat_timeout_ms)
+        if fault_plan is not None:
+            for f in fault_plan.ordered():
+                self.schedule(f.at_ms, partial(self._inject_fault, f))
 
     # -- event machinery ---------------------------------------------------------
     def _push(self, at_ms: float, kind: int, a, b=None, c=None) -> None:
@@ -1037,25 +1090,38 @@ class StreamSimulator(RuntimeRewirer):
 
     def _control_tick(self) -> None:
         tick = self.interval_ms / 4.0
-        self._next_control_ms = self.clock.now() + tick
+        now = self.clock.now()
+        self._next_control_ms = now + tick
         for v in list(self.rg.vertices):
             if v.id in self.measured_tasks:
                 t = self.tasks[v]
-                self.reporters[self.rg.worker(v)].record_task_cpu(
-                    v.id, self._cpu_utilization(v, tick),
-                    t.chained_into is not None or t.chain_next is not None,
-                )
+                # .get: a crashed worker's reporter died with it, but its
+                # tasks stay in rg until recovery re-homes them
+                rep = self.reporters.get(self.rg.worker(v))
+                if rep is not None:
+                    rep.record_task_cpu(
+                        v.id, self._cpu_utilization(v, tick),
+                        t.chained_into is not None
+                        or t.chain_next is not None,
+                    )
         managers = self.managers
         for rep in self.reporters.values():
             for mgr_id, report in rep.maybe_flush():
                 mgr = managers.get(mgr_id)
                 if mgr is not None:
                     mgr.receive_report(report)
+        # failure detection + recovery + periodic checkpoint run on the
+        # control cadence (no-ops unless attach_recovery armed them)
+        if self._monitor is not None:
+            self._liveness_tick(now)
+        self._maybe_checkpoint(now)
         if self.enable_qos:
             # snapshot: a routed ScaleRequest rebuilds self.managers live
             for mgr in list(self.managers.values()):
                 for action in mgr.check():
                     self._route_action(action)
+        if self._slo_pending_since is not None:
+            self._slo_recovery_check(now)
         self._push(self._next_control_ms, _EV_CONTROL, None)
 
     def _flush_stale_tick(self) -> None:
@@ -1082,6 +1148,111 @@ class StreamSimulator(RuntimeRewirer):
                         and now - opened >= lifetime):
                     ch.flush(now)
         self._push(self._next_flush_ms, _EV_FLUSH, None)
+
+    # -- fault injection (core/faults.py) -------------------------------------
+    def _count_drop(self, key, n: int = 1) -> None:
+        d = self.dropped_by_key
+        d[key] = d.get(key, 0) + n
+
+    def _inject_fault(self, fault) -> None:
+        """Dispatch one scheduled fault at its injection instant (an
+        ``_EV_CALL`` event, so ordering against regular traffic is exact)."""
+        from .faults import (
+            ChannelBlackhole, DelaySpike, KillOwnerOf, KillWorker)
+
+        now = self.clock.now()
+        plan = self.fault_plan
+        if isinstance(fault, KillWorker):
+            w = fault.worker
+            if w is None:
+                live = [x for x in self.rg.pool.worker_ids()
+                        if x not in self._crashed_workers]
+                w = plan.pick_worker(live)
+            if w is not None and w not in self._crashed_workers:
+                self._crash_worker(w, now)
+        elif isinstance(fault, KillOwnerOf):
+            group = self.rg.tasks_of(fault.job_vertex)
+            target = next((v for v in group if v.index == fault.index),
+                          group[-1] if group else None)
+            if target is not None:
+                w = self.rg.worker(target)
+                if w not in self._crashed_workers:
+                    plan.record(now, "kill_owner_of",
+                                f"{target.id} on worker {w}")
+                    self._crash_worker(w, now)
+        elif isinstance(fault, ChannelBlackhole):
+            until = now + fault.duration_ms
+            n = 0
+            for sc in self.channels.values():
+                c = sc.channel
+                if (c.src.job_vertex == fault.src_vertex
+                        and c.dst.job_vertex == fault.dst_vertex):
+                    sc.blackhole_until = until
+                    n += 1
+            plan.record(now, "blackhole",
+                        f"{fault.src_vertex}->{fault.dst_vertex} "
+                        f"({n} channels, {fault.duration_ms:g}ms)")
+        elif isinstance(fault, DelaySpike):
+            factor = fault.factor
+            spiked = [self.tasks[v]
+                      for v in self.rg.tasks_of(fault.job_vertex)
+                      if v in self.tasks]
+            for t in spiked:
+                t.svc_ms *= factor
+            plan.record(now, "delay_spike",
+                        f"{fault.job_vertex} x{factor:g} "
+                        f"for {fault.duration_ms:g}ms")
+
+            def _relax() -> None:
+                for t in spiked:
+                    if not t.crashed:
+                        t.svc_ms /= factor
+
+            self.schedule(now + fault.duration_ms, _relax)
+
+    def _crash_worker(self, w: int, now: float) -> None:
+        """Kill worker ``w`` the way a process crash would: every resident
+        task stops mid-flight, its queue, in-service items and un-shipped
+        output buffers are lost (counted per key in ``dropped_by_key``),
+        and the worker stops heartbeating — detection and recovery follow
+        through the control ticks (``_liveness_tick``)."""
+        if self.fault_plan is not None:
+            self.fault_plan.record(now, "kill_worker", f"worker {w}")
+        self.note_crash(w, now)
+        acct = self._fault_acct
+        for v in list(self.rg.vertices_on_worker(w)):
+            t = self.tasks.get(v)
+            if t is None or t.crashed:
+                continue
+            t.crashed = True
+            t.retired = True
+            if acct:
+                for it in t.queue:
+                    self._count_drop(it.key)
+            t.queue.clear()
+            # un-shipped output buffers die with the process
+            for chans in t.out_by_jv.values():
+                for sc in chans:
+                    buf = sc.buffer
+                    if buf is not None and buf.items:
+                        if _sanitize.SANITIZE:
+                            _sanitize.CHECKER.note_crashed(buf)
+                        lost, _, _ = buf.take(now)
+                        if acct:
+                            for it in lost:
+                                self._count_drop(it.key)
+        # ready-but-unstarted work queued on the dead worker's cores is
+        # gone too (cpu_busy self-corrects: each pending completion event
+        # still decrements it, then drops its item at the crashed guard)
+        ci = self.cpus.get(w)
+        if ci is not None:
+            ready = self.cpu_ready[ci]
+            if acct:
+                for _svc, _t2, it2, _st in ready:
+                    self._count_drop(it2.key)
+            ready.clear()
+        # the worker's QoS reporter dies with it: no more samples/reports
+        self.reporters.pop(w, None)
 
     def _route_action(self, action: Action) -> None:
         if isinstance(action, BufferSizeUpdate):
@@ -1270,6 +1441,68 @@ class StreamSimulator(RuntimeRewirer):
         """Back-compat alias for the shared re-wiring path."""
         self.scale_out(job_vertex, new_parallelism, reason="manual")
 
+    # -- crash-recovery hooks (RuntimeRewirer.recover_worker) -----------------
+    def _repoint_in_channels(self, v: RuntimeVertex) -> None:
+        # senders keep their _SimChannel objects across a crash; only the
+        # cached destination (and its co-location bit) must be re-aimed at
+        # the respawned execution
+        new_task = self.tasks[v]
+        for c in self.rg.in_channels(v):
+            sc = self.channels.get(c.id)
+            if sc is not None:
+                sc.dst_task = new_task
+                sc.cross_worker = (
+                    self.rg.worker(c.src) != self.rg.worker(c.dst))
+
+    def _crash_dissolve_chain(self, chain) -> None:
+        # the event-model dissolve is safe against dead members: it only
+        # clears pointers/flags and (harmlessly) pokes empty queues
+        self._dissolve_chain(chain)
+
+    def _source_offsets(self) -> dict:
+        return {(t.vertex.job_vertex, t.vertex.index): self.src_seq[si]
+                for si, t in enumerate(self.src_task)}
+
+    def _replay_sources(self, offsets, now: float) -> int:
+        """Roll EVERY source back to its checkpointed offset (no snapshot →
+        offset 0) and restart the emission chain of sources whose task died.
+        Keys are a pure function of (source, seq), so the replay window
+        [checkpoint_seq, crash_seq) re-produces the identical items."""
+        replayed = 0
+        acct = self._fault_acct
+        for si in range(len(self.src_task)):
+            task = self.src_task[si]
+            v = task.vertex
+            if task.crashed:
+                nt = self.tasks.get(v)
+                if nt is not None and not nt.crashed:
+                    self.src_task[si] = nt
+                    task = nt
+            target = 0 if offsets is None else offsets.get(
+                (v.job_vertex, v.index), 0)
+            old = self.src_seq[si]
+            if old > target:
+                self.src_seq[si] = target
+                replayed += old - target
+                if acct:
+                    kpt = self.src_kpt[si]
+                    nk = self.src_keys[si]
+                    idx = self.src_index[si]
+                    r = self.replayed_by_key
+                    for sq in range(target, old):
+                        if kpt is not None:
+                            key = idx * kpt + sq % kpt
+                        else:
+                            key = sq % nk if nk else sq
+                        r[key] = r.get(key, 0) + 1
+            if not self.src_live[si]:
+                rf = self.src_rate_fn[si]
+                period = (self.src_period[si] if rf is None
+                          else 1e3 / max(rf(now), 1e-9))
+                self._push(now + period, _EV_SOURCE, si)
+                self.src_live[si] = True
+        return replayed
+
     # -- sources ---------------------------------------------------------------------
     def _start_sources(self) -> None:
         for jv_name, spec in self.sources.items():
@@ -1290,9 +1523,16 @@ class StreamSimulator(RuntimeRewirer):
                 self.src_period.append(
                     1e3 / max(spec.rate_items_per_s, 1e-9))
                 self.src_spec.append(spec)
+                self.src_live.append(True)
                 self._push(offset, _EV_SOURCE, si)
 
     def _fire_source(self, si: int, now: float) -> None:
+        task = self.src_task[si]
+        if task.crashed:
+            # the pending emission chain dies with the task; recovery
+            # re-points src_task and restarts the chain exactly once
+            self.src_live[si] = False
+            return
         seq = self.src_seq[si]
         kpt = self.src_kpt[si]
         if kpt is not None:
@@ -1301,8 +1541,10 @@ class StreamSimulator(RuntimeRewirer):
             key = seq % self.src_keys[si]
         else:
             key = seq
+        if self._fault_acct:
+            e = self.emitted_by_key
+            e[key] = e.get(key, 0) + 1
         item = SimItem(now, self.src_bytes[si], key)
-        task = self.src_task[si]
         # a source "processes" the item (its cpu cost) then routes it
         svc, stages = task._chain_service(item)
         for t in stages:  # stateful chained stages count at start too
@@ -1460,6 +1702,15 @@ class StreamSimulator(RuntimeRewirer):
             unchain_log=list(self.unchain_log),
             pool_events=list(self.rg.pool.events),
             preflight_diagnostics=list(self.preflight_diagnostics),
+            time_to_detect_ms=self.time_to_detect_ms,
+            time_to_recover_ms=self.time_to_recover_ms,
+            time_to_slo_recovery_ms=self.time_to_slo_recovery_ms,
+            recovery_events=list(self.recovery_log),
+            fault_log=(list(self.fault_plan.log)
+                       if self.fault_plan is not None else []),
+            emitted_by_key=dict(self.emitted_by_key),
+            dropped_by_key=dict(self.dropped_by_key),
+            replayed_by_key=dict(self.replayed_by_key),
         )
 
     def _run_reference(self, duration_ms: float, max_ev: int) -> int:
@@ -1535,7 +1786,11 @@ class StreamSimulator(RuntimeRewirer):
             elif kind == _EV_SHIP:
                 a.enqueue(b, c, t)
             elif kind == _EV_SRC_EMIT:
-                if a._fan_count % a.fan_in == 0:
+                if a.crashed:
+                    # the source's in-service item was lost with the crash
+                    if self._fault_acct:
+                        self._count_drop(b.key)
+                elif a._fan_count % a.fan_in == 0:
                     out = SimItem(b.created_at_ms, a.out_bytes, b.key)
                     a.route(out, t)
             elif kind == _EV_SOURCE:
@@ -2228,6 +2483,22 @@ class SimResult:
     #: pre-flight WARN diagnostics (analysis/graph_check.py) carried onto
     #: the result so benchmark harnesses can surface them per row
     preflight_diagnostics: list = field(default_factory=list)
+    #: crash-recovery metrics (None / empty on fault-free runs): crash ->
+    #: dead-declaration, crash -> recovery-protocol-complete, and crash ->
+    #: first control tick with every latency constraint satisfied again
+    time_to_detect_ms: float | None = None
+    time_to_recover_ms: float | None = None
+    time_to_slo_recovery_ms: float | None = None
+    #: completed recovery cycles (core/faults.py RecoveryEvent), in order
+    recovery_events: list = field(default_factory=list)
+    #: injected faults as they fired (core/faults.py FaultRecord)
+    fault_log: list = field(default_factory=list)
+    #: per-key conservation ledgers (maintained only under a fault plan):
+    #: emitted counts every source fire (replays included), so exactly
+    #: emitted[k] == sink_count_by_key[k] + dropped_by_key[k] once drained
+    emitted_by_key: dict = field(default_factory=dict)
+    dropped_by_key: dict = field(default_factory=dict)
+    replayed_by_key: dict = field(default_factory=dict)
 
     def p95_latency_ms(self) -> float:
         """95th percentile of raw sink latencies (shared nearest-rank

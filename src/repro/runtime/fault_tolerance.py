@@ -4,7 +4,9 @@ Paper §3.6 establishes how the QoS optimizations coexist with log-based
 rollback-recovery; this module is the training-plane counterpart:
 
 * ``HeartbeatMonitor``  — per-worker liveness with timeout-based failure
-  detection (the master-side machinery that decides a restart is needed),
+  detection (the master-side machinery that decides a restart is needed);
+  lives in ``core/liveness.py`` since PR 9 so the streaming backends share
+  the exact same detector — re-exported here for back-compat,
 * ``StragglerDetector`` — reuses the paper's latency-measurement machinery:
   a worker whose recent step/stage latency is a large multiple of the fleet
   median is flagged; mitigation hook = evict + re-dispatch,
@@ -17,34 +19,9 @@ rollback-recovery; this module is the training-plane counterpart:
 from __future__ import annotations
 
 import statistics
-import threading
-import time
-from dataclasses import dataclass, field
-from typing import Callable
+from dataclasses import dataclass
 
-
-class HeartbeatMonitor:
-    def __init__(self, workers: list[int], timeout_ms: float = 10_000.0,
-                 clock: Callable[[], float] | None = None) -> None:
-        self.timeout_ms = timeout_ms
-        self._clock = clock or (lambda: time.monotonic() * 1e3)
-        now = self._clock()
-        self._last: dict[int, float] = {w: now for w in workers}
-        self._lock = threading.Lock()
-
-    def beat(self, worker: int) -> None:
-        with self._lock:
-            self._last[worker] = self._clock()
-
-    def dead_workers(self) -> list[int]:
-        now = self._clock()
-        with self._lock:
-            return [w for w, t in self._last.items()
-                    if now - t > self.timeout_ms]
-
-    def remove(self, worker: int) -> None:
-        with self._lock:
-            self._last.pop(worker, None)
+from ..core.liveness import HeartbeatMonitor  # noqa: F401  (back-compat)
 
 
 class StragglerDetector:

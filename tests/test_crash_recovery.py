@@ -1,0 +1,278 @@
+"""Crash-edge interleavings: fault injection racing elastic operations.
+
+The four nasty interleavings from the robustness plan (docs/robustness.md),
+each asserted on the EXACT per-key conservation ledger
+``emitted[k] == sunk[k] + dropped[k]`` (emitted counts replay fires, so
+sink-side duplicates are bounded by the recorded replay window):
+
+* crash at the same instant as a keyed-state migration (scale-out),
+* crash of a worker hosting a chained (fused) task series,
+* crash at the same instant as a scale-in drain,
+* a second crash before the first one's recovery has completed.
+
+Every scenario is a module-level function so the sanitizer arms can re-run
+the IDENTICAL code in a ``REPRO_SANITIZE=1`` subprocess (the flag is read
+once at repro import — same harness shape as test_analysis_sanitize.py)
+and assert a clean checker: recovery must not trip NS-S005 (key in two
+stores) or any buffer-accounting rule while it rewires the graph.
+"""
+from __future__ import annotations
+
+import tempfile
+import time
+
+from test_analysis_sanitize import PREAMBLE, run_sanitized
+
+from repro.checkpoint.checkpointer import Checkpointer
+from repro.core import (
+    ALL_TO_ALL,
+    FaultPlan,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    SimSourceSpec,
+    SourceSpec,
+    StreamEngine,
+    StreamSimulator,
+)
+from repro.core.chaining import ChainRequest
+
+KEYS = 16
+
+
+def _job(src_par: int = 2, agg_par: int = 2, agg_fn=None, sink_fn=None):
+    jg = JobGraph("crash-edges")
+    jg.add_vertex(JobVertex("Src", src_par, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Agg", agg_par, fn=agg_fn, sim_cpu_ms=1.0,
+                            sim_item_bytes=64, stateful=True))
+    jg.add_vertex(JobVertex("Sink", 1, fn=sink_fn, is_sink=True,
+                            sim_cpu_ms=0.01, stateful=True))
+    jg.add_edge("Src", "Agg", ALL_TO_ALL)
+    jg.add_edge("Agg", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Agg"), "Agg", ("Agg", "Sink"))
+    return jg, [JobConstraint(seq, 1e9, 2_000.0, name="mon")]
+
+
+def _sim(jg, jcs, plan, ckdir, num_workers: int = 4):
+    return StreamSimulator(
+        jg, jcs, num_workers=num_workers,
+        sources={"Src": SimSourceSpec(
+            100.0, item_bytes=64, keys=KEYS,
+            rate_fn=lambda t: 100.0 if t < 18_000.0 else 0.0)},
+        initial_buffer_bytes=256, max_buffer_lifetime_ms=500.0,
+        fault_plan=plan,
+        checkpointer=Checkpointer(ckdir, keep=3,
+                                  checkpoint_interval_ms=2_000.0),
+        heartbeat_timeout_ms=1_000.0)
+
+
+def _assert_conserved(res, name: str) -> None:
+    em, sk, dr = res.emitted_by_key, res.sink_count_by_key, res.dropped_by_key
+    bad = {k: (em.get(k, 0), sk.get(k, 0), dr.get(k, 0))
+           for k in set(em) | set(sk) | set(dr)
+           if em.get(k, 0) != sk.get(k, 0) + dr.get(k, 0)}
+    assert not bad, f"{name}: per-key conservation violated: {bad}"
+    assert sum(sk.values()) > 0, f"{name}: nothing reached the sinks"
+    assert res.time_to_detect_ms is not None, f"{name}: crash never detected"
+    assert res.time_to_recover_ms is not None, f"{name}: never recovered"
+    assert res.recovery_events, f"{name}: no RecoveryEvent"
+
+
+# ---------------------------------------------------------------------------
+# scenarios (plain functions: run inline by the tests below, re-run under
+# REPRO_SANITIZE=1 by the subprocess arms)
+# ---------------------------------------------------------------------------
+
+
+def scenario_crash_during_migration():
+    """Kill the owner of ``Agg[0]`` at the same virtual instant a scale-out
+    migrates its key ranges — whichever side the event queue fires first,
+    the ledger must balance and the scaled topology must recover."""
+    jg, jcs = _job()
+    plan = FaultPlan(seed=5).kill_owner_of(8_000.0, "Agg", index=0)
+    out = {}
+    with tempfile.TemporaryDirectory() as ckdir:
+        sim = _sim(jg, jcs, plan, ckdir)
+        sim.schedule(8_000.0,
+                     lambda: out.setdefault(
+                         "scaled", sim.scale_out("Agg", 3, reason="test")))
+        res = sim.run(30_000.0)
+    _assert_conserved(res, "crash_during_migration")
+    assert out.get("scaled"), "scale_out must succeed around the crash"
+    assert len(sim.rg.tasks_of("Agg")) == 3
+    return res
+
+
+def scenario_crash_of_chained_task():
+    """One worker hosts everything, ``Agg[1] -> Sink[0]`` is fused; the
+    worker dies.  The chain must dissolve (unchain_log carries the crash
+    reason) before recovery respawns the members on the replacement."""
+    jg, jcs = _job()
+    plan = FaultPlan(seed=6).kill_worker(8_000.0, worker=0)
+    with tempfile.TemporaryDirectory() as ckdir:
+        sim = _sim(jg, jcs, plan, ckdir, num_workers=1)
+        agg = list(sim.rg.tasks_of("Agg"))
+        sink = sim.rg.tasks_of("Sink")[0]
+        sim.schedule(1_000.0, lambda: sim._apply_chain(
+            ChainRequest((agg[1], sink), worker=0)))
+        res = sim.run(30_000.0)
+    _assert_conserved(res, "crash_of_chained_task")
+    assert ((agg[1].id, sink.id), "crash of worker 0") in res.unchain_log, \
+        res.unchain_log
+    assert not sim.active_chains
+    assert not sim.chained_channels
+    return res
+
+
+def scenario_crash_during_drain():
+    """Kill the owner of the surviving ``Agg[0]`` at the same instant
+    ``Agg`` scales in (the retiring ``Agg[1]`` is mid-drain / mid-handoff
+    in the same event slot)."""
+    jg, jcs = _job()
+    plan = FaultPlan(seed=7).kill_owner_of(8_000.0, "Agg", index=0)
+    out = {}
+    with tempfile.TemporaryDirectory() as ckdir:
+        sim = _sim(jg, jcs, plan, ckdir)
+        sim.schedule(8_000.0,
+                     lambda: out.setdefault(
+                         "shrunk", sim.scale_in("Agg", 1, reason="test")))
+        res = sim.run(30_000.0)
+    _assert_conserved(res, "crash_during_drain")
+    assert out.get("shrunk"), "scale_in must succeed around the crash"
+    assert len(sim.rg.tasks_of("Agg")) == 1
+    return res
+
+
+def scenario_double_crash():
+    """A second worker dies 400 ms after the first — inside the 1 s
+    heartbeat window, i.e. before the first crash is even *detected*.
+    Both must be declared, both recovered, ledger exact."""
+    jg, jcs = _job()
+    plan = (FaultPlan(seed=8)
+            .kill_worker(8_000.0, worker=0)
+            .kill_worker(8_400.0, worker=1))
+    with tempfile.TemporaryDirectory() as ckdir:
+        sim = _sim(jg, jcs, plan, ckdir)
+        res = sim.run(30_000.0)
+    _assert_conserved(res, "double_crash")
+    assert len(res.recovery_events) == 2, res.recovery_events
+    assert {ev.dead_worker for ev in res.recovery_events} == {0, 1}
+    # the two replacements are distinct fresh workers
+    repl = [ev.replacement for ev in res.recovery_events]
+    assert len(set(repl)) == 2 and not {0, 1}.intersection(repl), repl
+    return res
+
+
+def scenario_engine_crash_basics():
+    """Threaded-backend arm: a real task-thread abort mid-stream, heartbeat
+    detection, checkpoint restore, offset replay — ledger exact."""
+    def agg(p, emit, ctx):
+        ctx.state.bump(ctx._current_item.key)
+        emit(p)
+
+    def sink(p, emit, ctx):
+        ctx.state.bump(ctx._current_item.key)
+
+    jg, jcs = _job(agg_fn=agg, sink_fn=sink)
+    plan = FaultPlan(seed=1).kill_owner_of(2_000.0, "Agg", index=0)
+    with tempfile.TemporaryDirectory() as ckdir:
+        eng = StreamEngine(
+            jg, jcs, num_workers=4,
+            sources={"Src": SourceSpec(
+                150.0, lambda s: (b"x" * 64, 64),
+                key_of=lambda s: s % KEYS,
+                rate_fn=lambda t: 150.0 if t < 4_500.0 else 0.0)},
+            initial_buffer_bytes=512, measurement_interval_ms=400.0,
+            enable_chaining=False, max_buffer_lifetime_ms=200.0,
+            fault_plan=plan,
+            checkpointer=Checkpointer(ckdir, keep=3,
+                                      checkpoint_interval_ms=800.0),
+            heartbeat_timeout_ms=600.0)
+        res = eng.run(7_000.0)
+    _assert_conserved(res, "engine_crash_basics")
+    ev = res.recovery_events[0]
+    assert ev.lost_vertices, "crash must cost at least one subtask"
+    assert {f.kind for f in res.fault_log} == {"kill_owner_of", "kill_worker"}
+    return res
+
+
+# ---------------------------------------------------------------------------
+# inline arms — deterministic virtual time (sim) / wall time (engine)
+# ---------------------------------------------------------------------------
+
+
+def test_crash_during_keyed_state_migration_conserves_items():
+    scenario_crash_during_migration()
+
+
+def test_crash_of_chained_task_dissolves_chain_then_recovers():
+    scenario_crash_of_chained_task()
+
+
+def test_crash_during_scale_in_drain_conserves_items():
+    scenario_crash_during_drain()
+
+
+def test_double_crash_before_recovery_completes():
+    scenario_double_crash()
+
+
+def test_engine_crash_detect_restore_replay():
+    scenario_engine_crash_basics()
+
+
+def test_sim_detection_latency_bounded_by_heartbeat_timeout():
+    # virtual time makes the bound exact: detection happens at the first
+    # control tick past crash + timeout
+    res = scenario_double_crash()
+    for ev in res.recovery_events:
+        assert ev.time_to_detect_ms >= 1_000.0
+        assert ev.time_to_detect_ms <= 2_000.0, ev
+
+
+# ---------------------------------------------------------------------------
+# sanitizer arms — the SAME scenarios, under REPRO_SANITIZE=1, must leave
+# the invariant checker empty (recovery never puts a key in two stores /
+# never corrupts buffer accounting)
+# ---------------------------------------------------------------------------
+
+
+def _sanitized(scenario: str) -> None:
+    p = run_sanitized(PREAMBLE + f"""
+        import test_crash_recovery as m
+        m.{scenario}()
+        CHECKER.assert_clean()
+        print("CLEAN")
+    """)
+    assert p.returncode == 0, p.stderr
+    assert "CLEAN" in p.stdout
+
+
+def test_sanitize_clean_crash_during_migration():
+    _sanitized("scenario_crash_during_migration")
+
+
+def test_sanitize_clean_crash_of_chained_task():
+    _sanitized("scenario_crash_of_chained_task")
+
+
+def test_sanitize_clean_crash_during_drain():
+    _sanitized("scenario_crash_during_drain")
+
+
+def test_sanitize_clean_double_crash():
+    _sanitized("scenario_double_crash")
+
+
+def test_sanitize_clean_engine_crash():
+    _sanitized("scenario_engine_crash_basics")
+
+
+if __name__ == "__main__":
+    t0 = time.perf_counter()
+    for fn in (scenario_crash_during_migration, scenario_crash_of_chained_task,
+               scenario_crash_during_drain, scenario_double_crash,
+               scenario_engine_crash_basics):
+        fn()
+        print(f"{fn.__name__}: OK ({time.perf_counter() - t0:.1f}s)")
