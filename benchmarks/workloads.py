@@ -36,19 +36,28 @@ def diurnal(base: float, peak: float, period_ms: float = 20_000.0,
 
     Each full period gets one seeded amplitude factor in
     ``[1 - jitter, 1 + jitter]`` (derived from ``seed`` and the cycle index,
-    so the trace is a pure function of elapsed time)."""
+    so the trace is a pure function of elapsed time).  The factor is
+    interpolated linearly across the cycle (this cycle's factor at the
+    trough, the next cycle's at the following trough), so the rate is
+    continuous at cycle boundaries; the result is clamped to
+    ``[base, peak]``, the documented band."""
     if peak < base:
         raise ValueError(f"peak {peak} < base {base}")
     mid = (base + peak) / 2.0
     amp = (peak - base) / 2.0
 
+    def _wobble(cycle: int) -> float:
+        return 1.0 + jitter * (
+            2.0 * random.Random(seed * 1_000_003 + cycle).random() - 1.0)
+
     def rate_fn(elapsed_ms: float) -> float:
         cycle = int(elapsed_ms // period_ms)
-        wob = 1.0 + jitter * (
-            2.0 * random.Random(seed * 1_000_003 + cycle).random() - 1.0)
-        phase = 2.0 * math.pi * (elapsed_ms % period_ms) / period_ms
+        frac = (elapsed_ms % period_ms) / period_ms
+        wob = _wobble(cycle) + (_wobble(cycle + 1) - _wobble(cycle)) * frac
+        phase = 2.0 * math.pi * frac
         # start at the trough: a freshly started job warms up, not slams
-        return max(mid - amp * math.cos(phase) * wob, 0.0)
+        raw = mid - amp * math.cos(phase) * wob
+        return min(max(raw, base), peak)
 
     return rate_fn
 

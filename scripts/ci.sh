@@ -139,6 +139,35 @@ CHECKER.assert_clean()
 print("sanitizer clean: media + scale + chain goldens, keyed_burst")
 PY
 
+# -- proactive QoS smoke under both dynamic checkers -------------------------
+# The predictive path (docs/predictive.md): estimator feed on the control
+# tick -> forecast-driven ScaleRequest/BufferSizeUpdate before the SLO
+# trips, on BOTH backends (proactive_burst: flash-crowd + diurnal traces,
+# reactive vs proactive).  The scenario itself asserts the simulator's
+# proactive arm strictly beats the reactive baseline; each checker arm must
+# additionally come back with zero reports — proactive rescales must not
+# race the engine's shared state nor corrupt channel/state invariants.
+# Own process per arm: read-once flags.
+echo "== proactive QoS smoke (race detector, both backends) =="
+REPRO_RACE_CHECK=1 python - <<'PY'
+from repro.analysis.race import CHECKER, RACE_CHECK
+assert RACE_CHECK and CHECKER is not None
+from benchmarks.qos_scaling import run_proactive_burst
+run_proactive_burst(smoke=True)
+CHECKER.assert_clean()
+print("race check clean: proactive_burst (sim + engine)")
+PY
+
+echo "== proactive QoS smoke (invariant sanitizer, both backends) =="
+REPRO_SANITIZE=1 python - <<'PY'
+from repro.analysis.sanitize import CHECKER, SANITIZE
+assert SANITIZE and CHECKER is not None
+from benchmarks.qos_scaling import run_proactive_burst
+run_proactive_burst(smoke=True)
+CHECKER.assert_clean()
+print("sanitizer clean: proactive_burst (sim + engine)")
+PY
+
 # -- crash-recovery smoke under both dynamic checkers ------------------------
 # The robustness path (docs/robustness.md): fault injection -> heartbeat
 # detection -> respawn on a replacement -> checkpoint state restore -> offset

@@ -181,6 +181,20 @@ register("NS-H001", WARN, "latency constraint can never chain",
          "§3.5.2 chaining conditions (chainable, stateless, single "
          "in/out channel); the chaining countermeasure is dead for it")
 
+register("NS-E001", ERROR, "non-positive forecast horizon",
+         "ProactiveConfig.horizon_ms must be > 0; the forecast path "
+         "extrapolates forward in time")
+register("NS-E002", ERROR, "non-positive estimator update period",
+         "ProactiveConfig.update_period_ms must be > 0 (or None to update "
+         "on every control tick)")
+register("NS-E003", ERROR, "forecast horizon shorter than the control tick",
+         "horizon_ms below measurement_interval_ms / 4 forecasts inside "
+         "the window the reactive loop already covers; raise horizon_ms "
+         "or shrink measurement_interval_ms")
+register("NS-E004", ERROR, "unknown rate estimator kind",
+         "ProactiveConfig.estimator must name a registered kind "
+         "(core/estimation.py ESTIMATOR_KINDS)")
+
 register("NS-B001", ERROR, "invalid buffer sizing bound",
          "initial buffer bytes and the sizing policy's eps/omega/r/s must "
          "satisfy 1 <= eps <= omega, 0 < r < 1, s > 1")

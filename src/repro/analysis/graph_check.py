@@ -50,6 +50,8 @@ def check_job(
     policy: Any = None,
     sources: Mapping[str, Any] | None = None,
     net: Any = None,
+    proactive: Any = None,
+    measurement_interval_ms: float | None = None,
 ) -> list[Diagnostic]:
     """Validate one job description; returns every finding (never raises)."""
     out: list[Diagnostic] = []
@@ -61,6 +63,8 @@ def check_job(
     out.extend(_check_chaining(jg, constraints))
     out.extend(_check_buffers(initial_buffer_bytes, max_buffer_lifetime_ms,
                               policy))
+    if proactive is not None:
+        out.extend(_check_estimation(proactive, measurement_interval_ms))
     # semantic layer: static QoS feasibility (lazy import — feasibility
     # reuses helpers from this module, so the import must not be cyclic at
     # module load time)
@@ -369,6 +373,49 @@ def _check_chaining(jg: JobGraph,
                 f"no adjacent task pair of {tasks} can ever satisfy the "
                 f"§3.5.2 chaining conditions — the chaining "
                 f"countermeasure will never fire for this constraint"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# Predictive-QoS estimator config (NS-E***): rejects nonsensical
+# ProactiveConfig values before either backend builds its runtime graph.
+# Duck-typed like the constraint checks so a hand-rolled config object
+# with the same fields validates identically.
+# ---------------------------------------------------------------------------
+
+
+def _check_estimation(proactive: Any,
+                      measurement_interval_ms: float | None
+                      ) -> list[Diagnostic]:
+    out: list[Diagnostic] = []
+    loc = "proactive config"
+    horizon = getattr(proactive, "horizon_ms", None)
+    if horizon is not None and not horizon > 0:
+        out.append(diag("NS-E001", loc,
+                        f"horizon_ms={horizon!r} must be > 0"))
+    period = getattr(proactive, "update_period_ms", None)
+    if period is not None and not period > 0:
+        out.append(diag("NS-E002", loc,
+                        f"update_period_ms={period!r} must be > 0 "
+                        f"(None updates on every control tick)"))
+    if (horizon is not None and horizon > 0
+            and measurement_interval_ms is not None
+            and measurement_interval_ms > 0
+            and horizon < measurement_interval_ms / 4.0):
+        out.append(diag(
+            "NS-E003", loc,
+            f"horizon_ms={horizon!r} is shorter than the control tick "
+            f"(measurement_interval_ms / 4 = "
+            f"{measurement_interval_ms / 4.0:g}ms); the forecast cannot "
+            f"see past the next reactive check"))
+    kind = getattr(proactive, "estimator", None)
+    if kind is not None:
+        from repro.core.estimation import ESTIMATOR_KINDS
+        if kind not in ESTIMATOR_KINDS:
+            out.append(diag(
+                "NS-E004", loc,
+                f"unknown estimator kind {kind!r}; registered kinds: "
+                f"{sorted(ESTIMATOR_KINDS)}"))
     return out
 
 

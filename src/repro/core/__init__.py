@@ -50,6 +50,14 @@ from .constraints import (
     sequence_latency,
 )
 from .engine import EngineResult, SourceSpec, StreamEngine, StreamItem
+from .estimation import (
+    EwmaEstimator,
+    HoltEstimator,
+    ProactiveConfig,
+    RateEstimator,
+    SlidingWindowTrendEstimator,
+    make_estimator,
+)
 from .faults import (
     ChannelBlackhole,
     DelaySpike,
@@ -72,7 +80,7 @@ from .graphs import (
     RuntimeVertex,
 )
 from .manager import BufferSizeUpdate, GiveUp, QoSManager
-from .measurement import QoSReport, QoSReporter, RunningAverage, Tag
+from .measurement import QoSReport, QoSReporter, RateMeter, RunningAverage, Tag
 from .placement import (
     MODULO,
     PACKED,

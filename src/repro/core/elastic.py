@@ -180,6 +180,21 @@ class RuntimeRewirer:
     def _init_rewirer(self) -> None:
         self.scale_log: list[ScaleDecision] = []
         self._elastic: list[dict] = []
+        # -- predictive QoS (core/estimation.py) -----------------------------
+        #: ProactiveConfig or None; backends set it from their constructor
+        #: argument before/after _init_rewirer — getattr keeps bare-mixin
+        #: hosts (tests) working
+        self.proactive = getattr(self, "proactive", None)
+        #: shared estimator registry ("src:<jv>" / "stage:<jv>" ->
+        #: RateEstimator) — owned HERE, not by the managers, so estimator
+        #: state survives every _refresh_qos_scopes manager rebuild.  A
+        #: backend that built its managers before calling _init_rewirer has
+        #: already created (and shared) the dict — preserve that identity.
+        if not hasattr(self, "_rate_estimators"):
+            self._rate_estimators: dict = {}
+        #: cumulative-count -> rate meters feeding the estimators
+        self._rate_meters: dict = {}
+        self._next_estimator_ms = 0.0
         self._manager_history_archive: list = []
         #: drain/chain failures surfaced instead of silently proceeding
         self.drain_failures: list[str] = []
@@ -691,7 +706,9 @@ class RuntimeRewirer:
                 rep.assign_manager(mgr, chans, ())
         self.managers = {
             w: QoSManager(alloc, self.rg, self.clock, policy=self.policy,
-                          throughput_constraints=self.throughput_constraints)
+                          throughput_constraints=self.throughput_constraints,
+                          proactive=getattr(self, "proactive", None),
+                          estimators=getattr(self, "_rate_estimators", None))
             for w, alloc in self.allocations.items()
         }
         # warm start: adopt surviving element stores from EVERY old manager
@@ -708,13 +725,60 @@ class RuntimeRewirer:
         self.measured_channels = measured_channels
         self.measured_tasks = measured_tasks
 
+    # -- predictive QoS: estimator feed (core/estimation.py) -----------------
+    def _estimator_tick(self, now: float) -> None:
+        """Feed the rate estimators from counters both backends already
+        maintain: per-source replay offsets (emitted sequence numbers) and
+        per-stage emitted counts for every throughput-constrained stage.
+        Pure bookkeeping — no events, no RNG, no new threads — so with
+        ``proactive=None`` this never runs and the golden decision traces
+        are untouched; with a config set, the estimators observe but only
+        the manager's proactive path (``ProactiveConfig.enabled``) acts."""
+        cfg = self.proactive
+        if cfg is None:
+            return
+        period = cfg.update_period_ms
+        if period is not None:
+            if now < self._next_estimator_ms:
+                return
+            self._next_estimator_ms = now + period
+        from .estimation import make_estimator
+        from .measurement import RateMeter
+
+        counts: dict[str, float] = {}
+        for (jv, _idx), seq in self._source_offsets().items():
+            key = f"src:{jv}"
+            counts[key] = counts.get(key, 0.0) + seq
+        for tc in self.throughput_constraints:
+            counts[f"stage:{tc.job_vertex}"] = float(sum(
+                self._task_emitted(v)
+                for v in self.rg.tasks_of(tc.job_vertex)))
+        for key, count in counts.items():
+            meter = self._rate_meters.get(key)
+            if meter is None:
+                meter = self._rate_meters[key] = RateMeter()
+            rate = meter.sample(now, count)
+            if rate is None:
+                continue  # first observation: no span to rate over yet
+            est = self._rate_estimators.get(key)
+            if est is None:
+                est = self._rate_estimators[key] = make_estimator(
+                    cfg.estimator, **cfg.estimator_args)
+            est.update(now, rate)
+
     # -- controller attachment + shared telemetry ---------------------------
-    def attach_elastic(self, controller: ElasticController) -> None:
+    def attach_elastic(self, controller: ElasticController,
+                       sample=None) -> None:
         """Attach an ElasticController; its constraint's vertex is watched
         (delivered rate + mean utilization) and scaled live, both out and
-        in."""
+        in.
+
+        ``sample`` optionally replaces the default emitted/busy telemetry:
+        a callable ``(now_ms) -> (rate, utilization)`` owning its own
+        deltas — the token-aware Decode autoscaler feeds token throughput
+        and KV-cache occupancy through this seam."""
         st = {"ctl": controller, "last_t": self.clock.now(),
-              "last_emitted": 0, "last_busy": 0.0}
+              "last_emitted": 0, "last_busy": 0.0, "sample": sample}
         self._elastic.append(st)
         self._schedule_elastic(st, controller.c.window_ms / 2.0)
 
@@ -724,20 +788,29 @@ class RuntimeRewirer:
         ctl: ElasticController = st["ctl"]
         now = self.clock.now()
         tasks = self.rg.tasks_of(ctl.c.job_vertex)
-        emitted = sum(self._task_emitted(v) for v in tasks)
-        busy = sum(self._task_busy_ms(v) for v in tasks)
-        dt = max(now - st["last_t"], 1e-9)
-        rate = max(emitted - st["last_emitted"], 0) / (dt / 1e3)
-        util = max(busy - st["last_busy"], 0.0) / dt / max(len(tasks), 1)
-        st["last_t"], st["last_emitted"], st["last_busy"] = now, emitted, busy
+        sample = st.get("sample")
+        if sample is not None:
+            rate, util = sample(now)
+        else:
+            emitted = sum(self._task_emitted(v) for v in tasks)
+            busy = sum(self._task_busy_ms(v) for v in tasks)
+            dt = max(now - st["last_t"], 1e-9)
+            rate = max(emitted - st["last_emitted"], 0) / (dt / 1e3)
+            util = max(busy - st["last_busy"], 0.0) / dt / max(len(tasks), 1)
+            st["last_t"], st["last_emitted"], st["last_busy"] = (
+                now, emitted, busy)
         d = ctl.check(now, len(tasks), rate, min(util, 1.0))
         if d is not None and self.apply_scale_decision(d):
             # re-baseline the counters over the re-wired task group so the
             # next sample is not skewed by spawned/retired tasks
-            tasks = self.rg.tasks_of(ctl.c.job_vertex)
-            st["last_emitted"] = sum(self._task_emitted(v) for v in tasks)
-            st["last_busy"] = sum(self._task_busy_ms(v) for v in tasks)
-            st["last_t"] = self.clock.now()
+            if sample is not None:
+                sample(self.clock.now())
+            else:
+                tasks = self.rg.tasks_of(ctl.c.job_vertex)
+                st["last_emitted"] = sum(
+                    self._task_emitted(v) for v in tasks)
+                st["last_busy"] = sum(self._task_busy_ms(v) for v in tasks)
+                st["last_t"] = self.clock.now()
         return d
 
     # -- hooks backends must provide ----------------------------------------

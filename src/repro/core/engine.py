@@ -49,7 +49,9 @@ from .buffers import BufferSizingPolicy, OutputBuffer
 from .chaining import ChainRequest, DRAIN_QUEUES
 from .clock import Clock, RealClock
 from .constraints import JobConstraint
-from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
+from .elastic import (
+    DrainTimeout, RuntimeRewirer, ScaleRequest, split_constraints)
+from .estimation import ProactiveConfig
 from .faults import (
     ChannelBlackhole, DelaySpike, FaultPlan, KillOwnerOf, KillWorker)
 from .graphs import ALL_TO_ALL, Channel, JobGraph, RuntimeGraph, RuntimeVertex
@@ -127,6 +129,10 @@ class EngineResult:
     dropped_by_key: dict = field(default_factory=dict)
     replayed_by_key: dict = field(default_factory=dict)
     sink_count_by_key: dict = field(default_factory=dict)
+    #: bucket index -> mean sink latency in that bucket (bucket width =
+    #: latency_bucket_ms, elapsed since start()) — the engine counterpart
+    #: of SimResult.latency_timeline, for SLO-violation-time accounting
+    latency_timeline: dict = field(default_factory=dict)
 
     @property
     def mean_latency_ms(self) -> float:
@@ -313,6 +319,12 @@ class TaskExecutor:
         self._busy_ms = 0.0
         self.busy_ms_total = 0.0      # lifetime busy time (elastic telemetry)
         self.emitted = 0              # lifetime emissions (elastic telemetry)
+        #: spawn/retire wall timestamps (engine clock): per-replica gauges
+        #: (e.g. token throughput) denominate by LIVE duration, not the
+        #: whole run — a replica scaled out mid-run was not idle before it
+        #: existed
+        self.spawned_at_ms = engine.clock.now()
+        self.retired_at_ms: float | None = None
         self._window_start = engine.clock.now()
         self.thread: threading.Thread | None = None
         #: source replay machinery (docs/robustness.md): the pacing loop
@@ -607,6 +619,8 @@ class StreamEngine(RuntimeRewirer):
         fault_plan: FaultPlan | None = None,
         checkpointer=None,
         heartbeat_timeout_ms: float = 1_500.0,
+        proactive: ProactiveConfig | None = None,
+        latency_bucket_ms: float = 1_000.0,
     ) -> None:
         self.jg = jg
         # pre-flight validation (analysis/graph_check.py): structured
@@ -621,7 +635,8 @@ class StreamEngine(RuntimeRewirer):
                 num_key_ranges=num_key_ranges,
                 initial_buffer_bytes=initial_buffer_bytes,
                 max_buffer_lifetime_ms=max_buffer_lifetime_ms,
-                policy=policy, sources=sources)
+                policy=policy, sources=sources, proactive=proactive,
+                measurement_interval_ms=measurement_interval_ms)
         else:
             self.preflight_diagnostics = []
         #: max output-buffer lifetime (§3.5.1 companion): with QoS off and a
@@ -645,6 +660,16 @@ class StreamEngine(RuntimeRewirer):
         self.interval_ms = measurement_interval_ms
         self.initial_buffer_bytes = initial_buffer_bytes
         self.policy = policy
+        # predictive QoS (core/estimation.py): set BEFORE manager
+        # construction so the estimator registry dict the managers hold is
+        # the same object _estimator_tick feeds (_init_rewirer preserves it)
+        self.proactive = proactive
+        self._rate_estimators: dict = {}
+        self.latency_bucket_ms = latency_bucket_ms
+        #: bucket index -> (latency sum, count); bucketed by wall time since
+        #: start() so benchmark harnesses can compute SLO-violation seconds
+        #: (the engine-side analogue of SimResult.latency_timeline)
+        self._lat_timeline: dict[int, tuple[float, int]] = {}
 
         # QoS setup (master, §3.4.2)
         self.allocations = compute_qos_setup(jg, self.constraints, self.rg)
@@ -661,7 +686,9 @@ class StreamEngine(RuntimeRewirer):
                 self.reporters[w].assign_manager(mgr, chans, ())
         self.managers: dict[int, QoSManager] = {
             w: QoSManager(alloc, self.rg, self.clock, policy=policy,
-                          throughput_constraints=self.throughput_constraints)
+                          throughput_constraints=self.throughput_constraints,
+                          proactive=proactive,
+                          estimators=self._rate_estimators)
             for w, alloc in self.allocations.items()
         }
         self.measured_channels: set[str] = set()
@@ -714,8 +741,11 @@ class StreamEngine(RuntimeRewirer):
 
     # -- stats ---------------------------------------------------------------------
     def record_sink_latency(self, lat_ms: float, key: int | None = None) -> None:
+        bucket = int((self.clock.now() - self._t0) // self.latency_bucket_ms)
         with self._sink_lock:
             self._sink_lat.append(lat_ms)
+            s, c0 = self._lat_timeline.get(bucket, (0.0, 0))
+            self._lat_timeline[bucket] = (s + lat_ms, c0 + 1)
             if key is not None:
                 c = self.sink_count_by_key
                 c[key] = c.get(key, 0) + 1
@@ -862,6 +892,10 @@ class StreamEngine(RuntimeRewirer):
                     mgr = managers.get(mgr_id)
                     if mgr is not None:
                         mgr.receive_report(report)
+            # predictive QoS: feed the rate estimators on the control tick
+            # (no-op with proactive=None — _estimator_tick guards)
+            if self.proactive is not None:
+                self._estimator_tick(self.clock.now())
             # attached elastic controllers sample on their own cadence
             for st in list(self._elastic):
                 if self.clock.now() >= st.get("next_ms", 0.0):
@@ -890,12 +924,18 @@ class StreamEngine(RuntimeRewirer):
                 self.apply_chain(action)
         elif isinstance(action, ScaleRequest):
             try:
-                self.scale_out(action.job_vertex, action.to_parallelism,
-                               reason=action.reason)
-            except ValueError:
-                # vertex not scalable (source / POINTWISE-pinned): the
-                # countermeasure is inapplicable, never fatal to the
-                # control loop
+                if action.to_parallelism < action.from_parallelism:
+                    # proactive give-back: the manager's forecast path may
+                    # request a shrink; reactive requests only ever grow
+                    self.scale_in(action.job_vertex, action.to_parallelism,
+                                  reason=action.reason)
+                else:
+                    self.scale_out(action.job_vertex, action.to_parallelism,
+                                   reason=action.reason)
+            except (ValueError, DrainTimeout):
+                # vertex not scalable (source / POINTWISE-pinned) or a
+                # retiring task hung its drain: the countermeasure is
+                # inapplicable/aborted, never fatal to the control loop
                 pass
         elif isinstance(action, GiveUp):
             self._give_ups.append(action)
@@ -981,6 +1021,8 @@ class StreamEngine(RuntimeRewirer):
                 continue
             ex.crashed = True
             ex.retired = True
+            if ex.retired_at_ms is None:
+                ex.retired_at_ms = now
             ex.stop_flag = True
             ex.paused.set()        # free a parked thread so it can exit
             # queued-but-unprocessed items die with the process
@@ -1217,6 +1259,8 @@ class StreamEngine(RuntimeRewirer):
         if ex is None:
             return
         ex.retired = True  # deliver() reroutes stragglers to siblings
+        if ex.retired_at_ms is None:
+            ex.retired_at_ms = self.clock.now()
         ex.stop_flag = True
         ex.inbox.put(None)
         th = ex.thread
@@ -1453,6 +1497,9 @@ class StreamEngine(RuntimeRewirer):
             dropped_by_key=dict(self.dropped_by_key),
             replayed_by_key=dict(self.replayed_by_key),
             sink_count_by_key=dict(self.sink_count_by_key),
+            latency_timeline={b: s / c
+                              for b, (s, c) in self._lat_timeline.items()
+                              if c},
         )
 
     def run(self, duration_ms: float) -> EngineResult:

@@ -1,0 +1,224 @@
+"""Pluggable rate estimation for predictive QoS (ROADMAP "Predictive QoS").
+
+Every countermeasure in the paper's scheme (§3.4) is reactive: a constraint
+must already be violated before BufferSizeUpdate / ChainRequest /
+ScaleRequest fire, so a flash crowd always buys a violation window equal to
+detection + cooldown + scale-out latency.  This module supplies the missing
+half — per-source-stream and per-constrained-stage :class:`RateEstimator`
+instances (the sfctss shape: pluggable, updated on a fixed period from the
+control tick) exposing ``rate_now()`` and ``forecast(horizon_ms)`` so the
+QoS manager can evaluate the §3 latency/throughput model at the *forecast*
+rate and act before the SLO trips.
+
+Three estimator families, selectable by ``ProactiveConfig.estimator``:
+
+* ``"ewma"`` — exponentially weighted moving average; flat forecast (no
+  trend).  Cheap, stable, and the baseline the other two must beat.
+* ``"trend"`` — least-squares linear fit over a sliding time window;
+  extrapolates the fitted slope.  Exact on linear ramps (the flash-crowd
+  front), noisy on short windows.
+* ``"holt"`` — Holt double-exponential smoothing with time-aware updates
+  (irregular tick spacing is handled by folding ``dt`` into the level
+  extrapolation).  Tracks ramps with smoothing, the default.
+
+Determinism contract: estimators are pure arithmetic over the sample stream
+— no RNG, no events, no clock reads.  With ``proactive=None`` (or
+``ProactiveConfig(enabled=False)`` shadow mode) the bookkeeping changes NO
+scheduling decisions; the golden decision traces pin this.
+"""
+from __future__ import annotations
+
+from collections import deque
+from dataclasses import dataclass, field
+
+
+class RateEstimator:
+    """Interface: feed rate samples, read back a now-cast and a forecast.
+
+    ``update(now_ms, rate)`` is called on the control-tick period with the
+    instantaneous rate (items/s) observed since the previous tick;
+    ``rate_now()`` returns the smoothed current rate and
+    ``forecast(horizon_ms)`` the predicted rate ``horizon_ms`` from the
+    last update (clamped at zero — a rate cannot go negative)."""
+
+    def update(self, now_ms: float, rate: float) -> None:
+        raise NotImplementedError
+
+    def rate_now(self) -> float:
+        raise NotImplementedError
+
+    def forecast(self, horizon_ms: float) -> float:
+        raise NotImplementedError
+
+
+class EwmaEstimator(RateEstimator):
+    """Exponentially weighted moving average; flat (no-trend) forecast."""
+
+    def __init__(self, alpha: float = 0.3) -> None:
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha {alpha} outside (0, 1]")
+        self.alpha = alpha
+        self._level: float | None = None
+
+    def update(self, now_ms: float, rate: float) -> None:
+        if self._level is None:
+            self._level = rate
+        else:
+            self._level += self.alpha * (rate - self._level)
+
+    def rate_now(self) -> float:
+        return self._level if self._level is not None else 0.0
+
+    def forecast(self, horizon_ms: float) -> float:
+        return max(self.rate_now(), 0.0)
+
+
+class SlidingWindowTrendEstimator(RateEstimator):
+    """Least-squares linear fit over a sliding window; extrapolates slope.
+
+    Exact on linear ramps: fed a ramp, ``forecast(h)`` returns the true
+    rate at ``now + h`` (until the ramp leaves the window)."""
+
+    def __init__(self, window_ms: float = 5_000.0) -> None:
+        if window_ms <= 0:
+            raise ValueError(f"window_ms {window_ms} must be positive")
+        self.window_ms = window_ms
+        self._samples: deque[tuple[float, float]] = deque()
+
+    def update(self, now_ms: float, rate: float) -> None:
+        self._samples.append((now_ms, rate))
+        cutoff = now_ms - self.window_ms
+        while self._samples and self._samples[0][0] < cutoff:
+            self._samples.popleft()
+
+    def _fit(self) -> tuple[float, float, float]:
+        """Return (slope_per_ms, intercept_at_t0, t0)."""
+        n = len(self._samples)
+        if n == 0:
+            return 0.0, 0.0, 0.0
+        t0 = self._samples[-1][0]
+        if n == 1:
+            return 0.0, self._samples[0][1], t0
+        # center times on the last sample for numeric stability
+        sx = sy = sxx = sxy = 0.0
+        for t, r in self._samples:
+            x = t - t0
+            sx += x
+            sy += r
+            sxx += x * x
+            sxy += x * r
+        denom = n * sxx - sx * sx
+        if denom <= 0.0:
+            return 0.0, sy / n, t0
+        slope = (n * sxy - sx * sy) / denom
+        intercept = (sy - slope * sx) / n
+        return slope, intercept, t0
+
+    def rate_now(self) -> float:
+        _, intercept, _ = self._fit()
+        return max(intercept, 0.0)
+
+    def forecast(self, horizon_ms: float) -> float:
+        slope, intercept, _ = self._fit()
+        return max(intercept + slope * horizon_ms, 0.0)
+
+
+class HoltEstimator(RateEstimator):
+    """Holt double-exponential smoothing (level + trend), time-aware.
+
+    Classic Holt assumes evenly spaced samples; control ticks are nearly
+    even but drift under load, so the level extrapolation folds the actual
+    ``dt`` in and the trend is maintained per millisecond."""
+
+    def __init__(self, alpha: float = 0.5, beta: float = 0.3) -> None:
+        if not 0.0 < alpha <= 1.0:
+            raise ValueError(f"alpha {alpha} outside (0, 1]")
+        if not 0.0 < beta <= 1.0:
+            raise ValueError(f"beta {beta} outside (0, 1]")
+        self.alpha = alpha
+        self.beta = beta
+        self._level: float | None = None
+        self._trend = 0.0  # per ms
+        self._last_ms: float | None = None
+
+    def update(self, now_ms: float, rate: float) -> None:
+        if self._level is None or self._last_ms is None:
+            self._level = rate
+            self._last_ms = now_ms
+            return
+        dt = now_ms - self._last_ms
+        if dt <= 0.0:
+            # duplicate tick timestamp: fold the sample into the level only
+            self._level += self.alpha * (rate - self._level)
+            return
+        prev = self._level
+        self._level = (self.alpha * rate
+                       + (1.0 - self.alpha) * (prev + self._trend * dt))
+        self._trend = (self.beta * ((self._level - prev) / dt)
+                       + (1.0 - self.beta) * self._trend)
+        self._last_ms = now_ms
+
+    def rate_now(self) -> float:
+        return max(self._level, 0.0) if self._level is not None else 0.0
+
+    def forecast(self, horizon_ms: float) -> float:
+        if self._level is None:
+            return 0.0
+        return max(self._level + self._trend * horizon_ms, 0.0)
+
+
+#: registry of estimator kinds for ``ProactiveConfig.estimator`` /
+#: ``make_estimator`` — add an entry here to plug in a new estimator
+#: (docs/predictive.md walks through it).
+ESTIMATOR_KINDS: dict[str, type[RateEstimator]] = {
+    "ewma": EwmaEstimator,
+    "trend": SlidingWindowTrendEstimator,
+    "holt": HoltEstimator,
+}
+
+
+def make_estimator(kind: str, **kwargs) -> RateEstimator:
+    """Instantiate a registered estimator kind (``ESTIMATOR_KINDS``)."""
+    try:
+        cls = ESTIMATOR_KINDS[kind]
+    except KeyError:
+        raise ValueError(
+            f"unknown estimator kind {kind!r} "
+            f"(registered: {sorted(ESTIMATOR_KINDS)})") from None
+    return cls(**kwargs)
+
+
+@dataclass(frozen=True)
+class ProactiveConfig:
+    """Configuration for the forecast-driven proactive decision path.
+
+    Passing an instance as the ``proactive=`` argument of either backend
+    turns estimator bookkeeping on; ``enabled=False`` is shadow mode (the
+    estimators run, no proactive actions fire — used to pin the
+    decision-neutrality invariant against the golden traces).
+
+    * ``horizon_ms`` — how far ahead the forecast looks; a predicted
+      violation inside the horizon triggers countermeasures now.  Must be
+      at least the control tick (``measurement_interval_ms / 4``) —
+      anything shorter forecasts the past (pre-flight rule NS-E003).
+    * ``estimator`` — registered kind (``ESTIMATOR_KINDS``);
+      ``estimator_args`` are forwarded to its constructor.
+    * ``update_period_ms`` — estimator sample period; ``None`` means every
+      control tick (the default and the finest available granularity).
+    * ``hysteresis`` — multiplicative guard band (> 1) between the reactive
+      threshold and the proactive one, so forecast noise at the boundary
+      cannot thrash against the reactive path.
+    * ``giveback_util`` / ``giveback_ticks`` — scale-in on sustained low
+      forecast: predicted AND current utilization below ``giveback_util``
+      for ``giveback_ticks`` consecutive proactive checks gives replicas
+      back (never below the job-declared base parallelism).
+    """
+
+    horizon_ms: float = 3_000.0
+    estimator: str = "holt"
+    update_period_ms: float | None = None
+    hysteresis: float = 1.05
+    giveback_util: float = 0.30
+    giveback_ticks: int = 4
+    enabled: bool = True
+    estimator_args: dict = field(default_factory=dict)

@@ -25,6 +25,7 @@ QoS Reporters, and reacts to latency-constraint violations:
 """
 from __future__ import annotations
 
+import math
 from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Iterable
@@ -34,6 +35,7 @@ from .chaining import ChainRequest, TaskRuntimeInfo, find_chain
 from .clock import Clock
 from .constraints import JobConstraint
 from .elastic import ScaleRequest, ThroughputConstraint
+from .estimation import ProactiveConfig, RateEstimator
 from .graphs import Channel, RuntimeGraph, RuntimeVertex
 from .measurement import QoSReport
 from .setup import ConstraintScope, ManagerAllocation
@@ -138,6 +140,8 @@ class QoSManager:
         scale_step: int = 2,
         scale_max_parallelism: int = 64,
         scale_util_threshold: float = 0.85,
+        proactive: ProactiveConfig | None = None,
+        estimators: dict[str, RateEstimator] | None = None,
     ) -> None:
         self.worker = allocation.worker
         self.allocation = allocation
@@ -150,6 +154,19 @@ class QoSManager:
         self.scale_step = scale_step
         self.scale_max_parallelism = scale_max_parallelism
         self.scale_util_threshold = scale_util_threshold
+        # predictive QoS (core/estimation.py): the execution layer owns the
+        # estimator registry ("src:<jv>" / "stage:<jv>" -> RateEstimator)
+        # and shares it with every manager; with proactive None or disabled
+        # the forecast path never runs and decisions are bit-identical.
+        self.proactive = proactive
+        self.estimators: dict[str, RateEstimator] = (
+            estimators if estimators is not None else {})
+        #: consecutive low-forecast proactive checks per "constraint:stage"
+        #: (scale-in give-back needs a sustained signal, not one quiet tick)
+        self._low_forecast_ticks: dict[str, int] = {}
+        #: scope index -> source job vertices feeding its path (reachability
+        #: over the job graph, cached — the job graph never changes shape)
+        self._scope_sources: dict[int, frozenset[str]] = {}
 
         max_window = max(
             (s.constraint.window_ms for s in allocation.scopes), default=15_000.0
@@ -212,6 +229,8 @@ class QoSManager:
             if cid in chan_ids:
                 self._settled_until[cid] = max(
                     self._settled_until.get(cid, 0.0), t)
+        for key, n in old._low_forecast_ticks.items():
+            self._low_forecast_ticks.setdefault(key, n)
         old_cooldowns = {
             old.allocation.scopes[i].constraint.name: t
             for i, t in old._scope_cooldown_until.items()
@@ -518,6 +537,192 @@ class QoSManager:
                 self._scope_cooldown_until[idx] = (
                     now + 4.0 * scope.constraint.window_ms
                 )
+        # Proactive path (predictive QoS): runs AFTER the reactive loop and
+        # honors the same per-scope cooldowns, so a scope the reactive path
+        # just acted on (or that is cooling down from an earlier action) is
+        # never double-treated in the same cycle.
+        if (self.proactive is not None and self.proactive.enabled
+                and self.estimators):
+            actions.extend(self._proactive_check(now))
+        return actions
+
+    # -- proactive path (forecast-driven, core/estimation.py) -------------------
+    def _sources_feeding(self, scope: ConstraintScope) -> frozenset[str]:
+        """Source job vertices upstream of (or on) the scope's path."""
+        jg = self.rg.job_graph
+        seen: set[str] = set()
+        srcs: set[str] = set()
+        stack = list(scope.path)
+        while stack:
+            name = stack.pop()
+            if name in seen:
+                continue
+            seen.add(name)
+            if jg.vertices[name].is_source:
+                srcs.add(name)
+            for e in jg.in_edges(name):
+                stack.append(e.src)
+        return frozenset(srcs)
+
+    def _forecast_ratio(self, idx: int, scope: ConstraintScope) -> float | None:
+        """Offered-load ratio forecast/now over the scope's source streams.
+
+        The key identity making the §3 model usable at the forecast rate:
+        stage selectivities cancel in the ratio, so a stage's predicted
+        utilization is just ``measured_util * ratio`` — no per-stage
+        throughput model needed, only the source estimators and the CPU
+        gauges the reporters already ship."""
+        cfg = self.proactive
+        srcs = self._scope_sources.get(idx)
+        if srcs is None:
+            srcs = self._sources_feeding(scope)
+            self._scope_sources[idx] = srcs
+        now_sum = fc_sum = 0.0
+        any_est = False
+        for jv in srcs:
+            est = self.estimators.get(f"src:{jv}")
+            if est is None:
+                continue
+            any_est = True
+            now_sum += est.rate_now()
+            fc_sum += est.forecast(cfg.horizon_ms)
+        if not any_est or now_sum <= 0.0:
+            return None
+        return fc_sum / now_sum
+
+    def _proactive_check(self, now: float) -> list[Action]:
+        """Forecast-driven countermeasures (the predictive half of §3.5):
+        act on scopes that are NOT yet violated but whose forecast predicts
+        a violation within the horizon — and give capacity back on a
+        sustained low forecast.  Composes with the reactive path through
+        the shared per-scope cooldowns plus a hysteresis band."""
+        cfg = self.proactive
+        actions: list[Action] = []
+        for idx, scope in enumerate(self.allocation.scopes):
+            if idx in self._gave_up:
+                continue
+            if now < self._scope_cooldown_until.get(idx, 0.0):
+                continue
+            res = self.analyze(scope)
+            if res is None:
+                continue
+            limit = scope.constraint.latency_limit_ms
+            if res.worst_estimate_ms > limit:
+                continue  # already violated: the reactive path's domain
+            ratio = self._forecast_ratio(idx, scope)
+            if ratio is None:
+                continue
+            scope_actions = self._proactive_countermeasures(
+                scope, res, ratio, now)
+            if scope_actions:
+                actions.extend(scope_actions)
+                self._scope_cooldown_until[idx] = (
+                    now + scope.constraint.window_ms)
+                self.history.append(ViolationRecord(
+                    scope.constraint.name,
+                    res.worst_estimate_ms * ratio,  # forecast-scaled
+                    now, tuple(scope_actions)))
+        return actions
+
+    def _proactive_countermeasures(
+        self,
+        scope: ConstraintScope,
+        analysis: ScopeAnalysis,
+        ratio: float,
+        now: float,
+    ) -> list[Action]:
+        cfg = self.proactive
+        actions: list[Action] = []
+        for tc in self.throughput_constraints:
+            if tc.job_vertex not in scope.path:
+                continue
+            if not self._vertex_is_scalable(tc.job_vertex):
+                continue
+            tasks = self.rg.tasks_of(tc.job_vertex)
+            utils = [self._task_cpu[v.id][0] for v in tasks
+                     if v.id in self._task_cpu]
+            if not utils:
+                continue
+            mean_util = sum(utils) / len(utils)
+            predicted = mean_util * ratio  # selectivity cancels (see above)
+            key = f"{scope.constraint.name}:{tc.job_vertex}"
+            cur = len(tasks)
+            cap = min(self.scale_max_parallelism, tc.max_parallelism)
+            if (predicted > self.scale_util_threshold * cfg.hysteresis
+                    and cur < cap):
+                # size the step to absorb the forecast, bounded by the
+                # reactive step so proactive can never out-jump reactive
+                want = max(cur + 1, math.ceil(
+                    cur * predicted / self.scale_util_threshold))
+                to = min(want, cur + self.scale_step, cap)
+                actions.append(ScaleRequest(
+                    tc.job_vertex, cur, to,
+                    f"proactive: forecast util {predicted:.2f} within "
+                    f"{cfg.horizon_ms:.0f}ms horizon "
+                    f"(now {mean_util:.2f}, rate x{ratio:.2f})"))
+                self._low_forecast_ticks.pop(key, None)
+            elif (predicted < cfg.giveback_util
+                    and mean_util < cfg.giveback_util):
+                base = self.rg.job_graph.vertices[tc.job_vertex].parallelism
+                ticks = self._low_forecast_ticks.get(key, 0) + 1
+                self._low_forecast_ticks[key] = ticks
+                if ticks >= cfg.giveback_ticks and cur > base:
+                    to = max(cur - self.scale_step, base)
+                    # never shrink into a predicted re-violation
+                    if (mean_util * cur / max(to, 1)
+                            < self.scale_util_threshold):
+                        actions.append(ScaleRequest(
+                            tc.job_vertex, cur, to,
+                            f"proactive: sustained low forecast "
+                            f"(util {mean_util:.2f}, "
+                            f"predicted {predicted:.2f} "
+                            f"for {ticks} checks)"))
+                        self._low_forecast_ticks.pop(key, None)
+            else:
+                self._low_forecast_ticks.pop(key, None)
+        if actions:
+            return actions
+        # Fallback when no scalable stage can absorb the forecast: if the
+        # first-order forecast-scaled estimate breaches the limit, pre-adapt
+        # the buffers on the worst owned sequence — the reactive Eq. 2/3
+        # proposal fed the oblt the channel WOULD have at the forecast rate
+        # (buffer fill time scales inversely with offered load).
+        limit = scope.constraint.latency_limit_ms
+        if ratio <= cfg.hysteresis:
+            return []
+        if analysis.worst_estimate_ms * ratio <= limit:
+            return []
+        window = scope.constraint.window_ms
+        for el in analysis.worst_elements:
+            if not isinstance(el, Channel):
+                continue
+            if now < self._settled_until.get(el.id, 0.0):
+                continue
+            ob = self.oblt(el, window)
+            if ob is None:
+                continue
+            obl = (ob / ratio) / 2.0
+            buf = self._chan_buf.get(el.id)
+            if buf is None:
+                continue
+            size, version = buf
+            src_lat = self.task_latency(el.src, window)
+            new = self.policy.propose(size, obl, src_lat)
+            if new is not None and new != size:
+                direction = 1 if new > size else -1
+                last = self._last_update_dir.get(el.id)
+                if last is not None and last != direction:
+                    self._settled_until[el.id] = (
+                        now + self.settle_windows * window)
+                    self._last_update_dir.pop(el.id, None)
+                    continue
+                self._last_update_dir[el.id] = direction
+                actions.append(BufferSizeUpdate(
+                    channel_id=el.id,
+                    src_worker=self.rg.worker(el.src),
+                    new_size_bytes=new,
+                    base_version=version,
+                ))
         return actions
 
     # -- countermeasures ----------------------------------------------------------

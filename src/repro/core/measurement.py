@@ -91,6 +91,36 @@ class RunningAverage:
         return len(self._items)
 
 
+class RateMeter:
+    """Cumulative counter -> instantaneous rate samples (items/s).
+
+    The predictive-QoS estimators (core/estimation.py) want periodic rate
+    samples; both backends only expose monotonically growing cumulative
+    counts (source sequence numbers, per-stage emitted counters).  A
+    ``RateMeter`` holds the last (timestamp, count) pair and turns the next
+    observation into a rate over the elapsed span.  Counts may reset
+    downward across a rescale (a retired replica's counter disappears from
+    the sum) — a negative delta yields a zero-rate sample rather than a
+    negative one.
+    """
+
+    __slots__ = ("_last_ms", "_last_count")
+
+    def __init__(self) -> None:
+        self._last_ms: float | None = None
+        self._last_count = 0.0
+
+    def sample(self, now_ms: float, count: float) -> float | None:
+        """Fold in a cumulative observation; return the rate (items/s) since
+        the previous observation, or ``None`` on the first call / zero
+        elapsed time (no span to rate over)."""
+        last_ms, last_count = self._last_ms, self._last_count
+        self._last_ms, self._last_count = now_ms, count
+        if last_ms is None or now_ms <= last_ms:
+            return None
+        return max(count - last_count, 0.0) / ((now_ms - last_ms) / 1e3)
+
+
 # ---------------------------------------------------------------------------
 # Reports
 # ---------------------------------------------------------------------------

@@ -87,7 +87,9 @@ from .buffers import BufferArena, BufferSizingPolicy, OutputBuffer
 from .chaining import ChainRequest
 from .clock import SimClock
 from .constraints import JobConstraint
-from .elastic import RuntimeRewirer, ScaleRequest, split_constraints
+from .elastic import (
+    DrainTimeout, RuntimeRewirer, ScaleRequest, split_constraints)
+from .estimation import ProactiveConfig
 from .eventq import (
     _MAX_T,
     CalendarEventQueue,
@@ -771,6 +773,7 @@ class StreamSimulator(RuntimeRewirer):
         fault_plan=None,
         checkpointer=None,
         heartbeat_timeout_ms: float = 1_500.0,
+        proactive: ProactiveConfig | None = None,
     ) -> None:
         self.jg = jg
         #: network model — resolved *before* pre-flight so the static
@@ -790,7 +793,9 @@ class StreamSimulator(RuntimeRewirer):
                 num_key_ranges=num_key_ranges,
                 initial_buffer_bytes=initial_buffer_bytes,
                 max_buffer_lifetime_ms=max_buffer_lifetime_ms,
-                policy=policy, sources=sources, net=self.net)
+                policy=policy, sources=sources, net=self.net,
+                proactive=proactive,
+                measurement_interval_ms=measurement_interval_ms)
         else:
             self.preflight_diagnostics = []
         #: event-core execution mode — the determinism contract:
@@ -875,6 +880,11 @@ class StreamSimulator(RuntimeRewirer):
         self.seed = seed
         self.rng = random.Random(seed)
         self.sources = sources or {}
+        # predictive QoS (core/estimation.py): set BEFORE manager
+        # construction so the estimator registry dict the managers hold is
+        # the same object _estimator_tick feeds (_init_rewirer preserves it)
+        self.proactive = proactive
+        self._rate_estimators: dict = {}
         self.latency_bucket_ms = latency_bucket_ms
         self.cores_per_worker = cores_per_worker
 
@@ -893,7 +903,9 @@ class StreamSimulator(RuntimeRewirer):
                 self.reporters[w].assign_manager(mgr, chans, ())
         self.managers = {
             w: QoSManager(alloc, self.rg, self.clock, policy=policy,
-                          throughput_constraints=self.throughput_constraints)
+                          throughput_constraints=self.throughput_constraints,
+                          proactive=proactive,
+                          estimators=self._rate_estimators)
             for w, alloc in self.allocations.items()
         }
         self.measured_channels: set[str] = set()
@@ -1115,6 +1127,11 @@ class StreamSimulator(RuntimeRewirer):
         if self._monitor is not None:
             self._liveness_tick(now)
         self._maybe_checkpoint(now)
+        # predictive QoS: feed the rate estimators on the control tick.
+        # Strictly guarded by proactive: with None (the golden-pinned
+        # default) the tick adds no bookkeeping, events, or RNG draws.
+        if self.proactive is not None:
+            self._estimator_tick(now)
         if self.enable_qos:
             # snapshot: a routed ScaleRequest rebuilds self.managers live
             for mgr in list(self.managers.values()):
@@ -1266,11 +1283,18 @@ class StreamSimulator(RuntimeRewirer):
                 self._apply_chain(action)
         elif isinstance(action, ScaleRequest):
             try:
-                self.scale_out(action.job_vertex, action.to_parallelism,
-                               reason=action.reason)
-            except ValueError:
-                # vertex not scalable: inapplicable countermeasure, never
-                # fatal to the simulation
+                if action.to_parallelism < action.from_parallelism:
+                    # proactive give-back: the manager's forecast path may
+                    # request a shrink; reactive requests only ever grow
+                    self.scale_in(action.job_vertex, action.to_parallelism,
+                                  reason=action.reason)
+                else:
+                    self.scale_out(action.job_vertex,
+                                   action.to_parallelism,
+                                   reason=action.reason)
+            except (ValueError, DrainTimeout):
+                # vertex not scalable or a retiring task failed to drain:
+                # inapplicable countermeasure, never fatal to the simulation
                 pass
         elif isinstance(action, GiveUp):
             self.give_ups.append(action)

@@ -29,8 +29,10 @@ Batch shapes are bucketed to powers of two so the jit cache stays bounded.
 Results carry per-Decode-replica **token-throughput** and **KV-cache
 occupancy** gauges (``ServingResult.replica_metrics``) — the saturation
 signals a token-level autoscaler needs (request throughput undercounts load
-when generation lengths vary; KV occupancy is the memory bound).  Metrics
-only for now: the scaling policies still act on request throughput.
+when generation lengths vary; KV occupancy is the memory bound).  With
+``autoscaler="tokens"`` the elastic controller consumes exactly these
+signals through the ``attach_elastic(sample=...)`` seam instead of the
+default request-count telemetry.
 """
 from __future__ import annotations
 
@@ -83,12 +85,13 @@ class ServingResult:
     final_buffer_sizes: dict
     scale_log: list = field(default_factory=list)
     decode_replicas: int = 1
-    #: per-Decode-replica gauges (metrics only — groundwork for token-level
-    #: autoscaling): replica id -> {tokens_generated,
-    #: token_throughput_per_s, kv_cache_sessions, kv_cache_tokens}.
-    #: Token throughput (not request throughput) and KV-cache occupancy are
-    #: the real saturation signals for LLM decode; today they are reported,
-    #: tomorrow a controller can consume them.
+    #: per-Decode-replica gauges: replica id -> {tokens_generated,
+    #: token_throughput_per_s, live_duration_ms, kv_cache_sessions,
+    #: kv_cache_tokens, live}.  Token throughput (not request throughput)
+    #: and KV-cache occupancy are the real saturation signals for LLM
+    #: decode; the ``autoscaler="tokens"`` controller consumes the same
+    #: signals live.  Throughput is denominated by each replica's live
+    #: duration, so mid-run-spawned replicas report their true rate.
     replica_metrics: dict = field(default_factory=dict)
 
     @property
@@ -149,11 +152,25 @@ class QoSServer:
         elastic: bool = False,
         max_decode_replicas: int = 4,
         decode_min_rps: float | None = None,
+        autoscaler: str = "requests",
+        kv_token_budget_per_replica: int | None = None,
     ) -> None:
+        if autoscaler not in ("requests", "tokens"):
+            raise ValueError(
+                f"autoscaler must be 'requests' or 'tokens', "
+                f"got {autoscaler!r}")
         self.model = model
         self.params = params
         self.spec = spec
+        self.autoscaler = autoscaler
         self.max_len = spec.prompt_len + spec.gen_len + 8
+        #: KV budget per Decode replica (tokens) for the occupancy fraction
+        #: fed to the token autoscaler; the default is the session store's
+        #: own capacity bound (retention window x max sequence length).
+        self.kv_token_budget_per_replica = (
+            kv_token_budget_per_replica
+            if kv_token_budget_per_replica is not None
+            else SESSION_RETENTION * self.max_len)
         self._jit_prefill = {}
         self._jit_decode = {}
         self.batch_sizes: list[int] = []
@@ -259,10 +276,27 @@ class QoSServer:
             # registering the throughput constraint with the engine arms the
             # manager's scale-out countermeasure under the latency SLO
             self.constraints.append(tc)
-            self.elastic_ctl = ElasticController(
-                tc, hi_water=0.75, lo_water=0.20,
-                max_parallelism=max_decode_replicas, step=1,
-                cooldown_ms=2.0 * window_ms)
+            if autoscaler == "tokens":
+                # token-denominated controller: the watched rate is decoded
+                # tokens/s, so the minimum is the request floor priced in
+                # tokens.  This constraint is NOT registered with the
+                # engine — the manager's ScaleRequest countermeasure keeps
+                # the request-denominated tc above, whose window estimates
+                # stay in request units.
+                token_tc = ThroughputConstraint(
+                    "Decode",
+                    (decode_min_rps or spec.rate_per_s) * spec.gen_len,
+                    window_ms=window_ms,
+                    max_parallelism=max_decode_replicas)
+                self.elastic_ctl = ElasticController(
+                    token_tc, hi_water=0.75, lo_water=0.20,
+                    max_parallelism=max_decode_replicas, step=1,
+                    cooldown_ms=2.0 * window_ms)
+            else:
+                self.elastic_ctl = ElasticController(
+                    tc, hi_water=0.75, lo_water=0.20,
+                    max_parallelism=max_decode_replicas, step=1,
+                    cooldown_ms=2.0 * window_ms)
 
         rng = np.random.default_rng(0)
         counter = [0]
@@ -297,7 +331,18 @@ class QoSServer:
             policy=BufferSizingPolicy(omega_bytes=initial_buffer_bytes * 8),
         )
         if self.elastic_ctl is not None:
-            self.engine.attach_elastic(self.elastic_ctl)
+            if autoscaler == "tokens":
+                # token-aware autoscaling: replace the default emitted/busy
+                # telemetry with per-replica token throughput + KV-cache
+                # occupancy (the real Decode saturation signals — request
+                # counts undercount load when generation lengths vary)
+                self._tok_last_ms = self.engine.clock.now()
+                self._tok_last_tokens = 0
+                self._tok_last_busy = 0.0
+                self.engine.attach_elastic(self.elastic_ctl,
+                                           sample=self._token_sample)
+            else:
+                self.engine.attach_elastic(self.elastic_ctl)
 
     # -- jit caches (bucketed batch shapes) ------------------------------------
     def _prefill_for(self, bsz: int):
@@ -313,13 +358,55 @@ class QoSServer:
         return self._jit_decode[bsz]
 
     # -- metrics ---------------------------------------------------------------
+    def _kv_tokens_of(self, ex) -> tuple[int, int]:
+        """(live sessions, occupied KV tokens) of one Decode executor."""
+        sessions = list(ex.state.items()) if ex is not None else []
+        return len(sessions), sum(
+            rec["kv_pos"] + 1 for _, rec in sessions
+            if isinstance(rec, dict) and "kv_pos" in rec)
+
+    def _token_sample(self, now_ms: float) -> tuple[float, float]:
+        """Telemetry for the token-aware autoscaler: (decoded tokens/s,
+        utilization) where utilization is the worse of compute pressure
+        (busy fraction of the live replica group) and memory pressure
+        (KV-cache occupancy against the per-replica token budget).
+
+        Owns its own deltas, per the ``attach_elastic(sample=...)``
+        contract: calling it re-baselines, which the elastic loop does
+        after every applied decision so a rescale never skews the next
+        sample."""
+        with self._lock:
+            total_tokens = sum(self._replica_tokens.values())
+        tasks = self.engine.rg.tasks_of("Decode")
+        busy = sum(self.engine._task_busy_ms(v) for v in tasks)
+        dt = max(now_ms - self._tok_last_ms, 1e-9)
+        rate = max(total_tokens - self._tok_last_tokens, 0) / (dt / 1e3)
+        busy_util = (max(busy - self._tok_last_busy, 0.0) / dt
+                     / max(len(tasks), 1))
+        self._tok_last_ms = now_ms
+        self._tok_last_tokens = total_tokens
+        self._tok_last_busy = busy
+        execs = {v.id: ex for v, ex in self.engine.executors.items()
+                 if v.job_vertex == "Decode"}
+        kv_tokens = sum(self._kv_tokens_of(execs.get(v.id))[1]
+                        for v in tasks)
+        kv_frac = kv_tokens / max(
+            self.kv_token_budget_per_replica * max(len(tasks), 1), 1)
+        return rate, min(max(busy_util, kv_frac), 1.0)
+
     def replica_metrics(self, duration_ms: float) -> dict:
-        """Per-Decode-replica token-throughput and KV-cache-occupancy gauges
-        (metrics only).  KV occupancy comes from the replica's keyed session
-        records: live sessions and their KV positions are exactly what a
-        token-level autoscaler would treat as cache pressure."""
+        """Per-Decode-replica token-throughput and KV-cache-occupancy gauges.
+        KV occupancy comes from the replica's keyed session records: live
+        sessions and their KV positions are exactly what the token-level
+        autoscaler treats as cache pressure.
+
+        Token throughput is denominated by each replica's *live* duration —
+        the span between its spawn (or run start, for the initial group)
+        and its retirement (or run end): a replica scaled out mid-run must
+        not have its rate diluted by the time before it existed."""
         out: dict[str, dict] = {}
-        dur_s = max(duration_ms / 1e3, 1e-9)
+        t0 = getattr(self.engine, "_t0", 0.0)
+        end = t0 + duration_ms
         with self._lock:
             tokens = dict(self._replica_tokens)
         # cover retired replicas too: a replica scaled in mid-run still
@@ -330,15 +417,24 @@ class QoSServer:
         live = {v.id for v in self.engine.rg.tasks_of("Decode")}
         for rid in sorted(live | set(tokens) | set(execs)):
             ex = execs.get(rid)
-            sessions = ex.state.items() if ex is not None else []
+            if ex is not None:
+                # initial executors are spawned before start() stamps _t0;
+                # clamp both ends into the [t0, end] run window
+                born = max(getattr(ex, "spawned_at_ms", t0), t0)
+                died = getattr(ex, "retired_at_ms", None)
+                live_ms = min(died, end) - born if died is not None \
+                    else end - born
+            else:
+                live_ms = duration_ms
+            live_ms = max(live_ms, 1e-6)
+            n_sessions, kv_toks = self._kv_tokens_of(ex)
             toks = tokens.get(rid, 0)
             out[rid] = {
                 "tokens_generated": toks,
-                "token_throughput_per_s": toks / dur_s,
-                "kv_cache_sessions": len(sessions),
-                "kv_cache_tokens": sum(
-                    rec["kv_pos"] + 1 for _, rec in sessions
-                    if isinstance(rec, dict) and "kv_pos" in rec),
+                "token_throughput_per_s": toks / max(live_ms / 1e3, 1e-9),
+                "live_duration_ms": live_ms,
+                "kv_cache_sessions": n_sessions,
+                "kv_cache_tokens": kv_toks,
                 "live": rid in live,
             }
         return out

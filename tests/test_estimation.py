@@ -1,0 +1,292 @@
+"""Predictive QoS: estimator units, pre-flight config rules, the
+decision-neutrality invariant, and the proactive path end-to-end.
+
+The load-bearing test here is shadow-mode golden invariance: with
+``ProactiveConfig(enabled=False)`` the estimators run on every control
+tick but the three pinned decision traces (tests/golden/) must come out
+bit-identical — estimator bookkeeping changes NO decisions unless the
+proactive path is armed.
+"""
+from __future__ import annotations
+
+import json
+
+import pytest
+
+from repro.analysis.graph_check import GraphValidationError, run_preflight
+from repro.core import (
+    ALL_TO_ALL,
+    EwmaEstimator,
+    HoltEstimator,
+    JobConstraint,
+    JobGraph,
+    JobSequence,
+    JobVertex,
+    ProactiveConfig,
+    SimSourceSpec,
+    SlidingWindowTrendEstimator,
+    StreamSimulator,
+    ThroughputConstraint,
+    make_estimator,
+)
+from repro.core.measurement import RateMeter
+
+from test_sim_determinism import (
+    DURATIONS_MS,
+    GOLDEN,
+    GOLDEN_BATCHED,
+    SIMS,
+    _assert_trace_equal,
+    _trace,
+)
+
+
+# ---------------------------------------------------------------------------
+# estimator units
+# ---------------------------------------------------------------------------
+
+
+def test_ewma_converges_and_forecasts_flat():
+    est = EwmaEstimator(alpha=0.3)
+    assert est.rate_now() == 0.0
+    assert est.forecast(1_000.0) == 0.0
+    for i in range(200):
+        est.update(i * 250.0, 100.0)
+    assert est.rate_now() == pytest.approx(100.0)
+    # flat forecast: no trend term, any horizon returns the level
+    assert est.forecast(10.0) == est.forecast(100_000.0) == est.rate_now()
+
+
+def test_ewma_validates_alpha():
+    with pytest.raises(ValueError):
+        EwmaEstimator(alpha=0.0)
+    with pytest.raises(ValueError):
+        EwmaEstimator(alpha=1.5)
+
+
+def test_trend_exact_on_linear_ramp():
+    """The least-squares fit reproduces a linear ramp exactly: forecast(h)
+    is the true rate at now + h."""
+    est = SlidingWindowTrendEstimator(window_ms=5_000.0)
+    slope, intercept = 0.04, 100.0  # rate(t) = 100 + 0.04 * t
+    for i in range(12):
+        t = i * 250.0
+        est.update(t, intercept + slope * t)
+    t_last = 11 * 250.0
+    assert est.rate_now() == pytest.approx(intercept + slope * t_last)
+    for h in (250.0, 1_000.0, 3_000.0):
+        want = intercept + slope * (t_last + h)
+        assert est.forecast(h) == pytest.approx(want)
+
+
+def test_trend_window_evicts_old_samples():
+    est = SlidingWindowTrendEstimator(window_ms=1_000.0)
+    est.update(0.0, 500.0)  # will age out
+    for t in (2_000.0, 2_250.0, 2_500.0, 2_750.0, 3_000.0):
+        est.update(t, 100.0)
+    assert est.rate_now() == pytest.approx(100.0)
+    assert est.forecast(2_000.0) == pytest.approx(100.0)
+    with pytest.raises(ValueError):
+        SlidingWindowTrendEstimator(window_ms=0.0)
+
+
+def test_trend_clamps_forecast_at_zero():
+    est = SlidingWindowTrendEstimator(window_ms=5_000.0)
+    for i in range(8):
+        est.update(i * 250.0, max(200.0 - i * 50.0, 0.0))
+    assert est.forecast(60_000.0) == 0.0
+
+
+def test_holt_tracks_ramp():
+    est = HoltEstimator(alpha=0.5, beta=0.3)
+    slope = 0.05  # per ms
+    for i in range(80):
+        t = i * 250.0
+        est.update(t, 100.0 + slope * t)
+    t_last = 79 * 250.0
+    now = est.rate_now()
+    # smoothed level lags the true value slightly but is close
+    assert now == pytest.approx(100.0 + slope * t_last, rel=0.05)
+    # the trend term has learned the slope: a 2 s forecast is ahead of
+    # now by about slope * horizon
+    ahead = est.forecast(2_000.0) - now
+    assert ahead == pytest.approx(slope * 2_000.0, rel=0.15)
+
+
+def test_holt_duplicate_timestamp_folds_into_level():
+    est = HoltEstimator()
+    est.update(0.0, 100.0)
+    est.update(250.0, 110.0)
+    trend_before = est._trend
+    est.update(250.0, 300.0)  # same timestamp: no trend update
+    assert est._trend == trend_before
+    assert est.rate_now() > 110.0
+    with pytest.raises(ValueError):
+        HoltEstimator(alpha=0.0)
+    with pytest.raises(ValueError):
+        HoltEstimator(beta=2.0)
+
+
+def test_make_estimator_registry():
+    assert isinstance(make_estimator("ewma"), EwmaEstimator)
+    assert isinstance(make_estimator("trend", window_ms=2_000.0),
+                      SlidingWindowTrendEstimator)
+    assert isinstance(make_estimator("holt", alpha=0.4), HoltEstimator)
+    with pytest.raises(ValueError, match="unknown estimator kind"):
+        make_estimator("quadratic")
+
+
+def test_rate_meter_converts_counts_to_rates():
+    m = RateMeter()
+    assert m.sample(1_000.0, 50.0) is None  # first call: baseline only
+    assert m.sample(2_000.0, 150.0) == pytest.approx(100.0)  # 100 items/s
+    assert m.sample(2_000.0, 200.0) is None  # non-advancing clock
+    # counter reset (task retired): clamp at zero, never negative
+    assert m.sample(3_000.0, 10.0) == 0.0
+
+
+# ---------------------------------------------------------------------------
+# NS-E pre-flight rules
+# ---------------------------------------------------------------------------
+
+
+def _tiny_jg() -> JobGraph:
+    jg = JobGraph("tiny")
+    jg.add_vertex(JobVertex("S", 1, is_source=True))
+    jg.add_vertex(JobVertex("K", 1, is_sink=True))
+    jg.add_edge("S", "K", ALL_TO_ALL)
+    return jg
+
+
+def _preflight_rules(**kw) -> set[str]:
+    try:
+        run_preflight(_tiny_jg(), [], measurement_interval_ms=1_000.0, **kw)
+    except GraphValidationError as e:
+        return {d.rule for d in e.diagnostics}
+    return set()
+
+
+def test_preflight_rejects_nonpositive_horizon():
+    rules = _preflight_rules(proactive=ProactiveConfig(horizon_ms=0.0))
+    assert "NS-E001" in rules
+    rules = _preflight_rules(proactive=ProactiveConfig(horizon_ms=-5.0))
+    assert "NS-E001" in rules
+
+
+def test_preflight_rejects_nonpositive_update_period():
+    rules = _preflight_rules(
+        proactive=ProactiveConfig(update_period_ms=0.0))
+    assert "NS-E002" in rules
+
+
+def test_preflight_rejects_horizon_below_control_tick():
+    # control tick is measurement_interval_ms / 4 = 250 ms
+    rules = _preflight_rules(proactive=ProactiveConfig(horizon_ms=100.0))
+    assert "NS-E003" in rules
+    assert _preflight_rules(
+        proactive=ProactiveConfig(horizon_ms=250.0)) == set()
+
+
+def test_preflight_rejects_unknown_estimator_kind():
+    rules = _preflight_rules(
+        proactive=ProactiveConfig(estimator="quadratic"))
+    assert "NS-E004" in rules
+
+
+def test_preflight_accepts_valid_config_and_none():
+    assert _preflight_rules(proactive=None) == set()
+    assert _preflight_rules(proactive=ProactiveConfig()) == set()
+
+
+def test_simulator_ctor_runs_estimator_preflight():
+    with pytest.raises(GraphValidationError):
+        StreamSimulator(
+            _tiny_jg(), [], num_workers=1,
+            sources={"S": SimSourceSpec(10.0)},
+            proactive=ProactiveConfig(estimator="nope"))
+
+
+# ---------------------------------------------------------------------------
+# decision neutrality: shadow mode reproduces the golden traces bit-exactly
+# ---------------------------------------------------------------------------
+
+
+def test_shadow_mode_reproduces_golden_traces():
+    """Estimators armed, proactive actions off: all three pinned decision
+    traces must come out bit-identical to the golden file."""
+    golden = json.loads(GOLDEN.read_text())
+    shadow = ProactiveConfig(enabled=False)
+    for name, builder in SIMS.items():
+        got = _trace(builder(proactive=shadow).run(DURATIONS_MS[name]))
+        _assert_trace_equal(f"{name}[shadow]", got, golden[name])
+
+
+def test_shadow_mode_golden_heap_and_batched():
+    """Same invariant on the other scheduler and the batched event core
+    (one scenario each keeps the suite fast; ci.sh covers the matrix)."""
+    shadow = ProactiveConfig(enabled=False)
+    golden = json.loads(GOLDEN.read_text())
+    got = _trace(SIMS["scale"](scheduler="heap", proactive=shadow)
+                 .run(DURATIONS_MS["scale"]))
+    _assert_trace_equal("scale[heap,shadow]", got, golden["scale"])
+    golden_b = json.loads(GOLDEN_BATCHED.read_text())
+    got = _trace(SIMS["scale"](event_mode="batched", proactive=shadow)
+                 .run(DURATIONS_MS["scale"]))
+    _assert_trace_equal("scale[batched,shadow]", got, golden_b["scale"])
+
+
+# ---------------------------------------------------------------------------
+# proactive path end-to-end (simulator)
+# ---------------------------------------------------------------------------
+
+
+def _burst_rate(elapsed_ms: float) -> float:
+    """150/s steady, linear ramp to 450/s over 10 s, hold, drop to 100/s."""
+    if elapsed_ms < 10_000.0:
+        return 150.0
+    if elapsed_ms < 20_000.0:
+        return 150.0 + (elapsed_ms - 10_000.0) * 0.03
+    if elapsed_ms < 30_000.0:
+        return 450.0
+    return 100.0
+
+
+def _proactive_sim(proactive: ProactiveConfig | None) -> StreamSimulator:
+    jg = JobGraph("proactive-e2e")
+    jg.add_vertex(JobVertex("Src", 2, is_source=True, sim_cpu_ms=0.01))
+    jg.add_vertex(JobVertex("Work", 2, sim_cpu_ms=4.0, sim_item_bytes=256))
+    jg.add_vertex(JobVertex("Sink", 1, is_sink=True, sim_cpu_ms=0.01))
+    jg.add_edge("Src", "Work", ALL_TO_ALL)
+    jg.add_edge("Work", "Sink", ALL_TO_ALL)
+    seq = JobSequence.of(("Src", "Work"), "Work", ("Work", "Sink"))
+    jcs = [JobConstraint(seq, 300.0, 3_000.0, name="lat"),
+           ThroughputConstraint("Work", 300.0, window_ms=3_000.0,
+                                max_parallelism=6)]
+    return StreamSimulator(
+        jg, jcs, num_workers=2,
+        sources={"Src": SimSourceSpec(150.0, item_bytes=256, keys=64,
+                                      rate_fn=_burst_rate)},
+        initial_buffer_bytes=1024, enable_qos=True, enable_chaining=False,
+        seed=5, proactive=proactive)
+
+
+def test_proactive_scales_out_before_violation_and_gives_back():
+    sim = _proactive_sim(ProactiveConfig(horizon_ms=3_000.0,
+                                         estimator="trend"))
+    res = sim.run(60_000.0)
+    reasons = [repr(a) for h in res.manager_history for a in h.actions]
+    assert any("proactive: forecast util" in r for r in reasons), reasons
+    assert any("sustained low forecast" in r for r in reasons), reasons
+    # after the give-back the stage is at its job-declared base again
+    assert len(sim.rg.tasks_of("Work")) == 2
+    # the proactive scale-out actually went live (scale_log, not just a
+    # requested action)
+    assert any(d.to_parallelism > d.from_parallelism for d in res.scale_log)
+    assert any(d.to_parallelism < d.from_parallelism for d in res.scale_log)
+
+
+def test_proactive_path_is_deterministic():
+    cfg = ProactiveConfig(horizon_ms=3_000.0, estimator="trend")
+    a = _trace(_proactive_sim(cfg).run(45_000.0))
+    b = _trace(_proactive_sim(cfg).run(45_000.0))
+    assert a == b

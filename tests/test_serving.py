@@ -71,3 +71,82 @@ def test_replica_token_and_kv_cache_gauges(model_and_params):
     assert res.total_token_throughput_per_s > 0.0
     assert sum(g["kv_cache_sessions"]
                for g in res.replica_metrics.values()) > 0
+
+
+def test_autoscaler_arg_validated(model_and_params):
+    m, params, cfg = model_and_params
+    spec = RequestSpec(rate_per_s=10.0, prompt_len=8, gen_len=2,
+                       vocab=cfg.vocab_size)
+    with pytest.raises(ValueError, match="autoscaler"):
+        QoSServer(m, params, spec, autoscaler="bogus")
+
+
+def test_token_autoscaler_wiring_and_sample(model_and_params):
+    """``autoscaler="tokens"`` swaps the elastic telemetry for the
+    token/KV sample and prices the controller's constraint in tokens."""
+    m, params, cfg = model_and_params
+    spec = RequestSpec(rate_per_s=10.0, prompt_len=8, gen_len=4,
+                       vocab=cfg.vocab_size)
+    srv = QoSServer(m, params, spec, elastic=True, autoscaler="tokens",
+                    max_decode_replicas=3,
+                    kv_token_budget_per_replica=1_000)
+    st = srv.engine._elastic[0]
+    assert st["sample"] is not None
+    # the controller watches decoded tokens/s: request floor x gen_len
+    assert st["ctl"].c.min_items_per_s == pytest.approx(
+        spec.rate_per_s * spec.gen_len)
+    # the engine's own constraint set stays request-denominated (the
+    # manager's ScaleRequest countermeasure prices in requests)
+    assert all(c.min_items_per_s != st["ctl"].c.min_items_per_s
+               for c in srv.constraints if hasattr(c, "min_items_per_s"))
+    # sample math: token deltas over wall time, owning its own baseline
+    now = srv.engine.clock.now()
+    srv._token_sample(now)  # re-baseline
+    with srv._lock:
+        srv._replica_tokens["fake"] = srv._replica_tokens.get("fake", 0) + 500
+    rate, util = srv._token_sample(now + 1_000.0)
+    assert rate == pytest.approx(500.0, rel=0.01)
+    assert 0.0 <= util <= 1.0
+
+
+@pytest.mark.slow
+def test_mid_run_spawned_replica_true_throughput(model_and_params):
+    """Regression: replica_metrics used to divide every replica's tokens
+    by the whole-run duration, under-reporting any replica spawned
+    mid-run.  A Decode replica scaled out mid-run must report
+    ``token_throughput_per_s`` within 5% of its true live-duration rate."""
+    m, params, cfg = model_and_params
+    spec = RequestSpec(rate_per_s=30.0, prompt_len=8, gen_len=2,
+                       vocab=cfg.vocab_size)
+    srv = QoSServer(m, params, spec, latency_limit_ms=500.0,
+                    enable_qos=False, initial_buffer_bytes=2048,
+                    elastic=True, max_decode_replicas=2)
+    eng = srv.engine
+    # detach the autoscaler: this test drives the rescale by hand, and the
+    # idle controller would otherwise scale the spawned replica back in
+    eng._elastic.clear()
+    eng.start()
+    try:
+        import time
+        time.sleep(4.0)  # warm-up: jit compiles + steady traffic
+        before = {v.id for v in eng.rg.tasks_of("Decode")}
+        t_lo = eng.clock.now()
+        assert eng.scale_out("Decode", 2, reason="test")
+        t_hi = eng.clock.now()
+        time.sleep(5.0)
+    finally:
+        res = eng.stop()
+    new_rids = {v.id for v in eng.rg.tasks_of("Decode")} - before
+    assert len(new_rids) == 1
+    rid = new_rids.pop()
+    g = srv.replica_metrics(res.duration_ms)[rid]
+    end = eng._t0 + res.duration_ms
+    # the live window is bracketed by the clock reads around scale_out
+    assert end - t_hi - 50.0 <= g["live_duration_ms"] <= end - t_lo + 50.0
+    assert g["live_duration_ms"] < 0.8 * res.duration_ms
+    # throughput is denominated by the live window, not the full run
+    true_rate = g["tokens_generated"] / (g["live_duration_ms"] / 1e3)
+    assert g["token_throughput_per_s"] == pytest.approx(true_rate, rel=0.05)
+    whole_run_rate = g["tokens_generated"] / (res.duration_ms / 1e3)
+    if g["tokens_generated"]:
+        assert g["token_throughput_per_s"] > whole_run_rate * 1.2

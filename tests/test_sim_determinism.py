@@ -65,9 +65,11 @@ def _trace(res) -> dict:
 
 
 def media_sim(event_mode: str = "exact",
-              scheduler: str = "calendar") -> StreamSimulator:
+              scheduler: str = "calendar", **kw) -> StreamSimulator:
     """Fig. 7/8 media pipeline, adaptive buffers + chaining armed, seed 7:
-    exercises BufferSizeUpdate streams on a multi-worker pipeline."""
+    exercises BufferSizeUpdate streams on a multi-worker pipeline.
+    Extra kwargs go to StreamSimulator (the estimator shadow-mode
+    invariance suite passes ``proactive=``)."""
     p = MediaJobParams(parallelism=4, num_workers=2, streams=32, fps=25.0,
                        latency_limit_ms=50.0)
     jg, jcs = build_media_job(p)
@@ -79,7 +81,7 @@ def media_sim(event_mode: str = "exact",
             item_bytes=350, keys_per_task=gpp)},
         initial_buffer_bytes=32 * 1024, measurement_interval_ms=1_000.0,
         enable_qos=True, enable_chaining=True, seed=7,
-        event_mode=event_mode, scheduler=scheduler)
+        event_mode=event_mode, scheduler=scheduler, **kw)
 
 
 def media_trace(event_mode: str = "exact",
@@ -88,7 +90,7 @@ def media_trace(event_mode: str = "exact",
 
 
 def scale_sim(event_mode: str = "exact",
-              scheduler: str = "calendar") -> StreamSimulator:
+              scheduler: str = "calendar", **kw) -> StreamSimulator:
     """Overloaded stage under a latency constraint + throughput constraint:
     the manager walks buffers -> ScaleRequest (live scale-out through the
     rewirer) -> GiveUp, seed 11."""
@@ -106,7 +108,7 @@ def scale_sim(event_mode: str = "exact",
         jg, jcs, num_workers=2,
         sources={"Src": SimSourceSpec(160.0, item_bytes=256, keys=64)},
         initial_buffer_bytes=1024, enable_qos=True, enable_chaining=True,
-        seed=11, event_mode=event_mode, scheduler=scheduler)
+        seed=11, event_mode=event_mode, scheduler=scheduler, **kw)
 
 
 def scale_trace(event_mode: str = "exact",
@@ -115,7 +117,7 @@ def scale_trace(event_mode: str = "exact",
 
 
 def chain_sim(event_mode: str = "exact",
-              scheduler: str = "calendar") -> StreamSimulator:
+              scheduler: str = "calendar", **kw) -> StreamSimulator:
     """Single-worker linear pipeline with an unreachable 8 ms SLO: buffers
     converge, then the manager fuses A->B (ChainRequest), then gives up,
     seed 3."""
@@ -133,7 +135,7 @@ def chain_sim(event_mode: str = "exact",
         jg, jcs, num_workers=1,
         sources={"Src": SimSourceSpec(150.0, item_bytes=512, keys=16)},
         initial_buffer_bytes=4096, enable_qos=True, enable_chaining=True,
-        seed=3, event_mode=event_mode, scheduler=scheduler)
+        seed=3, event_mode=event_mode, scheduler=scheduler, **kw)
 
 
 def chain_trace(event_mode: str = "exact",

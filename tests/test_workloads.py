@@ -1,0 +1,195 @@
+"""Property suite for the seeded workload-trace generators.
+
+Every generator must be a PURE, replayable function: the same seed yields
+bit-identical samples across fresh constructions (the contract that lets
+the simulator and the threaded engine replay the same trace), and every
+generator must respect its documented output bounds.
+"""
+from __future__ import annotations
+
+import math
+
+from benchmarks.workloads import adversarial_key_skew, diurnal, flash_crowd
+
+import pytest
+
+
+def _sample_times(stop_ms: float = 100_000.0, step_ms: float = 37.0):
+    t = 0.0
+    while t < stop_ms:
+        yield t
+        t += step_ms
+
+
+# ---------------------------------------------------------------------------
+# purity / replayability: same seed => bit-identical samples
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_replayable():
+    a = diurnal(50.0, 200.0, period_ms=7_000.0, seed=3, jitter=0.2)
+    b = diurnal(50.0, 200.0, period_ms=7_000.0, seed=3, jitter=0.2)
+    for t in _sample_times():
+        assert a(t) == b(t)
+    # out-of-order / repeated evaluation must not change the answer
+    # (a rate_fn is a function of elapsed time, not of call history)
+    assert a(12_345.0) == b(12_345.0)
+    assert a(1.0) == b(1.0)
+    assert a(12_345.0) == a(12_345.0)
+
+
+def test_flash_crowd_replayable():
+    kw = dict(ramp_ms=1_500.0, hold_ms=2_000.0, decay_ms=3_000.0, seed=11)
+    a = flash_crowd(80.0, 4.0, 10_000.0, **kw)
+    b = flash_crowd(80.0, 4.0, 10_000.0, **kw)
+    for t in _sample_times(40_000.0):
+        assert a(t) == b(t)
+
+
+def test_key_skew_replayable():
+    a = adversarial_key_skew(64, seed=5, rotate_every=100)
+    b = adversarial_key_skew(64, seed=5, rotate_every=100)
+    assert [a(s) for s in range(2_000)] == [b(s) for s in range(2_000)]
+    # out-of-order: key_of(seq) depends on seq only
+    assert a(1_234) == b(1_234)
+    assert a(7) == b(7)
+
+
+def test_different_seeds_differ():
+    a = diurnal(50.0, 200.0, seed=1, jitter=0.3)
+    b = diurnal(50.0, 200.0, seed=2, jitter=0.3)
+    assert any(a(t) != b(t) for t in _sample_times())
+    ka = adversarial_key_skew(256, seed=1)
+    kb = adversarial_key_skew(256, seed=2)
+    assert [ka(s) for s in range(500)] != [kb(s) for s in range(500)]
+
+
+# ---------------------------------------------------------------------------
+# documented bounds
+# ---------------------------------------------------------------------------
+
+
+def test_diurnal_stays_in_band():
+    """Regression: multiplicative jitter must not push the trough below
+    ``base`` (or the crest above ``peak``) — the rate is clamped to the
+    documented ``[base, peak]`` band."""
+    base, peak = 100.0, 400.0
+    for seed in range(8):
+        fn = diurnal(base, peak, period_ms=5_000.0, seed=seed, jitter=0.5)
+        for t in _sample_times(60_000.0, 13.0):
+            r = fn(t)
+            assert base <= r <= peak, (seed, t, r)
+
+
+def test_diurnal_continuous_at_cycle_boundary():
+    """Regression: the per-cycle wobble is interpolated across the cycle,
+    so the rate must not step discontinuously at cycle boundaries."""
+    period = 5_000.0
+    fn = diurnal(100.0, 400.0, period_ms=period, seed=4, jitter=0.5)
+    for k in range(1, 10):
+        before = fn(k * period - 1e-3)
+        after = fn(k * period + 1e-3)
+        assert abs(before - after) < 1.0, (k, before, after)
+
+
+def test_diurnal_covers_band():
+    """With jitter the sinusoid still swings across most of the band."""
+    fn = diurnal(100.0, 400.0, period_ms=5_000.0, seed=0, jitter=0.1)
+    samples = [fn(t) for t in _sample_times(50_000.0, 23.0)]
+    assert min(samples) < 130.0
+    assert max(samples) > 370.0
+
+
+def test_diurnal_validates_band():
+    with pytest.raises(ValueError):
+        diurnal(200.0, 100.0)
+
+
+def test_flash_crowd_bounds_and_shape():
+    base, spike, at = 100.0, 5.0, 8_000.0
+    ramp, hold, decay = 2_000.0, 3_000.0, 4_000.0
+    fn = flash_crowd(base, spike, at, ramp_ms=ramp, hold_ms=hold,
+                     decay_ms=decay, seed=9)
+    # seeded magnitude: spike * base * [0.9, 1.1]
+    mag = fn(at + ramp + hold / 2.0)
+    assert 0.9 * spike * base <= mag <= 1.1 * spike * base
+    assert fn(0.0) == base
+    assert fn(at - 1.0) == base
+    for t in _sample_times(30_000.0, 11.0):
+        r = fn(t)
+        assert base <= r <= mag + 1e-9, (t, r)
+    # monotone linear ramp
+    ts = [at + i * ramp / 10.0 for i in range(11)]
+    rs = [fn(t) for t in ts]
+    assert rs == sorted(rs)
+    # decay settles ~95% after decay_ms
+    settled = fn(at + ramp + hold + decay)
+    assert settled - base < 0.06 * (mag - base)
+
+
+def test_flash_crowd_stop_ms_silences():
+    fn = flash_crowd(100.0, 3.0, 5_000.0, stop_ms=20_000.0)
+    assert fn(19_999.0) > 0.0
+    assert fn(20_000.0) == 0.0
+    assert fn(50_000.0) == 0.0
+
+
+def test_key_skew_range_and_validation():
+    keys = 64
+    fn = adversarial_key_skew(keys, seed=2)
+    assert all(0 <= fn(s) < keys for s in range(5_000))
+    with pytest.raises(ValueError):
+        adversarial_key_skew(64, hot_fraction=0.0)
+    with pytest.raises(ValueError):
+        adversarial_key_skew(64, hot_fraction=1.5)
+
+
+def test_key_skew_hot_set_absorbs_weight():
+    keys, hot_fraction, hot_weight = 256, 0.1, 0.9
+    fn = adversarial_key_skew(keys, hot_fraction=hot_fraction,
+                              hot_weight=hot_weight, seed=7)
+    n = 20_000
+    counts: dict[int, int] = {}
+    for s in range(n):
+        k = fn(s)
+        counts[k] = counts.get(k, 0) + 1
+    n_hot = max(1, math.ceil(keys * hot_fraction))
+    top = sorted(counts.values(), reverse=True)[:n_hot]
+    # the n_hot hottest keys should absorb ~hot_weight of the traffic
+    assert sum(top) / n > hot_weight - 0.05
+
+
+# ---------------------------------------------------------------------------
+# hot-set rotation determinism
+# ---------------------------------------------------------------------------
+
+
+def test_key_skew_rotation_deterministic():
+    """The rotating hot set shifts by exactly n_hot every ``rotate_every``
+    items, deterministically: the hot keys of window w are disjoint from
+    window w+1's (for hot sets smaller than the key space) and identical
+    across constructions."""
+    keys, rotate = 64, 500
+    a = adversarial_key_skew(keys, hot_fraction=0.1, hot_weight=1.0,
+                             seed=13, rotate_every=rotate)
+    b = adversarial_key_skew(keys, hot_fraction=0.1, hot_weight=1.0,
+                             seed=13, rotate_every=rotate)
+    w0a = {a(s) for s in range(rotate)}
+    w0b = {b(s) for s in range(rotate)}
+    w1a = {a(s) for s in range(rotate, 2 * rotate)}
+    assert w0a == w0b
+    n_hot = max(1, math.ceil(keys * 0.1))
+    assert len(w0a) <= n_hot
+    # with hot_weight=1.0 every draw is a hot key; rotation moves the
+    # window by n_hot positions in the seeded permutation, so consecutive
+    # windows are disjoint
+    assert not (w0a & w1a)
+
+
+def test_key_skew_no_rotation_is_stable():
+    keys = 64
+    fn = adversarial_key_skew(keys, hot_fraction=0.1, hot_weight=1.0,
+                              seed=3, rotate_every=None)
+    w0 = {fn(s) for s in range(1_000)}
+    w1 = {fn(s) for s in range(1_000, 2_000)}
+    assert w0 == w1
